@@ -1,0 +1,17 @@
+//! Calibration scratch: iteration counts per workload vs the paper's
+//! Table 2 column (used to tune `Workload::sigma2`).
+use privlogit::data::{load_workload, WORKLOADS};
+use privlogit::optim::{fit_single, Method, OptimConfig};
+fn main() {
+    let cfg = OptimConfig::default();
+    println!("{:<10} {:>4} | paper N/PL | ours N/PL", "dataset", "p");
+    for w in WORKLOADS {
+        let d = load_workload(*w);
+        let n = fit_single(&d, Method::Newton, cfg).iterations;
+        let pl = fit_single(&d, Method::PrivLogit, cfg).iterations;
+        println!(
+            "{:<10} {:>4} |  {:>3}/{:<4}  | {:>3}/{:<4}",
+            w.name, w.p, w.paper_iters.0, w.paper_iters.1, n, pl
+        );
+    }
+}

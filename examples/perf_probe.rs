@@ -1,0 +1,86 @@
+//! §Perf probe: measures each optimization against its unoptimized
+//! alternative (both kept in-tree), producing the EXPERIMENTS.md §Perf
+//! before/after table. See `cargo bench --bench micro_primitives` for the
+//! calibration-grade numbers.
+use privlogit::bigint::{BigUint, Montgomery, RandomSource};
+use privlogit::crypto::paillier::{ChaChaSource, Keypair};
+use privlogit::crypto::rng::ChaChaRng;
+use privlogit::gc::backend::CountBackend;
+use privlogit::gc::word::FixedFmt;
+use privlogit::gc::GcProgram;
+use privlogit::mpc::circuits::{tri_len, InverseMaskedProg, SolveProg};
+use std::time::Instant;
+
+fn time_it<T>(label: &str, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps { std::hint::black_box(f()); }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{label:<40} {per:.3e} s/op");
+    per
+}
+
+fn main() {
+    let mut rng = ChaChaRng::from_u64_seed(5150);
+    let kp = Keypair::generate(1024, &mut rng);
+    let n2 = kp.pk.n2.clone();
+    let base = rng.below(&n2);
+    let exp = rng.below(&kp.pk.n);
+
+    // 1. modpow: naive square-and-multiply with divrem reduction vs Montgomery
+    let naive = time_it("modpow naive (divrem sq-and-mul)", 3, || {
+        let b = base.rem(&n2);
+        let mut acc = BigUint::one();
+        for i in (0..exp.bit_len()).rev() {
+            acc = acc.mul_mod(&acc, &n2);
+            if exp.bit(i) { acc = acc.mul_mod(&b, &n2); }
+        }
+        acc
+    });
+    let mont = Montgomery::new(&n2);
+    let fast = time_it("modpow Montgomery CIOS + 4-bit window", 10, || mont.pow(&base, &exp));
+    println!("  -> modpow speedup {:.1}x\n", naive / fast);
+
+    // 2. decryption: plain (lambda over n^2) vs CRT
+    let c = kp.pk.encrypt(&BigUint::from_u64(123456), &mut ChaChaSource(&mut rng));
+    let plain = time_it("decrypt plain (lambda mod n^2)", 10, || kp.sk.decrypt_plain(&c));
+    let crt = time_it("decrypt CRT (Garner)", 20, || kp.sk.decrypt(&c));
+    println!("  -> decrypt speedup {:.1}x\n", plain / crt);
+
+    // 3. scalar mul: full-range exponent vs small signed exponent
+    let full_k = rng.below(&kp.pk.n);
+    let tfull = time_it("scalar_mul full exponent", 10, || kp.pk.scalar_mul(&c, &full_k));
+    let small_k = BigUint::from_u64(1 << 30);
+    let tsmall = time_it("scalar_mul small (f-bit) exponent", 50, || kp.pk.scalar_mul(&c, &small_k));
+    println!("  -> scalar speedup {:.1}x (PL-Local's primitive)\n", tfull / tsmall);
+
+    // 4. inverse circuit: naive p-column solves vs triangular T=L^-1,Z=T'T
+    let fmt = FixedFmt::DEFAULT;
+    for p in [12usize, 24] {
+        let prog = InverseMaskedProg { p, fmt };
+        let mut cb = CountBackend::default();
+        let ga = vec![None; prog.inputs_garbler()];
+        let ea = vec![None; prog.inputs_evaluator()];
+        prog.run(&mut cb, &ga, &ea);
+        let structured = cb.ands;
+        // naive: cholesky + p full tri-solves = cholesky + p * solve-body.
+        let sp = SolveProg { p, fmt };
+        let mut cs = CountBackend::default();
+        let ga2 = vec![None; sp.inputs_garbler()];
+        let ea2 = vec![None; sp.inputs_evaluator()];
+        sp.run(&mut cs, &ga2, &ea2);
+        let chol = {
+            let cp = privlogit::mpc::circuits::CholeskyShareProg { p, fmt };
+            let mut cc = CountBackend::default();
+            let ga3 = vec![None; cp.inputs_garbler()];
+            let ea3 = vec![None; cp.inputs_evaluator()];
+            cp.run(&mut cc, &ga3, &ea3);
+            cc.ands
+        };
+        let naive_gates = chol + p as u64 * cs.ands;
+        println!(
+            "inverse p={p}: structured {structured} ANDs vs naive {naive_gates} ANDs ({:.1}x), tri_len={}",
+            naive_gates as f64 / structured as f64, tri_len(p)
+        );
+    }
+}

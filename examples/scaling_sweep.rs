@@ -1,0 +1,51 @@
+//! Dimensionality sweep — the Fig. 3 / Fig. 4 trends in one run.
+//!
+//! Sweeps p over the paper's SimuX range on the modeled backend and
+//! prints, per dimension: iteration counts (Newton vs PrivLogit, Fig. 3),
+//! total runtimes and the relative speedups of both PrivLogit protocols
+//! over the secure Newton baseline (Fig. 4).
+//!
+//! ```sh
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use privlogit::coordinator::fleet::LocalFleet;
+use privlogit::data::synthesize;
+use privlogit::gc::word::FixedFmt;
+use privlogit::mpc::ModelFabric;
+use privlogit::protocols::{Protocol, ProtocolConfig};
+use privlogit::runtime::CpuCompute;
+
+fn main() {
+    let cfg = ProtocolConfig::default();
+    println!(
+        "{:>5} | {:>6} {:>6} | {:>10} {:>10} {:>10} | {:>8} {:>8}",
+        "p", "itN", "itPL", "newton(s)", "plh(s)", "pll(s)", "plh-x", "pll-x"
+    );
+    for p in [10usize, 20, 33, 50, 75, 100] {
+        let d = synthesize(&format!("sweep{p}"), 4000, p, 777 + p as u64);
+        let parts = d.partition(5);
+        let mut results = Vec::new();
+        for proto in Protocol::ALL {
+            let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+            let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
+            let rep = proto.run(&mut fab, &mut fleet, &cfg);
+            assert!(rep.converged, "{} p={p}", proto.name());
+            results.push(rep);
+        }
+        let (n, h, l) = (&results[0], &results[1], &results[2]);
+        println!(
+            "{:>5} | {:>6} {:>6} | {:>10.1} {:>10.1} {:>10.1} | {:>7.2}x {:>7.2}x",
+            p,
+            n.iterations,
+            h.iterations,
+            n.total_secs,
+            h.total_secs,
+            l.total_secs,
+            n.total_secs / h.total_secs,
+            n.total_secs / l.total_secs,
+        );
+        assert!(l.total_secs <= n.total_secs, "PL-Local never slower (p={p})");
+    }
+    println!("scaling_sweep OK (paper Fig. 4: PL-Local always fastest, PL-Hessian usually faster)");
+}

@@ -1,0 +1,86 @@
+"""AOT pipeline: lower the L2 functions to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent; invoked
+by ``make artifacts``). Writes one ``<fn>_n<tile>_p<pad>.hlo.txt`` per
+(function, feature-pad) variant plus ``manifest.txt``::
+
+    # name tile_n p_pad filename
+    node_stats 256 16 node_stats_n256_p16.hlo.txt
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Row-tile height must match kernels.logistic.DEFAULT_BLOCK_N: the rust
+# runtime feeds exactly one tile per execution and accumulates across
+# tiles host-side (keeps every artifact shape-static).
+TILE_N = 256
+
+# Feature paddings (lane-friendly). SimuX400 (p=400) lands on 512.
+P_PADS = (16, 32, 64, 128, 256, 512)
+
+
+def _to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants():
+    """Yield (name, lowered-jit) for every artifact to emit."""
+    f32 = jnp.float32
+    for p in P_PADS:
+        xs = jax.ShapeDtypeStruct((TILE_N, p), f32)
+        vs = jax.ShapeDtypeStruct((TILE_N,), f32)
+        bs = jax.ShapeDtypeStruct((p,), f32)
+        ss = jax.ShapeDtypeStruct((), f32)
+        yield (
+            f"node_stats_n{TILE_N}_p{p}",
+            jax.jit(model.node_stats).lower(xs, vs, vs, bs, ss),
+            ("node_stats", p),
+        )
+        yield (
+            f"node_gram_n{TILE_N}_p{p}",
+            jax.jit(model.node_gram).lower(xs, vs, ss),
+            ("node_gram", p),
+        )
+        yield (
+            f"node_hessian_n{TILE_N}_p{p}",
+            jax.jit(model.node_hessian).lower(xs, vs, bs, ss),
+            ("node_hessian", p),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = ["# name tile_n p_pad filename"]
+    for fname, lowered, (name, p) in variants():
+        path = os.path.join(args.out, f"{fname}.hlo.txt")
+        text = _to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {TILE_N} {p} {fname}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

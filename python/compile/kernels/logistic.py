@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels: the node-local numeric hot spot.
+
+Every iteration of every protocol, each organization evaluates its local
+statistics over its private rows (paper Eq. 4/5/9):
+
+  * ``grad_loglik``  — fused sigmoid ∘ residual ∘ X^T(y-p) ∘ log-likelihood
+  * ``gram``         — X^T X          (PrivLogit SetupOnce, Eq. 6/7)
+  * ``hessian``      — X^T A X        (Newton baseline, Eq. 5)
+
+These are the only data-size-dependent computations in the system, so they
+are the L1 kernels. Row tiles of ``block_n`` stream through VMEM while a
+``(p, ·)`` accumulator stays resident; the masked-weight vector ``w``
+makes row padding exact (padded rows carry w=0, contributing nothing to
+either the gradient or the log-likelihood).
+
+TPU mapping (DESIGN.md §6): the ``xt @ (w·resid)`` and ``xt @ (a·x)``
+contractions are MXU-shaped matmuls over a (block_n × p) tile; ``block_n``
+is chosen so x-tile + accumulator fit VMEM. ``interpret=True`` everywhere —
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md), and correctness is asserted against
+``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. 256 keeps tile + accumulator well under real-TPU VMEM
+# (p≤512: 256·512·4 B = 512 KiB per x tile) while amortizing grid overhead.
+DEFAULT_BLOCK_N = 256
+
+
+def _grad_loglik_kernel(x_ref, y_ref, w_ref, beta_ref, g_ref, l_ref):
+    """One row tile: accumulate gradient and log-likelihood."""
+    i = pl.program_id(0)
+    x = x_ref[...]            # (bn, p)
+    y = y_ref[...]            # (bn,)
+    w = w_ref[...]            # (bn,)
+    beta = beta_ref[...]      # (p,)
+    z = x @ beta              # (bn,) — MXU matvec
+    prob = jax.nn.sigmoid(z)
+    resid = w * (y - prob)
+    g_tile = x.T @ resid      # (p,) — MXU contraction
+    # stable log(1+e^z) = max(z,0) + log1p(exp(-|z|))
+    l_tile = jnp.sum(w * (y * z - (jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z))))))
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    g_ref[...] += g_tile
+    l_ref[...] += l_tile.reshape(l_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def grad_loglik(x, y, w, beta, *, block_n=DEFAULT_BLOCK_N):
+    """Fused local gradient + log-likelihood (paper Eq. 4 and 9).
+
+    Args:
+      x: (n, p) covariates, n divisible by block_n (runtime pads).
+      y: (n,) responses.
+      w: (n,) row mask/weights (0 for padding rows).
+      beta: (p,) coefficients.
+
+    Returns:
+      (g, l): gradient (p,) = X^T(w·(y − σ(Xβ))) and masked log-likelihood.
+    """
+    n, p = x.shape
+    assert n % block_n == 0, f"{n=} not divisible by {block_n=}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _grad_loglik_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y, w, beta)
+
+
+def _gram_kernel(x_ref, w_ref, out_ref):
+    """One row tile: accumulate X^T diag(w) X."""
+    i = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]
+    xw = x * w[:, None]
+    tile = x.T @ xw  # (p, p) MXU matmul
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gram(x, w, *, block_n=DEFAULT_BLOCK_N):
+    """Masked Gram matrix X^T diag(w) X (PrivLogit's H̃ ingredient, Eq. 6)."""
+    n, p = x.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((p, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, p), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _hessian_kernel(x_ref, w_ref, beta_ref, out_ref):
+    """One row tile: accumulate X^T diag(w·σ(1−σ)) X."""
+    i = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]
+    beta = beta_ref[...]
+    z = x @ beta
+    prob = jax.nn.sigmoid(z)
+    a = w * prob * (1.0 - prob)
+    tile = x.T @ (x * a[:, None])
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def hessian(x, w, beta, *, block_n=DEFAULT_BLOCK_N):
+    """Exact local Hessian X^T A X (Newton baseline, Eq. 5; PD convention)."""
+    n, p = x.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, p), x.dtype),
+        interpret=True,
+    )(x, w, beta)

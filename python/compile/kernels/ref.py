@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Everything here is straight-line jax.numpy with no Pallas, no tiling and
+no masking tricks beyond the weight vector — the reference the kernels
+must reproduce bit-for-bit up to float associativity.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def grad_loglik_ref(x, y, w, beta):
+    """Reference for kernels.logistic.grad_loglik."""
+    z = x @ beta
+    prob = jax.nn.sigmoid(z)
+    resid = w * (y - prob)
+    g = x.T @ resid
+    # stable log(1 + e^z)
+    log1pexp = jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    l = jnp.sum(w * (y * z - log1pexp))
+    return g, l.reshape((1,))
+
+
+def gram_ref(x, w):
+    """Reference for kernels.logistic.gram."""
+    return x.T @ (x * w[:, None])
+
+
+def hessian_ref(x, w, beta):
+    """Reference for kernels.logistic.hessian."""
+    z = x @ beta
+    prob = jax.nn.sigmoid(z)
+    a = w * prob * (1.0 - prob)
+    return x.T @ (x * a[:, None])

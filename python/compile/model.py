@@ -1,0 +1,39 @@
+"""Layer-2 JAX compute graph: the node-local statistics functions the
+rust runtime executes through PJRT.
+
+Each function wraps the L1 Pallas kernels with the scaling the protocols
+need (statistics are *averaged* — scaled by 1/n_total — so every value the
+secure layers touch is O(1); see DESIGN.md §5). `scale` arrives as a
+traced scalar so one artifact serves any total sample count.
+
+Shapes are fixed at AOT time per (tile_n, p_pad) variant; the rust runtime
+pads rows (w=0) and features (zero columns) to the nearest variant.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import logistic
+
+
+def node_stats(x, y, w, beta, scale):
+    """Fused local gradient + log-likelihood, pre-scaled.
+
+    Returns (g·scale, l·scale): Eq. 4 / Eq. 9 node shares.
+    """
+    g, l = logistic.grad_loglik(x, y, w, beta)
+    return g * scale, l * scale
+
+
+def node_gram(x, w, scale):
+    """PrivLogit surrogate-Hessian share: ¼ X^T X · scale (Eq. 6/7)."""
+    return logistic.gram(x, w) * (0.25 * scale)
+
+
+def node_hessian(x, w, beta, scale):
+    """Exact Hessian share X^T A X · scale (Eq. 5, Newton baseline)."""
+    return logistic.hessian(x, w, beta) * scale
+
+
+def predict_proba(x, beta):
+    """Inference-time class-1 probabilities (quickstart example)."""
+    return 1.0 / (1.0 + jnp.exp(-(x @ beta)))

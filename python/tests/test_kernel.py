@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/values; every kernel must match ref.py to
+float32 tolerance, including masked (padded) rows — the property the rust
+runtime's padding relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logistic, ref
+
+
+def make_case(rng, n, p, frac_masked=0.0, dtype=jnp.float32):
+    x = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    y = jnp.asarray(rng.integers(0, 2, n), dtype)
+    w = np.ones(n)
+    n_masked = int(n * frac_masked)
+    if n_masked:
+        w[-n_masked:] = 0.0
+    w = jnp.asarray(w, dtype)
+    beta = jnp.asarray(rng.standard_normal(p) * 0.5, dtype)
+    return x, y, w, beta
+
+
+@pytest.mark.parametrize("n,p", [(256, 4), (512, 16), (1024, 33)])
+def test_grad_loglik_matches_ref(n, p):
+    rng = np.random.default_rng(0)
+    x, y, w, beta = make_case(rng, n, p)
+    g, l = logistic.grad_loglik(x, y, w, beta, block_n=256)
+    g_ref, l_ref = ref.grad_loglik_ref(x, y, w, beta)
+    np.testing.assert_allclose(g, g_ref, rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(l, l_ref, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,p", [(256, 8), (768, 12)])
+def test_gram_matches_ref(n, p):
+    rng = np.random.default_rng(1)
+    x, _, w, _ = make_case(rng, n, p)
+    got = logistic.gram(x, w, block_n=256)
+    np.testing.assert_allclose(got, ref.gram_ref(x, w), rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,p", [(256, 8), (768, 12)])
+def test_hessian_matches_ref(n, p):
+    rng = np.random.default_rng(2)
+    x, _, w, beta = make_case(rng, n, p)
+    got = logistic.hessian(x, w, beta, block_n=256)
+    np.testing.assert_allclose(got, ref.hessian_ref(x, w, beta), rtol=2e-5, atol=2e-4)
+
+
+def test_masked_rows_contribute_nothing():
+    """The padding contract: w=0 rows must vanish from all statistics."""
+    rng = np.random.default_rng(3)
+    x, y, w, beta = make_case(rng, 512, 8, frac_masked=0.5)
+    n_real = 256
+    g_full, l_full = logistic.grad_loglik(x, y, w, beta, block_n=256)
+    g_trim, l_trim = ref.grad_loglik_ref(x[:n_real], y[:n_real], jnp.ones(n_real), beta)
+    np.testing.assert_allclose(g_full, g_trim, rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(l_full, l_trim, rtol=2e-5, atol=2e-4)
+    gram_full = logistic.gram(x, w, block_n=256)
+    gram_trim = ref.gram_ref(x[:n_real], jnp.ones(n_real))
+    np.testing.assert_allclose(gram_full, gram_trim, rtol=2e-5, atol=2e-4)
+
+
+def test_zero_feature_padding_is_exact():
+    """Zero columns (feature padding) leave real statistics untouched."""
+    rng = np.random.default_rng(4)
+    x, y, w, beta = make_case(rng, 256, 5)
+    xp = jnp.pad(x, ((0, 0), (0, 11)))
+    bp = jnp.pad(beta, (0, 11))
+    g_pad, l_pad = logistic.grad_loglik(xp, y, w, bp, block_n=256)
+    g_ref, l_ref = ref.grad_loglik_ref(x, y, w, beta)
+    np.testing.assert_allclose(g_pad[:5], g_ref, rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(g_pad[5:], np.zeros(11), atol=1e-6)
+    np.testing.assert_allclose(l_pad, l_ref, rtol=2e-5, atol=2e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n_tiles=st.integers(1, 3),
+    p=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.sampled_from([0.0, 0.1, 0.9]),
+)
+def test_grad_loglik_property(n_tiles, p, seed, frac):
+    """Hypothesis sweep: arbitrary shapes and mask fractions."""
+    rng = np.random.default_rng(seed)
+    n = 256 * n_tiles
+    x, y, w, beta = make_case(rng, n, p, frac_masked=frac)
+    g, l = logistic.grad_loglik(x, y, w, beta, block_n=256)
+    g_ref, l_ref = ref.grad_loglik_ref(x, y, w, beta)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=5e-4)
+    np.testing.assert_allclose(l, l_ref, rtol=1e-4, atol=5e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(p=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_gram_property_psd(p, seed):
+    """Gram outputs are symmetric PSD for any inputs."""
+    rng = np.random.default_rng(seed)
+    x, _, w, _ = make_case(rng, 256, p)
+    g = np.asarray(logistic.gram(x, w, block_n=256), dtype=np.float64)
+    np.testing.assert_allclose(g, g.T, atol=1e-4)
+    eig = np.linalg.eigvalsh(g)
+    assert eig.min() > -1e-3, f"PSD violated: {eig.min()}"
+
+
+def test_float64_mode():
+    """Kernels work under x64 when enabled (protocol-side uses f32)."""
+    rng = np.random.default_rng(5)
+    x, y, w, beta = make_case(rng, 256, 6)
+    g32, _ = logistic.grad_loglik(x, y, w, beta, block_n=256)
+    assert g32.dtype == jnp.float32

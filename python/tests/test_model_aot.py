@@ -1,0 +1,98 @@
+"""L2 + AOT pipeline tests: model functions, scaling, HLO emission."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _case(n=256, p=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    w = jnp.ones(n, jnp.float32)
+    beta = jnp.asarray(rng.standard_normal(p) * 0.3, jnp.float32)
+    return x, y, w, beta
+
+
+def test_node_stats_scaling():
+    x, y, w, beta = _case()
+    scale = jnp.float32(1.0 / 5000.0)
+    g, l = model.node_stats(x, y, w, beta, scale)
+    g_ref, l_ref = ref.grad_loglik_ref(x, y, w, beta)
+    np.testing.assert_allclose(g, g_ref * scale, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(l, l_ref * scale, rtol=2e-5, atol=1e-6)
+
+
+def test_node_gram_quarter_scaling():
+    x, y, w, _ = _case(seed=1)
+    scale = jnp.float32(1e-3)
+    got = model.node_gram(x, w, scale)
+    expect = ref.gram_ref(x, w) * 0.25 * scale
+    np.testing.assert_allclose(got, expect, rtol=2e-5, atol=1e-6)
+
+
+def test_node_hessian_scaling():
+    x, y, w, beta = _case(seed=2)
+    scale = jnp.float32(1e-3)
+    got = model.node_hessian(x, w, beta, scale)
+    expect = ref.hessian_ref(x, w, beta) * scale
+    np.testing.assert_allclose(got, expect, rtol=2e-5, atol=1e-6)
+
+
+def test_predict_proba_range():
+    x, _, _, beta = _case(seed=3)
+    p = model.predict_proba(x, beta)
+    assert float(p.min()) >= 0.0 and float(p.max()) <= 1.0
+
+
+def test_variants_cover_paper_dims():
+    names = [meta for _, _, meta in aot.variants()]
+    pads = sorted({p for _, p in names})
+    assert pads == sorted(aot.P_PADS)
+    # every paper workload dimension fits a pad
+    for paper_p in (12, 33, 38, 52, 100, 150, 200, 400):
+        assert any(pad >= paper_p for pad in pads), paper_p
+    fns = {n for n, _ in names}
+    assert fns == {"node_stats", "node_gram", "node_hessian"}
+
+
+def test_hlo_text_emission_smallest_variant():
+    """Lower one variant and sanity-check the HLO text format."""
+    for fname, lowered, (name, p) in aot.variants():
+        if p != aot.P_PADS[0] or name != "node_stats":
+            continue
+        text = aot._to_hlo_text(lowered)
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+        return
+    pytest.fail("variant not found")
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    """Full artifact build into a temp dir (slow-ish but the real deal)."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    entries = [l for l in manifest if not l.startswith("#")]
+    assert len(entries) == 3 * len(aot.P_PADS)
+    for line in entries:
+        name, tile_n, p_pad, fname = line.split()
+        assert (out / fname).exists(), fname
+        assert int(tile_n) == aot.TILE_N

@@ -1,0 +1,85 @@
+//! Figure 4 reproduction: relative speedup of PrivLogit-Hessian and
+//! PrivLogit-Local over the secure distributed Newton baseline, across
+//! the paper's workloads.
+//!
+//! Reports both accountings:
+//! * **total** — everything including one-time setup (our honest number);
+//! * **iteration-phase** — setup amortized out, the accounting the
+//!   paper's PL-Local column implies (its reported SimuX400 total is
+//!   smaller than a single garbled Cholesky at p=400 would cost on its
+//!   own testbed — see EXPERIMENTS.md for the analysis).
+//!
+//! `PRIVLOGIT_QUICK=1` skips the largest workloads.
+
+use privlogit::coordinator::fleet::LocalFleet;
+use privlogit::data::{load_workload, WORKLOADS};
+use privlogit::gc::word::FixedFmt;
+use privlogit::mpc::ModelFabric;
+use privlogit::protocols::{Protocol, ProtocolConfig};
+use privlogit::runtime::CpuCompute;
+
+/// Paper Fig. 4 speedups (PL-Hessian, PL-Local) where legible from the
+/// text: up to 2.32x and 8.1x.
+fn paper_speedup(name: &str) -> Option<(f64, f64)> {
+    Some(match name {
+        "Wine" => (1.33, 1.88),
+        "Loans" => (1.89, 4.73),
+        "Insurance" => (0.86, 5.85),
+        "News" => (2.32, 4.61),
+        "SimuX100" => (1.68, 7.27),
+        "SimuX150" => (1.72, 7.09),
+        "SimuX200" => (2.01, 8.12),
+        _ => return None,
+    })
+}
+
+fn main() {
+    let quick = std::env::var("PRIVLOGIT_QUICK").is_ok();
+    let cfg = ProtocolConfig::default();
+    println!("=== Figure 4: speedup over the secure Newton baseline ===\n");
+    println!(
+        "{:<10} {:>4} | {:>9} {:>9} | {:>9} {:>9} | paper (PLH, PLL)",
+        "dataset", "p", "PLH tot", "PLL tot", "PLH iter", "PLL iter"
+    );
+    for w in WORKLOADS {
+        if quick && w.p > 100 {
+            continue;
+        }
+        let data = load_workload(*w);
+        let parts = data.partition(4);
+        let mut totals = [0.0f64; 3];
+        let mut iterph = [0.0f64; 3];
+        for (k, proto) in Protocol::ALL.iter().enumerate() {
+            let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+            let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
+            let rep = proto.run(&mut fab, &mut fleet, &cfg);
+            totals[k] = rep.total_secs;
+            iterph[k] = rep.total_secs - rep.setup_secs;
+        }
+        let paper = paper_speedup(w.name)
+            .map(|(a, b)| format!("({a:.2}x, {b:.2}x)"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<10} {:>4} | {:>8.2}x {:>8.2}x | {:>8.2}x {:>8.2}x | {}",
+            w.name,
+            w.p,
+            totals[0] / totals[1],
+            totals[0] / totals[2],
+            iterph[0] / iterph[1],
+            iterph[0] / iterph[2],
+            paper
+        );
+        // Shape assertions from the paper's Fig. 4 narrative:
+        assert!(
+            totals[2] <= totals[0] * 1.05,
+            "{}: PL-Local never meaningfully slower",
+            w.name
+        );
+        assert!(
+            iterph[2] < iterph[0],
+            "{}: PL-Local iteration phase always wins",
+            w.name
+        );
+    }
+    println!("\nfig4_speedup OK (paper: PLH 1.03–2.32x; PLL up to 8.1x, growing with scale)");
+}

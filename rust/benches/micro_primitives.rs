@@ -1,0 +1,128 @@
+//! Micro-benchmarks of every secure primitive — the calibration source
+//! for the cost model (DESIGN.md §7).
+//!
+//! Writes `artifacts/calibration.txt`, which [`privlogit::mpc::CostModel`]
+//! loads for all modeled experiments. Run before the table/figure benches
+//! for machine-accurate modeling:
+//!
+//! ```sh
+//! cargo bench --bench micro_primitives
+//! ```
+
+use std::time::Instant;
+
+use privlogit::bigint::{BigUint, RandomSource};
+use privlogit::crypto::paillier::{ChaChaSource, Keypair};
+use privlogit::crypto::rng::ChaChaRng;
+use privlogit::gc::word::{self, FixedFmt};
+use privlogit::gc::{GcBackend, GcProgram, GcSession};
+
+const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+/// Paillier modulus for calibration — scaled from the paper's 2048-bit
+/// parameter (all protocols scale identically in the key size; see
+/// DESIGN.md §7). Override with PRIVLOGIT_MODBITS.
+const DEFAULT_MODBITS: usize = 1024;
+
+/// A mult-chain program: measures amortized per-AND cost through the full
+/// streamed garble+eval+OT pipeline.
+struct MulChain {
+    rounds: usize,
+}
+
+impl GcProgram for MulChain {
+    fn inputs_garbler(&self) -> usize {
+        FMT.w
+    }
+    fn inputs_evaluator(&self) -> usize {
+        FMT.w
+    }
+    fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+        let mut acc = ga.to_vec();
+        let x = ea.to_vec();
+        for _ in 0..self.rounds {
+            acc = word::mul(b, &acc, &x, FMT);
+            // keep values bounded: shift back toward small magnitudes
+            acc = word::sar_const(b, &acc, 1);
+        }
+        acc
+    }
+}
+
+fn time_it<T>(label: &str, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    f(); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{label:<18} {per:>12.3e} s/op  ({reps} reps)");
+    per
+}
+
+fn main() {
+    let modbits: usize = std::env::var("PRIVLOGIT_MODBITS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_MODBITS);
+    println!("=== micro_primitives (modulus {modbits} bits, W={} F={}) ===", FMT.w, FMT.f);
+    let mut rng = ChaChaRng::from_u64_seed(0xCA11B);
+    let kp = Keypair::generate(modbits, &mut rng);
+
+    let m = rng.below(&kp.pk.n);
+    let t_enc = time_it("paillier_enc", 50, || {
+        kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng))
+    });
+    let c1 = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+    let c2 = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+    let t_add = time_it("paillier_add", 2000, || kp.pk.add(&c1, &c2));
+    let full_k = rng.below(&kp.pk.n);
+    let t_scalar_full = time_it("scalar_full", 50, || kp.pk.scalar_mul(&c1, &full_k));
+    let small_k = BigUint::from_u64(rng.next_u64() >> 24); // ~f-bit exponent
+    let t_scalar_small = time_it("scalar_small", 200, || kp.pk.scalar_mul(&c1, &small_k));
+    let t_decrypt = time_it("blind_decrypt", 50, || {
+        // blind + decrypt, the to_shares unit
+        let rho = rng.below(&kp.pk.n);
+        let blinded = kp.pk.add(&c1, &kp.pk.encrypt_trivial(&rho));
+        kp.sk.decrypt(&blinded)
+    });
+
+    // GC: amortized AND cost through a real session.
+    let mut session = GcSession::new(0xCA11);
+    let prog = MulChain { rounds: 64 };
+    let ga: Vec<bool> = (0..FMT.w).map(|i| i % 3 == 0).collect();
+    let ea: Vec<bool> = (0..FMT.w).map(|i| i % 5 == 0).collect();
+    let (_, s0) = session.execute(&prog, &ga, &ea); // warm-up
+    let t0 = Instant::now();
+    let mut ands = 0u64;
+    let reps = 5;
+    for _ in 0..reps {
+        let (_, s) = session.execute(&prog, &ga, &ea);
+        ands += s.ands;
+    }
+    let t_and = t0.elapsed().as_secs_f64() / ands as f64;
+    println!("gc_and             {t_and:>12.3e} s/gate ({ands} gates; warm-up {})", s0.ands);
+
+    // OT extension amortized per evaluator-input bit.
+    let prog_small = MulChain { rounds: 1 };
+    let t0 = Instant::now();
+    let ot_reps = 50;
+    for _ in 0..ot_reps {
+        session.execute(&prog_small, &ga, &ea);
+    }
+    let t_ot = t0.elapsed().as_secs_f64() / (ot_reps * FMT.w) as f64;
+    println!("ot_per_bit(approx) {t_ot:>12.3e} s/bit");
+
+    let cal = format!(
+        "# measured by `cargo bench --bench micro_primitives` (modulus {modbits} bits)\n\
+         t_and = {t_and:.3e}\nt_ot = {t_ot:.3e}\nt_enc = {t_enc:.3e}\nt_add = {t_add:.3e}\n\
+         t_scalar_full = {t_scalar_full:.3e}\nt_scalar_small = {t_scalar_small:.3e}\n\
+         t_decrypt = {t_decrypt:.3e}\n"
+    );
+    std::fs::create_dir_all("artifacts").ok();
+    std::fs::write("artifacts/calibration.txt", &cal).expect("write calibration");
+    println!("\nwrote artifacts/calibration.txt:\n{cal}");
+    assert!(
+        t_scalar_small < t_scalar_full,
+        "PrivLogit-Local's premise: multiply-by-small-constant must be cheaper"
+    );
+}

@@ -1,0 +1,128 @@
+//! Table 2 reproduction: convergence iterations + total runtime for
+//! Newton / PrivLogit-Hessian / PrivLogit-Local on every paper workload.
+//!
+//! Backend policy (DESIGN.md §7): **real** cryptography for p ≤ 12
+//! workloads, the **calibrated cost model** above (run
+//! `cargo bench --bench micro_primitives` first to calibrate for this
+//! machine). Absolute seconds differ from the paper's Java/ObliVM two-PC
+//! testbed; the comparison shape is the reproduction target.
+//!
+//! `PRIVLOGIT_QUICK=1` skips the largest SimuX workloads.
+
+use privlogit::coordinator::fleet::LocalFleet;
+use privlogit::coordinator::{Backend, Experiment};
+use privlogit::data::{load_workload, Workload, WORKLOADS};
+use privlogit::gc::word::FixedFmt;
+use privlogit::metrics::{table2_header, table2_row};
+use privlogit::protocols::{Protocol, ProtocolConfig};
+use privlogit::runtime::CpuCompute;
+
+/// Paper Table 2 runtimes (seconds): (Newton, PL-Hessian, PL-Local).
+fn paper_secs(name: &str) -> Option<(f64, f64, f64)> {
+    Some(match name {
+        "Wine" => (32.0, 24.0, 17.0),
+        "Loans" => (492.0, 260.0, 104.0),
+        "Insurance" => (843.0, 978.0, 144.0),
+        "News" => (1442.0, 621.0, 313.0),
+        "SimuX10" => (26.0, 24.0, 13.0),
+        "SimuX12" => (38.0, 37.0, 17.0),
+        "SimuX50" => (1549.0, 1052.0, 383.0),
+        "SimuX100" => (13138.0, 7817.0, 1807.0),
+        "SimuX150" => (42951.0, 25030.0, 6055.0),
+        "SimuX200" => (114522.0, 56917.0, 14105.0),
+        "SimuX400" => (f64::NAN, f64::NAN, 110598.0),
+        _ => return None,
+    })
+}
+
+fn run_workload(w: &Workload) -> (usize, usize, [f64; 3], [f64; 3], &'static str) {
+    let data = load_workload(*w);
+    let backend = if w.p <= 12 { Backend::Real } else { Backend::Model };
+    let mut iters = (0usize, 0usize);
+    let mut totals = [0.0; 3];
+    let mut iter_phase = [0.0; 3];
+    for (k, proto) in Protocol::ALL.iter().enumerate() {
+        let exp = Experiment {
+            dataset: data.clone(),
+            orgs: 4,
+            protocol: *proto,
+            backend,
+            modulus_bits: 1024,
+            fmt: FixedFmt::DEFAULT,
+            cfg: ProtocolConfig::default(),
+            threaded_nodes: false,
+            seed: 99,
+        };
+        // avoid PJRT client churn across many runs: CPU engine here
+        let mut fleet = LocalFleet::new(data.partition(4), Box::new(CpuCompute));
+        let rep = match backend {
+            Backend::Real => {
+                let mut fab =
+                    privlogit::mpc::RealFabric::new(exp.modulus_bits, exp.fmt, exp.seed);
+                proto.run(&mut fab, &mut fleet, &exp.cfg)
+            }
+            _ => {
+                let mut fab = privlogit::mpc::ModelFabric::new(2048, exp.fmt);
+                proto.run(&mut fab, &mut fleet, &exp.cfg)
+            }
+        };
+        assert!(rep.converged, "{} on {}", proto.name(), w.name);
+        totals[k] = rep.total_secs;
+        iter_phase[k] = rep.total_secs - rep.setup_secs;
+        match proto {
+            Protocol::Newton => iters.0 = rep.iterations,
+            _ => iters.1 = rep.iterations,
+        }
+    }
+    let label = if backend == Backend::Real { "real" } else { "model" };
+    (iters.0, iters.1, totals, iter_phase, label)
+}
+
+fn main() {
+    let quick = std::env::var("PRIVLOGIT_QUICK").is_ok();
+    println!("=== Table 2: iterations and runtime (ours vs paper) ===\n");
+    println!("{}", table2_header());
+    let mut summary = Vec::new();
+    for w in WORKLOADS {
+        if quick && (w.p > 100) {
+            eprintln!("[quick] skipping {}", w.name);
+            continue;
+        }
+        let (it_n, it_pl, totals, iter_phase, label) = run_workload(w);
+        println!("{}  <- ours [{label}]", table2_row(w.name, (it_n, it_pl), (totals[0], totals[1], totals[2])));
+        if let Some(ps) = paper_secs(w.name) {
+            println!(
+                "{}  <- paper",
+                table2_row(w.name, w.paper_iters, ps)
+            );
+        }
+        summary.push((w.name, it_n, it_pl, totals, iter_phase, label));
+    }
+    println!("\niteration-phase times (setup amortized — the accounting the paper's");
+    println!("PL-Local column implies; see EXPERIMENTS.md):");
+    for (name, _, _, _, ip, _) in &summary {
+        println!(
+            "  {:<10} newton {:>9.1}s  pl-hessian {:>9.1}s  pl-local {:>9.1}s",
+            name, ip[0], ip[1], ip[2]
+        );
+    }
+    // Reproduction checks. The modeled rows carry the paper's cost
+    // structure and must honor its Table-2 claim strictly. The real
+    // small-p rows run on in-process AES-NI garbling, where GC is
+    // relatively ~100× cheaper vs Paillier than on the paper's 2015
+    // ObliVM/ethernet testbed — there PL-Local's many cheap iterations
+    // can total slightly more than Newton's few garbled ones (a genuine
+    // cost-structure finding, recorded in EXPERIMENTS.md), so only a
+    // loose bound applies.
+    for (name, it_n, it_pl, totals, _, label) in &summary {
+        assert!(it_pl > it_n, "{name}: PrivLogit iterates more");
+        let slack = if *label == "model" { 1.05 } else { 1.6 };
+        assert!(
+            totals[2] <= totals[0] * slack,
+            "{name} [{label}]: PL-Local bound ({:.1}s vs {:.1}s)",
+            totals[2],
+            totals[0]
+        );
+    }
+    println!("\ntable2_runtime OK");
+}

@@ -1,0 +1,822 @@
+//! Arbitrary-precision unsigned integer arithmetic.
+//!
+//! This is the numeric substrate for the Paillier cryptosystem
+//! ([`crate::crypto::paillier`]). `num-bigint` is unavailable in the build
+//! image, so the whole stack — schoolbook/Karatsuba multiplication,
+//! Knuth Algorithm-D division, Montgomery exponentiation, extended GCD,
+//! Miller–Rabin primality and prime generation — is implemented here.
+//!
+//! Representation: little-endian `u64` limbs, always *normalized* (no
+//! trailing zero limbs; zero is the empty limb vector).
+
+mod monty;
+mod prime;
+mod signed;
+
+pub use monty::Montgomery;
+pub use prime::{gen_prime, is_probable_prime};
+pub use signed::BigInt;
+
+use std::cmp::Ordering;
+
+/// A random byte source, implemented by [`crate::crypto::rng::ChaChaRng`].
+///
+/// Defined here (rather than in `crypto`) so prime generation has no
+/// dependency on the crypto layer above it.
+pub trait RandomSource {
+    /// Fill `buf` with uniformly random bytes.
+    fn fill_bytes(&mut self, buf: &mut [u8]);
+
+    /// A uniformly random integer in `[0, bound)`. `bound` must be nonzero.
+    fn below(&mut self, bound: &BigUint) -> BigUint {
+        assert!(!bound.is_zero(), "below(0)");
+        let bits = bound.bit_len();
+        let bytes = bits.div_ceil(8);
+        let top_mask: u8 = if bits % 8 == 0 { 0xff } else { (1u8 << (bits % 8)) - 1 };
+        let mut buf = vec![0u8; bytes];
+        // Rejection sampling: each draw succeeds with probability > 1/2.
+        loop {
+            self.fill_bytes(&mut buf);
+            buf[bytes - 1] &= top_mask; // buf is little-endian
+            let candidate = BigUint::from_bytes_le(&buf);
+            if candidate < *bound {
+                return candidate;
+            }
+        }
+    }
+}
+
+/// Arbitrary-precision unsigned integer (little-endian `u64` limbs).
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BigUint {
+    pub(crate) limbs: Vec<u64>,
+}
+
+/// Karatsuba recursion cut-off, in limbs. Below this, schoolbook wins.
+const KARATSUBA_THRESHOLD: usize = 24;
+
+impl BigUint {
+    /// The value 0.
+    pub fn zero() -> Self {
+        BigUint { limbs: Vec::new() }
+    }
+
+    /// The value 1.
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    /// Construct from a `u64`.
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 { Self::zero() } else { BigUint { limbs: vec![v] } }
+    }
+
+    /// Construct from a `u128`.
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut n = BigUint { limbs: vec![lo, hi] };
+        n.normalize();
+        n
+    }
+
+    /// Construct from little-endian limbs (normalizing).
+    pub fn from_limbs(limbs: Vec<u64>) -> Self {
+        let mut n = BigUint { limbs };
+        n.normalize();
+        n
+    }
+
+    /// Construct from little-endian bytes.
+    pub fn from_bytes_le(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len().div_ceil(8));
+        for chunk in bytes.chunks(8) {
+            let mut limb = [0u8; 8];
+            limb[..chunk.len()].copy_from_slice(chunk);
+            limbs.push(u64::from_le_bytes(limb));
+        }
+        Self::from_limbs(limbs)
+    }
+
+    /// Construct from big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut le = bytes.to_vec();
+        le.reverse();
+        Self::from_bytes_le(&le)
+    }
+
+    /// Little-endian byte serialization (minimal length; empty for zero).
+    pub fn to_bytes_le(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for &l in &self.limbs {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        while out.last() == Some(&0) {
+            out.pop();
+        }
+        out
+    }
+
+    /// Big-endian byte serialization (minimal length; empty for zero).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        let mut v = self.to_bytes_le();
+        v.reverse();
+        v
+    }
+
+    /// Parse a decimal string.
+    pub fn from_dec_str(s: &str) -> Option<Self> {
+        if s.is_empty() {
+            return None;
+        }
+        let mut acc = BigUint::zero();
+        let ten = BigUint::from_u64(10);
+        for c in s.bytes() {
+            if !c.is_ascii_digit() {
+                return None;
+            }
+            acc = acc.mul(&ten).add(&BigUint::from_u64((c - b'0') as u64));
+        }
+        Some(acc)
+    }
+
+    /// Decimal string rendering.
+    pub fn to_dec_string(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        // Repeated division by 10^19 (largest power of ten in u64).
+        const CHUNK: u64 = 10_000_000_000_000_000_000;
+        let mut digits: Vec<String> = Vec::new();
+        let mut cur = self.clone();
+        while !cur.is_zero() {
+            let (q, r) = cur.divrem_u64(CHUNK);
+            digits.push(r.to_string());
+            cur = q;
+        }
+        let mut out = String::new();
+        for (i, d) in digits.iter().rev().enumerate() {
+            if i == 0 {
+                out.push_str(d);
+            } else {
+                out.push_str(&format!("{:0>19}", d));
+            }
+        }
+        out
+    }
+
+    /// True iff the value is zero.
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    /// True iff the value is one.
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    /// True iff the value is even.
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map_or(true, |l| l & 1 == 0)
+    }
+
+    /// Low 64 bits of the value.
+    pub fn low_u64(&self) -> u64 {
+        self.limbs.first().copied().unwrap_or(0)
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bit_len(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => self.limbs.len() * 64 - top.leading_zeros() as usize,
+        }
+    }
+
+    /// Value of bit `i` (0 = least significant).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |l| (l >> off) & 1 == 1)
+    }
+
+    /// Set bit `i` to 1, growing as needed.
+    pub fn set_bit(&mut self, i: usize) {
+        let (limb, off) = (i / 64, i % 64);
+        if limb >= self.limbs.len() {
+            self.limbs.resize(limb + 1, 0);
+        }
+        self.limbs[limb] |= 1 << off;
+    }
+
+    fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let (a, b) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..a.len() {
+            let bi = b.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a[i].overflowing_add(bi);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry != 0 {
+            out.push(carry);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self + v` for a `u64`.
+    pub fn add_u64(&self, v: u64) -> BigUint {
+        self.add(&BigUint::from_u64(v))
+    }
+
+    /// `self - other`; panics if `other > self`.
+    pub fn sub(&self, other: &BigUint) -> BigUint {
+        assert!(self >= other, "BigUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let bi = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(bi);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        BigUint::from_limbs(out)
+    }
+
+    /// `self - v` for a `u64`; panics on underflow.
+    pub fn sub_u64(&self, v: u64) -> BigUint {
+        self.sub(&BigUint::from_u64(v))
+    }
+
+    /// `self * other` (schoolbook below [`KARATSUBA_THRESHOLD`] limbs,
+    /// Karatsuba above).
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        let n = self.limbs.len().min(other.limbs.len());
+        if n < KARATSUBA_THRESHOLD {
+            self.mul_schoolbook(other)
+        } else {
+            self.mul_karatsuba(other)
+        }
+    }
+
+    fn mul_schoolbook(&self, other: &BigUint) -> BigUint {
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let t = out[i + j] as u128 + a as u128 * b as u128 + carry;
+                out[i + j] = t as u64;
+                carry = t >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry != 0 {
+                let t = out[k] as u128 + carry;
+                out[k] = t as u64;
+                carry = t >> 64;
+                k += 1;
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    fn mul_karatsuba(&self, other: &BigUint) -> BigUint {
+        let half = self.limbs.len().max(other.limbs.len()) / 2;
+        let (a0, a1) = self.split_at(half);
+        let (b0, b1) = other.split_at(half);
+        let z0 = a0.mul(&b0);
+        let z2 = a1.mul(&b1);
+        let z1 = a0.add(&a1).mul(&b0.add(&b1)).sub(&z0).sub(&z2);
+        z0.add(&z1.shl_limbs(half)).add(&z2.shl_limbs(2 * half))
+    }
+
+    fn split_at(&self, k: usize) -> (BigUint, BigUint) {
+        if k >= self.limbs.len() {
+            (self.clone(), BigUint::zero())
+        } else {
+            (
+                BigUint::from_limbs(self.limbs[..k].to_vec()),
+                BigUint::from_limbs(self.limbs[k..].to_vec()),
+            )
+        }
+    }
+
+    fn shl_limbs(&self, k: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut limbs = vec![0u64; k];
+        limbs.extend_from_slice(&self.limbs);
+        BigUint { limbs }
+    }
+
+    /// `self * v` for a `u64`.
+    pub fn mul_u64(&self, v: u64) -> BigUint {
+        if v == 0 || self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &a in &self.limbs {
+            let t = a as u128 * v as u128 + carry;
+            out.push(t as u64);
+            carry = t >> 64;
+        }
+        if carry != 0 {
+            out.push(carry as u64);
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self << bits`.
+    pub fn shl(&self, bits: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let (limb_shift, bit_shift) = (bits / 64, bits % 64);
+        let mut out = vec![0u64; limb_shift];
+        if bit_shift == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                out.push((l << bit_shift) | carry);
+                carry = l >> (64 - bit_shift);
+            }
+            if carry != 0 {
+                out.push(carry);
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// `self >> bits`.
+    pub fn shr(&self, bits: usize) -> BigUint {
+        let (limb_shift, bit_shift) = (bits / 64, bits % 64);
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let src = &self.limbs[limb_shift..];
+        let mut out = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            out.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let hi = src.get(i + 1).copied().unwrap_or(0);
+                out.push((src[i] >> bit_shift) | (hi << (64 - bit_shift)));
+            }
+        }
+        BigUint::from_limbs(out)
+    }
+
+    /// Quotient and remainder `(self / d, self % d)`; panics if `d == 0`.
+    pub fn divrem(&self, d: &BigUint) -> (BigUint, BigUint) {
+        assert!(!d.is_zero(), "division by zero");
+        match self.cmp(d) {
+            Ordering::Less => return (BigUint::zero(), self.clone()),
+            Ordering::Equal => return (BigUint::one(), BigUint::zero()),
+            Ordering::Greater => {}
+        }
+        if d.limbs.len() == 1 {
+            let (q, r) = self.divrem_u64(d.limbs[0]);
+            return (q, BigUint::from_u64(r));
+        }
+        self.divrem_knuth(d)
+    }
+
+    /// Quotient and `u64` remainder for a single-limb divisor.
+    pub fn divrem_u64(&self, d: u64) -> (BigUint, u64) {
+        assert!(d != 0, "division by zero");
+        let mut q = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            q[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        (BigUint::from_limbs(q), rem as u64)
+    }
+
+    /// Knuth Algorithm D (TAOCP 4.3.1) for multi-limb divisors.
+    fn divrem_knuth(&self, d: &BigUint) -> (BigUint, BigUint) {
+        let shift = d.limbs.last().unwrap().leading_zeros() as usize;
+        let u = self.shl(shift); // dividend, normalized
+        let v = d.shl(shift); // divisor, top bit set
+        let n = v.limbs.len();
+        let m = u.limbs.len() - n;
+        let mut un = u.limbs.clone();
+        un.push(0); // u has m+n+1 limbs
+        let vn = &v.limbs;
+        let mut q = vec![0u64; m + 1];
+        let vtop = vn[n - 1];
+        let vsec = vn[n - 2];
+        for j in (0..=m).rev() {
+            // D3: estimate q̂ from top two dividend limbs / top divisor limb.
+            let num = ((un[j + n] as u128) << 64) | un[j + n - 1] as u128;
+            let mut qhat = num / vtop as u128;
+            let mut rhat = num % vtop as u128;
+            while qhat >> 64 != 0
+                || qhat * vsec as u128 > ((rhat << 64) | un[j + n - 2] as u128)
+            {
+                qhat -= 1;
+                rhat += vtop as u128;
+                if rhat >> 64 != 0 {
+                    break;
+                }
+            }
+            // D4: multiply-subtract u[j..j+n] -= qhat * v.
+            let mut borrow = 0i128;
+            let mut carry = 0u128;
+            for i in 0..n {
+                let p = qhat * vn[i] as u128 + carry;
+                carry = p >> 64;
+                let t = un[i + j] as i128 - (p as u64) as i128 - borrow;
+                un[i + j] = t as u64;
+                borrow = if t < 0 { 1 } else { 0 };
+            }
+            let t = un[j + n] as i128 - carry as i128 - borrow;
+            un[j + n] = t as u64;
+            if t < 0 {
+                // D6: estimate was one too large; add back.
+                qhat -= 1;
+                let mut c = 0u128;
+                for i in 0..n {
+                    let s = un[i + j] as u128 + vn[i] as u128 + c;
+                    un[i + j] = s as u64;
+                    c = s >> 64;
+                }
+                un[j + n] = (un[j + n] as u128).wrapping_add(c) as u64;
+            }
+            q[j] = qhat as u64;
+        }
+        let rem = BigUint::from_limbs(un[..n].to_vec()).shr(shift);
+        (BigUint::from_limbs(q), rem)
+    }
+
+    /// `self mod m`.
+    pub fn rem(&self, m: &BigUint) -> BigUint {
+        self.divrem(m).1
+    }
+
+    /// `(self + other) mod m`, assuming both operands are `< m`.
+    pub fn add_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        let s = self.add(other);
+        if s >= *m { s.sub(m) } else { s }
+    }
+
+    /// `(self - other) mod m`, assuming both operands are `< m`.
+    pub fn sub_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        if self >= other {
+            self.sub(other)
+        } else {
+            m.sub(other).add(self)
+        }
+    }
+
+    /// `(self * other) mod m`.
+    pub fn mul_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        self.mul(other).rem(m)
+    }
+
+    /// Modular exponentiation `self^exp mod m`.
+    ///
+    /// Uses Montgomery multiplication when `m` is odd (the Paillier case),
+    /// falling back to square-and-multiply with division-based reduction.
+    pub fn modpow(&self, exp: &BigUint, m: &BigUint) -> BigUint {
+        assert!(!m.is_zero(), "modpow modulus zero");
+        if m.is_one() {
+            return BigUint::zero();
+        }
+        if !m.is_even() {
+            return Montgomery::new(m).pow(self, exp);
+        }
+        // Even modulus: plain left-to-right square-and-multiply.
+        let base = self.rem(m);
+        let mut acc = BigUint::one();
+        for i in (0..exp.bit_len()).rev() {
+            acc = acc.mul_mod(&acc, m);
+            if exp.bit(i) {
+                acc = acc.mul_mod(&base, m);
+            }
+        }
+        acc
+    }
+
+    /// Greatest common divisor (binary GCD).
+    pub fn gcd(&self, other: &BigUint) -> BigUint {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        if a.is_zero() {
+            return b;
+        }
+        if b.is_zero() {
+            return a;
+        }
+        let az = a.trailing_zeros();
+        let bz = b.trailing_zeros();
+        let common = az.min(bz);
+        a = a.shr(az);
+        b = b.shr(bz);
+        loop {
+            if a > b {
+                std::mem::swap(&mut a, &mut b);
+            }
+            b = b.sub(&a);
+            if b.is_zero() {
+                return a.shl(common);
+            }
+            b = b.shr(b.trailing_zeros());
+        }
+    }
+
+    /// Least common multiple.
+    pub fn lcm(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        self.divrem(&self.gcd(other)).0.mul(other)
+    }
+
+    /// Number of trailing zero bits (0 for zero).
+    pub fn trailing_zeros(&self) -> usize {
+        for (i, &l) in self.limbs.iter().enumerate() {
+            if l != 0 {
+                return i * 64 + l.trailing_zeros() as usize;
+            }
+        }
+        0
+    }
+
+    /// Modular inverse `self^-1 mod m`, or `None` if `gcd(self, m) != 1`.
+    pub fn modinv(&self, m: &BigUint) -> Option<BigUint> {
+        let a = BigInt::from_biguint(self.rem(m));
+        let (g, x, _) = BigInt::ext_gcd(&a, &BigInt::from_biguint(m.clone()));
+        if !g.magnitude().is_one() {
+            return None;
+        }
+        Some(x.rem_euclid(m))
+    }
+
+    /// Integer square root (floor).
+    pub fn isqrt(&self) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        // Newton's method with a power-of-two seed.
+        let mut x = BigUint::one().shl(self.bit_len().div_ceil(2));
+        loop {
+            // x' = (x + self/x) / 2
+            let y = x.add(&self.divrem(&x).0).shr(1);
+            if y >= x {
+                return x;
+            }
+            x = y;
+        }
+    }
+}
+
+impl PartialOrd for BigUint {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for BigUint {
+    fn cmp(&self, other: &Self) -> Ordering {
+        match self.limbs.len().cmp(&other.limbs.len()) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => {}
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+}
+
+impl std::fmt::Debug for BigUint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BigUint({})", self.to_dec_string())
+    }
+}
+
+impl std::fmt::Display for BigUint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_dec_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TestRng;
+
+    fn n(s: &str) -> BigUint {
+        BigUint::from_dec_str(s).unwrap()
+    }
+
+    #[test]
+    fn construct_and_render() {
+        assert_eq!(BigUint::zero().to_dec_string(), "0");
+        assert_eq!(BigUint::from_u64(42).to_dec_string(), "42");
+        assert_eq!(
+            BigUint::from_u128(u128::MAX).to_dec_string(),
+            "340282366920938463463374607431768211455"
+        );
+        let big = n("123456789012345678901234567890123456789012345678901234567890");
+        assert_eq!(
+            big.to_dec_string(),
+            "123456789012345678901234567890123456789012345678901234567890"
+        );
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let x = n("98765432109876543210987654321098765432109876543210");
+        assert_eq!(BigUint::from_bytes_le(&x.to_bytes_le()), x);
+        assert_eq!(BigUint::from_bytes_be(&x.to_bytes_be()), x);
+        assert!(BigUint::zero().to_bytes_le().is_empty());
+    }
+
+    #[test]
+    fn add_sub_basic() {
+        let a = n("340282366920938463463374607431768211455"); // 2^128-1
+        let b = BigUint::one();
+        let s = a.add(&b);
+        assert_eq!(s.to_dec_string(), "340282366920938463463374607431768211456");
+        assert_eq!(s.sub(&b), a);
+        assert_eq!(s.sub(&a), b);
+        assert_eq!(a.sub(&a), BigUint::zero());
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        BigUint::from_u64(1).sub(&BigUint::from_u64(2));
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let cases: [(u64, u64); 4] =
+            [(0, 5), (u64::MAX, u64::MAX), (12345, 67890), (1 << 63, 2)];
+        for (a, b) in cases {
+            let got = BigUint::from_u64(a).mul(&BigUint::from_u64(b));
+            assert_eq!(got, BigUint::from_u128(a as u128 * b as u128));
+        }
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        let mut rng = TestRng::new(7);
+        for _ in 0..10 {
+            let a = random_biguint(&mut rng, 40 * 64);
+            let b = random_biguint(&mut rng, 40 * 64);
+            assert_eq!(a.mul_karatsuba(&b), a.mul_schoolbook(&b));
+        }
+    }
+
+    #[test]
+    fn shifts() {
+        let x = n("123456789123456789123456789");
+        assert_eq!(x.shl(0), x);
+        assert_eq!(x.shl(64).shr(64), x);
+        assert_eq!(x.shl(67).shr(67), x);
+        assert_eq!(x.shr(1000), BigUint::zero());
+        assert_eq!(x.shl(3), x.mul_u64(8));
+    }
+
+    #[test]
+    fn divrem_small() {
+        let (q, r) = n("1000").divrem(&n("7"));
+        assert_eq!((q.to_dec_string(), r.to_dec_string()), ("142".into(), "6".into()));
+        let (q, r) = n("7").divrem(&n("1000"));
+        assert!(q.is_zero());
+        assert_eq!(r, n("7"));
+    }
+
+    /// Property: for random a, d — a = q*d + r with r < d.
+    #[test]
+    fn divrem_property() {
+        let mut rng = TestRng::new(42);
+        for i in 0..60usize {
+            let abits = 64 + (i * 37) % 1500;
+            let dbits = 1 + (i * 53) % abits;
+            let a = random_biguint(&mut rng, abits);
+            let mut d = random_biguint(&mut rng, dbits);
+            if d.is_zero() {
+                d = BigUint::one();
+            }
+            let (q, r) = a.divrem(&d);
+            assert!(r < d, "remainder must be < divisor");
+            assert_eq!(q.mul(&d).add(&r), a, "a == q*d + r");
+        }
+    }
+
+    /// Regression for the Knuth-D add-back branch (rare; forced divisor).
+    #[test]
+    fn divrem_knuth_addback() {
+        // Dividend/divisor crafted so qhat overestimates: v = 2^128 - 1,
+        // u = v * (2^64 - 1) + small.
+        let v = BigUint::from_u128(u128::MAX);
+        let u = v.mul(&BigUint::from_u64(u64::MAX)).add(&BigUint::from_u64(3));
+        let (q, r) = u.divrem(&v);
+        assert_eq!(q.mul(&v).add(&r), u);
+        assert!(r < v);
+    }
+
+    #[test]
+    fn modpow_fermat() {
+        // Fermat: a^(p-1) = 1 mod p for prime p not dividing a.
+        let p = n("1000000007");
+        let a = n("123456789");
+        assert_eq!(a.modpow(&p.sub_u64(1), &p), BigUint::one());
+        // Even modulus path.
+        let m = n("1000000006");
+        let got = a.modpow(&n("12345"), &m);
+        // cross-check with iterated multiplication
+        let mut acc = BigUint::one();
+        for _ in 0..12345u32 {
+            acc = acc.mul_mod(&a, &m);
+        }
+        assert_eq!(got, acc);
+    }
+
+    #[test]
+    fn gcd_lcm() {
+        assert_eq!(n("48").gcd(&n("36")), n("12"));
+        assert_eq!(n("48").lcm(&n("36")), n("144"));
+        assert_eq!(n("17").gcd(&n("13")), BigUint::one());
+        assert_eq!(BigUint::zero().gcd(&n("5")), n("5"));
+        let a = n("123456789123456789");
+        let b = n("987654321987654321");
+        let g = a.gcd(&b);
+        assert!(a.rem(&g).is_zero() && b.rem(&g).is_zero());
+    }
+
+    #[test]
+    fn modinv_property() {
+        let mut rng = TestRng::new(9);
+        let m = n("115792089237316195423570985008687907853269984665640564039457584007913129639747");
+        for _ in 0..20 {
+            let a = random_biguint(&mut rng, 200).rem(&m);
+            if a.is_zero() {
+                continue;
+            }
+            if let Some(inv) = a.modinv(&m) {
+                assert_eq!(a.mul_mod(&inv, &m), BigUint::one());
+            }
+        }
+        assert!(n("6").modinv(&n("9")).is_none(), "gcd != 1 has no inverse");
+    }
+
+    #[test]
+    fn isqrt_property() {
+        let mut rng = TestRng::new(3);
+        for _ in 0..30 {
+            let x = random_biguint(&mut rng, 300);
+            let s = x.isqrt();
+            assert!(s.mul(&s) <= x);
+            let s1 = s.add_u64(1);
+            assert!(s1.mul(&s1) > x);
+        }
+    }
+
+    #[test]
+    fn cmp_ordering() {
+        assert!(n("100") < n("101"));
+        assert!(n("18446744073709551616") > n("18446744073709551615"));
+        assert_eq!(n("5").cmp(&n("5")), Ordering::Equal);
+    }
+
+    pub(crate) fn random_biguint(rng: &mut TestRng, bits: usize) -> BigUint {
+        let mut bytes = vec![0u8; bits.div_ceil(8)];
+        rng.fill_bytes(&mut bytes);
+        if bits % 8 != 0 {
+            let last = bytes.len() - 1;
+            bytes[last] &= (1u8 << (bits % 8)) - 1;
+        }
+        BigUint::from_bytes_le(&bytes)
+    }
+}

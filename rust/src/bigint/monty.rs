@@ -1,0 +1,257 @@
+//! Montgomery-form modular arithmetic for odd moduli.
+//!
+//! Paillier spends virtually all of its time in `modpow` over the (odd)
+//! moduli `n` and `n²`, so this is the crate's number-theoretic hot path.
+//! The implementation is CIOS (coarsely integrated operand scanning)
+//! Montgomery multiplication with a 4-bit fixed window exponentiation.
+
+use super::BigUint;
+
+/// Precomputed Montgomery context for an odd modulus `m`.
+pub struct Montgomery {
+    m: Vec<u64>,
+    /// `-m^-1 mod 2^64`
+    n0inv: u64,
+    /// `R mod m` where `R = 2^(64·k)`
+    r: BigUint,
+    /// `R² mod m` (used to enter Montgomery form)
+    r2: BigUint,
+    k: usize,
+}
+
+impl Montgomery {
+    /// Build a context; panics if `m` is even or zero.
+    pub fn new(m: &BigUint) -> Self {
+        assert!(!m.is_zero() && !m.is_even(), "Montgomery requires odd modulus");
+        let k = m.limbs.len();
+        let n0inv = inv64(m.limbs[0]).wrapping_neg();
+        let r = BigUint::one().shl(64 * k).rem(m);
+        let r2 = r.mul(&r).rem(m);
+        Montgomery { m: m.limbs.clone(), n0inv, r, r2, k }
+    }
+
+    /// The modulus.
+    pub fn modulus(&self) -> BigUint {
+        BigUint::from_limbs(self.m.clone())
+    }
+
+    /// Montgomery product `a·b·R⁻¹ mod m` over fixed-width limb slices.
+    fn mont_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let k = self.k;
+        // CIOS: t has k+2 limbs.
+        let mut t = vec![0u64; k + 2];
+        for i in 0..k {
+            // t += a[i] * b
+            let ai = a[i];
+            let mut carry = 0u128;
+            for j in 0..k {
+                let s = t[j] as u128 + ai as u128 * b[j] as u128 + carry;
+                t[j] = s as u64;
+                carry = s >> 64;
+            }
+            let s = t[k] as u128 + carry;
+            t[k] = s as u64;
+            t[k + 1] = (s >> 64) as u64;
+            // m-reduction: u = t[0] * n0inv; t += u * m; t >>= 64
+            let u = t[0].wrapping_mul(self.n0inv);
+            let s = t[0] as u128 + u as u128 * self.m[0] as u128;
+            let mut carry = s >> 64;
+            for j in 1..k {
+                let s = t[j] as u128 + u as u128 * self.m[j] as u128 + carry;
+                t[j - 1] = s as u64;
+                carry = s >> 64;
+            }
+            let s = t[k] as u128 + carry;
+            t[k - 1] = s as u64;
+            t[k] = t[k + 1] + ((s >> 64) as u64);
+            t[k + 1] = 0;
+        }
+        // Conditional final subtraction: t in [0, 2m).
+        t.truncate(k + 1);
+        if t[k] != 0 || ge(&t[..k], &self.m) {
+            sub_in_place(&mut t, &self.m);
+        }
+        t.truncate(k);
+        t
+    }
+
+    fn to_mont(&self, a: &BigUint) -> Vec<u64> {
+        let a = a.rem(&self.modulus());
+        let mut al = a.limbs.clone();
+        al.resize(self.k, 0);
+        let mut r2 = self.r2.limbs.clone();
+        r2.resize(self.k, 0);
+        self.mont_mul(&al, &r2)
+    }
+
+    fn from_mont(&self, a: &[u64]) -> BigUint {
+        let mut one = vec![0u64; self.k];
+        one[0] = 1;
+        BigUint::from_limbs(self.mont_mul(a, &one))
+    }
+
+    /// `base^exp mod m` using 4-bit fixed windows.
+    pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if exp.is_zero() {
+            return BigUint::one().rem(&self.modulus());
+        }
+        let bm = self.to_mont(base);
+        // Precompute bm^0..bm^15 (bm^0 = R mod m).
+        let mut table = Vec::with_capacity(16);
+        let mut one_m = self.r.limbs.clone();
+        one_m.resize(self.k, 0);
+        table.push(one_m);
+        for i in 1..16 {
+            table.push(self.mont_mul(&table[i - 1], &bm));
+        }
+        let bits = exp.bit_len();
+        let windows = bits.div_ceil(4);
+        let mut acc = table[0].clone(); // R mod m == 1 in Montgomery form
+        let mut started = false;
+        for w in (0..windows).rev() {
+            if started {
+                for _ in 0..4 {
+                    acc = self.mont_mul(&acc, &acc);
+                }
+            }
+            let mut idx = 0usize;
+            for b in 0..4 {
+                let bit = w * 4 + b;
+                if bit < bits && exp.bit(bit) {
+                    idx |= 1 << b;
+                }
+            }
+            if idx != 0 {
+                acc = self.mont_mul(&acc, &table[idx]);
+                started = true;
+            } else if started {
+                // window of zeros: squarings already applied
+            } else {
+                // leading zero windows: nothing yet
+            }
+        }
+        if !started {
+            return BigUint::one().rem(&self.modulus());
+        }
+        self.from_mont(&acc)
+    }
+
+    /// Montgomery-accelerated modular multiplication `a·b mod m`.
+    pub fn mul(&self, a: &BigUint, b: &BigUint) -> BigUint {
+        let am = self.to_mont(a);
+        let mut bl = b.rem(&self.modulus()).limbs.clone();
+        bl.resize(self.k, 0);
+        // a·R · b · R⁻¹ = a·b
+        BigUint::from_limbs(self.mont_mul(&am, &bl))
+    }
+}
+
+/// Inverse of an odd `x` modulo 2^64 (Newton–Hensel lifting).
+fn inv64(x: u64) -> u64 {
+    debug_assert!(x & 1 == 1);
+    let mut inv = x; // correct to 3 bits
+    for _ in 0..5 {
+        inv = inv.wrapping_mul(2u64.wrapping_sub(x.wrapping_mul(inv)));
+    }
+    debug_assert_eq!(x.wrapping_mul(inv), 1);
+    inv
+}
+
+fn ge(a: &[u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    for i in (0..a.len()).rev() {
+        if a[i] > b[i] {
+            return true;
+        }
+        if a[i] < b[i] {
+            return false;
+        }
+    }
+    true
+}
+
+fn sub_in_place(a: &mut [u64], b: &[u64]) {
+    let mut borrow = 0u64;
+    for i in 0..b.len() {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        a[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+    if a.len() > b.len() {
+        a[b.len()] = a[b.len()].wrapping_sub(borrow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::random_biguint;
+    use super::*;
+    use crate::testutil::TestRng;
+
+    #[test]
+    fn inv64_is_inverse() {
+        for x in [1u64, 3, 5, 0xdead_beef_dead_beef | 1, u64::MAX] {
+            assert_eq!(x.wrapping_mul(inv64(x)), 1);
+        }
+    }
+
+    #[test]
+    fn pow_matches_naive() {
+        let m = BigUint::from_dec_str("1000003").unwrap();
+        let mont = Montgomery::new(&m);
+        let base = BigUint::from_u64(98765);
+        let mut expect = BigUint::one();
+        for e in 0..50u64 {
+            let got = mont.pow(&base, &BigUint::from_u64(e));
+            assert_eq!(got, expect, "exp={e}");
+            expect = expect.mul_mod(&base, &m);
+        }
+    }
+
+    #[test]
+    fn pow_zero_exponent() {
+        let m = BigUint::from_dec_str("999999999989").unwrap();
+        let mont = Montgomery::new(&m);
+        assert_eq!(mont.pow(&BigUint::from_u64(7), &BigUint::zero()), BigUint::one());
+        assert_eq!(mont.pow(&BigUint::zero(), &BigUint::from_u64(5)), BigUint::zero());
+    }
+
+    /// Property: Montgomery pow == division-based square-and-multiply.
+    #[test]
+    fn pow_property_random() {
+        let mut rng = TestRng::new(11);
+        for _ in 0..8 {
+            let mut m = random_biguint(&mut rng, 512);
+            m.set_bit(0); // force odd
+            m.set_bit(511);
+            let mont = Montgomery::new(&m);
+            let base = random_biguint(&mut rng, 512);
+            let exp = random_biguint(&mut rng, 64);
+            // reference: square-and-multiply with divrem reduction
+            let b = base.rem(&m);
+            let mut acc = BigUint::one();
+            for i in (0..exp.bit_len()).rev() {
+                acc = acc.mul_mod(&acc, &m);
+                if exp.bit(i) {
+                    acc = acc.mul_mod(&b, &m);
+                }
+            }
+            assert_eq!(mont.pow(&base, &exp), acc);
+        }
+    }
+
+    #[test]
+    fn mul_matches_mul_mod() {
+        let mut rng = TestRng::new(13);
+        let mut m = random_biguint(&mut rng, 256);
+        m.set_bit(0);
+        m.set_bit(255);
+        let mont = Montgomery::new(&m);
+        for _ in 0..20 {
+            let a = random_biguint(&mut rng, 256);
+            let b = random_biguint(&mut rng, 256);
+            assert_eq!(mont.mul(&a, &b), a.mul_mod(&b, &m));
+        }
+    }
+}

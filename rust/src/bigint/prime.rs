@@ -1,0 +1,127 @@
+//! Probabilistic primality testing and random prime generation for
+//! Paillier key generation.
+
+use super::{BigUint, RandomSource};
+
+/// Small primes for fast trial division before Miller–Rabin.
+const SMALL_PRIMES: [u64; 60] = [
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
+    97, 101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151, 157, 163, 167, 173, 179, 181, 191,
+    193, 197, 199, 211, 223, 227, 229, 233, 239, 241, 251, 257, 263, 269, 271, 277, 281,
+];
+
+/// Miller–Rabin probabilistic primality test with `rounds` random bases.
+///
+/// Error probability ≤ 4^-rounds for composites. 2^-80 at 40 rounds.
+pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut dyn RandomSource) -> bool {
+    if n.limbs.len() <= 1 {
+        let v = n.low_u64();
+        if v <= *SMALL_PRIMES.last().unwrap() {
+            return SMALL_PRIMES.contains(&v);
+        }
+    }
+    if n.is_even() {
+        return false;
+    }
+    for &p in &SMALL_PRIMES {
+        if n.divrem_u64(p).1 == 0 {
+            // n is a proper multiple of a small prime (n > 281 here).
+            return false;
+        }
+    }
+    // Write n-1 = d * 2^s with d odd.
+    let n1 = n.sub_u64(1);
+    let s = n1.trailing_zeros();
+    let d = n1.shr(s);
+    let two = BigUint::from_u64(2);
+    let bound = n.sub_u64(3); // bases in [2, n-2]
+    'witness: for _ in 0..rounds {
+        let a = rng.below(&bound).add(&two);
+        let mut x = a.modpow(&d, n);
+        if x.is_one() || x == n1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = x.mul_mod(&x, n);
+            if x == n1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random prime of exactly `bits` bits (top two bits set so the
+/// product of two such primes has exactly `2·bits` bits — the standard RSA
+/// modulus construction Paillier reuses).
+pub fn gen_prime(bits: usize, rng: &mut dyn RandomSource) -> BigUint {
+    assert!(bits >= 16, "prime too small to be useful");
+    let rounds = 28; // 4^-28 < 2^-56 per candidate; fine for experiments
+    loop {
+        let mut bytes = vec![0u8; bits.div_ceil(8)];
+        rng.fill_bytes(&mut bytes);
+        let mut cand = BigUint::from_bytes_le(&bytes);
+        // Trim to exactly `bits` bits, set the top two bits and make odd.
+        cand = cand.shr(cand.bit_len().saturating_sub(bits));
+        cand.set_bit(bits - 1);
+        cand.set_bit(bits - 2);
+        cand.set_bit(0);
+        if is_probable_prime(&cand, rounds, rng) {
+            return cand;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TestRng;
+
+    #[test]
+    fn known_primes_and_composites() {
+        let mut rng = TestRng::new(1);
+        let primes = ["2", "3", "5", "101", "1000000007", "18446744073709551557"];
+        for p in primes {
+            let n = BigUint::from_dec_str(p).unwrap();
+            assert!(is_probable_prime(&n, 20, &mut rng), "{p} is prime");
+        }
+        let composites = ["1", "4", "100", "1000000008", "561", "41041", "825265"];
+        // 561, 41041, 825265 are Carmichael numbers — MR must still reject.
+        for c in composites {
+            let n = BigUint::from_dec_str(c).unwrap();
+            assert!(!is_probable_prime(&n, 20, &mut rng), "{c} is composite");
+        }
+    }
+
+    #[test]
+    fn mersenne_prime_2_127() {
+        let mut rng = TestRng::new(2);
+        // 2^127 - 1 is prime
+        let p = BigUint::one().shl(127).sub_u64(1);
+        assert!(is_probable_prime(&p, 20, &mut rng));
+        // 2^128 - 1 is not
+        let c = BigUint::one().shl(128).sub_u64(1);
+        assert!(!is_probable_prime(&c, 20, &mut rng));
+    }
+
+    #[test]
+    fn gen_prime_properties() {
+        let mut rng = TestRng::new(5);
+        for bits in [64, 128, 256] {
+            let p = gen_prime(bits, &mut rng);
+            assert_eq!(p.bit_len(), bits, "exact bit length");
+            assert!(p.bit(bits - 2), "second-top bit set");
+            assert!(!p.is_even());
+            assert!(is_probable_prime(&p, 20, &mut rng));
+        }
+    }
+
+    #[test]
+    fn distinct_primes() {
+        let mut rng = TestRng::new(6);
+        let p = gen_prime(96, &mut rng);
+        let q = gen_prime(96, &mut rng);
+        assert_ne!(p, q);
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal signed big integer — just enough for the extended Euclidean
+//! algorithm ([`BigInt::ext_gcd`]) behind [`super::BigUint::modinv`], and
+//! for signed fixed-point plumbing in the crypto layer.
+
+use super::BigUint;
+use std::cmp::Ordering;
+
+/// Sign-magnitude arbitrary-precision integer.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct BigInt {
+    /// `false` = non-negative. Zero is always non-negative.
+    negative: bool,
+    mag: BigUint,
+}
+
+impl BigInt {
+    /// Zero.
+    pub fn zero() -> Self {
+        BigInt { negative: false, mag: BigUint::zero() }
+    }
+
+    /// One.
+    pub fn one() -> Self {
+        BigInt { negative: false, mag: BigUint::one() }
+    }
+
+    /// Non-negative integer from a magnitude.
+    pub fn from_biguint(mag: BigUint) -> Self {
+        BigInt { negative: false, mag }
+    }
+
+    /// From an `i64`.
+    pub fn from_i64(v: i64) -> Self {
+        BigInt { negative: v < 0, mag: BigUint::from_u64(v.unsigned_abs()) }
+    }
+
+    /// Magnitude (absolute value).
+    pub fn magnitude(&self) -> &BigUint {
+        &self.mag
+    }
+
+    /// True iff negative (zero is non-negative).
+    pub fn is_negative(&self) -> bool {
+        self.negative && !self.mag.is_zero()
+    }
+
+    /// True iff zero.
+    pub fn is_zero(&self) -> bool {
+        self.mag.is_zero()
+    }
+
+    fn normalized(negative: bool, mag: BigUint) -> Self {
+        BigInt { negative: negative && !mag.is_zero(), mag }
+    }
+
+    /// Negation.
+    pub fn neg(&self) -> Self {
+        Self::normalized(!self.negative, self.mag.clone())
+    }
+
+    /// Addition.
+    pub fn add(&self, other: &BigInt) -> BigInt {
+        if self.negative == other.negative {
+            Self::normalized(self.negative, self.mag.add(&other.mag))
+        } else {
+            match self.mag.cmp(&other.mag) {
+                Ordering::Greater => Self::normalized(self.negative, self.mag.sub(&other.mag)),
+                Ordering::Less => Self::normalized(other.negative, other.mag.sub(&self.mag)),
+                Ordering::Equal => BigInt::zero(),
+            }
+        }
+    }
+
+    /// Subtraction.
+    pub fn sub(&self, other: &BigInt) -> BigInt {
+        self.add(&other.neg())
+    }
+
+    /// Multiplication.
+    pub fn mul(&self, other: &BigInt) -> BigInt {
+        Self::normalized(self.negative != other.negative, self.mag.mul(&other.mag))
+    }
+
+    /// Extended GCD: returns `(g, x, y)` with `a·x + b·y = g = gcd(a, b)`,
+    /// `g ≥ 0`.
+    pub fn ext_gcd(a: &BigInt, b: &BigInt) -> (BigInt, BigInt, BigInt) {
+        let (mut old_r, mut r) = (a.clone(), b.clone());
+        let (mut old_s, mut s) = (BigInt::one(), BigInt::zero());
+        let (mut old_t, mut t) = (BigInt::zero(), BigInt::one());
+        while !r.is_zero() {
+            let (q, rem) = old_r.divrem(&r);
+            old_r = std::mem::replace(&mut r, rem);
+            let ns = old_s.sub(&q.mul(&s));
+            old_s = std::mem::replace(&mut s, ns);
+            let nt = old_t.sub(&q.mul(&t));
+            old_t = std::mem::replace(&mut t, nt);
+        }
+        // gcd sign: make non-negative, flipping coefficients accordingly.
+        if old_r.is_negative() {
+            (old_r.neg(), old_s.neg(), old_t.neg())
+        } else {
+            (old_r, old_s, old_t)
+        }
+    }
+
+    /// Truncated division (quotient rounds toward zero), like Rust `i64`.
+    pub fn divrem(&self, other: &BigInt) -> (BigInt, BigInt) {
+        let (q, r) = self.mag.divrem(&other.mag);
+        (
+            Self::normalized(self.negative != other.negative, q),
+            Self::normalized(self.negative, r),
+        )
+    }
+
+    /// Euclidean remainder in `[0, m)` for a positive modulus `m`.
+    pub fn rem_euclid(&self, m: &BigUint) -> BigUint {
+        let r = self.mag.rem(m);
+        if self.is_negative() && !r.is_zero() {
+            m.sub(&r)
+        } else {
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn i(v: i64) -> BigInt {
+        BigInt::from_i64(v)
+    }
+
+    #[test]
+    fn signed_arith_matches_i64() {
+        let cases = [(5i64, 3i64), (-5, 3), (5, -3), (-5, -3), (0, 7), (7, 0), (-7, 7)];
+        for (a, b) in cases {
+            assert_eq!(i(a).add(&i(b)), i(a + b), "{a}+{b}");
+            assert_eq!(i(a).sub(&i(b)), i(a - b), "{a}-{b}");
+            assert_eq!(i(a).mul(&i(b)), i(a * b), "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn divrem_truncates_toward_zero() {
+        for (a, b) in [(7i64, 3i64), (-7, 3), (7, -3), (-7, -3)] {
+            let (q, r) = i(a).divrem(&i(b));
+            assert_eq!(q, i(a / b), "{a}/{b}");
+            assert_eq!(r, i(a % b), "{a}%{b}");
+        }
+    }
+
+    #[test]
+    fn ext_gcd_bezout() {
+        for (a, b) in [(240i64, 46i64), (46, 240), (-240, 46), (17, 0), (0, 17), (12, 18)] {
+            let (g, x, y) = BigInt::ext_gcd(&i(a), &i(b));
+            let lhs = i(a).mul(&x).add(&i(b).mul(&y));
+            assert_eq!(lhs, g, "bezout for ({a},{b})");
+            assert!(!g.is_negative());
+        }
+    }
+
+    #[test]
+    fn rem_euclid_in_range() {
+        let m = BigUint::from_u64(7);
+        assert_eq!(i(-1).rem_euclid(&m), BigUint::from_u64(6));
+        assert_eq!(i(-14).rem_euclid(&m), BigUint::zero());
+        assert_eq!(i(10).rem_euclid(&m), BigUint::from_u64(3));
+    }
+}

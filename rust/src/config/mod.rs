@@ -1,0 +1,158 @@
+//! Configuration system: defaults < config file < CLI flags.
+//!
+//! The file format is simple `key = value` lines (`#` comments), parsed
+//! without external crates. The same keys are accepted as `--key value`
+//! CLI flags (dashes and underscores interchangeable).
+
+/// All experiment settings (see `privlogit --help` for semantics).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Dataset name from the paper suite (e.g. "Loans", "SimuX100").
+    pub dataset: String,
+    /// Protocol: newton | privlogit-hessian | privlogit-local.
+    pub protocol: String,
+    /// Backend: real | model | auto.
+    pub backend: String,
+    /// Number of organizations (paper: 4–20).
+    pub orgs: usize,
+    /// ℓ₂ regularization λ.
+    pub lambda: f64,
+    /// Relative convergence tolerance.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Paillier modulus bits (real backend). Paper: 2048.
+    pub modulus_bits: usize,
+    /// Spawn one worker thread per organization.
+    pub threaded: bool,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            dataset: "Wine".into(),
+            protocol: "privlogit-local".into(),
+            backend: "auto".into(),
+            orgs: 4,
+            lambda: 1.0,
+            tol: 1e-6,
+            max_iters: 500,
+            modulus_bits: 1024,
+            threaded: false,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Apply one key/value pair; unknown keys are errors.
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let key = key.replace('-', "_");
+        match key.as_str() {
+            "dataset" => self.dataset = value.to_string(),
+            "protocol" => self.protocol = value.to_string(),
+            "backend" => self.backend = value.to_string(),
+            "orgs" => self.orgs = value.parse()?,
+            "lambda" => self.lambda = value.parse()?,
+            "tol" => self.tol = value.parse()?,
+            "max_iters" => self.max_iters = value.parse()?,
+            "modulus_bits" | "modulus" => self.modulus_bits = value.parse()?,
+            "threaded" => self.threaded = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file into `self`.
+    pub fn load_file(&mut self, path: &str) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{path}:{}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Parse CLI arguments (`--key value` pairs, plus `--config FILE`).
+    pub fn parse_args(&mut self, args: &[String]) -> anyhow::Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {arg:?}"))?;
+            if key == "threaded" && (i + 1 >= args.len() || args[i + 1].starts_with("--")) {
+                self.threaded = true;
+                i += 1;
+                continue;
+            }
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value for --{key}"))?;
+            if key == "config" {
+                self.load_file(value)?;
+            } else {
+                self.set(key, value)?;
+            }
+            i += 2;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = Config::default();
+        assert_eq!(c.orgs, 4);
+        c.set("orgs", "12").unwrap();
+        c.set("max-iters", "50").unwrap();
+        c.set("lambda", "0.5").unwrap();
+        assert_eq!(c.orgs, 12);
+        assert_eq!(c.max_iters, 50);
+        assert_eq!(c.lambda, 0.5);
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn cli_parsing() {
+        let mut c = Config::default();
+        let args: Vec<String> = ["--dataset", "Loans", "--orgs", "8", "--threaded", "--tol", "1e-7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.parse_args(&args).unwrap();
+        assert_eq!(c.dataset, "Loans");
+        assert_eq!(c.orgs, 8);
+        assert!(c.threaded);
+        assert_eq!(c.tol, 1e-7);
+        assert!(c.parse_args(&["--orgs".to_string()]).is_err());
+        assert!(c.parse_args(&["orgs".to_string(), "3".to_string()]).is_err());
+    }
+
+    #[test]
+    fn file_parsing() {
+        let dir = std::env::temp_dir().join("privlogit_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.conf");
+        std::fs::write(&path, "# experiment\ndataset = News\nprotocol = newton\nseed = 7\n")
+            .unwrap();
+        let mut c = Config::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.dataset, "News");
+        assert_eq!(c.protocol, "newton");
+        assert_eq!(c.seed, 7);
+    }
+}

@@ -1,0 +1,307 @@
+//! The node fleet: the organizations of Figure 1 as workers.
+//!
+//! A [`Fleet`] answers the Center's per-round statistic requests. Two
+//! implementations:
+//!
+//! * [`LocalFleet`] — sequential in-process evaluation through one
+//!   [`NodeCompute`] engine (PJRT or CPU); per-node wall times are still
+//!   measured individually so the ledger's parallel-round accounting is
+//!   exact.
+//! * [`ThreadedFleet`] — one long-lived worker thread per organization,
+//!   command/reply message channels, genuinely parallel node compute —
+//!   the deployment shape of the paper's distributed architecture.
+//!
+//! Node-side values returned here are *plaintext* (organizations compute
+//! freely over their own data — the paper's "privacy-free" node work);
+//! encryption happens at the fabric boundary and is attributed to the
+//! node by the ledger.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::optim::{local_gram_quarter, local_hessian, local_stats};
+use crate::protocols::common::pack_tri;
+use crate::runtime::NodeCompute;
+
+/// One node's reply to a statistics request, with its compute seconds.
+#[derive(Clone, Debug)]
+pub struct NodeReply {
+    /// Flat payload (gradient / packed Hessian triangle).
+    pub values: Vec<f64>,
+    /// Log-likelihood share (stats requests only).
+    pub loglik: f64,
+    /// Node compute seconds (ledger attribution).
+    pub secs: f64,
+}
+
+/// The Center's view of the organizations.
+pub trait Fleet {
+    /// Number of organizations.
+    fn orgs(&self) -> usize;
+    /// Total sample count (public: drives the 1/n scaling).
+    fn n_total(&self) -> usize;
+    /// Dimensionality.
+    fn p(&self) -> usize;
+    /// Dataset display name.
+    fn dataset_name(&self) -> String;
+    /// Per-node fused gradient + log-likelihood at `beta`, × `scale`.
+    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply>;
+    /// Per-node `¼X_jᵀX_j·scale` (packed triangle).
+    fn gram(&mut self, scale: f64) -> Vec<NodeReply>;
+    /// Per-node exact Hessian `X_jᵀAX_j·scale` (packed triangle).
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply>;
+    /// Engine label for reports.
+    fn label(&self) -> String;
+}
+
+/// Sequential fleet over one shared engine.
+pub struct LocalFleet {
+    parts: Vec<Dataset>,
+    engine: Box<dyn NodeCompute>,
+}
+
+impl LocalFleet {
+    /// Build from partitions and an engine.
+    pub fn new(parts: Vec<Dataset>, engine: Box<dyn NodeCompute>) -> Self {
+        assert!(!parts.is_empty());
+        LocalFleet { parts, engine }
+    }
+}
+
+impl Fleet for LocalFleet {
+    fn orgs(&self) -> usize {
+        self.parts.len()
+    }
+    fn n_total(&self) -> usize {
+        self.parts.iter().map(|d| d.n()).sum()
+    }
+    fn p(&self) -> usize {
+        self.parts[0].p()
+    }
+    fn dataset_name(&self) -> String {
+        self.parts[0].name.split('#').next().unwrap_or("?").to_string()
+    }
+
+    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
+        self.parts
+            .iter()
+            .map(|d| {
+                let t0 = Instant::now();
+                let (g, l) = self.engine.stats(d, beta, scale);
+                NodeReply { values: g, loglik: l, secs: t0.elapsed().as_secs_f64() }
+            })
+            .collect()
+    }
+
+    fn gram(&mut self, scale: f64) -> Vec<NodeReply> {
+        self.parts
+            .iter()
+            .map(|d| {
+                let t0 = Instant::now();
+                let h = self.engine.gram_quarter(d, scale);
+                NodeReply {
+                    values: pack_tri(&h),
+                    loglik: 0.0,
+                    secs: t0.elapsed().as_secs_f64(),
+                }
+            })
+            .collect()
+    }
+
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
+        self.parts
+            .iter()
+            .map(|d| {
+                let t0 = Instant::now();
+                let h = self.engine.hessian(d, beta, scale);
+                NodeReply {
+                    values: pack_tri(&h),
+                    loglik: 0.0,
+                    secs: t0.elapsed().as_secs_f64(),
+                }
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        format!("local fleet / {}", self.engine.label())
+    }
+}
+
+/// Commands the Center sends to node workers.
+enum NodeCmd {
+    Stats { beta: Vec<f64>, scale: f64 },
+    Gram { scale: f64 },
+    Hessian { beta: Vec<f64>, scale: f64 },
+    Shutdown,
+}
+
+/// One worker thread per organization, communicating over channels.
+pub struct ThreadedFleet {
+    workers: Vec<Worker>,
+    n_total: usize,
+    p: usize,
+    name: String,
+}
+
+struct Worker {
+    cmd: Sender<NodeCmd>,
+    reply: Receiver<NodeReply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ThreadedFleet {
+    /// Spawn one worker per partition (each with its own CPU engine —
+    /// PJRT clients are not shared across threads).
+    pub fn spawn(parts: Vec<Dataset>) -> Self {
+        assert!(!parts.is_empty());
+        let n_total = parts.iter().map(|d| d.n()).sum();
+        let p = parts[0].p();
+        let name = parts[0].name.split('#').next().unwrap_or("?").to_string();
+        let workers = parts
+            .into_iter()
+            .map(|data| {
+                let (cmd_tx, cmd_rx) = channel::<NodeCmd>();
+                let (rep_tx, rep_rx) = channel::<NodeReply>();
+                let handle = std::thread::spawn(move || node_main(data, cmd_rx, rep_tx));
+                Worker { cmd: cmd_tx, reply: rep_rx, handle: Some(handle) }
+            })
+            .collect();
+        ThreadedFleet { workers, n_total, p, name }
+    }
+
+    fn round(&mut self, make: impl Fn() -> NodeCmd) -> Vec<NodeReply> {
+        for w in &self.workers {
+            w.cmd.send(make()).expect("node worker alive");
+        }
+        self.workers
+            .iter()
+            .map(|w| w.reply.recv().expect("node reply"))
+            .collect()
+    }
+}
+
+fn node_main(data: Dataset, cmd: Receiver<NodeCmd>, reply: Sender<NodeReply>) {
+    while let Ok(c) = cmd.recv() {
+        let t0 = Instant::now();
+        let rep = match c {
+            NodeCmd::Stats { beta, scale } => {
+                let s = local_stats(&data, &beta);
+                NodeReply {
+                    values: s.grad.iter().map(|v| v * scale).collect(),
+                    loglik: s.loglik * scale,
+                    secs: 0.0,
+                }
+            }
+            NodeCmd::Gram { scale } => {
+                let mut h = local_gram_quarter(&data);
+                h.scale(scale);
+                NodeReply { values: pack_tri(&h), loglik: 0.0, secs: 0.0 }
+            }
+            NodeCmd::Hessian { beta, scale } => {
+                let mut h = local_hessian(&data, &beta);
+                h.scale(scale);
+                NodeReply { values: pack_tri(&h), loglik: 0.0, secs: 0.0 }
+            }
+            NodeCmd::Shutdown => return,
+        };
+        let rep = NodeReply { secs: t0.elapsed().as_secs_f64(), ..rep };
+        if reply.send(rep).is_err() {
+            return;
+        }
+    }
+}
+
+impl Fleet for ThreadedFleet {
+    fn orgs(&self) -> usize {
+        self.workers.len()
+    }
+    fn n_total(&self) -> usize {
+        self.n_total
+    }
+    fn p(&self) -> usize {
+        self.p
+    }
+    fn dataset_name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
+        let b = beta.to_vec();
+        self.round(|| NodeCmd::Stats { beta: b.clone(), scale })
+    }
+
+    fn gram(&mut self, scale: f64) -> Vec<NodeReply> {
+        self.round(|| NodeCmd::Gram { scale })
+    }
+
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
+        let b = beta.to_vec();
+        self.round(|| NodeCmd::Hessian { beta: b.clone(), scale })
+    }
+
+    fn label(&self) -> String {
+        format!("threaded fleet ({} workers)", self.workers.len())
+    }
+}
+
+impl Drop for ThreadedFleet {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(NodeCmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthesize;
+    use crate::runtime::CpuCompute;
+    use crate::testutil::assert_all_close;
+
+    #[test]
+    fn threaded_matches_local() {
+        let d = synthesize("t", 900, 5, 41);
+        let parts = d.partition(3);
+        let mut local = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+        let mut threaded = ThreadedFleet::spawn(parts);
+        let beta = vec![0.1, -0.2, 0.3, 0.0, 0.05];
+        let scale = 1.0 / 900.0;
+        let a = local.stats(&beta, scale);
+        let b = threaded.stats(&beta, scale);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_all_close(&x.values, &y.values, 1e-12, "stats parity");
+            assert!((x.loglik - y.loglik).abs() < 1e-12);
+        }
+        let ga = local.gram(scale);
+        let gb = threaded.gram(scale);
+        for (x, y) in ga.iter().zip(&gb) {
+            assert_all_close(&x.values, &y.values, 1e-12, "gram parity");
+        }
+        let ha = local.hessian(&beta, scale);
+        let hb = threaded.hessian(&beta, scale);
+        for (x, y) in ha.iter().zip(&hb) {
+            assert_all_close(&x.values, &y.values, 1e-12, "hessian parity");
+        }
+        assert_eq!(threaded.orgs(), 3);
+        assert_eq!(threaded.n_total(), 900);
+        assert_eq!(threaded.p(), 5);
+        assert_eq!(threaded.dataset_name(), "t");
+    }
+
+    #[test]
+    fn threaded_fleet_shutdown_clean() {
+        let d = synthesize("t", 90, 3, 42);
+        let fleet = ThreadedFleet::spawn(d.partition(5));
+        drop(fleet); // must join without hanging
+    }
+}

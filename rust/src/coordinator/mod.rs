@@ -1,0 +1,178 @@
+//! Layer-3 coordination: the experiment runner tying together datasets,
+//! node fleets, secure fabrics and protocols (the deployment shape of the
+//! paper's Figure 1).
+//!
+//! [`fleet`] implements the organizations (including the threaded
+//! worker topology); [`Experiment`] is the single entry point the CLI,
+//! examples and benches all drive.
+
+pub mod fleet;
+
+use crate::config::Config;
+use crate::data::{load_workload, workload, Dataset};
+use crate::gc::word::FixedFmt;
+use crate::mpc::{ModelFabric, RealFabric};
+use crate::protocols::{Protocol, ProtocolConfig, RunReport};
+use crate::runtime;
+use fleet::{Fleet, LocalFleet, ThreadedFleet};
+
+/// Which secure backend to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Everything executed (Paillier + garbled circuits).
+    Real,
+    /// Calibrated cost model (paper-scale sweeps).
+    Model,
+    /// Real for small p, modeled above [`Experiment::REAL_P_LIMIT`].
+    Auto,
+}
+
+impl Backend {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "real" => Some(Backend::Real),
+            "model" | "modeled" => Some(Backend::Model),
+            "auto" => Some(Backend::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// A fully-specified experiment.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    /// Dataset (a paper workload name or synthetic spec).
+    pub dataset: Dataset,
+    /// Number of organizations (paper partitions 4–20).
+    pub orgs: usize,
+    /// Protocol to run.
+    pub protocol: Protocol,
+    /// Secure backend selection.
+    pub backend: Backend,
+    /// Paillier modulus bits for the real backend.
+    pub modulus_bits: usize,
+    /// Fixed-point format.
+    pub fmt: FixedFmt,
+    /// Optimizer settings.
+    pub cfg: ProtocolConfig,
+    /// Use the threaded node fleet (real parallel node workers).
+    pub threaded_nodes: bool,
+    /// RNG seed for the real backend.
+    pub seed: u64,
+}
+
+impl Experiment {
+    /// Above this dimensionality `Backend::Auto` switches to the cost
+    /// model (a real garbled Cholesky at p=24 is ~10⁷ AND gates — fine;
+    /// at p=100 it is ~10⁹ per Newton iteration).
+    pub const REAL_P_LIMIT: usize = 24;
+
+    /// Build from a parsed [`Config`].
+    pub fn from_config(c: &Config) -> anyhow::Result<Experiment> {
+        let dataset = match workload(&c.dataset) {
+            Some(w) => load_workload(w),
+            None => anyhow::bail!(
+                "unknown dataset {:?} — `privlogit list` shows the paper suite",
+                c.dataset
+            ),
+        };
+        let protocol = Protocol::parse(&c.protocol)
+            .ok_or_else(|| anyhow::anyhow!("unknown protocol {:?}", c.protocol))?;
+        let backend = Backend::parse(&c.backend)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend {:?}", c.backend))?;
+        Ok(Experiment {
+            dataset,
+            orgs: c.orgs,
+            protocol,
+            backend,
+            modulus_bits: c.modulus_bits,
+            fmt: FixedFmt::DEFAULT,
+            cfg: ProtocolConfig { lambda: c.lambda, tol: c.tol, max_iters: c.max_iters },
+            threaded_nodes: c.threaded,
+            seed: c.seed,
+        })
+    }
+
+    /// Resolve `Auto` for this experiment's dimensionality.
+    pub fn effective_backend(&self) -> Backend {
+        match self.backend {
+            Backend::Auto => {
+                if self.dataset.p() <= Self::REAL_P_LIMIT {
+                    Backend::Real
+                } else {
+                    Backend::Model
+                }
+            }
+            b => b,
+        }
+    }
+
+    fn make_fleet(&self) -> Box<dyn Fleet> {
+        let parts = self.dataset.partition(self.orgs);
+        if self.threaded_nodes {
+            Box::new(ThreadedFleet::spawn(parts))
+        } else {
+            Box::new(LocalFleet::new(parts, runtime::default_engine()))
+        }
+    }
+
+    /// Run the experiment, returning the protocol report.
+    pub fn run(&self) -> RunReport {
+        let mut fleet = self.make_fleet();
+        match self.effective_backend() {
+            Backend::Real => {
+                let mut fab = RealFabric::new(self.modulus_bits, self.fmt, self.seed);
+                self.protocol.run(&mut fab, fleet.as_mut(), &self.cfg)
+            }
+            Backend::Model | Backend::Auto => {
+                let mut fab = ModelFabric::new(2048, self.fmt);
+                self.protocol.run(&mut fab, fleet.as_mut(), &self.cfg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_backend_switches_on_p() {
+        let mut c = Config::default();
+        c.dataset = "Wine".into();
+        let e = Experiment::from_config(&c).unwrap();
+        assert_eq!(e.effective_backend(), Backend::Real); // p=12
+        c.dataset = "SimuX100".into();
+        let e = Experiment::from_config(&c).unwrap();
+        assert_eq!(e.effective_backend(), Backend::Model);
+    }
+
+    #[test]
+    fn from_config_rejects_unknowns() {
+        let mut c = Config::default();
+        c.dataset = "nope".into();
+        assert!(Experiment::from_config(&c).is_err());
+        let mut c = Config::default();
+        c.protocol = "sgd".into();
+        assert!(Experiment::from_config(&c).is_err());
+    }
+
+    /// Full experiment pipeline smoke: modeled backend over the threaded
+    /// fleet on a paper workload.
+    #[test]
+    fn experiment_runs_end_to_end_modeled() {
+        let mut c = Config::default();
+        c.dataset = "Wine".into();
+        c.protocol = "privlogit-local".into();
+        c.backend = "model".into();
+        c.threaded = true;
+        c.orgs = 4;
+        let e = Experiment::from_config(&c).unwrap();
+        let rep = e.run();
+        assert!(rep.converged);
+        assert_eq!(rep.orgs, 4);
+        assert_eq!(rep.p, 12);
+        assert!(rep.total_secs > 0.0);
+    }
+}

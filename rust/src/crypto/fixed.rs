@@ -1,0 +1,172 @@
+//! Signed fixed-point codec between `f64` statistics and the Paillier
+//! plaintext group `Z_n`.
+//!
+//! The paper uses "common privacy-preserving floating-point
+//! representations" (§6, after Nikolaenko et al. 2013): a real value `v`
+//! is represented as `round(v · 2^f)`; negatives wrap into the top half of
+//! `Z_n` (two's-complement-style). Homomorphic addition then adds values;
+//! scalar multiplication by another fixed-point constant yields scale
+//! `2^{2f}`, tracked explicitly by the caller via `scale_bits`.
+
+use crate::bigint::{BigInt, BigUint};
+
+/// Default fractional bits. 40 leaves ample headroom in ≥256-bit moduli
+/// for double-scale products plus aggregation across thousands of terms.
+pub const DEFAULT_FRAC_BITS: u32 = 40;
+
+/// Fixed-point encoder/decoder bound to a plaintext modulus `n`.
+#[derive(Clone)]
+pub struct FixedCodec {
+    /// Plaintext modulus (Paillier `n`).
+    pub n: BigUint,
+    /// Fractional bits `f` for single-scale encodings.
+    pub frac_bits: u32,
+    half_n: BigUint,
+}
+
+impl FixedCodec {
+    /// Create a codec for modulus `n` with `frac_bits` fractional bits.
+    pub fn new(n: BigUint, frac_bits: u32) -> Self {
+        let half_n = n.shr(1);
+        FixedCodec { n, frac_bits, half_n }
+    }
+
+    /// Encode a real value at the default scale `2^frac_bits`.
+    pub fn encode(&self, v: f64) -> BigUint {
+        self.encode_scaled(v, self.frac_bits)
+    }
+
+    /// Encode at an explicit scale `2^scale_bits`.
+    pub fn encode_scaled(&self, v: f64, scale_bits: u32) -> BigUint {
+        assert!(v.is_finite(), "cannot encode non-finite value {v}");
+        let scaled = v * (scale_bits as f64).exp2();
+        assert!(
+            scaled.abs() < 2f64.powi(126),
+            "fixed-point overflow encoding {v} at 2^{scale_bits}"
+        );
+        let mag = BigUint::from_u128(scaled.abs().round() as u128);
+        assert!(
+            mag < self.half_n,
+            "encoded magnitude exceeds n/2 — raise modulus or lower scale"
+        );
+        if scaled < 0.0 && !mag.is_zero() {
+            self.n.sub(&mag)
+        } else {
+            mag
+        }
+    }
+
+    /// Decode a plaintext at the default scale.
+    pub fn decode(&self, m: &BigUint) -> f64 {
+        self.decode_scaled(m, self.frac_bits)
+    }
+
+    /// Decode at an explicit scale `2^scale_bits` (e.g. `2·frac_bits`
+    /// after a fixed-point × fixed-point homomorphic product).
+    pub fn decode_scaled(&self, m: &BigUint, scale_bits: u32) -> f64 {
+        let signed = self.to_signed(m);
+        let mag = signed.magnitude();
+        // Convert magnitude to f64 via the top 64 bits + exponent to keep
+        // precision for values wider than 2^53.
+        let bits = mag.bit_len();
+        let v = if bits <= 64 {
+            mag.low_u64() as f64
+        } else {
+            let top = mag.shr(bits - 64).low_u64() as f64;
+            top * ((bits - 64) as f64).exp2()
+        };
+        let v = v / (scale_bits as f64).exp2();
+        if signed.is_negative() {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Interpret a plaintext as a signed integer in `(−n/2, n/2]`.
+    pub fn to_signed(&self, m: &BigUint) -> BigInt {
+        let m = m.rem(&self.n);
+        if m > self.half_n {
+            BigInt::from_biguint(self.n.sub(&m)).neg()
+        } else {
+            BigInt::from_biguint(m)
+        }
+    }
+
+    /// Encode a signed 64-bit integer exactly (scale 0).
+    pub fn encode_int(&self, v: i64) -> BigUint {
+        if v >= 0 {
+            BigUint::from_u64(v as u64)
+        } else {
+            self.n.sub(&BigUint::from_u64(v.unsigned_abs()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, TestRng};
+
+    fn codec() -> FixedCodec {
+        // 2^200-scale modulus stand-in (odd, > any test encoding)
+        let n = BigUint::one().shl(200).sub_u64(1);
+        FixedCodec::new(n, DEFAULT_FRAC_BITS)
+    }
+
+    #[test]
+    fn roundtrip_exact_values() {
+        let c = codec();
+        for v in [0.0, 1.0, -1.0, 0.5, -0.5, 1234.56789, -9876.54321, 1e-9, -1e-9] {
+            let dec = c.decode(&c.encode(v));
+            assert_close(dec, v, 1e-11, "fixed roundtrip");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_random() {
+        let c = codec();
+        let mut rng = TestRng::new(17);
+        for _ in 0..200 {
+            let v = rng.range_f64(-1e6, 1e6);
+            assert_close(c.decode(&c.encode(v)), v, 1e-10, "random roundtrip");
+        }
+    }
+
+    #[test]
+    fn addition_in_plaintext_space() {
+        let c = codec();
+        let a = 3.25;
+        let b = -7.75;
+        let sum = c.encode(a).add(&c.encode(b)).rem(&c.n);
+        assert_close(c.decode(&sum), a + b, 1e-11, "signed add wraps correctly");
+    }
+
+    #[test]
+    fn product_double_scale() {
+        let c = codec();
+        let a = -12.5;
+        let b = 3.0;
+        // plaintext-space product of encodings = value product at 2f scale
+        let prod = c.encode(a).mul(&c.encode(b)).rem(&c.n);
+        assert_close(
+            c.decode_scaled(&prod, 2 * DEFAULT_FRAC_BITS),
+            a * b,
+            1e-9,
+            "product decodes at 2f",
+        );
+    }
+
+    #[test]
+    fn encode_int_signed() {
+        let c = codec();
+        assert_eq!(c.to_signed(&c.encode_int(-42)), BigInt::from_i64(-42));
+        assert_eq!(c.to_signed(&c.encode_int(42)), BigInt::from_i64(42));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn nan_rejected() {
+        codec().encode(f64::NAN);
+    }
+}

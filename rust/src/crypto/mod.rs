@@ -1,0 +1,15 @@
+//! Cryptographic substrate: CSPRNG, the Paillier additively-homomorphic
+//! cryptosystem, and the signed fixed-point codec that maps regression
+//! statistics into Paillier's plaintext group.
+//!
+//! The paper's Type-1 computations (node ↔ Center exchange, §4.0.2) are
+//! Paillier; Type-2 (between the two Center servers) are garbled circuits
+//! ([`crate::gc`]).
+
+pub mod fixed;
+pub mod paillier;
+pub mod rng;
+
+pub use fixed::{FixedCodec, DEFAULT_FRAC_BITS};
+pub use paillier::{Ciphertext, Keypair, PrivateKey, PublicKey};
+pub use rng::ChaChaRng;

@@ -1,0 +1,365 @@
+//! The Paillier additively-homomorphic cryptosystem (Paillier, EUROCRYPT'99).
+//!
+//! Used for the paper's Type-1 computations: nodes encrypt their local
+//! summaries (gradients, Gram matrices, log-likelihoods) and the Center
+//! aggregates them under encryption (`⊕`, `⊖`, scalar `⊗`).
+//!
+//! Standard construction with `g = n + 1`, which makes encryption
+//! `c = (1 + m·n) · rⁿ mod n²` (one modpow instead of two) and decryption
+//! `m = L(c^λ mod n²) · μ mod n` with `L(u) = (u − 1)/n`.
+//! Decryption uses the CRT split over `p²`/`q²` (≈4× speedup).
+
+use std::sync::Arc;
+
+use crate::bigint::{gen_prime, BigUint, Montgomery, RandomSource};
+
+/// Paillier public key (modulus `n`, implicit generator `g = n+1`).
+#[derive(Clone)]
+pub struct PublicKey {
+    /// Modulus `n = p·q`.
+    pub n: BigUint,
+    /// `n²`, the ciphertext modulus.
+    pub n2: BigUint,
+    /// Montgomery context for `n²` (shared; ciphertext ops are the hot path).
+    mont_n2: Arc<Montgomery>,
+    /// `h = h₀ⁿ mod n²` for short-exponent (Damgård–Jurik–Nielsen-style)
+    /// encryption: `c = (1+mn)·h^s` with a short random `s`. `h₀` is a
+    /// nothing-up-my-sleeve value derived by hashing `n`, so the key
+    /// reconstructs identically on every party.
+    h_n: Arc<BigUint>,
+}
+
+/// Short-exponent bits for DJN-style encryption (≥2× statistical security
+/// of 112-bit; the paper's semi-honest model).
+const SHORT_EXP_BITS: usize = 256;
+
+/// Derive the nothing-up-my-sleeve base `h₀` from `n` via SHA-256 stream.
+fn derive_h0(n: &BigUint) -> BigUint {
+    use sha2::{Digest, Sha256};
+    let mut out = Vec::new();
+    let nb = n.to_bytes_le();
+    let mut ctr = 0u32;
+    while out.len() * 8 < n.bit_len() + 64 {
+        let mut hasher = Sha256::new();
+        hasher.update(b"privlogit-paillier-h0");
+        hasher.update(&nb);
+        hasher.update(ctr.to_le_bytes());
+        out.extend_from_slice(&hasher.finalize());
+        ctr += 1;
+    }
+    BigUint::from_bytes_le(&out).rem(n)
+}
+
+/// Paillier private key.
+#[derive(Clone)]
+pub struct PrivateKey {
+    /// Carmichael `λ = lcm(p−1, q−1)`.
+    pub lambda: BigUint,
+    /// `μ = L(g^λ mod n²)^-1 mod n`.
+    pub mu: BigUint,
+    /// Public part (decryption needs `n`, `n²`).
+    pub pk: PublicKey,
+    // CRT acceleration.
+    p2: BigUint,
+    q2: BigUint,
+    /// `λ mod (p−1)·p` exponent pieces and per-prime μ values.
+    hp: BigUint,
+    hq: BigUint,
+    p: BigUint,
+    q: BigUint,
+    /// `q^-1 mod p` for CRT recombination.
+    qinv_p: BigUint,
+}
+
+/// Key pair.
+pub struct Keypair {
+    pub pk: PublicKey,
+    pub sk: PrivateKey,
+}
+
+/// A Paillier ciphertext (an element of `Z*_{n²}`).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Ciphertext(pub BigUint);
+
+impl Ciphertext {
+    /// Serialized size in bytes (for communication accounting).
+    pub fn byte_len(&self) -> usize {
+        self.0.to_bytes_le().len()
+    }
+}
+
+impl Keypair {
+    /// Generate a fresh keypair with an `n` of `modulus_bits` bits.
+    ///
+    /// `modulus_bits` = 2048 matches the paper's security parameter;
+    /// tests and fast experiments use smaller keys (the protocols scale
+    /// every method identically in the key size, so *relative* results
+    /// are preserved — see DESIGN.md §7).
+    pub fn generate(modulus_bits: usize, rng: &mut dyn RandomSource) -> Keypair {
+        assert!(modulus_bits >= 64, "modulus too small");
+        let half = modulus_bits / 2;
+        let (p, q) = loop {
+            let p = gen_prime(half, rng);
+            let q = gen_prime(half, rng);
+            if p != q {
+                break (p, q);
+            }
+        };
+        let n = p.mul(&q);
+        let n2 = n.mul(&n);
+        let pk = PublicKey::from_modulus(n.clone(), n2.clone());
+        let p1 = p.sub_u64(1);
+        let q1 = q.sub_u64(1);
+        let lambda = p1.lcm(&q1);
+        // g = n+1 ⇒ g^λ mod n² = 1 + λ·n mod n² ⇒ L(g^λ) = λ mod n.
+        let mu = lambda
+            .rem(&n)
+            .modinv(&n)
+            .expect("λ invertible mod n for distinct primes");
+        let p2 = p.mul(&p);
+        let q2 = q.mul(&q);
+        // h_p = L_p(g^{p-1} mod p²)^-1 mod p, with L_p(u) = (u-1)/p.
+        let hp = Self::h_exp(&n, &p, &p2, &p1);
+        let hq = Self::h_exp(&n, &q, &q2, &q1);
+        let qinv_p = q.modinv(&p).expect("p, q coprime");
+        let sk = PrivateKey {
+            lambda,
+            mu,
+            pk: pk.clone(),
+            p2,
+            q2,
+            hp,
+            hq,
+            p,
+            q,
+            qinv_p,
+        };
+        Keypair { pk, sk }
+    }
+
+    /// `h = L_s(g^{s-1} mod s²)^{-1} mod s` for prime `s` (g = n+1).
+    fn h_exp(n: &BigUint, s: &BigUint, s2: &BigUint, s1: &BigUint) -> BigUint {
+        let g = n.add_u64(1).rem(s2);
+        let gs = g.modpow(s1, s2);
+        let l = gs.sub_u64(1).divrem(s).0;
+        l.rem(s).modinv(s).expect("L(g^{s-1}) invertible mod s")
+    }
+}
+
+impl PublicKey {
+    /// Rebuild a public key from its modulus (e.g. received over a
+    /// channel; `n²` passed in to avoid recomputing when already known).
+    pub fn from_modulus(n: BigUint, n2: BigUint) -> Self {
+        debug_assert_eq!(n.mul(&n), n2);
+        let mont = Montgomery::new(&n2);
+        let h0 = derive_h0(&n);
+        let h_n = mont.pow(&h0, &n);
+        PublicKey { mont_n2: Arc::new(mont), n, n2, h_n: Arc::new(h_n) }
+    }
+
+    /// Encrypt plaintext `m ∈ Z_n`: `c = (1 + m·n) · h^s mod n²` with a
+    /// short random exponent `s` (DJN-style; §Perf — one 256-bit modpow
+    /// instead of a full |n|-bit one).
+    pub fn encrypt(&self, m: &BigUint, rng: &mut ChaChaSource<'_>) -> Ciphertext {
+        let m = m.rem(&self.n);
+        let mut sbytes = [0u8; SHORT_EXP_BITS / 8];
+        rng.0.fill_bytes(&mut sbytes);
+        let s = BigUint::from_bytes_le(&sbytes);
+        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        let hs = self.mont_n2.pow(&self.h_n, &s);
+        Ciphertext(self.mont_n2.mul(&gm, &hs))
+    }
+
+    /// Full-range-randomness encryption `c = (1 + m·n) · rⁿ mod n²`
+    /// (classical Paillier; kept for protocols that must pick `r`).
+    pub fn encrypt_full(&self, m: &BigUint, rng: &mut ChaChaSource<'_>) -> Ciphertext {
+        let m = m.rem(&self.n);
+        let r = rng.unit(&self.n);
+        self.encrypt_with_r(&m, &r)
+    }
+
+    /// Deterministic encryption with caller-chosen randomness (tests,
+    /// blinding protocols that must reuse `r`).
+    pub fn encrypt_with_r(&self, m: &BigUint, r: &BigUint) -> Ciphertext {
+        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        let rn = self.mont_n2.pow(r, &self.n);
+        Ciphertext(self.mont_n2.mul(&gm, &rn))
+    }
+
+    /// "Trivial" encryption with fixed randomness r=1 (no semantic
+    /// security; used for public constants inside protocols).
+    pub fn encrypt_trivial(&self, m: &BigUint) -> Ciphertext {
+        Ciphertext(BigUint::one().add(&m.rem(&self.n).mul(&self.n)).rem(&self.n2))
+    }
+
+    /// Homomorphic addition `Enc(a) ⊕ Enc(b) = Enc(a + b)`.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext(self.mont_n2.mul(&a.0, &b.0))
+    }
+
+    /// Homomorphic subtraction `Enc(a) ⊖ Enc(b) = Enc(a − b)`.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        // Enc(-b) = Enc(b)^(n-1) — i.e. scalar multiply by n−1 ≡ −1 (mod n).
+        let neg_b = self.scalar_mul(b, &self.n.sub_u64(1));
+        self.add(a, &neg_b)
+    }
+
+    /// Homomorphic scalar multiplication `Enc(a) ⊗ k = Enc(a·k)`.
+    pub fn scalar_mul(&self, a: &Ciphertext, k: &BigUint) -> Ciphertext {
+        Ciphertext(self.mont_n2.pow(&a.0, &k.rem(&self.n)))
+    }
+
+    /// Re-randomize: multiply by a fresh encryption of zero (short
+    /// exponent, like [`PublicKey::encrypt`]).
+    pub fn rerandomize(&self, a: &Ciphertext, rng: &mut ChaChaSource<'_>) -> Ciphertext {
+        let mut sbytes = [0u8; SHORT_EXP_BITS / 8];
+        rng.0.fill_bytes(&mut sbytes);
+        let s = BigUint::from_bytes_le(&sbytes);
+        let hs = self.mont_n2.pow(&self.h_n, &s);
+        Ciphertext(self.mont_n2.mul(&a.0, &hs))
+    }
+
+    /// Serialized public-key bytes (communication accounting).
+    pub fn byte_len(&self) -> usize {
+        self.n.to_bytes_le().len()
+    }
+}
+
+impl PrivateKey {
+    /// Decrypt via CRT: `m_p = L_p(c^{p−1} mod p²)·h_p mod p` (same for q),
+    /// recombined with Garner's formula.
+    pub fn decrypt(&self, c: &Ciphertext) -> BigUint {
+        let p1 = self.p.sub_u64(1);
+        let q1 = self.q.sub_u64(1);
+        let cp = c.0.rem(&self.p2).modpow(&p1, &self.p2);
+        let cq = c.0.rem(&self.q2).modpow(&q1, &self.q2);
+        let mp = cp.sub_u64(1).divrem(&self.p).0.mul_mod(&self.hp, &self.p);
+        let mq = cq.sub_u64(1).divrem(&self.q).0.mul_mod(&self.hq, &self.q);
+        // Garner: m = mq + q * ((mp - mq) * qinv mod p)
+        let diff = mp.sub_mod(&mq.rem(&self.p), &self.p);
+        let t = diff.mul_mod(&self.qinv_p, &self.p);
+        mq.add(&self.q.mul(&t))
+    }
+
+    /// Reference (non-CRT) decryption `L(c^λ mod n²)·μ mod n` — kept for
+    /// cross-checking the CRT path in tests.
+    pub fn decrypt_plain(&self, c: &Ciphertext) -> BigUint {
+        let u = c.0.modpow(&self.lambda, &self.pk.n2);
+        let l = u.sub_u64(1).divrem(&self.pk.n).0;
+        l.mul_mod(&self.mu, &self.pk.n)
+    }
+}
+
+/// A thin adapter so `PublicKey` methods can take any [`RandomSource`]
+/// without generic churn at every call site.
+pub struct ChaChaSource<'a>(pub &'a mut dyn RandomSource);
+
+impl ChaChaSource<'_> {
+    fn unit(&mut self, n: &BigUint) -> BigUint {
+        loop {
+            let r = self.0.below(n);
+            if !r.is_zero() && r.gcd(n).is_one() {
+                return r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::ChaChaRng;
+
+    fn setup() -> (Keypair, ChaChaRng) {
+        let mut rng = ChaChaRng::from_u64_seed(1234);
+        let kp = Keypair::generate(256, &mut rng);
+        (kp, rng)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (kp, mut rng) = setup();
+        for v in [0u64, 1, 42, 1 << 40, u64::MAX] {
+            let m = BigUint::from_u64(v);
+            let c = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+            assert_eq!(kp.sk.decrypt(&c), m, "roundtrip {v}");
+            assert_eq!(kp.sk.decrypt_plain(&c), m, "plain decrypt {v}");
+        }
+    }
+
+    #[test]
+    fn crt_matches_plain_decrypt() {
+        let (kp, mut rng) = setup();
+        for _ in 0..10 {
+            let m = rng.below(&kp.pk.n);
+            let c = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+            assert_eq!(kp.sk.decrypt(&c), kp.sk.decrypt_plain(&c));
+        }
+    }
+
+    #[test]
+    fn homomorphic_add_sub() {
+        let (kp, mut rng) = setup();
+        let a = BigUint::from_u64(1_000_000);
+        let b = BigUint::from_u64(2_345_678);
+        let ca = kp.pk.encrypt(&a, &mut ChaChaSource(&mut rng));
+        let cb = kp.pk.encrypt(&b, &mut ChaChaSource(&mut rng));
+        assert_eq!(kp.sk.decrypt(&kp.pk.add(&ca, &cb)), a.add(&b));
+        assert_eq!(kp.sk.decrypt(&kp.pk.sub(&cb, &ca)), b.sub(&a));
+        // subtraction that wraps (negative result ≡ n - diff)
+        let wrapped = kp.sk.decrypt(&kp.pk.sub(&ca, &cb));
+        assert_eq!(wrapped, kp.pk.n.sub(&b.sub(&a)));
+    }
+
+    #[test]
+    fn homomorphic_scalar_mul() {
+        let (kp, mut rng) = setup();
+        let a = BigUint::from_u64(98765);
+        let k = BigUint::from_u64(4321);
+        let ca = kp.pk.encrypt(&a, &mut ChaChaSource(&mut rng));
+        let ck = kp.pk.scalar_mul(&ca, &k);
+        assert_eq!(kp.sk.decrypt(&ck), a.mul(&k));
+    }
+
+    #[test]
+    fn rerandomize_changes_ciphertext_not_plaintext() {
+        let (kp, mut rng) = setup();
+        let m = BigUint::from_u64(7);
+        let c = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+        let c2 = kp.pk.rerandomize(&c, &mut ChaChaSource(&mut rng));
+        assert_ne!(c, c2);
+        assert_eq!(kp.sk.decrypt(&c2), m);
+    }
+
+    #[test]
+    fn ciphertexts_probabilistic() {
+        let (kp, mut rng) = setup();
+        let m = BigUint::from_u64(5);
+        let c1 = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+        let c2 = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+        assert_ne!(c1, c2, "semantic security: same plaintext, different ct");
+    }
+
+    #[test]
+    fn trivial_encryption_decrypts() {
+        let (kp, _) = setup();
+        let m = BigUint::from_u64(314159);
+        assert_eq!(kp.sk.decrypt(&kp.pk.encrypt_trivial(&m)), m);
+    }
+
+    /// Property: sum of many encryptions decrypts to sum of plaintexts —
+    /// exactly the Center's aggregation pattern (Alg. 1 step 8).
+    #[test]
+    fn aggregation_property() {
+        let (kp, mut rng) = setup();
+        let mut acc = kp.pk.encrypt_trivial(&BigUint::zero());
+        let mut expect = BigUint::zero();
+        for i in 1..=20u64 {
+            let m = BigUint::from_u64(i * i * 31);
+            let c = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
+            acc = kp.pk.add(&acc, &c);
+            expect = expect.add(&m);
+        }
+        assert_eq!(kp.sk.decrypt(&acc), expect);
+    }
+}

@@ -1,0 +1,194 @@
+//! ChaCha20-based cryptographically secure PRNG.
+//!
+//! The `rand`/`rand_chacha` crates are unavailable in the build image, so
+//! the ChaCha20 block function (RFC 8439) is implemented here. Seeding
+//! comes from the OS (`getrandom`) or an explicit 32-byte seed for
+//! reproducible protocol runs.
+
+use crate::bigint::{BigUint, RandomSource};
+
+/// ChaCha20 stream generator usable as a [`RandomSource`].
+pub struct ChaChaRng {
+    key: [u32; 8],
+    counter: u64,
+    nonce: [u32; 2],
+    buf: [u8; 64],
+    pos: usize,
+}
+
+impl ChaChaRng {
+    /// Seed from the operating system entropy pool.
+    pub fn from_os() -> Self {
+        let mut seed = [0u8; 32];
+        getrandom::fill(&mut seed).expect("OS entropy unavailable");
+        Self::from_seed(seed)
+    }
+
+    /// Deterministic construction from a 32-byte seed.
+    pub fn from_seed(seed: [u8; 32]) -> Self {
+        let mut key = [0u32; 8];
+        for (i, chunk) in seed.chunks(4).enumerate() {
+            key[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        ChaChaRng { key, counter: 0, nonce: [0, 0], buf: [0; 64], pos: 64 }
+    }
+
+    /// Deterministic construction from a u64 seed (test / experiment use).
+    pub fn from_u64_seed(seed: u64) -> Self {
+        let mut bytes = [0u8; 32];
+        bytes[..8].copy_from_slice(&seed.to_le_bytes());
+        bytes[8..16].copy_from_slice(&seed.wrapping_mul(0x9E3779B97F4A7C15).to_le_bytes());
+        Self::from_seed(bytes)
+    }
+
+    fn refill(&mut self) {
+        let block = chacha20_block(&self.key, self.counter, &self.nonce);
+        self.buf = block;
+        self.counter = self.counter.wrapping_add(1);
+        self.pos = 0;
+    }
+
+    /// Next 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        self.fill_bytes(&mut b);
+        u64::from_le_bytes(b)
+    }
+
+    /// Uniform random element of `[1, n)` coprime to `n` (Paillier `r`).
+    pub fn unit_mod(&mut self, n: &BigUint) -> BigUint {
+        loop {
+            let r = self.below(n);
+            if !r.is_zero() && r.gcd(n).is_one() {
+                return r;
+            }
+        }
+    }
+}
+
+impl RandomSource for ChaChaRng {
+    fn fill_bytes(&mut self, buf: &mut [u8]) {
+        let mut written = 0;
+        while written < buf.len() {
+            if self.pos == 64 {
+                self.refill();
+            }
+            let take = (64 - self.pos).min(buf.len() - written);
+            buf[written..written + take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
+            self.pos += take;
+            written += take;
+        }
+    }
+}
+
+/// The ChaCha20 block function (RFC 8439 §2.3) with a 64-bit counter.
+fn chacha20_block(key: &[u32; 8], counter: u64, nonce: &[u32; 2]) -> [u8; 64] {
+    const SIGMA: [u32; 4] = [0x61707865, 0x3320646e, 0x79622d32, 0x6b206574];
+    let mut state = [0u32; 16];
+    state[..4].copy_from_slice(&SIGMA);
+    state[4..12].copy_from_slice(key);
+    state[12] = counter as u32;
+    state[13] = (counter >> 32) as u32;
+    state[14] = nonce[0];
+    state[15] = nonce[1];
+    let mut w = state;
+
+    #[inline(always)]
+    fn quarter(w: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+        w[a] = w[a].wrapping_add(w[b]);
+        w[d] = (w[d] ^ w[a]).rotate_left(16);
+        w[c] = w[c].wrapping_add(w[d]);
+        w[b] = (w[b] ^ w[c]).rotate_left(12);
+        w[a] = w[a].wrapping_add(w[b]);
+        w[d] = (w[d] ^ w[a]).rotate_left(8);
+        w[c] = w[c].wrapping_add(w[d]);
+        w[b] = (w[b] ^ w[c]).rotate_left(7);
+    }
+
+    for _ in 0..10 {
+        quarter(&mut w, 0, 4, 8, 12);
+        quarter(&mut w, 1, 5, 9, 13);
+        quarter(&mut w, 2, 6, 10, 14);
+        quarter(&mut w, 3, 7, 11, 15);
+        quarter(&mut w, 0, 5, 10, 15);
+        quarter(&mut w, 1, 6, 11, 12);
+        quarter(&mut w, 2, 7, 8, 13);
+        quarter(&mut w, 3, 4, 9, 14);
+    }
+    let mut out = [0u8; 64];
+    for i in 0..16 {
+        let v = w[i].wrapping_add(state[i]);
+        out[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 8439 §2.3.2 test vector (adapted: the RFC uses a 32-bit counter
+    /// and 96-bit nonce; with nonce words (0x09000000, 0x4a000000) our
+    /// layout reproduces the RFC state when counter = 1 | (0x00000000<<32)
+    /// ... we instead pin the all-zero-key block-0 keystream, a widely
+    /// published vector for the 64-bit-counter ChaCha20 variant).
+    #[test]
+    fn chacha_zero_key_vector() {
+        let key = [0u32; 8];
+        let block = chacha20_block(&key, 0, &[0, 0]);
+        let expect: [u8; 16] = [
+            0x76, 0xb8, 0xe0, 0xad, 0xa0, 0xf1, 0x3d, 0x90, 0x40, 0x5d, 0x6a, 0xe5, 0x53, 0x86,
+            0xbd, 0x28,
+        ];
+        assert_eq!(&block[..16], &expect);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = ChaChaRng::from_u64_seed(7);
+        let mut b = ChaChaRng::from_u64_seed(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = ChaChaRng::from_u64_seed(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fill_bytes_unaligned() {
+        let mut rng = ChaChaRng::from_u64_seed(1);
+        let mut a = vec![0u8; 131];
+        rng.fill_bytes(&mut a);
+        // Same stream read in different chunk sizes must agree.
+        let mut rng2 = ChaChaRng::from_u64_seed(1);
+        let mut b = vec![0u8; 131];
+        for chunk in b.chunks_mut(13) {
+            rng2.fill_bytes(chunk);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn below_is_in_range_and_varies() {
+        let mut rng = ChaChaRng::from_u64_seed(2);
+        let bound = BigUint::from_dec_str("1000000000000000000000000").unwrap();
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let x = rng.below(&bound);
+            assert!(x < bound);
+            distinct.insert(x.to_dec_string());
+        }
+        assert!(distinct.len() > 40, "draws should be distinct");
+    }
+
+    #[test]
+    fn unit_mod_coprime() {
+        let mut rng = ChaChaRng::from_u64_seed(3);
+        let n = BigUint::from_u64(35); // 5*7 — several non-units
+        for _ in 0..20 {
+            let r = rng.unit_mod(&n);
+            assert!(r.gcd(&n).is_one());
+            assert!(!r.is_zero() && r < n);
+        }
+    }
+}

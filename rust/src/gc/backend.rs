@@ -1,0 +1,154 @@
+//! The circuit-program abstraction: boolean operations generic over an
+//! interpreting backend.
+//!
+//! A *program* (e.g. "Cholesky-decompose a p×p fixed-point matrix") is
+//! ordinary Rust code over [`GcBackend`] operations. Running it under
+//! [`PlainBackend`] evaluates in the clear (the correctness oracle);
+//! under [`CountBackend`] it counts non-free gates (feeding the §5.2 cost
+//! model *exactly*, not asymptotically); under [`crate::gc::garble`]'s
+//! `Garbler`/`Evaluator` it produces/consumes a streamed garbled circuit.
+//!
+//! Programs must be **data-oblivious and deterministic**: both Center
+//! servers execute the same op sequence. All control flow depends only on
+//! public values (dimensions, formats, public constants). That invariant
+//! is what makes streamed garbling possible (no circuit materialization).
+
+/// A boolean-circuit interpreter.
+pub trait GcBackend {
+    /// Wire handle. `Copy` keeps word-level code ergonomic.
+    type Wire: Copy;
+
+    /// A public constant wire.
+    fn constant(&mut self, v: bool) -> Self::Wire;
+    /// XOR (free under free-XOR garbling).
+    fn xor(&mut self, a: Self::Wire, b: Self::Wire) -> Self::Wire;
+    /// AND (the costly gate: 2 ciphertexts, 4/2 AES calls).
+    fn and(&mut self, a: Self::Wire, b: Self::Wire) -> Self::Wire;
+    /// NOT (free).
+    fn not(&mut self, a: Self::Wire) -> Self::Wire;
+
+    /// OR via De Morgan (1 AND).
+    fn or(&mut self, a: Self::Wire, b: Self::Wire) -> Self::Wire {
+        let na = self.not(a);
+        let nb = self.not(b);
+        let n = self.and(na, nb);
+        self.not(n)
+    }
+
+    /// 2-to-1 multiplexer: `s ? a : b` (1 AND).
+    fn mux(&mut self, s: Self::Wire, a: Self::Wire, b: Self::Wire) -> Self::Wire {
+        let d = self.xor(a, b);
+        let sd = self.and(s, d);
+        self.xor(sd, b)
+    }
+}
+
+/// Plaintext interpreter — wires are actual booleans.
+#[derive(Default)]
+pub struct PlainBackend;
+
+impl GcBackend for PlainBackend {
+    type Wire = bool;
+
+    fn constant(&mut self, v: bool) -> bool {
+        v
+    }
+    fn xor(&mut self, a: bool, b: bool) -> bool {
+        a ^ b
+    }
+    fn and(&mut self, a: bool, b: bool) -> bool {
+        a & b
+    }
+    fn not(&mut self, a: bool) -> bool {
+        !a
+    }
+}
+
+/// Gate-counting interpreter.
+///
+/// Wires carry a constant-ness flag so that the same constant-folding the
+/// garbler performs is reflected in the counts (AND with a public constant
+/// is free — this is exactly why PrivLogit-Local's multiply-by-constant is
+/// cheap, the asymmetry the paper exploits).
+#[derive(Default)]
+pub struct CountBackend {
+    /// Non-free (AND) gates executed.
+    pub ands: u64,
+    /// Free (XOR/NOT) gates executed.
+    pub frees: u64,
+}
+
+/// Count-backend wire: `Some(v)` = public constant, `None` = secret.
+pub type CountWire = Option<bool>;
+
+impl GcBackend for CountBackend {
+    type Wire = CountWire;
+
+    fn constant(&mut self, v: bool) -> CountWire {
+        Some(v)
+    }
+
+    fn xor(&mut self, a: CountWire, b: CountWire) -> CountWire {
+        match (a, b) {
+            (Some(x), Some(y)) => Some(x ^ y),
+            _ => {
+                self.frees += 1;
+                None
+            }
+        }
+    }
+
+    fn and(&mut self, a: CountWire, b: CountWire) -> CountWire {
+        match (a, b) {
+            (Some(false), _) | (_, Some(false)) => Some(false),
+            (Some(true), other) | (other, Some(true)) => other,
+            _ => {
+                self.ands += 1;
+                None
+            }
+        }
+    }
+
+    fn not(&mut self, a: CountWire) -> CountWire {
+        self.frees += 1;
+        a.map(|v| !v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_gates() {
+        let mut b = PlainBackend;
+        let t = b.constant(true);
+        let f = b.constant(false);
+        assert!(b.xor(t, f));
+        assert!(!b.xor(t, t));
+        assert!(b.and(t, t));
+        assert!(!b.and(t, f));
+        assert!(b.or(f, t));
+        assert!(!b.not(t));
+        assert!(b.mux(t, t, f));
+        assert!(!b.mux(f, t, f));
+    }
+
+    #[test]
+    fn count_constant_folding() {
+        let mut b = CountBackend::default();
+        let secret: CountWire = None;
+        let zero = b.constant(false);
+        let one = b.constant(true);
+        // AND with constants must be free.
+        assert_eq!(b.and(secret, zero), Some(false));
+        assert_eq!(b.and(secret, one), None);
+        assert_eq!(b.ands, 0);
+        // secret AND secret costs one gate
+        b.and(secret, secret);
+        assert_eq!(b.ands, 1);
+        // mux with secret selector: 1 AND
+        b.mux(secret, secret, secret);
+        assert_eq!(b.ands, 2);
+    }
+}

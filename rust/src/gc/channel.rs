@@ -1,0 +1,192 @@
+//! Byte-oriented duplex channels between the two Center servers.
+//!
+//! In the paper's testbed the servers are two PCs on ethernet; here they
+//! are threads. The channel interface is deliberately dumb bytes so that
+//! every protocol message is serialized for real, and the byte/message
+//! counters give exact communication-cost accounting (reported in
+//! EXPERIMENTS.md and used by the network term of the cost model).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+
+/// Shared send/recv statistics for one duplex endpoint.
+#[derive(Default)]
+pub struct ChannelStats {
+    /// Bytes sent from this endpoint.
+    pub bytes_sent: AtomicU64,
+    /// Messages (send calls) from this endpoint.
+    pub msgs_sent: AtomicU64,
+}
+
+impl ChannelStats {
+    /// Snapshot (bytes, messages).
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.bytes_sent.load(Ordering::Relaxed), self.msgs_sent.load(Ordering::Relaxed))
+    }
+}
+
+/// One endpoint of a duplex byte channel with internal read buffering.
+pub struct Channel {
+    tx: SyncSender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    /// Pending bytes already received but not yet consumed.
+    inbuf: Vec<u8>,
+    inpos: usize,
+    /// Write-combining buffer; flushed on [`Channel::flush`] or threshold.
+    outbuf: Vec<u8>,
+    stats: Arc<ChannelStats>,
+}
+
+/// Flush threshold for the write-combining buffer (64 KiB keeps the mpsc
+/// message rate low while bounding latency).
+const FLUSH_BYTES: usize = 64 * 1024;
+
+impl Channel {
+    /// Send raw bytes (buffered; see [`Channel::flush`]).
+    pub fn send(&mut self, bytes: &[u8]) {
+        self.outbuf.extend_from_slice(bytes);
+        if self.outbuf.len() >= FLUSH_BYTES {
+            self.flush();
+        }
+    }
+
+    /// Flush buffered writes to the peer.
+    pub fn flush(&mut self) {
+        if self.outbuf.is_empty() {
+            return;
+        }
+        let msg = std::mem::take(&mut self.outbuf);
+        self.stats.bytes_sent.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        self.stats.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        // A closed peer is a protocol bug; surface it loudly.
+        self.tx.send(msg).expect("gc channel peer hung up");
+    }
+
+    /// Receive exactly `buf.len()` bytes (blocking).
+    pub fn recv(&mut self, buf: &mut [u8]) {
+        let mut filled = 0;
+        while filled < buf.len() {
+            if self.inpos == self.inbuf.len() {
+                self.inbuf = self.rx.recv().expect("gc channel peer hung up");
+                self.inpos = 0;
+            }
+            let take = (self.inbuf.len() - self.inpos).min(buf.len() - filled);
+            buf[filled..filled + take]
+                .copy_from_slice(&self.inbuf[self.inpos..self.inpos + take]);
+            self.inpos += take;
+            filled += take;
+        }
+    }
+
+    /// Receive a `Vec<u8>` of exactly `len` bytes.
+    pub fn recv_vec(&mut self, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.recv(&mut v);
+        v
+    }
+
+    /// Send a `u64` (little-endian).
+    pub fn send_u64(&mut self, v: u64) {
+        self.send(&v.to_le_bytes());
+    }
+
+    /// Receive a `u64`.
+    pub fn recv_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        self.recv(&mut b);
+        u64::from_le_bytes(b)
+    }
+
+    /// Send a `u128` label.
+    pub fn send_u128(&mut self, v: u128) {
+        self.send(&v.to_le_bytes());
+    }
+
+    /// Receive a `u128` label.
+    pub fn recv_u128(&mut self) -> u128 {
+        let mut b = [0u8; 16];
+        self.recv(&mut b);
+        u128::from_le_bytes(b)
+    }
+
+    /// Length-prefixed blob send (flushes).
+    pub fn send_blob(&mut self, bytes: &[u8]) {
+        self.send_u64(bytes.len() as u64);
+        self.send(bytes);
+        self.flush();
+    }
+
+    /// Length-prefixed blob receive.
+    pub fn recv_blob(&mut self) -> Vec<u8> {
+        let len = self.recv_u64() as usize;
+        self.recv_vec(len)
+    }
+
+    /// This endpoint's statistics handle.
+    pub fn stats(&self) -> Arc<ChannelStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+/// Create a connected duplex pair of in-memory channels.
+pub fn mem_channel_pair() -> (Channel, Channel) {
+    // Generous bound: the streaming garbler can run ahead of the evaluator
+    // by up to 256 messages (~16 MiB) before backpressure kicks in.
+    let (tx_ab, rx_ab) = std::sync::mpsc::sync_channel(256);
+    let (tx_ba, rx_ba) = std::sync::mpsc::sync_channel(256);
+    let a = Channel {
+        tx: tx_ab,
+        rx: rx_ba,
+        inbuf: Vec::new(),
+        inpos: 0,
+        outbuf: Vec::new(),
+        stats: Arc::new(ChannelStats::default()),
+    };
+    let b = Channel {
+        tx: tx_ba,
+        rx: rx_ab,
+        inbuf: Vec::new(),
+        inpos: 0,
+        outbuf: Vec::new(),
+        stats: Arc::new(ChannelStats::default()),
+    };
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_across_threads() {
+        let (mut a, mut b) = mem_channel_pair();
+        let t = std::thread::spawn(move || {
+            a.send_u64(42);
+            a.send_blob(b"hello center");
+            a.send_u128(0xdead_beef_dead_beef_dead_beef_dead_beefu128);
+            a.flush();
+            a
+        });
+        assert_eq!(b.recv_u64(), 42);
+        assert_eq!(b.recv_blob(), b"hello center");
+        assert_eq!(b.recv_u128(), 0xdead_beef_dead_beef_dead_beef_dead_beefu128);
+        let a = t.join().unwrap();
+        let (bytes, msgs) = a.stats().snapshot();
+        assert_eq!(bytes, 8 + 8 + 12 + 16);
+        assert!(msgs >= 1);
+    }
+
+    #[test]
+    fn chunked_reads_cross_message_boundaries() {
+        let (mut a, mut b) = mem_channel_pair();
+        std::thread::spawn(move || {
+            for i in 0..100u8 {
+                a.send(&[i]);
+                a.flush(); // 100 separate messages
+            }
+        });
+        let got = b.recv_vec(100);
+        assert_eq!(got, (0..100u8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,35 @@
+//! Yao garbled-circuit engine for the Center's Type-2 computations.
+//!
+//! The paper executes the secure matrix algebra (Cholesky decomposition,
+//! back-substitution, comparison — paper §4, after Nikolaenko et al. 2013)
+//! between two semi-honest Center servers with the ObliVM-GC framework.
+//! ObliVM is unavailable (and Java); this module is a from-scratch garbling
+//! engine with the same performance-relevant design points:
+//!
+//! * **free XOR** (Kolesnikov–Schneider) — XOR gates cost nothing;
+//! * **point-and-permute** — single-decryption evaluation;
+//! * **half-gates** (Zahur–Rosulek–Evans) — 2 ciphertexts per AND gate;
+//! * **fixed-key AES** hashing — `H(X,t) = AES_k(2X⊕t) ⊕ 2X⊕t`;
+//! * **streamed garbling** — the circuit is never materialized; the garbler
+//!   and evaluator walk the *same deterministic program* gate by gate, so
+//!   memory is bounded by the live-wire set (O(p²) for our matrix ops, not
+//!   the 10⁷–10⁸ total gates);
+//! * **IKNP OT extension** over Paillier base OTs for evaluator inputs.
+//!
+//! The architecture mirrors `fancy-garbling`/swanky: circuits are generic
+//! *programs* over a [`backend::GcBackend`], with four interpreters —
+//! plaintext ([`backend::PlainBackend`], the correctness oracle), gate
+//! counting ([`backend::CountBackend`], feeds the §5.2 cost model),
+//! garbling and evaluating ([`garble::Garbler`], [`garble::Evaluator`]).
+
+pub mod backend;
+pub mod channel;
+pub mod exec;
+pub mod garble;
+pub mod ot;
+pub mod word;
+
+pub use backend::{CountBackend, GcBackend, PlainBackend};
+pub use channel::{mem_channel_pair, Channel, ChannelStats};
+pub use exec::{GcProgram, GcSession};
+pub use word::{FixedFmt, Word};

@@ -1,0 +1,303 @@
+//! Oblivious transfer: Paillier-based 1-of-2 base OT plus IKNP OT
+//! extension for the evaluator's input labels.
+//!
+//! Per GC execution the evaluator needs one OT per input bit — tens of
+//! thousands for a p×p Cholesky — so per-OT public-key work is
+//! unaffordable. IKNP (CRYPTO'03, semi-honest variant) reduces this to
+//! 128 base OTs *once per session*, after which each OT costs two PRG
+//! bits and one fixed-key AES hash per side.
+//!
+//! Base OT (semi-honest, additively homomorphic): the receiver sends
+//! `Enc(c)` under its own ephemeral Paillier key; the sender replies with
+//! a rerandomized `Enc(m₀ + c·(m₁−m₀))`; the receiver decrypts `m_c`.
+
+use super::channel::Channel;
+use super::garble::GateHash;
+use crate::bigint::BigUint;
+use crate::crypto::paillier::{ChaChaSource, Ciphertext, Keypair, PublicKey};
+use crate::crypto::rng::ChaChaRng;
+
+/// Number of base OTs / width of the IKNP matrix.
+pub const KAPPA: usize = 128;
+
+/// Expand a 16-byte seed to `n` pseudorandom bits, packed LSB-first into
+/// `u64` words.
+fn prg_bits(seed: u128, n: usize) -> Vec<u64> {
+    let mut seed_bytes = [0u8; 32];
+    seed_bytes[..16].copy_from_slice(&seed.to_le_bytes());
+    let mut rng = ChaChaRng::from_seed(seed_bytes);
+    let words = n.div_ceil(64);
+    let mut out = Vec::with_capacity(words);
+    for _ in 0..words {
+        out.push(rng.next_u64());
+    }
+    // mask tail bits for clean equality in tests
+    if n % 64 != 0 {
+        let last = out.len() - 1;
+        out[last] &= (1u64 << (n % 64)) - 1;
+    }
+    out
+}
+
+fn xor_words(a: &mut [u64], b: &[u64]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x ^= y;
+    }
+}
+
+fn get_bit(words: &[u64], i: usize) -> bool {
+    (words[i / 64] >> (i % 64)) & 1 == 1
+}
+
+fn set_bit(words: &mut [u64], i: usize, v: bool) {
+    if v {
+        words[i / 64] |= 1 << (i % 64);
+    } else {
+        words[i / 64] &= !(1 << (i % 64));
+    }
+}
+
+/// Pack bools LSB-first into u64 words.
+pub fn pack_bits(bits: &[bool]) -> Vec<u64> {
+    let mut out = vec![0u64; bits.len().div_ceil(64)];
+    for (i, &b) in bits.iter().enumerate() {
+        set_bit(&mut out, i, b);
+    }
+    out
+}
+
+/// OT-extension sender state (the garbler: sends label pairs).
+pub struct OtSender {
+    /// Random choice vector `s` from the base phase.
+    s: u128,
+    /// Base-OT seeds `k_{s_j,j}`.
+    seeds: Vec<u128>,
+    hash: GateHash,
+    /// Global OT counter (hash tweak uniqueness across extends).
+    ctr: u64,
+}
+
+/// OT-extension receiver state (the evaluator: holds choice bits).
+pub struct OtReceiver {
+    /// Base-OT seed pairs `(k0_j, k1_j)`.
+    seed_pairs: Vec<(u128, u128)>,
+    hash: GateHash,
+    ctr: u64,
+}
+
+impl OtSender {
+    /// Run the base phase as base-OT *receiver* (IKNP role reversal).
+    /// Peer must call [`OtReceiver::setup`] concurrently.
+    pub fn setup(chan: &mut Channel, rng: &mut ChaChaRng) -> Self {
+        let s_lo = rng.next_u64();
+        let s_hi = rng.next_u64();
+        let s = (s_hi as u128) << 64 | s_lo as u128;
+        // Ephemeral Paillier key for the base OTs (receiver side).
+        let kp = Keypair::generate(256, rng);
+        // Send pk.n
+        chan.send_blob(&kp.pk.n.to_bytes_le());
+        let mut seeds = Vec::with_capacity(KAPPA);
+        // Send Enc(s_j) for each j, receive Enc(m_{s_j}) back.
+        for j in 0..KAPPA {
+            let bit = (s >> j) & 1 == 1;
+            let c = kp.pk.encrypt(
+                &BigUint::from_u64(bit as u64),
+                &mut ChaChaSource(rng),
+            );
+            chan.send_blob(&c.0.to_bytes_le());
+        }
+        chan.flush();
+        for _ in 0..KAPPA {
+            let reply = Ciphertext(BigUint::from_bytes_le(&chan.recv_blob()));
+            let m = kp.sk.decrypt(&reply);
+            let bytes = m.to_bytes_le();
+            let mut seed = [0u8; 16];
+            seed[..bytes.len().min(16)].copy_from_slice(&bytes[..bytes.len().min(16)]);
+            seeds.push(u128::from_le_bytes(seed));
+        }
+        OtSender { s, seeds, hash: GateHash::new(), ctr: 0 }
+    }
+
+    /// Send `pairs[i] = (x0, x1)`; the receiver obtains `x_{r_i}`.
+    pub fn send(&mut self, chan: &mut Channel, pairs: &[(u128, u128)]) {
+        let m = pairs.len();
+        if m == 0 {
+            return;
+        }
+        let words = m.div_ceil(64);
+        // Receive u_j columns; build q_j = PRG(k_{s_j}) ^ s_j·u_j.
+        let mut q_cols: Vec<Vec<u64>> = Vec::with_capacity(KAPPA);
+        for j in 0..KAPPA {
+            let u_bytes = chan.recv_blob();
+            let mut u = vec![0u64; words];
+            for (w, chunk) in u.iter_mut().zip(u_bytes.chunks(8)) {
+                let mut b = [0u8; 8];
+                b[..chunk.len()].copy_from_slice(chunk);
+                *w = u64::from_le_bytes(b);
+            }
+            let mut q = prg_bits(self.seeds[j], m);
+            if (self.s >> j) & 1 == 1 {
+                xor_words(&mut q, &u);
+            }
+            q_cols.push(q);
+        }
+        // Transpose columns to per-OT rows q_i (u128 each).
+        for (i, &(x0, x1)) in pairs.iter().enumerate() {
+            let mut qi: u128 = 0;
+            for (j, q) in q_cols.iter().enumerate() {
+                if get_bit(q, i) {
+                    qi |= 1 << j;
+                }
+            }
+            let t = self.ctr;
+            self.ctr += 1;
+            let y0 = x0 ^ self.hash.hash(qi, t);
+            let y1 = x1 ^ self.hash.hash(qi ^ self.s, t);
+            chan.send_u128(y0);
+            chan.send_u128(y1);
+        }
+        chan.flush();
+    }
+}
+
+impl OtReceiver {
+    /// Run the base phase as base-OT *sender*.
+    pub fn setup(chan: &mut Channel, rng: &mut ChaChaRng) -> Self {
+        let n = BigUint::from_bytes_le(&chan.recv_blob());
+        let n2 = n.mul(&n);
+        let pk = reconstruct_pk(n, n2);
+        let mut seed_pairs = Vec::with_capacity(KAPPA);
+        let mut replies = Vec::with_capacity(KAPPA);
+        for _ in 0..KAPPA {
+            let enc_bit = Ciphertext(BigUint::from_bytes_le(&chan.recv_blob()));
+            let k0 = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+            let k1 = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+            // Enc(m0 + c·(m1−m0)) = Enc(c)·(m1−m0) ⊕ m0 (mod n; both
+            // messages < 2^128 ≪ n so the decrypted value is exact).
+            let m0 = BigUint::from_u128(k0);
+            let m1 = BigUint::from_u128(k1);
+            let diff = m1.add(&pk.n.sub(&m0.rem(&pk.n))); // m1 - m0 mod n
+            let scaled = pk.scalar_mul(&enc_bit, &diff.rem(&pk.n));
+            let shifted = pk.add(&scaled, &pk.encrypt_trivial(&m0));
+            let reply = pk.rerandomize(&shifted, &mut ChaChaSource(rng));
+            replies.push(reply);
+            seed_pairs.push((k0, k1));
+        }
+        for r in replies {
+            chan.send_blob(&r.0.to_bytes_le());
+        }
+        chan.flush();
+        OtReceiver { seed_pairs, hash: GateHash::new(), ctr: 0 }
+    }
+
+    /// Receive one message per choice bit: returns `x_{r_i}`.
+    pub fn recv(&mut self, chan: &mut Channel, choices: &[bool]) -> Vec<u128> {
+        let m = choices.len();
+        if m == 0 {
+            return Vec::new();
+        }
+        let r = pack_bits(choices);
+        let mut t_cols: Vec<Vec<u64>> = Vec::with_capacity(KAPPA);
+        for j in 0..KAPPA {
+            let t = prg_bits(self.seed_pairs[j].0, m);
+            let mut u = prg_bits(self.seed_pairs[j].1, m);
+            xor_words(&mut u, &t);
+            xor_words(&mut u, &r);
+            let bytes: Vec<u8> = u.iter().flat_map(|w| w.to_le_bytes()).collect();
+            chan.send_blob(&bytes);
+            t_cols.push(t);
+        }
+        chan.flush();
+        let mut out = Vec::with_capacity(m);
+        for (i, &c) in choices.iter().enumerate() {
+            let mut ti: u128 = 0;
+            for (j, t) in t_cols.iter().enumerate() {
+                if get_bit(t, i) {
+                    ti |= 1 << j;
+                }
+            }
+            let tweak = self.ctr;
+            self.ctr += 1;
+            let y0 = chan.recv_u128();
+            let y1 = chan.recv_u128();
+            let y = if c { y1 } else { y0 };
+            out.push(y ^ self.hash.hash(ti, tweak));
+        }
+        out
+    }
+}
+
+/// Rebuild a `PublicKey` from its modulus (the receiver only needs the
+/// homomorphic ops, which depend on `n`/`n²` alone).
+fn reconstruct_pk(n: BigUint, n2: BigUint) -> PublicKey {
+    PublicKey::from_modulus(n, n2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::channel::mem_channel_pair;
+    use super::*;
+    use crate::testutil::TestRng;
+
+    #[test]
+    fn prg_deterministic_and_masked() {
+        let a = prg_bits(42, 130);
+        let b = prg_bits(42, 130);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2] >> 2, 0, "tail bits masked");
+        assert_ne!(prg_bits(43, 130), a);
+    }
+
+    #[test]
+    fn pack_get_roundtrip() {
+        let bits: Vec<bool> = (0..100).map(|i| i % 3 == 0).collect();
+        let packed = pack_bits(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(get_bit(&packed, i), b);
+        }
+    }
+
+    /// Full IKNP round trip: receiver obtains exactly x_{r_i}, never the
+    /// sibling message.
+    #[test]
+    fn ot_extension_end_to_end() {
+        let (mut ca, mut cb) = mem_channel_pair();
+        let mut trng = TestRng::new(77);
+        let m = 500;
+        let pairs: Vec<(u128, u128)> = (0..m)
+            .map(|_| {
+                (
+                    (trng.next_u64() as u128) << 64 | trng.next_u64() as u128,
+                    (trng.next_u64() as u128) << 64 | trng.next_u64() as u128,
+                )
+            })
+            .collect();
+        let choices: Vec<bool> = (0..m).map(|_| trng.bernoulli(0.5)).collect();
+        let pairs_s = pairs.clone();
+        let sender = std::thread::spawn(move || {
+            let mut rng = ChaChaRng::from_u64_seed(1001);
+            let mut s = OtSender::setup(&mut ca, &mut rng);
+            s.send(&mut ca, &pairs_s);
+            // second extend on the same session must also work
+            let more: Vec<(u128, u128)> = (0..64).map(|i| (i as u128, (i + 1000) as u128)).collect();
+            s.send(&mut ca, &more);
+        });
+        let mut rng = ChaChaRng::from_u64_seed(2002);
+        let mut r = OtReceiver::setup(&mut cb, &mut rng);
+        let got = r.recv(&mut cb, &choices);
+        for i in 0..m {
+            let expect = if choices[i] { pairs[i].1 } else { pairs[i].0 };
+            assert_eq!(got[i], expect, "OT {i}");
+            let other = if choices[i] { pairs[i].0 } else { pairs[i].1 };
+            assert_ne!(got[i], other, "OT {i} must not leak sibling");
+        }
+        let choices2: Vec<bool> = (0..64).map(|i| i % 2 == 0).collect();
+        let got2 = r.recv(&mut cb, &choices2);
+        for (i, &c) in choices2.iter().enumerate() {
+            let expect = if c { (i + 1000) as u128 } else { i as u128 };
+            assert_eq!(got2[i], expect, "second extend OT {i}");
+        }
+        sender.join().unwrap();
+    }
+}

@@ -1,0 +1,507 @@
+//! Two's-complement fixed-point words over a [`GcBackend`].
+//!
+//! All the secure arithmetic the Center performs (Cholesky,
+//! back-substitution, convergence comparison — paper §4) is built from
+//! these word-level circuits. Gate costs (W = word bits, F = fraction
+//! bits, N = W+F):
+//!
+//! | op | AND gates (≈) |
+//! |---|---|
+//! | add/sub | 2W |
+//! | mul (truncating) | 1.5·N² |
+//! | div (truncating) | 3·W·N |
+//! | sqrt | 1.5·N² /2 |
+//! | cmp | W |
+//! | mux | W |
+//!
+//! Words are little-endian bit vectors; negative values wrap (two's
+//! complement). Programs built from these ops are data-oblivious by
+//! construction — no secret-dependent control flow exists in this module.
+
+use super::backend::GcBackend;
+
+/// Fixed-point format: `w` total bits, `f` fractional bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedFmt {
+    /// Total word width in bits (two's complement).
+    pub w: usize,
+    /// Fractional bits.
+    pub f: u32,
+}
+
+impl FixedFmt {
+    /// Default protocol format: 40-bit words, 24 fraction bits.
+    ///
+    /// Node statistics are *averaged* (scaled by 1/n) before encryption,
+    /// so every protocol value is O(1)–O(10²); ±2¹⁵ integer range with
+    /// 2⁻²⁴ ≈ 6e-8 resolution comfortably brackets the paper's 1e-6
+    /// convergence threshold.
+    pub const DEFAULT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+    /// Encode an `f64` to the fixed-point integer (two's complement in
+    /// `w` bits, as i128 for headroom).
+    pub fn encode(&self, v: f64) -> i128 {
+        let scaled = (v * (self.f as f64).exp2()).round();
+        let bound = (1i128 << (self.w - 1)) as f64;
+        assert!(
+            scaled.abs() < bound,
+            "fixed overflow: {v} needs more than {} integer bits",
+            self.w as u32 - 1 - self.f
+        );
+        scaled as i128
+    }
+
+    /// Decode a two's-complement `w`-bit integer back to `f64`.
+    pub fn decode(&self, raw: i128) -> f64 {
+        self.signed(raw) as f64 / (self.f as f64).exp2()
+    }
+
+    /// Reduce an i128 to the signed `w`-bit range.
+    pub fn signed(&self, raw: i128) -> i128 {
+        let m = 1i128 << self.w;
+        let v = raw.rem_euclid(m);
+        if v >= m / 2 { v - m } else { v }
+    }
+
+    /// Unsigned residue mod 2^w.
+    pub fn unsigned(&self, raw: i128) -> u128 {
+        (raw.rem_euclid(1i128 << self.w)) as u128
+    }
+}
+
+/// A word: little-endian wires.
+pub type Word<W> = Vec<W>;
+
+/// Build a word of public constant bits from an integer (low `w` bits).
+pub fn const_word<B: GcBackend>(b: &mut B, v: i128, w: usize) -> Word<B::Wire> {
+    (0..w).map(|i| b.constant((v >> i) & 1 == 1)).collect()
+}
+
+/// Full adder returning (sum, carry-out). 2 ANDs… but implemented with the
+/// standard 1-AND trick: carry = (a ⊕ c)(b ⊕ c) ⊕ c.
+fn full_add<B: GcBackend>(
+    b: &mut B,
+    a: B::Wire,
+    x: B::Wire,
+    c: B::Wire,
+) -> (B::Wire, B::Wire) {
+    let axc = b.xor(a, c);
+    let xxc = b.xor(x, c);
+    let sum = b.xor(axc, x);
+    let t = b.and(axc, xxc);
+    let carry = b.xor(t, c);
+    (sum, carry)
+}
+
+/// Ripple-carry addition, truncating to the width of `a` (= width of `x`).
+pub fn add<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, x: &Word<B::Wire>) -> Word<B::Wire> {
+    assert_eq!(a.len(), x.len());
+    let mut c = b.constant(false);
+    let mut out = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, nc) = full_add(b, a[i], x[i], c);
+        out.push(s);
+        c = nc;
+    }
+    out
+}
+
+/// Subtraction `a − x` (two's complement, truncating).
+pub fn sub<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, x: &Word<B::Wire>) -> Word<B::Wire> {
+    assert_eq!(a.len(), x.len());
+    let mut c = b.constant(true); // +1 of two's complement
+    let mut out = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let nx = b.not(x[i]);
+        let (s, nc) = full_add(b, a[i], nx, c);
+        out.push(s);
+        c = nc;
+    }
+    out
+}
+
+/// Negation `−a`.
+pub fn neg<B: GcBackend>(b: &mut B, a: &Word<B::Wire>) -> Word<B::Wire> {
+    let zero = const_word(b, 0, a.len());
+    sub(b, &zero, a)
+}
+
+/// Sign-extend (or truncate) to `w` bits.
+pub fn resize<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, w: usize) -> Word<B::Wire> {
+    let _ = b;
+    let mut out = a.clone();
+    let sign = *a.last().expect("empty word");
+    out.resize(w, sign);
+    out.truncate(w);
+    out
+}
+
+/// Logical shift left by a public amount (free).
+pub fn shl_const<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, k: usize) -> Word<B::Wire> {
+    let zero = b.constant(false);
+    let mut out = vec![zero; k.min(a.len())];
+    out.extend_from_slice(&a[..a.len() - k.min(a.len())]);
+    out
+}
+
+/// Arithmetic shift right by a public amount (free).
+pub fn sar_const<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, k: usize) -> Word<B::Wire> {
+    let _ = b;
+    let sign = *a.last().expect("empty word");
+    let k = k.min(a.len());
+    let mut out: Word<B::Wire> = a[k..].to_vec();
+    out.resize(a.len(), sign);
+    out
+}
+
+/// Signed less-than `a < x` (1 wire out). Computed in w+1 bits so overflow
+/// cannot corrupt the sign.
+pub fn lt<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, x: &Word<B::Wire>) -> B::Wire {
+    let w = a.len() + 1;
+    let ae = resize(b, a, w);
+    let xe = resize(b, x, w);
+    let d = sub(b, &ae, &xe);
+    *d.last().unwrap()
+}
+
+/// Per-bit multiplexer over words: `s ? a : x`.
+pub fn mux_word<B: GcBackend>(
+    b: &mut B,
+    s: B::Wire,
+    a: &Word<B::Wire>,
+    x: &Word<B::Wire>,
+) -> Word<B::Wire> {
+    assert_eq!(a.len(), x.len());
+    (0..a.len()).map(|i| b.mux(s, a[i], x[i])).collect()
+}
+
+/// Absolute value (returns `|a|` and the original sign wire).
+pub fn abs<B: GcBackend>(b: &mut B, a: &Word<B::Wire>) -> (Word<B::Wire>, B::Wire) {
+    let sign = *a.last().unwrap();
+    let na = neg(b, a);
+    (mux_word(b, sign, &na, a), sign)
+}
+
+/// Fixed-point multiply: `(a · x) >> f`, truncating to `w` bits.
+///
+/// Works modulo 2^(w+f): sign-extend both operands to w+f bits, schoolbook
+/// shift-add keeping only the low w+f bits, then drop the f low bits.
+pub fn mul<B: GcBackend>(
+    b: &mut B,
+    a: &Word<B::Wire>,
+    x: &Word<B::Wire>,
+    fmt: FixedFmt,
+) -> Word<B::Wire> {
+    let n = fmt.w + fmt.f as usize;
+    let ae = resize(b, a, n);
+    let xe = resize(b, x, n);
+    let zero = b.constant(false);
+    let mut acc = vec![zero; n];
+    for i in 0..n {
+        // partial product (a << i) & x_i, truncated to n bits — only the
+        // upper n-i bits of acc are affected.
+        let width = n - i;
+        let pp: Word<B::Wire> = (0..width).map(|j| b.and(ae[j], xe[i])).collect();
+        let hi: Word<B::Wire> = acc[i..].to_vec();
+        let sum = add(b, &hi, &pp);
+        acc[i..].copy_from_slice(&sum);
+    }
+    acc[fmt.f as usize..].to_vec()
+}
+
+/// Fixed-point divide: `(a << f) / x`, truncating (C-style) signed division.
+///
+/// Restoring long division over magnitudes, then sign correction.
+pub fn div<B: GcBackend>(
+    b: &mut B,
+    a: &Word<B::Wire>,
+    x: &Word<B::Wire>,
+    fmt: FixedFmt,
+) -> Word<B::Wire> {
+    let n = fmt.w + fmt.f as usize;
+    let (amag, asign) = abs(b, a);
+    let (xmag, xsign) = abs(b, x);
+    // numerator = |a| << f, n+1 bits working width (magnitudes fit in w-1
+    // bits, numerator in w-1+f < n bits).
+    let num = {
+        let ae = resize(b, &amag, n);
+        shl_const(b, &ae, fmt.f as usize)
+    };
+    let xe = resize(b, &xmag, n + 1);
+    let zero = b.constant(false);
+    let mut rem: Word<B::Wire> = vec![zero; n + 1];
+    let mut quo: Word<B::Wire> = vec![zero; n];
+    for i in (0..n).rev() {
+        // rem = (rem << 1) | num[i]
+        rem.rotate_right(1);
+        rem[0] = num[i];
+        // trial subtract
+        let trial = sub(b, &rem, &xe);
+        let too_big = *trial.last().unwrap(); // sign: rem < x
+        let keep = mux_word(b, too_big, &rem, &trial);
+        rem = keep;
+        quo[i] = b.not(too_big);
+    }
+    // sign correction: q = (asign ^ xsign) ? -q : q, truncated to w bits
+    let qt: Word<B::Wire> = quo[..fmt.w].to_vec();
+    let s = b.xor(asign, xsign);
+    let nq = neg(b, &qt);
+    mux_word(b, s, &nq, &qt)
+}
+
+/// Fixed-point square root of a non-negative value: `sqrt(a)` at scale f.
+///
+/// Integer bitwise method on `a << f` (so the result is at scale f).
+/// The input is assumed ≥ 0 (Cholesky pivots; enforced by the protocol) —
+/// negative inputs produce garbage, never a panic (data-oblivious).
+pub fn sqrt<B: GcBackend>(b: &mut B, a: &Word<B::Wire>, fmt: FixedFmt) -> Word<B::Wire> {
+    let n = fmt.w + fmt.f as usize; // radicand width
+    let ae = resize(b, a, n);
+    let num = shl_const(b, &ae, fmt.f as usize); // wait: a already at scale f; (a<<f) at scale 2f, sqrt at scale f. n bits is enough for w+f.
+    let zero = b.constant(false);
+    // bitwise restoring sqrt: iterate k from high to low bit of result.
+    // result has ceil(n/2) significant bits.
+    let rbits = n.div_ceil(2);
+    let mut res: Word<B::Wire> = vec![zero; n];
+    let mut rem: Word<B::Wire> = vec![zero; n + 2];
+    // Process radicand two bits at a time from the top.
+    let numw = {
+        let mut v = num;
+        if v.len() % 2 == 1 {
+            v.push(zero);
+        }
+        v
+    };
+    let pairs = numw.len() / 2;
+    for k in (0..pairs).rev() {
+        // rem = (rem << 2) | next two radicand bits
+        rem.rotate_right(2);
+        rem[0] = numw[2 * k];
+        rem[1] = numw[2 * k + 1];
+        // trial = rem - (res << 2 | 01) at position… standard: t = (res<<2)|1 shifted per step
+        // Here res accumulates from the top: candidate = (res << 1 | 1) << k*… — use classic:
+        // trial subtract of ((res << 2) | 1) where res is the partial root.
+        let mut cand: Word<B::Wire> = vec![zero; rem.len()];
+        // cand = (res << 2) | 1 — res currently holds the partial root in low bits
+        cand[0] = b.constant(true);
+        for (i, &r) in res.iter().enumerate().take(rem.len().saturating_sub(2)) {
+            cand[i + 2] = r;
+        }
+        let trial = sub(b, &rem, &cand);
+        let too_big = *trial.last().unwrap();
+        rem = mux_word(b, too_big, &rem, &trial);
+        // res = (res << 1) | !too_big
+        res.rotate_right(1);
+        res[0] = b.not(too_big);
+    }
+    let _ = rbits;
+    // res holds sqrt(a<<f) = sqrt(a)·2^f… at integer scale; truncate to w bits
+    let mut out: Word<B::Wire> = res[..fmt.w.min(res.len())].to_vec();
+    out.resize(fmt.w, zero);
+    out
+}
+
+/// `|a − x| < tol · |x|` — the paper's relative-convergence predicate
+/// (§3.2), used by the secure convergence check. Returns a single wire.
+pub fn rel_converged<B: GcBackend>(
+    b: &mut B,
+    l_new: &Word<B::Wire>,
+    l_old: &Word<B::Wire>,
+    tol: f64,
+    fmt: FixedFmt,
+) -> B::Wire {
+    let d = sub(b, l_new, l_old);
+    let (dmag, _) = abs(b, &d);
+    let (omag, _) = abs(b, l_old);
+    let t = const_word(b, fmt.encode(tol), fmt.w);
+    let thresh = mul(b, &omag, &t, fmt);
+    lt(b, &dmag, &thresh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{CountBackend, GcBackend, PlainBackend};
+    use super::*;
+    use crate::testutil::TestRng;
+
+    const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+    fn to_word(b: &mut PlainBackend, v: i128, w: usize) -> Word<bool> {
+        (0..w).map(|i| b.constant((v >> i) & 1 == 1)).collect()
+    }
+
+    fn from_word(w: &Word<bool>) -> i128 {
+        let mut v: i128 = 0;
+        for (i, &bit) in w.iter().enumerate() {
+            if bit {
+                v |= 1 << i;
+            }
+        }
+        // sign extend
+        if *w.last().unwrap() {
+            v -= 1 << w.len();
+        }
+        v
+    }
+
+    fn eval2(f: impl Fn(&mut PlainBackend, &Word<bool>, &Word<bool>) -> Word<bool>, a: f64, x: f64) -> f64 {
+        let mut b = PlainBackend;
+        let wa = to_word(&mut b, FMT.encode(a), FMT.w);
+        let wx = to_word(&mut b, FMT.encode(x), FMT.w);
+        let out = f(&mut b, &wa, &wx);
+        FMT.decode(from_word(&out))
+    }
+
+    #[test]
+    fn encode_decode() {
+        for v in [0.0, 1.5, -1.5, 1000.25, -0.000001] {
+            assert!((FMT.decode(FMT.encode(v)) - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn add_sub_match_f64() {
+        let mut rng = TestRng::new(1);
+        for _ in 0..50 {
+            let a = rng.range_f64(-1000.0, 1000.0);
+            let x = rng.range_f64(-1000.0, 1000.0);
+            assert!((eval2(add, a, x) - (a + x)).abs() < 1e-6, "{a}+{x}");
+            assert!((eval2(sub, a, x) - (a - x)).abs() < 1e-6, "{a}-{x}");
+        }
+    }
+
+    #[test]
+    fn neg_abs() {
+        let mut b = PlainBackend;
+        for v in [3.75f64, -3.75, 0.0, -1000.5] {
+            let w = to_word(&mut b, FMT.encode(v), FMT.w);
+            let n = neg(&mut b, &w);
+            assert!((FMT.decode(from_word(&n)) + v).abs() < 1e-6);
+            let (m, s) = abs(&mut b, &w);
+            assert!((FMT.decode(from_word(&m)) - v.abs()).abs() < 1e-6);
+            assert_eq!(s, v < 0.0);
+        }
+    }
+
+    #[test]
+    fn mul_matches_f64() {
+        let mut rng = TestRng::new(2);
+        for _ in 0..40 {
+            let a = rng.range_f64(-100.0, 100.0);
+            let x = rng.range_f64(-100.0, 100.0);
+            let got = eval2(|b, p, q| mul(b, p, q, FMT), a, x);
+            assert!((got - a * x).abs() < 2e-5, "{a}*{x} = {got}");
+        }
+    }
+
+    #[test]
+    fn mul_extremes() {
+        // products near the representable boundary
+        let got = eval2(|b, p, q| mul(b, p, q, FMT), 181.0, 181.0);
+        assert!((got - 181.0 * 181.0).abs() < 1e-4);
+        let got = eval2(|b, p, q| mul(b, p, q, FMT), -181.0, 181.0);
+        assert!((got + 181.0 * 181.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn div_matches_f64() {
+        let mut rng = TestRng::new(3);
+        for _ in 0..40 {
+            let a = rng.range_f64(-100.0, 100.0);
+            let mut x = rng.range_f64(-20.0, 20.0);
+            if x.abs() < 0.01 {
+                x = 1.0;
+            }
+            let got = eval2(|b, p, q| div(b, p, q, FMT), a, x);
+            assert!((got - a / x).abs() < 2e-5, "{a}/{x} = {got}");
+        }
+    }
+
+    #[test]
+    fn div_signs() {
+        for (a, x) in [(7.0, 2.0), (-7.0, 2.0), (7.0, -2.0), (-7.0, -2.0)] {
+            let got = eval2(|b, p, q| div(b, p, q, FMT), a, x);
+            assert!((got - a / x).abs() < 1e-5, "{a}/{x} = {got}");
+        }
+    }
+
+    #[test]
+    fn sqrt_matches_f64() {
+        let mut b = PlainBackend;
+        let mut rng = TestRng::new(4);
+        for _ in 0..30 {
+            let v = rng.range_f64(0.0001, 5000.0);
+            let w = to_word(&mut b, FMT.encode(v), FMT.w);
+            let s = sqrt(&mut b, &w, FMT);
+            let got = FMT.decode(from_word(&s));
+            assert!((got - v.sqrt()).abs() < 3e-5, "sqrt({v}) = {got} vs {}", v.sqrt());
+        }
+    }
+
+    #[test]
+    fn lt_and_mux() {
+        let mut b = PlainBackend;
+        for (a, x) in [(1.0f64, 2.0f64), (2.0, 1.0), (-5.0, 3.0), (3.0, -5.0), (4.0, 4.0)] {
+            let wa = to_word(&mut b, FMT.encode(a), FMT.w);
+            let wx = to_word(&mut b, FMT.encode(x), FMT.w);
+            assert_eq!(lt(&mut b, &wa, &wx), a < x, "{a} < {x}");
+            let s = b.constant(a < x);
+            let m = mux_word(&mut b, s, &wa, &wx);
+            let expect = if a < x { a } else { x };
+            assert!((FMT.decode(from_word(&m)) - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shifts() {
+        let mut b = PlainBackend;
+        let w = to_word(&mut b, FMT.encode(3.5), FMT.w);
+        let l = shl_const(&mut b, &w, 2);
+        assert!((FMT.decode(from_word(&l)) - 14.0).abs() < 1e-6);
+        let r = sar_const(&mut b, &w, 1);
+        assert!((FMT.decode(from_word(&r)) - 1.75).abs() < 1e-6);
+        let wn = to_word(&mut b, FMT.encode(-8.0), FMT.w);
+        let rn = sar_const(&mut b, &wn, 2);
+        assert!((FMT.decode(from_word(&rn)) + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_converged_predicate() {
+        let mut b = PlainBackend;
+        let cases = [
+            (-100.0, -100.00001, true),  // tiny relative change
+            (-100.0, -101.0, false),     // 1% change
+            (-0.5, -0.5000001, true),
+            (-0.5, -0.51, false),
+        ];
+        for (lo, ln, expect) in cases {
+            let wo = to_word(&mut b, FMT.encode(lo), FMT.w);
+            let wn = to_word(&mut b, FMT.encode(ln), FMT.w);
+            let c = rel_converged(&mut b, &wn, &wo, 1e-4, FMT);
+            assert_eq!(c, expect, "rel_converged({ln} vs {lo})");
+        }
+    }
+
+    /// Gate counts are stable contracts for the cost model; pin rough
+    /// magnitudes so regressions are caught.
+    #[test]
+    fn gate_count_magnitudes() {
+        let mut b = CountBackend::default();
+        let a: Word<_> = (0..FMT.w).map(|_| None).collect();
+        let x: Word<_> = (0..FMT.w).map(|_| None).collect();
+        add(&mut b, &a, &x);
+        let add_ands = b.ands;
+        assert!(add_ands as usize <= FMT.w, "add ≤ W ANDs, got {add_ands}");
+        let mut b = CountBackend::default();
+        mul(&mut b, &a, &x, FMT);
+        let n = FMT.w + FMT.f as usize;
+        assert!(
+            (b.ands as usize) < 2 * n * n,
+            "mul < 2N² ANDs, got {} (N={n})",
+            b.ands
+        );
+        let mut b = CountBackend::default();
+        div(&mut b, &a, &x, FMT);
+        assert!((b.ands as usize) < 4 * n * (n + 2), "div gate count {}", b.ands);
+    }
+}

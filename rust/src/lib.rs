@@ -1,0 +1,62 @@
+//! # PrivLogit
+//!
+//! A production-quality reproduction of **"PrivLogit: Efficient
+//! Privacy-preserving Logistic Regression by Tailoring Numerical
+//! Optimizers"** (Xie, Wang, Boker, Brown — 2016, arXiv:1611.01170).
+//!
+//! The paper's observation: privacy-preserving logistic regression built on
+//! the de-facto Newton method wastes enormous amounts of *secure* compute on
+//! re-evaluating and re-inverting the Hessian every iteration. PrivLogit
+//! replaces the Hessian with the constant Böhning–Lindsay bound
+//! `H̃ = -¼ XᵀX - λI`, which is evaluated and (securely) inverted **once**,
+//! turning every subsequent iteration into cheap secure aggregation.
+//!
+//! This crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the distributed protocol runtime: participating
+//!   organizations ("nodes"), a two-server semi-honest aggregation center,
+//!   Paillier additively-homomorphic aggregation, Yao garbled-circuit
+//!   secure matrix algebra (Cholesky, back-substitution, comparison), and
+//!   the three protocols of the paper: the secure **Newton** baseline,
+//!   **PrivLogit-Hessian** (Algorithm 1) and **PrivLogit-Local**
+//!   (Algorithm 3).
+//! * **L2 (python/compile/model.py)** — the JAX compute graph for
+//!   node-local plaintext statistics (gradient, log-likelihood, Gram
+//!   matrix, exact Hessian), AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   sigmoid/gradient/log-likelihood tile loop, the node-local numeric
+//!   hot-spot, lowered into the same HLO.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` once and [`runtime`] loads them through PJRT.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`bigint`] | arbitrary-precision integers (substrate for Paillier) |
+//! | [`crypto`] | ChaCha20 CSPRNG, Paillier cryptosystem, fixed-point codec |
+//! | [`gc`] | boolean circuits + Yao garbling (free-XOR, half-gates, OT) |
+//! | [`mpc`] | two-server secure matrix algebra over shares; cost model |
+//! | [`optim`] | plaintext Newton / PrivLogit optimizers (ground truth) |
+//! | [`protocols`] | the three secure protocols of the paper |
+//! | [`coordinator`] | node/center topology, scheduler, convergence loop |
+//! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
+//! | [`linalg`] | dense matrix/vector algebra, Cholesky, solvers |
+//! | [`data`] | dataset synthesis, real-study stand-ins, partitioning |
+//! | [`config`] | experiment/config system + CLI parsing |
+//! | [`metrics`] | counters, timers, per-phase cost accounting |
+
+pub mod bigint;
+pub mod config;
+pub mod coordinator;
+pub mod crypto;
+pub mod data;
+pub mod gc;
+pub mod linalg;
+pub mod metrics;
+pub mod mpc;
+pub mod optim;
+pub mod protocols;
+pub mod runtime;
+pub mod testutil;

@@ -1,0 +1,389 @@
+//! Dense linear algebra substrate (row-major `f64`).
+//!
+//! Used for ground-truth optimizers, node-side fallbacks when PJRT
+//! artifacts are not built, and as the numeric oracle the secure
+//! fixed-point pipeline is validated against.
+
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// Rows.
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Underlying row-major slice.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable row-major slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self · other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Gram matrix `selfᵀ · self` (symmetric; exploits symmetry).
+    pub fn gram(&self) -> Matrix {
+        let p = self.cols;
+        let mut g = Matrix::zeros(p, p);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..p {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in i..p {
+                    g[(i, j)] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..p {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// `self + s·I` in place (regularization).
+    pub fn add_diag(&mut self, s: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += s;
+        }
+    }
+
+    /// Element-wise addition.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Cholesky decomposition of a symmetric positive-definite matrix:
+    /// returns lower-triangular `L` with `L·Lᵀ = self`.
+    pub fn cholesky(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "cholesky needs square");
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut d = self[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            if d <= 0.0 {
+                return None; // not PD
+            }
+            let dj = d.sqrt();
+            l[(j, j)] = dj;
+            for i in j + 1..n {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = s / dj;
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve `self · x = b` for symmetric positive-definite `self` via
+    /// Cholesky (two triangular solves).
+    pub fn solve_spd(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let l = self.cholesky()?;
+        Some(l.solve_cholesky(b))
+    }
+
+    /// Given `self = L` lower-triangular from Cholesky, solve
+    /// `L·Lᵀ·x = b` (forward then backward substitution).
+    pub fn solve_cholesky(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self[(i, k)] * y[k];
+            }
+            y[i] = s / self[(i, i)];
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self[(k, i)] * x[k];
+            }
+            x[i] = s / self[(i, i)];
+        }
+        x
+    }
+
+    /// Inverse of an SPD matrix via Cholesky (used to materialize
+    /// `H̃⁻¹` for PrivLogit-Local).
+    pub fn inverse_spd(&self) -> Option<Matrix> {
+        let n = self.rows;
+        let l = self.cholesky()?;
+        let mut inv = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = l.solve_cholesky(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        Some(inv)
+    }
+
+    /// Max absolute element difference (test helper / convergence).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `a − b` element-wise.
+pub fn vsub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// `a + b` element-wise.
+pub fn vadd(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Scale a vector.
+pub fn vscale(a: &[f64], s: f64) -> Vec<f64> {
+    a.iter().map(|x| x * s).collect()
+}
+
+/// L2 norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Pearson R² between two vectors (the paper's Fig. 2 metric).
+pub fn r_squared(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+    let va: f64 = a.iter().map(|x| (x - ma).powi(2)).sum();
+    let vb: f64 = b.iter().map(|y| (y - mb).powi(2)).sum();
+    if va == 0.0 || vb == 0.0 {
+        return if a == b { 1.0 } else { 0.0 };
+    }
+    (cov * cov) / (va * vb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_all_close, assert_close, TestRng};
+
+    fn random_spd(rng: &mut TestRng, n: usize) -> Matrix {
+        // A = B·Bᵀ + n·I is SPD
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.gaussian();
+            }
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = TestRng::new(1);
+        let a = random_spd(&mut rng, 5);
+        let i = Matrix::identity(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = TestRng::new(2);
+        let mut x = Matrix::zeros(20, 6);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let g1 = x.gram();
+        let g2 = x.transpose().matmul(&x);
+        assert!(g1.max_abs_diff(&g2) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = TestRng::new(3);
+        for n in [1, 2, 5, 12] {
+            let a = random_spd(&mut rng, n);
+            let l = a.cholesky().expect("SPD");
+            let rec = l.matmul(&l.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-9, "n={n}");
+            // lower triangular
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1, 3
+        assert!(m.cholesky().is_none());
+    }
+
+    #[test]
+    fn solve_spd_property() {
+        let mut rng = TestRng::new(4);
+        for n in [1, 3, 8] {
+            let a = random_spd(&mut rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let b = a.matvec(&x_true);
+            let x = a.solve_spd(&b).unwrap();
+            assert_all_close(&x, &x_true, 1e-8, "solve_spd");
+        }
+    }
+
+    #[test]
+    fn inverse_spd_property() {
+        let mut rng = TestRng::new(5);
+        let a = random_spd(&mut rng, 7);
+        let inv = a.inverse_spd().unwrap();
+        assert!(a.matmul(&inv).max_abs_diff(&Matrix::identity(7)) < 1e-8);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_imperfect() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![2.0, 4.0, 6.0, 8.0];
+        assert_close(r_squared(&a, &b), 1.0, 1e-12, "linear => R²=1");
+        let c = vec![1.0, -2.0, 3.5, 0.0];
+        assert!(r_squared(&a, &c) < 0.9);
+    }
+
+    #[test]
+    fn vector_helpers() {
+        assert_close(dot(&[1., 2.], &[3., 4.]), 11.0, 1e-12, "dot");
+        assert_eq!(vsub(&[3., 4.], &[1., 1.]), vec![2., 3.]);
+        assert_eq!(vadd(&[3., 4.], &[1., 1.]), vec![4., 5.]);
+        assert_close(norm2(&[3., 4.]), 5.0, 1e-12, "norm");
+    }
+}

@@ -1,0 +1,68 @@
+//! `privlogit` — the leader binary: run privacy-preserving logistic
+//! regression experiments from the command line.
+//!
+//! ```text
+//! privlogit run  [--dataset Loans] [--protocol privlogit-local]
+//!                [--backend auto] [--orgs 4] [--lambda 1.0] [--tol 1e-6]
+//!                [--modulus-bits 1024] [--threaded] [--seed 42]
+//!                [--config FILE]
+//! privlogit compare [same flags]    # all three protocols side by side
+//! privlogit list                    # the paper's evaluation suite
+//! ```
+
+use privlogit::config::Config;
+use privlogit::coordinator::Experiment;
+use privlogit::data::WORKLOADS;
+use privlogit::metrics::{beta_preview, render_report};
+use privlogit::protocols::Protocol;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: privlogit <run|compare|list> [--dataset NAME] [--protocol P] \
+         [--backend real|model|auto] [--orgs N] [--lambda L] [--tol T] \
+         [--max-iters M] [--modulus-bits B] [--threaded] [--seed S] [--config FILE]"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "list" => {
+            println!(
+                "{:<10} {:>10} {:>5} {:>9}  paper iters (Newton/PrivLogit)",
+                "dataset", "paper n", "p", "our n"
+            );
+            for w in WORKLOADS {
+                println!(
+                    "{:<10} {:>10} {:>5} {:>9}  {}/{}",
+                    w.name, w.paper_n, w.p, w.n, w.paper_iters.0, w.paper_iters.1
+                );
+            }
+            Ok(())
+        }
+        "run" => {
+            let mut cfg = Config::default();
+            cfg.parse_args(&args[1..])?;
+            let exp = Experiment::from_config(&cfg)?;
+            let report = exp.run();
+            print!("{}", render_report(&report));
+            println!("  beta: {}", beta_preview(&report.beta));
+            Ok(())
+        }
+        "compare" => {
+            let mut cfg = Config::default();
+            cfg.parse_args(&args[1..])?;
+            for proto in Protocol::ALL {
+                let mut c = cfg.clone();
+                c.protocol = proto.name().to_string();
+                let exp = Experiment::from_config(&c)?;
+                let report = exp.run();
+                println!("{}", report.summary());
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,116 @@
+//! Report formatting: turn [`RunReport`]s and cost ledgers into the
+//! tables the CLI, examples and benches print.
+
+use crate::protocols::RunReport;
+
+/// Render a detailed single-run report.
+pub fn render_report(r: &RunReport) -> String {
+    let l = &r.ledger;
+    let mut s = String::new();
+    s.push_str(&format!("── {} on {} ──\n", r.protocol, r.dataset));
+    s.push_str(&format!(
+        "  n={} p={} orgs={}  backend: {}  nodes: {}\n",
+        r.n, r.p, r.orgs, r.backend, r.engine
+    ));
+    s.push_str(&format!(
+        "  iterations: {} (converged: {})\n",
+        r.iterations, r.converged
+    ));
+    s.push_str(&format!(
+        "  time: total {:.2}s  setup {:.2}s  iter-phase {:.2}s\n",
+        r.total_secs,
+        r.setup_secs,
+        r.total_secs - r.setup_secs
+    ));
+    s.push_str(&format!(
+        "  breakdown: center {:.2}s  nodes(max/round) {:.2}s\n",
+        l.center_secs, l.node_secs
+    ));
+    s.push_str(&format!(
+        "  crypto: {} encs, {} adds, {} scalar-muls, {} decrypts, {} GC ANDs, {} OT bits\n",
+        l.paillier_encs, l.paillier_adds, l.paillier_scalar, l.paillier_decrypts, l.gc_ands,
+        l.ot_bits
+    ));
+    s.push_str(&format!(
+        "  network: {:.2} MiB in {} rounds\n",
+        l.bytes as f64 / (1024.0 * 1024.0),
+        l.rounds
+    ));
+    s
+}
+
+/// Render a Table-2-style comparison row.
+pub fn table2_row(dataset: &str, iters: (usize, usize), secs: (f64, f64, f64)) -> String {
+    format!(
+        "| {:<10} | {:>6} | {:>9} | {:>10.1} | {:>17.1} | {:>15.1} |",
+        dataset, iters.0, iters.1, secs.0, secs.1, secs.2
+    )
+}
+
+/// Table 2 header (matches the paper's columns).
+pub fn table2_header() -> String {
+    format!(
+        "| {:<10} | {:>6} | {:>9} | {:>10} | {:>17} | {:>15} |\n|{}|",
+        "Dataset",
+        "Newton",
+        "PrivLogit",
+        "Newton (s)",
+        "PL-Hessian (s)",
+        "PL-Local (s)",
+        "-".repeat(86)
+    )
+}
+
+/// First coefficients preview for logs.
+pub fn beta_preview(beta: &[f64]) -> String {
+    let head: Vec<String> = beta.iter().take(5).map(|b| format!("{b:+.4}")).collect();
+    format!("[{}{}]", head.join(", "), if beta.len() > 5 { ", …" } else { "" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::CostLedger;
+
+    fn dummy_report() -> RunReport {
+        RunReport {
+            protocol: "privlogit-local",
+            backend: "real".into(),
+            engine: "cpu".into(),
+            dataset: "Wine".into(),
+            p: 12,
+            n: 6497,
+            orgs: 4,
+            iterations: 13,
+            converged: true,
+            beta: vec![0.1, -0.2, 0.3],
+            setup_secs: 1.5,
+            total_secs: 4.0,
+            ledger: CostLedger::default(),
+        }
+    }
+
+    #[test]
+    fn report_contains_key_fields() {
+        let s = render_report(&dummy_report());
+        assert!(s.contains("privlogit-local"));
+        assert!(s.contains("iterations: 13"));
+        assert!(s.contains("setup 1.50s"));
+    }
+
+    #[test]
+    fn table_rows_align() {
+        let h = table2_header();
+        let r = table2_row("Wine", (5, 13), (32.0, 24.0, 17.0));
+        let width = h.lines().next().unwrap().len();
+        assert_eq!(r.len(), width, "row/header width");
+    }
+
+    #[test]
+    fn beta_preview_truncates() {
+        let s = beta_preview(&[1.0; 10]);
+        assert!(s.contains('…'));
+        let s2 = beta_preview(&[1.0, 2.0]);
+        assert!(!s2.contains('…'));
+    }
+}

@@ -1,0 +1,537 @@
+//! Matrix-algebra circuit programs for the two Center servers.
+//!
+//! These are the paper's Type-2 secure computations expressed as
+//! data-oblivious word programs (see [`crate::gc::backend`]):
+//!
+//! * [`cholesky_words`] — Cholesky decomposition (Alg. 2, step 6);
+//! * [`tri_solve_words`] — back-substitution `L·Lᵀ·x = g` (Alg. 1, step 9);
+//! * the [`GcProgram`] wrappers that recombine the servers' additive
+//!   shares in-circuit, run the algebra, and reveal or re-mask outputs.
+//!
+//! Matrices are symmetric and packed as lower triangles, row-major:
+//! `[(0,0), (1,0), (1,1), (2,0), …]`, length `p(p+1)/2`.
+
+use crate::gc::backend::GcBackend;
+use crate::gc::exec::GcProgram;
+use crate::gc::word::{self, const_word, FixedFmt, Word};
+
+/// Packed lower-triangle length for a `p×p` symmetric matrix.
+pub fn tri_len(p: usize) -> usize {
+    p * (p + 1) / 2
+}
+
+/// Index into the packed lower triangle (`i ≥ j`).
+pub fn tri_idx(i: usize, j: usize) -> usize {
+    debug_assert!(i >= j);
+    i * (i + 1) / 2 + j
+}
+
+/// In-circuit Cholesky decomposition of a packed SPD matrix.
+///
+/// Identical operation order to [`crate::linalg::Matrix::cholesky`]:
+/// `p` square roots, `tri_len(p) − p` divisions, `~p³/6` multiplies.
+pub fn cholesky_words<B: GcBackend>(
+    b: &mut B,
+    h: &[Word<B::Wire>],
+    p: usize,
+    fmt: FixedFmt,
+) -> Vec<Word<B::Wire>> {
+    assert_eq!(h.len(), tri_len(p));
+    let mut l: Vec<Word<B::Wire>> = Vec::with_capacity(tri_len(p));
+    for i in 0..p {
+        for j in 0..=i {
+            // s = h[i][j] − Σ_k<j l[i][k]·l[j][k]
+            let mut s = h[tri_idx(i, j)].clone();
+            for k in 0..j {
+                let prod = word::mul(b, &l[tri_idx(i, k)], &l[tri_idx(j, k)], fmt);
+                s = word::sub(b, &s, &prod);
+            }
+            if i == j {
+                l.push(word::sqrt(b, &s, fmt));
+            } else {
+                let d = l[tri_idx(j, j)].clone();
+                l.push(word::div(b, &s, &d, fmt));
+            }
+        }
+    }
+    l
+}
+
+/// In-circuit solve of `L·Lᵀ·x = g` (forward + backward substitution).
+pub fn tri_solve_words<B: GcBackend>(
+    b: &mut B,
+    l: &[Word<B::Wire>],
+    g: &[Word<B::Wire>],
+    p: usize,
+    fmt: FixedFmt,
+) -> Vec<Word<B::Wire>> {
+    assert_eq!(l.len(), tri_len(p));
+    assert_eq!(g.len(), p);
+    // forward: L y = g
+    let mut y: Vec<Word<B::Wire>> = Vec::with_capacity(p);
+    for i in 0..p {
+        let mut s = g[i].clone();
+        for (k, yk) in y.iter().enumerate().take(i) {
+            let prod = word::mul(b, &l[tri_idx(i, k)], yk, fmt);
+            s = word::sub(b, &s, &prod);
+        }
+        y.push(word::div(b, &s, &l[tri_idx(i, i)], fmt));
+    }
+    // backward: Lᵀ x = y
+    let mut x: Vec<Option<Word<B::Wire>>> = vec![None; p];
+    for i in (0..p).rev() {
+        let mut s = y[i].clone();
+        for (k, xk) in x.iter().enumerate().skip(i + 1) {
+            let prod = word::mul(b, &l[tri_idx(k, i)], xk.as_ref().unwrap(), fmt);
+            s = word::sub(b, &s, &prod);
+        }
+        x[i] = Some(word::div(b, &s, &l[tri_idx(i, i)], fmt));
+    }
+    x.into_iter().map(|w| w.unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Input plumbing shared by the programs: each logical value enters as two
+// additive shares mod 2^w (one per server) recombined with one in-circuit
+// addition.
+
+fn words_from_inputs<B: GcBackend>(
+    b: &mut B,
+    ga: &[B::Wire],
+    ea: &[B::Wire],
+    count: usize,
+    w: usize,
+) -> Vec<Word<B::Wire>> {
+    (0..count)
+        .map(|i| {
+            let a: Word<B::Wire> = ga[i * w..(i + 1) * w].to_vec();
+            let x: Word<B::Wire> = ea[i * w..(i + 1) * w].to_vec();
+            word::add(b, &a, &x)
+        })
+        .collect()
+}
+
+/// One full secure Newton step: recombine shares of `H` (packed) and `g`,
+/// Cholesky-decompose, solve, reveal `Δ = H⁻¹g` in clear.
+///
+/// Used per-iteration by the secure Newton baseline, and once per
+/// iteration by nothing else — its cost is exactly the cost the paper's
+/// §5.2 attributes to `O(p³ × iterations)`.
+pub struct NewtonStepProg {
+    /// Dimensionality.
+    pub p: usize,
+    /// Fixed-point format.
+    pub fmt: FixedFmt,
+}
+
+impl GcProgram for NewtonStepProg {
+    fn inputs_garbler(&self) -> usize {
+        (tri_len(self.p) + self.p) * self.fmt.w
+    }
+    fn inputs_evaluator(&self) -> usize {
+        (tri_len(self.p) + self.p) * self.fmt.w
+    }
+    fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+        let (p, w) = (self.p, self.fmt.w);
+        let nh = tri_len(p);
+        let h = words_from_inputs(b, &ga[..nh * w], &ea[..nh * w], nh, w);
+        let g = words_from_inputs(b, &ga[nh * w..], &ea[nh * w..], p, w);
+        let l = cholesky_words(b, &h, p, self.fmt);
+        let x = tri_solve_words(b, &l, &g, p, self.fmt);
+        x.into_iter().flatten().collect()
+    }
+}
+
+/// Cholesky with re-shared output: the garbler additionally inputs one
+/// random mask per output word; the circuit reveals `L + mask` to the
+/// evaluator (its share), the garbler keeps `−mask`.
+///
+/// This is `SetupOnce` (Alg. 2) for PrivLogit-Hessian: `Enc(L)` in the
+/// paper becomes additive shares held by the two servers.
+pub struct CholeskyShareProg {
+    /// Dimensionality.
+    pub p: usize,
+    /// Fixed-point format.
+    pub fmt: FixedFmt,
+}
+
+impl GcProgram for CholeskyShareProg {
+    fn inputs_garbler(&self) -> usize {
+        // H shares + one mask word per output entry
+        tri_len(self.p) * self.fmt.w * 2
+    }
+    fn inputs_evaluator(&self) -> usize {
+        tri_len(self.p) * self.fmt.w
+    }
+    fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+        let (p, w) = (self.p, self.fmt.w);
+        let nh = tri_len(p);
+        let h = words_from_inputs(b, &ga[..nh * w], ea, nh, w);
+        let l = cholesky_words(b, &h, p, self.fmt);
+        // mask each output with the garbler's random word
+        let mut out = Vec::with_capacity(nh * w);
+        for (i, li) in l.iter().enumerate() {
+            let mask: Word<B::Wire> = ga[(nh + i) * w..(nh + i + 1) * w].to_vec();
+            let masked = word::add(b, li, &mask);
+            out.extend(masked);
+        }
+        out
+    }
+}
+
+/// Back-substitution on shared `L` and shared `g`, revealing `Δ` in clear
+/// (the PrivLogit-Hessian per-iteration step — `O(p²)`).
+pub struct SolveProg {
+    /// Dimensionality.
+    pub p: usize,
+    /// Fixed-point format.
+    pub fmt: FixedFmt,
+}
+
+impl GcProgram for SolveProg {
+    fn inputs_garbler(&self) -> usize {
+        (tri_len(self.p) + self.p) * self.fmt.w
+    }
+    fn inputs_evaluator(&self) -> usize {
+        (tri_len(self.p) + self.p) * self.fmt.w
+    }
+    fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+        let (p, w) = (self.p, self.fmt.w);
+        let nh = tri_len(p);
+        let l = words_from_inputs(b, &ga[..nh * w], &ea[..nh * w], nh, w);
+        let g = words_from_inputs(b, &ga[nh * w..], &ea[nh * w..], p, w);
+        let x = tri_solve_words(b, &l, &g, p, self.fmt);
+        x.into_iter().flatten().collect()
+    }
+}
+
+/// Statistical-masking headroom for wide reveals (bits).
+pub const SIGMA: usize = 40;
+
+/// `H⁻¹` with Paillier-ready masked reveal, in one program:
+/// recombine `H`, Cholesky, solve against the identity, then for each of
+/// the `tri_len(p)` distinct entries output `v + C + r` in a *wide*
+/// (w+σ+1)-bit adder, where `C = 2^{w−1}` lifts the value non-negative and
+/// `r` is the garbler's (w+σ)-bit statistical mask.
+///
+/// The evaluator (aggregation server) learns only the masked integers,
+/// Paillier-encrypts them, and homomorphically subtracts `Enc(C + r)`
+/// supplied by the garbler to obtain `Enc(H⁻¹_{ij})` exactly — the
+/// `Enc(H̃⁻¹)` that PrivLogit-Local (Alg. 3, step 2) distributes to nodes.
+pub struct InverseMaskedProg {
+    /// Dimensionality.
+    pub p: usize,
+    /// Fixed-point format.
+    pub fmt: FixedFmt,
+}
+
+impl InverseMaskedProg {
+    /// Output width per entry.
+    pub fn wide(&self) -> usize {
+        self.fmt.w + SIGMA + 1
+    }
+}
+
+impl GcProgram for InverseMaskedProg {
+    fn inputs_garbler(&self) -> usize {
+        // H shares + a (w+σ)-bit mask per output entry
+        tri_len(self.p) * self.fmt.w + tri_len(self.p) * (self.fmt.w + SIGMA)
+    }
+    fn inputs_evaluator(&self) -> usize {
+        tri_len(self.p) * self.fmt.w
+    }
+    fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+        let (p, w) = (self.p, self.fmt.w);
+        let nh = tri_len(p);
+        let wide = self.wide();
+        let h = words_from_inputs(b, &ga[..nh * w], ea, nh, w);
+        let l = cholesky_words(b, &h, p, self.fmt);
+        // Triangular inverse T = L⁻¹ with the reciprocal-diagonal trick
+        // (p divisions total, ~p³/6 multiplies), then Z = TᵀT (~p³/6
+        // multiplies over the symmetric half). Total ≈ 3× the Cholesky
+        // multiply count — the efficient structure the per-column solve
+        // (p³ multiplies) wastes.
+        let one = const_word(b, self.fmt.encode(1.0), w);
+        let recip: Vec<Word<B::Wire>> = (0..p)
+            .map(|j| word::div(b, &one, &l[tri_idx(j, j)], self.fmt))
+            .collect();
+        // t stored packed lower-triangular like l
+        let mut t: Vec<Option<Word<B::Wire>>> = vec![None; nh];
+        for j in 0..p {
+            t[tri_idx(j, j)] = Some(recip[j].clone());
+            for i in j + 1..p {
+                // s = Σ_{k=j..i-1} l[i][k]·t[k][j]
+                let mut s: Option<Word<B::Wire>> = None;
+                for k in j..i {
+                    let prod =
+                        word::mul(b, &l[tri_idx(i, k)], t[tri_idx(k, j)].as_ref().unwrap(), self.fmt);
+                    s = Some(match s {
+                        None => prod,
+                        Some(acc) => word::add(b, &acc, &prod),
+                    });
+                }
+                let scaled = word::mul(b, &s.unwrap(), &recip[i], self.fmt);
+                t[tri_idx(i, j)] = Some(word::neg(b, &scaled));
+            }
+        }
+        // Z = TᵀT (symmetric, keep i ≥ j): z[i][j] = Σ_{k≥i} t[k][i]·t[k][j]
+        let mut z: Vec<Option<Word<B::Wire>>> = vec![None; nh];
+        for j in 0..p {
+            for i in j..p {
+                let mut s: Option<Word<B::Wire>> = None;
+                for k in i..p {
+                    let prod = word::mul(
+                        b,
+                        t[tri_idx(k, i)].as_ref().unwrap(),
+                        t[tri_idx(k, j)].as_ref().unwrap(),
+                        self.fmt,
+                    );
+                    s = Some(match s {
+                        None => prod,
+                        Some(acc) => word::add(b, &acc, &prod),
+                    });
+                }
+                z[tri_idx(i, j)] = s;
+            }
+        }
+        // wide masked reveal: v_ext + C + r
+        let c_lift = 1i128 << (w - 1);
+        let mut out = Vec::with_capacity(nh * wide);
+        for (idx, zi) in z.into_iter().enumerate() {
+            let v = zi.unwrap();
+            let vext = word::resize(b, &v, wide);
+            let coff = const_word(b, c_lift, wide);
+            let lifted = word::add(b, &vext, &coff);
+            let mstart = nh * w + idx * (w + SIGMA);
+            let mut mask: Word<B::Wire> = ga[mstart..mstart + w + SIGMA].to_vec();
+            let zero = b.constant(false);
+            mask.resize(wide, zero);
+            let masked = word::add(b, &lifted, &mask);
+            out.extend(masked);
+        }
+        out
+    }
+}
+
+/// Secure convergence check (Alg. 1 step 12): reveal only the single bit
+/// `|l_new − l_old| < tol · |l_old|`.
+pub struct ConvergedProg {
+    /// Fixed-point format.
+    pub fmt: FixedFmt,
+    /// Relative tolerance (paper: 1e-6).
+    pub tol: f64,
+}
+
+impl GcProgram for ConvergedProg {
+    fn inputs_garbler(&self) -> usize {
+        2 * self.fmt.w
+    }
+    fn inputs_evaluator(&self) -> usize {
+        2 * self.fmt.w
+    }
+    fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+        let w = self.fmt.w;
+        let vals = words_from_inputs(b, ga, ea, 2, w);
+        let c = word::rel_converged(b, &vals[0], &vals[1], self.tol, self.fmt);
+        vec![c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::backend::{CountBackend, PlainBackend};
+    use crate::linalg::Matrix;
+    use crate::testutil::TestRng;
+
+    const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+    fn random_spd(rng: &mut TestRng, p: usize) -> Matrix {
+        let mut b = Matrix::zeros(p, p);
+        for v in b.as_mut_slice() {
+            *v = rng.gaussian() * 0.3;
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(1.0 + p as f64 * 0.05);
+        a
+    }
+
+    fn pack_tri(m: &Matrix) -> Vec<f64> {
+        let p = m.rows;
+        let mut out = Vec::with_capacity(tri_len(p));
+        for i in 0..p {
+            for j in 0..=i {
+                out.push(m[(i, j)]);
+            }
+        }
+        out
+    }
+
+    fn to_words(b: &mut PlainBackend, vals: &[f64]) -> Vec<Word<bool>> {
+        vals.iter()
+            .map(|&v| {
+                let raw = FMT.unsigned(FMT.encode(v));
+                (0..FMT.w).map(|i| b.constant((raw >> i) & 1 == 1)).collect()
+            })
+            .collect()
+    }
+
+    fn from_word_bits(bits: &[bool], fmt: FixedFmt) -> f64 {
+        let mut raw: i128 = 0;
+        for (i, &bit) in bits.iter().enumerate() {
+            if bit {
+                raw |= 1 << i;
+            }
+        }
+        fmt.decode(raw)
+    }
+
+    #[test]
+    fn tri_packing() {
+        assert_eq!(tri_len(4), 10);
+        assert_eq!(tri_idx(0, 0), 0);
+        assert_eq!(tri_idx(1, 0), 1);
+        assert_eq!(tri_idx(1, 1), 2);
+        assert_eq!(tri_idx(3, 2), 8);
+    }
+
+    /// Circuit Cholesky vs f64 Cholesky on random SPD matrices.
+    #[test]
+    fn cholesky_circuit_matches_linalg() {
+        let mut rng = TestRng::new(10);
+        for p in [1, 2, 4, 6] {
+            let a = random_spd(&mut rng, p);
+            let expect = a.cholesky().unwrap();
+            let mut b = PlainBackend;
+            let h = to_words(&mut b, &pack_tri(&a));
+            let l = cholesky_words(&mut b, &h, p, FMT);
+            for i in 0..p {
+                for j in 0..=i {
+                    let got = from_word_bits(&l[tri_idx(i, j)], FMT);
+                    assert!(
+                        (got - expect[(i, j)]).abs() < 2e-4,
+                        "p={p} L[{i}][{j}]: {got} vs {}",
+                        expect[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Circuit solve vs f64 solve.
+    #[test]
+    fn tri_solve_circuit_matches_linalg() {
+        let mut rng = TestRng::new(11);
+        let p = 5;
+        let a = random_spd(&mut rng, p);
+        let l = a.cholesky().unwrap();
+        let g: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+        let expect = l.solve_cholesky(&g);
+        let mut b = PlainBackend;
+        let lw = to_words(&mut b, &pack_tri(&l));
+        let gw = to_words(&mut b, &g);
+        let x = tri_solve_words(&mut b, &lw, &gw, p, FMT);
+        for i in 0..p {
+            let got = from_word_bits(&x[i], FMT);
+            assert!((got - expect[i]).abs() < 5e-4, "x[{i}]: {got} vs {}", expect[i]);
+        }
+    }
+
+    /// The §5.2 complexity claims, verified on exact gate counts:
+    /// Newton per-iteration work is Θ(p³) while the solve is Θ(p²).
+    #[test]
+    fn gate_count_complexity_shape() {
+        let counts: Vec<u64> = [4usize, 8, 16]
+            .iter()
+            .map(|&p| {
+                let mut cb = CountBackend::default();
+                let prog = NewtonStepProg { p, fmt: FMT };
+                let na = prog.inputs_garbler();
+                let ga: Vec<Option<bool>> = vec![None; na];
+                let ea: Vec<Option<bool>> = vec![None; na];
+                prog.run(&mut cb, &ga, &ea);
+                cb.ands
+            })
+            .collect();
+        // doubling p should multiply cost by ~8 asymptotically; allow slack
+        // for the quadratic/linear terms at these small sizes.
+        let r1 = counts[1] as f64 / counts[0] as f64;
+        let r2 = counts[2] as f64 / counts[1] as f64;
+        assert!(r1 > 2.5, "p: 4→8 cost ratio {r1}");
+        assert!(r2 > r1, "super-quadratic growth expected, {r2} vs {r1}");
+
+        // solve-only is much cheaper than the full Newton step at p=16
+        let mut cb = CountBackend::default();
+        let prog = SolveProg { p: 16, fmt: FMT };
+        let ga: Vec<Option<bool>> = vec![None; prog.inputs_garbler()];
+        let ea: Vec<Option<bool>> = vec![None; prog.inputs_evaluator()];
+        prog.run(&mut cb, &ga, &ea);
+        assert!(
+            cb.ands * 3 < counts[2],
+            "solve ({}) should be ≪ newton step ({})",
+            cb.ands,
+            counts[2]
+        );
+    }
+
+    /// Share recombination in-circuit: a+b shares of a value produce the
+    /// same Newton step as the value itself.
+    #[test]
+    fn share_recombination_end_to_end_plain() {
+        let mut rng = TestRng::new(12);
+        let p = 3;
+        let a = random_spd(&mut rng, p);
+        let g: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+        let expect = a.solve_spd(&g).unwrap();
+
+        let prog = NewtonStepProg { p, fmt: FMT };
+        // split every input into random additive shares mod 2^w
+        let mut ga_bits = Vec::new();
+        let mut ea_bits = Vec::new();
+        let push_shared = |v: f64, ga: &mut Vec<bool>, ea: &mut Vec<bool>, rng: &mut TestRng| {
+            let raw = FMT.unsigned(FMT.encode(v));
+            let share_a = (rng.next_u64() as u128) & ((1u128 << FMT.w) - 1);
+            let share_b = (raw.wrapping_sub(share_a)) & ((1u128 << FMT.w) - 1);
+            for i in 0..FMT.w {
+                ga.push((share_a >> i) & 1 == 1);
+            }
+            for i in 0..FMT.w {
+                ea.push((share_b >> i) & 1 == 1);
+            }
+        };
+        for v in pack_tri(&a) {
+            push_shared(v, &mut ga_bits, &mut ea_bits, &mut rng);
+        }
+        for &v in &g {
+            push_shared(v, &mut ga_bits, &mut ea_bits, &mut rng);
+        }
+        let mut b = PlainBackend;
+        let out = prog.run(&mut b, &ga_bits, &ea_bits);
+        for i in 0..p {
+            let got = from_word_bits(&out[i * FMT.w..(i + 1) * FMT.w], FMT);
+            assert!((got - expect[i]).abs() < 5e-4, "Δ[{i}]: {got} vs {}", expect[i]);
+        }
+    }
+
+    #[test]
+    fn converged_prog_plain() {
+        let prog = ConvergedProg { fmt: FMT, tol: 1e-4 };
+        let mut b = PlainBackend;
+        let bits = |v: f64| -> Vec<bool> {
+            let raw = FMT.unsigned(FMT.encode(v));
+            (0..FMT.w).map(|i| (raw >> i) & 1 == 1).collect()
+        };
+        // garbler holds values, evaluator holds zero shares
+        let zeros = vec![false; FMT.w];
+        for (lnew, lold, expect) in
+            [(-0.50000001, -0.5, true), (-0.45, -0.5, false), (-0.5, -0.5, true)]
+        {
+            let mut ga = bits(lnew);
+            ga.extend(bits(lold));
+            let mut ea = zeros.clone();
+            ea.extend(zeros.clone());
+            let out = prog.run(&mut b, &ga, &ea);
+            assert_eq!(out[0], expect, "converged({lnew}, {lold})");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Two-server secure computation layer (the Center of Figure 1).
+//!
+//! Composes the Paillier layer ([`crate::crypto`]) and the garbled-circuit
+//! engine ([`crate::gc`]) into the operations the paper's protocols need:
+//!
+//! * share conversion (Paillier ⇄ additive shares mod 2^w, blinded
+//!   decryption after Nikolaenko et al. 2013);
+//! * secure Cholesky, back-substitution, matrix inversion and comparison
+//!   as garbled programs ([`circuits`]);
+//! * the [`fabric::SecureFabric`] facade with a fully-executed backend
+//!   ([`fabric::RealFabric`]) and a calibrated cost-model backend
+//!   ([`fabric::ModelFabric`]) for paper-scale sweeps ([`costmodel`]).
+
+pub mod circuits;
+pub mod costmodel;
+pub mod fabric;
+
+pub use circuits::{tri_idx, tri_len};
+pub use costmodel::{CostLedger, CostModel};
+pub use fabric::{EncData, EncMat, EncVec, ModelFabric, RealFabric, SecVec, SecureFabric, Shared};

@@ -1,0 +1,156 @@
+//! Shared protocol plumbing: configuration, run reports, and the
+//! node-round / aggregation helpers all three protocols use.
+
+use crate::coordinator::fleet::Fleet;
+use crate::linalg::Matrix;
+use crate::mpc::{tri_idx, tri_len, CostLedger, EncVec, SecureFabric};
+
+/// Protocol configuration (paper §6 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct ProtocolConfig {
+    /// ℓ₂ regularization λ.
+    pub lambda: f64,
+    /// Relative log-likelihood convergence threshold.
+    pub tol: f64,
+    /// Defensive iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        ProtocolConfig { lambda: 1.0, tol: 1e-6, max_iters: 500 }
+    }
+}
+
+/// Result of one secure protocol run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Protocol name ("newton", "privlogit-hessian", "privlogit-local").
+    pub protocol: &'static str,
+    /// Secure backend label (real vs modeled).
+    pub backend: String,
+    /// Node compute engine label (pjrt vs cpu).
+    pub engine: String,
+    /// Dataset name.
+    pub dataset: String,
+    /// Features.
+    pub p: usize,
+    /// Total samples.
+    pub n: usize,
+    /// Participating organizations.
+    pub orgs: usize,
+    /// Model-update iterations performed.
+    pub iterations: usize,
+    /// Whether the tolerance was met.
+    pub converged: bool,
+    /// Final coefficients.
+    pub beta: Vec<f64>,
+    /// One-time setup seconds (key gen + base OT + SetupOnce).
+    pub setup_secs: f64,
+    /// Total protocol seconds (compute + modeled network).
+    pub total_secs: f64,
+    /// Final cost ledger snapshot.
+    pub ledger: CostLedger,
+}
+
+impl RunReport {
+    /// Paper-style one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<18} {:<10} iters={:<4} total={:>9.2}s setup={:>7.2}s (backend: {})",
+            self.protocol, self.dataset, self.iterations, self.total_secs, self.setup_secs,
+            self.backend
+        )
+    }
+}
+
+/// Pack the lower triangle of a symmetric matrix.
+pub fn pack_tri(m: &Matrix) -> Vec<f64> {
+    let p = m.rows;
+    let mut out = Vec::with_capacity(tri_len(p));
+    for i in 0..p {
+        for j in 0..=i {
+            out.push(m[(i, j)]);
+        }
+    }
+    out
+}
+
+/// `λ·scale` added to the packed-triangle diagonal (the regularization
+/// term of Eq. 6/5), as a plaintext vector for `add_plain`.
+pub fn reg_diag_tri(p: usize, lambda_scaled: f64) -> Vec<f64> {
+    let mut v = vec![0.0; tri_len(p)];
+    for i in 0..p {
+        v[tri_idx(i, i)] = lambda_scaled;
+    }
+    v
+}
+
+/// One node round: every organization computes + encrypts its local
+/// gradient and log-likelihood shares at `beta` (Alg. 1 steps 3–7).
+/// Returns (per-node Enc(g_j), per-node Enc(l_sj)).
+pub fn node_stats_round<F: SecureFabric>(
+    fab: &mut F,
+    fleet: &mut dyn Fleet,
+    beta: &[f64],
+    scale: f64,
+) -> (Vec<EncVec>, Vec<EncVec>) {
+    let replies = fleet.stats(beta, scale);
+    let mut enc_g = Vec::with_capacity(replies.len());
+    let mut enc_l = Vec::with_capacity(replies.len());
+    for (j, r) in replies.iter().enumerate() {
+        fab.ledger_mut().add_node(j, r.secs);
+        enc_g.push(fab.node_encrypt_vec(j, &r.values));
+        enc_l.push(fab.node_encrypt_vec(j, &[r.loglik]));
+    }
+    fab.ledger_mut().end_node_round();
+    (enc_g, enc_l)
+}
+
+/// One node matrix round (Gram or exact Hessian): encrypt each node's
+/// packed triangle.
+pub fn node_matrix_round<F: SecureFabric>(
+    fab: &mut F,
+    replies: Vec<crate::coordinator::fleet::NodeReply>,
+) -> Vec<EncVec> {
+    let mut enc = Vec::with_capacity(replies.len());
+    for (j, r) in replies.iter().enumerate() {
+        fab.ledger_mut().add_node(j, r.secs);
+        enc.push(fab.node_encrypt_vec(j, &r.values));
+    }
+    fab.ledger_mut().end_node_round();
+    enc
+}
+
+/// Aggregate the per-node log-likelihood shares and apply the public
+/// `−(λ/2)βᵀβ·scale` term (Eq. 9).
+pub fn aggregate_loglik<F: SecureFabric>(
+    fab: &mut F,
+    enc_l: Vec<EncVec>,
+    beta: &[f64],
+    lambda: f64,
+    scale: f64,
+) -> EncVec {
+    let l = fab.aggregate(enc_l);
+    let b2: f64 = beta.iter().map(|b| b * b).sum();
+    fab.add_plain(&l, &[-0.5 * lambda * b2 * scale])
+}
+
+/// Aggregate per-node gradients and apply the public `−λβ·scale` term
+/// (Eq. 4).
+pub fn aggregate_gradient<F: SecureFabric>(
+    fab: &mut F,
+    enc_g: Vec<EncVec>,
+    beta: &[f64],
+    lambda: f64,
+    scale: f64,
+) -> EncVec {
+    let g = fab.aggregate(enc_g);
+    let reg: Vec<f64> = beta.iter().map(|b| -lambda * b * scale).collect();
+    fab.add_plain(&g, &reg)
+}
+
+/// Total time (compute + modeled network) from a fabric's ledger.
+pub fn total_secs<F: SecureFabric>(fab: &F) -> f64 {
+    fab.ledger().total_secs(fab.cost_model())
+}

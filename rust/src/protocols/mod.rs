@@ -1,0 +1,201 @@
+//! The paper's three secure protocols over one shared fabric:
+//!
+//! * [`newton::run_newton`] — the secure distributed Newton baseline
+//!   (repeated `O(p³)` garbled Hessian work — §2.2, the state of the art
+//!   the paper benchmarks against);
+//! * [`privlogit_hessian::run_privlogit_hessian`] — Algorithm 1 (one-time
+//!   garbled Cholesky, `O(p²)` iterations);
+//! * [`privlogit_local::run_privlogit_local`] — Algorithm 3 (one-time
+//!   `Enc(H̃⁻¹)`, iterations reduced to node-side multiply-by-constant
+//!   plus `O(p)` aggregation).
+//!
+//! All three run against either [`crate::mpc::RealFabric`] (everything
+//! executed) or [`crate::mpc::ModelFabric`] (calibrated cost model for
+//! paper-scale p — DESIGN.md §7), with identical protocol logic.
+
+pub mod common;
+pub mod newton;
+pub mod privlogit_hessian;
+pub mod privlogit_local;
+pub mod ridge;
+
+pub use common::{ProtocolConfig, RunReport};
+pub use newton::run_newton;
+pub use privlogit_hessian::run_privlogit_hessian;
+pub use privlogit_local::run_privlogit_local;
+
+/// Which protocol to run (CLI/config selection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Protocol {
+    /// Secure Newton baseline.
+    Newton,
+    /// PrivLogit-Hessian (Algorithm 1).
+    PrivLogitHessian,
+    /// PrivLogit-Local (Algorithm 3).
+    PrivLogitLocal,
+}
+
+impl Protocol {
+    /// All protocols, in the paper's comparison order.
+    pub const ALL: [Protocol; 3] =
+        [Protocol::Newton, Protocol::PrivLogitHessian, Protocol::PrivLogitLocal];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Protocol> {
+        match s.to_ascii_lowercase().as_str() {
+            "newton" => Some(Protocol::Newton),
+            "privlogit-hessian" | "hessian" | "plh" => Some(Protocol::PrivLogitHessian),
+            "privlogit-local" | "local" | "pll" => Some(Protocol::PrivLogitLocal),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Protocol::Newton => "newton",
+            Protocol::PrivLogitHessian => "privlogit-hessian",
+            Protocol::PrivLogitLocal => "privlogit-local",
+        }
+    }
+
+    /// Dispatch to the protocol implementation.
+    pub fn run<F: crate::mpc::SecureFabric>(
+        &self,
+        fab: &mut F,
+        fleet: &mut dyn crate::coordinator::fleet::Fleet,
+        cfg: &ProtocolConfig,
+    ) -> RunReport {
+        match self {
+            Protocol::Newton => run_newton(fab, fleet, cfg),
+            Protocol::PrivLogitHessian => run_privlogit_hessian(fab, fleet, cfg),
+            Protocol::PrivLogitLocal => run_privlogit_local(fab, fleet, cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{LocalFleet, ThreadedFleet};
+    use crate::data::synthesize;
+    use crate::gc::word::FixedFmt;
+    use crate::linalg::r_squared;
+    use crate::mpc::{ModelFabric, RealFabric, SecureFabric};
+    use crate::optim::{fit, Method, OptimConfig};
+    use crate::runtime::CpuCompute;
+
+    const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+    fn plaintext_fit(parts: &[crate::data::Dataset], method: Method) -> crate::optim::Fit {
+        fit(parts, method, OptimConfig::default())
+    }
+
+    /// REAL crypto end-to-end, small p: all three protocols reproduce the
+    /// plaintext optimum with R² ≈ 1 (the Fig. 2 claim) and the expected
+    /// iteration counts.
+    #[test]
+    fn real_protocols_match_plaintext() {
+        let d = synthesize("t", 1200, 4, 31);
+        let parts = d.partition(3);
+        let cfg = ProtocolConfig::default();
+        let newton_ref = plaintext_fit(&parts, Method::Newton);
+        let privlogit_ref = plaintext_fit(&parts, Method::PrivLogit);
+
+        for proto in Protocol::ALL {
+            // exercise the real threaded node topology for one protocol
+            let mut fleet: Box<dyn crate::coordinator::fleet::Fleet> =
+                if proto == Protocol::PrivLogitLocal {
+                    Box::new(ThreadedFleet::spawn(parts.clone()))
+                } else {
+                    Box::new(LocalFleet::new(parts.clone(), Box::new(CpuCompute)))
+                };
+            let mut fab = RealFabric::new(256, FMT, 0xBEEF ^ proto.name().len() as u64);
+            let rep = proto.run(&mut fab, fleet.as_mut(), &cfg);
+            assert!(rep.converged, "{} converged", proto.name());
+            let r2 = r_squared(&rep.beta, &newton_ref.beta);
+            assert!(r2 > 0.9999, "{}: R² = {r2}", proto.name());
+            let expect_iters = match proto {
+                Protocol::Newton => newton_ref.iterations,
+                _ => privlogit_ref.iterations,
+            };
+            assert!(
+                (rep.iterations as i64 - expect_iters as i64).abs() <= 2,
+                "{}: iterations {} vs plaintext {}",
+                proto.name(),
+                rep.iterations,
+                expect_iters
+            );
+            assert!(rep.total_secs > 0.0);
+        }
+    }
+
+    /// Modeled backend at the Loans scale (p=33): iteration counts match
+    /// the plaintext optimizers and the runtime ordering matches Table 2
+    /// (PL-Local < PL-Hessian < Newton).
+    #[test]
+    fn modeled_protocols_table2_ordering() {
+        let d = synthesize("t", 4000, 33, 32);
+        let parts = d.partition(5);
+        let cfg = ProtocolConfig::default();
+
+        let mut totals = Vec::new();
+        for proto in Protocol::ALL {
+            let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+            let mut fab = ModelFabric::new(2048, FMT);
+            let rep = proto.run(&mut fab, &mut fleet, &cfg);
+            assert!(rep.converged, "{}", proto.name());
+            totals.push((proto, rep.total_secs, rep.iterations));
+        }
+        let newton = totals[0].1;
+        let plh = totals[1].1;
+        let pll = totals[2].1;
+        assert!(pll < plh, "PL-Local ({pll:.1}s) < PL-Hessian ({plh:.1}s)");
+        assert!(plh < newton, "PL-Hessian ({plh:.1}s) < Newton ({newton:.1}s) at p=33");
+        // PrivLogit iteration inflation visible
+        assert!(totals[1].2 > totals[0].2, "PrivLogit iterations > Newton");
+    }
+
+    /// The speedup must *grow* with p (Fig. 4's key trend).
+    #[test]
+    fn modeled_speedup_grows_with_p() {
+        let cfg = ProtocolConfig::default();
+        let mut total_speedups = Vec::new();
+        let mut iter_speedups = Vec::new();
+        for (p, seed) in [(10usize, 33u64), (40, 34)] {
+            let d = synthesize("t", 3000, p, seed);
+            let parts = d.partition(4);
+            let run = |proto: Protocol| {
+                let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+                let mut fab = ModelFabric::new(2048, FMT);
+                let r = proto.run(&mut fab, &mut fleet, &cfg);
+                (r.total_secs, r.total_secs - r.setup_secs)
+            };
+            let newton = run(Protocol::Newton);
+            let pll = run(Protocol::PrivLogitLocal);
+            total_speedups.push(newton.0 / pll.0);
+            iter_speedups.push(newton.1 / pll.1);
+        }
+        // PL-Local always wins on total time (Table 2's constant claim)…
+        assert!(
+            total_speedups.iter().all(|&s| s > 1.0),
+            "always faster: {total_speedups:?}"
+        );
+        // …and the Fig. 4 growth trend shows in the iteration phase
+        // (the paper's accounting amortizes the one-time setup; our
+        // honest total-time speedup plateaus near I_N/3 — see
+        // EXPERIMENTS.md §Fig4 discussion).
+        assert!(
+            iter_speedups[1] > iter_speedups[0] * 1.5,
+            "iteration-phase speedup must grow with p: {iter_speedups:?}"
+        );
+    }
+
+    #[test]
+    fn protocol_parsing() {
+        assert_eq!(Protocol::parse("newton"), Some(Protocol::Newton));
+        assert_eq!(Protocol::parse("PLH"), Some(Protocol::PrivLogitHessian));
+        assert_eq!(Protocol::parse("privlogit-local"), Some(Protocol::PrivLogitLocal));
+        assert_eq!(Protocol::parse("sgd"), None);
+    }
+}

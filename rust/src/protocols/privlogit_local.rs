@@ -1,0 +1,112 @@
+//! PrivLogit-Local (paper Algorithm 3): decentralizing the Newton step.
+//!
+//! Setup materializes `Enc(H̃⁻¹)` once (garbled Cholesky + triangular
+//! inversion + masked re-encryption) and disseminates it to nodes. Each
+//! iteration, node `j` computes `Enc(H̃⁻¹)⊗g_j` *locally* using only
+//! cheap Paillier multiply-by-constant ops (its own gradient is
+//! privacy-free to itself, paper §4.2); the Center merely ⊕-aggregates
+//! `p` ciphertexts, adds the regularization term `Enc(λH̃⁻¹β)` and
+//! reveals the (by-design public) update step. No garbled circuits run
+//! in the iteration loop except the single-bit convergence check.
+
+use super::common::*;
+use crate::coordinator::fleet::Fleet;
+use crate::mpc::{EncMat, SecureFabric};
+
+/// Setup: `SetupOnce` + Algorithm 3 step 2 (materialize `Enc(H̃⁻¹)`).
+pub fn setup_inverse<F: SecureFabric>(
+    fab: &mut F,
+    fleet: &mut dyn Fleet,
+    lambda: f64,
+    scale: f64,
+) -> EncMat {
+    let p = fleet.p();
+    let replies = fleet.gram(scale);
+    let enc_h = node_matrix_round(fab, replies);
+    let agg = fab.aggregate(enc_h);
+    let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale));
+    let h_shares = fab.to_shares(&h);
+    // One garbled program: Cholesky + triangular inverse + TᵀT + masked
+    // wide reveal, re-encrypted so nodes receive Enc(H̃⁻¹) (scale f).
+    fab.inverse_to_enc(&h_shares, p)
+}
+
+/// Run PrivLogit-Local (Algorithm 3).
+pub fn run_privlogit_local<F: SecureFabric>(
+    fab: &mut F,
+    fleet: &mut dyn Fleet,
+    cfg: &ProtocolConfig,
+) -> RunReport {
+    let p = fleet.p();
+    let n = fleet.n_total();
+    let scale = 1.0 / n as f64;
+
+    // Steps 1–2: setup; Enc(H̃⁻¹) is then broadcast to all nodes.
+    let hinv = setup_inverse(fab, fleet, cfg.lambda, scale);
+    // Broadcast cost: p(p+1)/2 ciphertexts to each of S nodes.
+    let bcast = (crate::mpc::tri_len(p) * fleet.orgs()) as u64;
+    fab.ledger_mut().bytes += bcast * 2 * 128; // ~2·|n|/8 bytes per ct at 1024-bit
+    fab.ledger_mut().rounds += 1;
+    let setup_secs = total_secs(fab);
+
+    let mut beta = vec![0.0; p];
+    let mut prev_l = None;
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for _ in 0..cfg.max_iters {
+        // Steps 4–9: nodes compute l_sj (encrypted) and the *local*
+        // partial Newton step Enc(H̃⁻¹ g_j) via multiply-by-constant.
+        let replies = fleet.stats(&beta, scale);
+        let mut enc_parts = Vec::with_capacity(replies.len());
+        let mut enc_l = Vec::with_capacity(replies.len());
+        for (j, r) in replies.iter().enumerate() {
+            fab.ledger_mut().add_node(j, r.secs);
+            enc_l.push(fab.node_encrypt_vec(j, &[r.loglik]));
+            enc_parts.push(fab.node_apply_hinv(j, &hinv, &r.values));
+        }
+        fab.ledger_mut().end_node_round();
+
+        // Step 10: compose the global step; regularization term
+        // Enc(λ·H̃⁻¹β) from the public β (computed center-side).
+        let agg = fab.aggregate(enc_parts);
+        let reg: Vec<f64> = beta.iter().map(|b| -cfg.lambda * b * scale).collect();
+        let reg_part = fab.center_apply_hinv(&hinv, &reg);
+        let step_enc = fab.aggregate(vec![agg, reg_part]);
+
+        // Steps 12–13: aggregate log-likelihood + secure convergence.
+        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale);
+        let l_sh = fab.to_shares(&l);
+        if let Some(prev) = &prev_l {
+            if fab.converged(&l_sh, prev, cfg.tol) {
+                converged = true;
+                break;
+            }
+        }
+        prev_l = Some(l_sh);
+
+        // Step 11 + 14: reveal the update step (β is public each
+        // iteration, §5.3) and disseminate the new coefficients.
+        let delta = fab.decrypt_reveal(&step_enc);
+        for (b, d) in beta.iter_mut().zip(&delta) {
+            *b += d;
+        }
+        iterations += 1;
+    }
+
+    RunReport {
+        protocol: "privlogit-local",
+        backend: fab.backend_label().to_string(),
+        engine: fleet.label(),
+        dataset: fleet.dataset_name(),
+        p,
+        n,
+        orgs: fleet.orgs(),
+        iterations,
+        converged,
+        beta,
+        setup_secs,
+        total_secs: total_secs(fab),
+        ledger: fab.ledger().clone(),
+    }
+}

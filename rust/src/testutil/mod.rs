@@ -1,0 +1,140 @@
+//! Deterministic test utilities: a seeded RNG and a tiny property-testing
+//! harness (the image has no `proptest`/`quickcheck`).
+
+use crate::bigint::RandomSource;
+
+/// Deterministic 64-bit RNG (SplitMix64 core). Test-only convenience;
+/// protocol randomness uses [`crate::crypto::rng::ChaChaRng`].
+pub struct TestRng {
+    state: u64,
+}
+
+impl TestRng {
+    /// Seeded construction — same seed, same stream, every platform.
+    pub fn new(seed: u64) -> Self {
+        TestRng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw 64 bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below_u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Lemire-style rejection for negligible bias at test scale.
+        self.next_u64() % bound
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-18);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Boolean with probability `p`.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+impl RandomSource for TestRng {
+    fn fill_bytes(&mut self, buf: &mut [u8]) {
+        for chunk in buf.chunks_mut(8) {
+            let bytes = self.next_u64().to_le_bytes();
+            chunk.copy_from_slice(&bytes[..chunk.len()]);
+        }
+    }
+}
+
+/// Run a property `check` over `cases` seeded inputs produced by `gen`.
+/// On failure, reports the case index and seed so it can be replayed.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut TestRng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = TestRng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!("property failed at case {case} (seed {seed}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "{what}: {a} vs {b} (tol {tol}, scale {scale})"
+    );
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_close(*x, *y, tol, &format!("{what}[{i}]"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = TestRng::new(1);
+        let mut b = TestRng::new(1);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = TestRng::new(2);
+        for _ in 0..1000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = TestRng::new(3);
+        let n = 20000;
+        let samples: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(0, 5, |r| r.below_u64(10), |x| {
+            if *x < 100 { Err("always fails".into()) } else { Ok(()) }
+        });
+    }
+}

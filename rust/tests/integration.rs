@@ -1,0 +1,247 @@
+//! Cross-module integration tests over the public API: the full secure
+//! pipeline (real and modeled), the experiment runner, and the
+//! paper-facing invariants that span layers.
+
+use privlogit::config::Config;
+use privlogit::coordinator::fleet::{Fleet, LocalFleet, ThreadedFleet};
+use privlogit::coordinator::{Backend, Experiment};
+use privlogit::data::{load_workload, synthesize, workload};
+use privlogit::gc::word::FixedFmt;
+use privlogit::linalg::r_squared;
+use privlogit::mpc::{ModelFabric, RealFabric, SecureFabric};
+use privlogit::optim::{fit, Method, OptimConfig};
+use privlogit::protocols::{Protocol, ProtocolConfig};
+use privlogit::runtime::CpuCompute;
+
+const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+/// Real crypto, threaded node fleet, all three protocols on one dataset:
+/// the deployment shape end to end.
+#[test]
+fn real_crypto_threaded_fleet_all_protocols() {
+    let d = synthesize("integ", 900, 3, 77);
+    let parts = d.partition(3);
+    let cfg = ProtocolConfig::default();
+    let truth = fit(
+        &parts,
+        Method::Newton,
+        OptimConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters },
+    );
+    for proto in Protocol::ALL {
+        let mut fleet = ThreadedFleet::spawn(parts.clone());
+        let mut fab = RealFabric::new(256, FMT, 4242);
+        let rep = proto.run(&mut fab, &mut fleet, &cfg);
+        assert!(rep.converged, "{}", proto.name());
+        let r2 = r_squared(&rep.beta, &truth.beta);
+        assert!(r2 > 0.9999, "{}: R²={r2}", proto.name());
+        // communication must actually flow
+        assert!(rep.ledger.bytes > 0);
+        assert!(rep.ledger.rounds > 0);
+    }
+}
+
+/// The modeled backend must agree with the real backend on iterates —
+/// the property that licenses using it for paper-scale sweeps.
+#[test]
+fn model_backend_matches_real_backend_iterates() {
+    let d = synthesize("integ2", 1200, 4, 78);
+    let parts = d.partition(2);
+    let cfg = ProtocolConfig::default();
+
+    let mut fleet_r = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+    let mut fab_r = RealFabric::new(256, FMT, 99);
+    let real = Protocol::PrivLogitLocal.run(&mut fab_r, &mut fleet_r, &cfg);
+
+    let mut fleet_m = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+    let mut fab_m = ModelFabric::new(2048, FMT);
+    let model = Protocol::PrivLogitLocal.run(&mut fab_m, &mut fleet_m, &cfg);
+
+    assert!(
+        (real.iterations as i64 - model.iterations as i64).abs() <= 1,
+        "iteration parity: {} vs {}",
+        real.iterations,
+        model.iterations
+    );
+    let r2 = r_squared(&real.beta, &model.beta);
+    assert!(r2 > 0.999999, "coefficient parity R²={r2}");
+}
+
+/// Varying the number of organizations must not change the fit (the
+/// paper notes org count does not influence the secure computation).
+#[test]
+fn org_count_invariance() {
+    let d = synthesize("integ3", 1500, 4, 79);
+    let cfg = ProtocolConfig::default();
+    let mut betas = Vec::new();
+    for orgs in [2usize, 5, 15] {
+        let mut fleet = LocalFleet::new(d.partition(orgs), Box::new(CpuCompute));
+        let mut fab = ModelFabric::new(2048, FMT);
+        let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg);
+        betas.push((orgs, rep.iterations, rep.beta));
+    }
+    for w in betas.windows(2) {
+        // per-node fixed-point quantization before aggregation can shift
+        // the convergence iteration by one — the optimum is unchanged
+        let di = (w[0].1 as i64 - w[1].1 as i64).abs();
+        assert!(di <= 1, "iterations ~invariant to org count: {} vs {}", w[0].1, w[1].1);
+        let r2 = r_squared(&w[0].2, &w[1].2);
+        assert!(r2 > 0.9999, "orgs {} vs {}: R²={r2}", w[0].0, w[1].0);
+    }
+}
+
+/// Regularization actually regularizes: larger λ shrinks the coefficients.
+#[test]
+fn lambda_shrinks_coefficients() {
+    let d = synthesize("integ4", 1500, 5, 80);
+    let parts = d.partition(3);
+    let norm = |lambda: f64| {
+        let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+        let mut fab = ModelFabric::new(2048, FMT);
+        let cfg = ProtocolConfig { lambda, ..Default::default() };
+        let rep = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg);
+        privlogit::linalg::norm2(&rep.beta)
+    };
+    let loose = norm(0.1);
+    let tight = norm(2000.0);
+    assert!(tight < loose * 0.5, "λ=2000 norm {tight} vs λ=0.1 norm {loose}");
+}
+
+/// Experiment runner + config file round trip through the public entry
+/// point (what the CLI drives).
+#[test]
+fn experiment_from_config_file() {
+    let dir = std::env::temp_dir().join("privlogit_integ");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.conf");
+    std::fs::write(&path, "dataset = SimuX10\nprotocol = plh\nbackend = model\norgs = 6\n")
+        .unwrap();
+    let mut cfg = Config::default();
+    cfg.load_file(path.to_str().unwrap()).unwrap();
+    let exp = Experiment::from_config(&cfg).unwrap();
+    assert_eq!(exp.effective_backend(), Backend::Model);
+    let rep = exp.run();
+    assert!(rep.converged);
+    assert_eq!(rep.orgs, 6);
+    assert_eq!(rep.protocol, "privlogit-hessian");
+}
+
+/// Failure injection: an org count larger than the sample count must be
+/// rejected loudly, not mangled.
+#[test]
+#[should_panic(expected = "orgs")]
+fn too_many_orgs_panics() {
+    let d = synthesize("integ5", 10, 2, 81);
+    let _ = d.partition(11);
+}
+
+/// Ledger sanity across a full run: the PL-Local iteration loop must be
+/// GC-free except convergence checks (the paper's core structural claim).
+#[test]
+fn pll_iterations_are_gc_light() {
+    let d = load_workload(workload("SimuX10").unwrap());
+    let parts = d.partition(4);
+    let cfg = ProtocolConfig::default();
+
+    let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
+    let mut fab = ModelFabric::new(2048, FMT);
+    // setup only
+    let hinv = privlogit::protocols::privlogit_local::setup_inverse(
+        &mut fab,
+        &mut fleet,
+        cfg.lambda,
+        1.0 / d.n() as f64,
+    );
+    let setup_ands = fab.ledger().gc_ands;
+    assert!(setup_ands > 0);
+    drop(hinv);
+
+    let mut fleet2 = LocalFleet::new(parts, Box::new(CpuCompute));
+    let mut fab2 = ModelFabric::new(2048, FMT);
+    let rep = Protocol::PrivLogitLocal.run(&mut fab2, &mut fleet2, &cfg);
+    let total_ands = fab2.ledger().gc_ands;
+    // per-iteration GC is only the 1-bit convergence circuit
+    let per_iter = (total_ands - setup_ands) as f64 / rep.iterations as f64;
+    assert!(
+        per_iter < 100_000.0,
+        "PL-Local per-iteration GC must be tiny (convergence only): {per_iter}"
+    );
+}
+
+/// A LocalFleet must expose consistent topology metadata.
+#[test]
+fn fleet_metadata() {
+    let d = load_workload(workload("Wine").unwrap());
+    let fleet = LocalFleet::new(d.partition(7), Box::new(CpuCompute));
+    assert_eq!(fleet.orgs(), 7);
+    assert_eq!(fleet.p(), 12);
+    assert_eq!(fleet.n_total(), 6497);
+    assert_eq!(fleet.dataset_name(), "Wine");
+}
+
+/// Property test: random data-oblivious word programs evaluate identically
+/// under real garbling (through OT, streaming, decode) and the plaintext
+/// backend — the correctness contract of the whole GC engine.
+#[test]
+fn garbled_random_programs_match_plaintext() {
+    use privlogit::gc::backend::GcBackend;
+    use privlogit::gc::word::{self, Word};
+    use privlogit::gc::{GcProgram, GcSession};
+    use privlogit::testutil::TestRng;
+
+    struct RandomProg {
+        fmt: FixedFmt,
+        ops: Vec<u8>,
+    }
+    impl GcProgram for RandomProg {
+        fn inputs_garbler(&self) -> usize {
+            2 * self.fmt.w
+        }
+        fn inputs_evaluator(&self) -> usize {
+            2 * self.fmt.w
+        }
+        fn run<B: GcBackend>(&self, b: &mut B, ga: &[B::Wire], ea: &[B::Wire]) -> Vec<B::Wire> {
+            let w = self.fmt.w;
+            let mut regs: Vec<Word<B::Wire>> = vec![
+                ga[..w].to_vec(),
+                ga[w..].to_vec(),
+                ea[..w].to_vec(),
+                ea[w..].to_vec(),
+            ];
+            for (i, &op) in self.ops.iter().enumerate() {
+                let a = regs[i % 4].clone();
+                let x = regs[(i + 1) % 4].clone();
+                let r = match op % 5 {
+                    0 => word::add(b, &a, &x),
+                    1 => word::sub(b, &a, &x),
+                    2 => word::mul(b, &a, &x, self.fmt),
+                    3 => {
+                        let s = word::lt(b, &a, &x);
+                        word::mux_word(b, s, &a, &x)
+                    }
+                    _ => word::sar_const(b, &a, 1),
+                };
+                regs[(i + 2) % 4] = r;
+            }
+            regs.into_iter().flatten().collect()
+        }
+    }
+
+    let fmt = FixedFmt { w: 24, f: 12 };
+    let mut session = GcSession::new(314159);
+    let mut rng = TestRng::new(271828);
+    for round in 0..6 {
+        let prog = RandomProg {
+            fmt,
+            ops: (0..8).map(|_| rng.below_u64(256) as u8).collect(),
+        };
+        let bits = |r: &mut TestRng| -> Vec<bool> {
+            (0..2 * fmt.w).map(|_| r.bernoulli(0.5)).collect()
+        };
+        let ga = bits(&mut rng);
+        let ea = bits(&mut rng);
+        let (got, stats) = session.execute(&prog, &ga, &ea);
+        let mut pb = privlogit::gc::backend::PlainBackend;
+        let expect = prog.run(&mut pb, &ga, &ea);
+        assert_eq!(got, expect, "round {round} ({} ANDs)", stats.ands);
+    }
+}
