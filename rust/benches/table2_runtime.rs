@@ -51,6 +51,7 @@ fn run_workload(w: &Workload) -> (usize, usize, [f64; 3], [f64; 3], &'static str
             fmt: FixedFmt::DEFAULT,
             cfg: ProtocolConfig::default(),
             threaded_nodes: false,
+            center_tcp: false,
             seed: 99,
         };
         // avoid PJRT client churn across many runs: CPU engine here

@@ -25,6 +25,16 @@ pub struct Config {
     pub modulus_bits: usize,
     /// Spawn one worker thread per organization.
     pub threaded: bool,
+    /// Run the two Center servers' GC link over real TCP loopback
+    /// sockets (real backend only).
+    pub center_tcp: bool,
+    /// `privlogit node`: address to listen on.
+    pub listen: String,
+    /// `privlogit node`: which partition (0-based) of the dataset this
+    /// node serves, out of `orgs` shards.
+    pub org: usize,
+    /// `privlogit center`: comma-separated node server addresses.
+    pub nodes: String,
     /// RNG seed.
     pub seed: u64,
 }
@@ -41,6 +51,10 @@ impl Default for Config {
             max_iters: 500,
             modulus_bits: 1024,
             threaded: false,
+            center_tcp: false,
+            listen: "127.0.0.1:9401".into(),
+            org: 0,
+            nodes: String::new(),
             seed: 42,
         }
     }
@@ -60,6 +74,10 @@ impl Config {
             "max_iters" => self.max_iters = value.parse()?,
             "modulus_bits" | "modulus" => self.modulus_bits = value.parse()?,
             "threaded" => self.threaded = value.parse()?,
+            "center_tcp" => self.center_tcp = value.parse()?,
+            "listen" => self.listen = value.to_string(),
+            "org" => self.org = value.parse()?,
+            "nodes" => self.nodes = value.to_string(),
             "seed" => self.seed = value.parse()?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
@@ -82,7 +100,12 @@ impl Config {
         Ok(())
     }
 
-    /// Parse CLI arguments (`--key value` pairs, plus `--config FILE`).
+    /// Boolean keys that may appear as bare `--flag` (no value) on the
+    /// command line.
+    const BOOL_FLAGS: [&'static str; 2] = ["threaded", "center_tcp"];
+
+    /// Parse CLI arguments (`--key value` pairs, plus `--config FILE`;
+    /// boolean flags may omit the value).
     pub fn parse_args(&mut self, args: &[String]) -> anyhow::Result<()> {
         let mut i = 0;
         while i < args.len() {
@@ -90,8 +113,11 @@ impl Config {
             let key = arg
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("expected --flag, got {arg:?}"))?;
-            if key == "threaded" && (i + 1 >= args.len() || args[i + 1].starts_with("--")) {
-                self.threaded = true;
+            let norm = key.replace('-', "_");
+            if Self::BOOL_FLAGS.contains(&norm.as_str())
+                && (i + 1 >= args.len() || args[i + 1].starts_with("--"))
+            {
+                self.set(&norm, "true")?;
                 i += 1;
                 continue;
             }
@@ -140,6 +166,26 @@ mod tests {
         assert_eq!(c.tol, 1e-7);
         assert!(c.parse_args(&["--orgs".to_string()]).is_err());
         assert!(c.parse_args(&["orgs".to_string(), "3".to_string()]).is_err());
+    }
+
+    #[test]
+    fn net_keys_and_bare_bool_flags() {
+        let mut c = Config::default();
+        let args: Vec<String> =
+            ["--center-tcp", "--nodes", "127.0.0.1:9401,127.0.0.1:9402", "--org", "2",
+             "--listen", "0.0.0.0:9500"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        c.parse_args(&args).unwrap();
+        assert!(c.center_tcp);
+        assert_eq!(c.nodes, "127.0.0.1:9401,127.0.0.1:9402");
+        assert_eq!(c.org, 2);
+        assert_eq!(c.listen, "0.0.0.0:9500");
+        // explicit value form still works
+        let mut c = Config::default();
+        c.set("center_tcp", "true").unwrap();
+        assert!(c.center_tcp);
     }
 
     #[test]

@@ -11,6 +11,12 @@
 //!   command/reply message channels, genuinely parallel node compute —
 //!   the deployment shape of the paper's distributed architecture.
 //!
+//! A third implementation lives in the networking subsystem:
+//! [`crate::net::fleet::RemoteFleet`] reaches real node *servers* over
+//! persistent TCP connections (`privlogit node --listen …`), with the
+//! same per-node wall-time attribution plus measured wire bytes
+//! ([`FleetNet`]).
+//!
 //! Node-side values returned here are *plaintext* (organizations compute
 //! freely over their own data — the paper's "privacy-free" node work);
 //! encryption happens at the fabric boundary and is attributed to the
@@ -36,6 +42,20 @@ pub struct NodeReply {
     pub secs: f64,
 }
 
+/// Network traffic measured by a fleet, from the Center's perspective.
+/// Zero for the in-process fleets (nothing crosses a real boundary).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetNet {
+    /// Bytes sent center → nodes.
+    pub bytes_sent: u64,
+    /// Bytes received nodes → center.
+    pub bytes_recv: u64,
+    /// Messages sent center → nodes.
+    pub msgs_sent: u64,
+    /// Messages received nodes → center.
+    pub msgs_recv: u64,
+}
+
 /// The Center's view of the organizations.
 pub trait Fleet {
     /// Number of organizations.
@@ -54,6 +74,11 @@ pub trait Fleet {
     fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply>;
     /// Engine label for reports.
     fn label(&self) -> String;
+    /// Wire traffic between the Center and the nodes (both directions);
+    /// zero unless the fleet actually crosses a process boundary.
+    fn net_stats(&self) -> FleetNet {
+        FleetNet::default()
+    }
 }
 
 /// Sequential fleet over one shared engine.

@@ -3,8 +3,11 @@
 //! paper's Figure 1).
 //!
 //! [`fleet`] implements the organizations (including the threaded
-//! worker topology); [`Experiment`] is the single entry point the CLI,
-//! examples and benches all drive.
+//! worker topology; the TCP topology lives in [`crate::net`]);
+//! [`Experiment`] is the single entry point the CLI, examples and
+//! benches all drive for local runs, and [`run_protocol`] is the shared
+//! runner the distributed `privlogit center` mode reuses with a
+//! [`crate::net::RemoteFleet`] over real node servers.
 
 pub mod fleet;
 
@@ -28,7 +31,11 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Parse a CLI name.
+    /// Valid CLI spellings, for error messages.
+    pub const VALID_NAMES: &'static str = "real | model (modeled) | auto";
+
+    /// Parse a CLI name (no error text; prefer `str::parse::<Backend>`
+    /// where a descriptive error can reach the user).
     pub fn parse(s: &str) -> Option<Backend> {
         match s.to_ascii_lowercase().as_str() {
             "real" => Some(Backend::Real),
@@ -36,6 +43,17 @@ impl Backend {
             "auto" => Some(Backend::Auto),
             _ => None,
         }
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+
+    /// Parse a CLI name; a typo's error names the valid spellings.
+    fn from_str(s: &str) -> Result<Backend, anyhow::Error> {
+        Backend::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown backend {s:?} — valid: {}", Backend::VALID_NAMES)
+        })
     }
 }
 
@@ -58,6 +76,9 @@ pub struct Experiment {
     pub cfg: ProtocolConfig,
     /// Use the threaded node fleet (real parallel node workers).
     pub threaded_nodes: bool,
+    /// Run the two Center servers' GC link over real TCP loopback
+    /// sockets instead of the in-memory queue (real backend only).
+    pub center_tcp: bool,
     /// RNG seed for the real backend.
     pub seed: u64,
 }
@@ -77,10 +98,8 @@ impl Experiment {
                 c.dataset
             ),
         };
-        let protocol = Protocol::parse(&c.protocol)
-            .ok_or_else(|| anyhow::anyhow!("unknown protocol {:?}", c.protocol))?;
-        let backend = Backend::parse(&c.backend)
-            .ok_or_else(|| anyhow::anyhow!("unknown backend {:?}", c.backend))?;
+        let protocol: Protocol = c.protocol.parse()?;
+        let backend: Backend = c.backend.parse()?;
         Ok(Experiment {
             dataset,
             orgs: c.orgs,
@@ -90,22 +109,14 @@ impl Experiment {
             fmt: FixedFmt::DEFAULT,
             cfg: ProtocolConfig { lambda: c.lambda, tol: c.tol, max_iters: c.max_iters },
             threaded_nodes: c.threaded,
+            center_tcp: c.center_tcp,
             seed: c.seed,
         })
     }
 
     /// Resolve `Auto` for this experiment's dimensionality.
     pub fn effective_backend(&self) -> Backend {
-        match self.backend {
-            Backend::Auto => {
-                if self.dataset.p() <= Self::REAL_P_LIMIT {
-                    Backend::Real
-                } else {
-                    Backend::Model
-                }
-            }
-            b => b,
-        }
+        resolve_backend(self.backend, self.dataset.p())
     }
 
     fn make_fleet(&self) -> Box<dyn Fleet> {
@@ -120,15 +131,64 @@ impl Experiment {
     /// Run the experiment, returning the protocol report.
     pub fn run(&self) -> RunReport {
         let mut fleet = self.make_fleet();
-        match self.effective_backend() {
-            Backend::Real => {
-                let mut fab = RealFabric::new(self.modulus_bits, self.fmt, self.seed);
-                self.protocol.run(&mut fab, fleet.as_mut(), &self.cfg)
+        run_protocol(
+            self.protocol,
+            self.backend,
+            self.modulus_bits,
+            self.fmt,
+            &self.cfg,
+            self.seed,
+            self.center_tcp,
+            fleet.as_mut(),
+        )
+    }
+}
+
+/// The one `Auto` resolution rule: real crypto up to
+/// [`Experiment::REAL_P_LIMIT`], the calibrated cost model above it.
+fn resolve_backend(backend: Backend, p: usize) -> Backend {
+    match backend {
+        Backend::Auto => {
+            if p <= Experiment::REAL_P_LIMIT {
+                Backend::Real
+            } else {
+                Backend::Model
             }
-            Backend::Model | Backend::Auto => {
-                let mut fab = ModelFabric::new(2048, self.fmt);
-                self.protocol.run(&mut fab, fleet.as_mut(), &self.cfg)
+        }
+        b => b,
+    }
+}
+
+/// Run one protocol over an already-built fleet — the shared runner
+/// behind [`Experiment::run`] and the distributed `privlogit center`
+/// mode (which supplies a [`crate::net::RemoteFleet`] and has no local
+/// [`Dataset`]). `Backend::Auto` resolves against the fleet's
+/// dimensionality.
+#[allow(clippy::too_many_arguments)]
+pub fn run_protocol(
+    protocol: Protocol,
+    backend: Backend,
+    modulus_bits: usize,
+    fmt: FixedFmt,
+    cfg: &ProtocolConfig,
+    seed: u64,
+    center_tcp: bool,
+    fleet: &mut dyn Fleet,
+) -> RunReport {
+    match resolve_backend(backend, fleet.p()) {
+        Backend::Real => {
+            if center_tcp {
+                let mut fab = RealFabric::new_tcp_loopback(modulus_bits, fmt, seed)
+                    .expect("tcp loopback center link");
+                protocol.run(&mut fab, fleet, cfg)
+            } else {
+                let mut fab = RealFabric::new(modulus_bits, fmt, seed);
+                protocol.run(&mut fab, fleet, cfg)
             }
+        }
+        Backend::Model | Backend::Auto => {
+            let mut fab = ModelFabric::new(2048, fmt);
+            protocol.run(&mut fab, fleet, cfg)
         }
     }
 }
@@ -156,6 +216,20 @@ mod tests {
         let mut c = Config::default();
         c.protocol = "sgd".into();
         assert!(Experiment::from_config(&c).is_err());
+    }
+
+    /// CLI typos must come back with the valid spellings, not a bare
+    /// "unknown" (the errors surface verbatim from `privlogit run`).
+    #[test]
+    fn parse_errors_name_valid_spellings() {
+        let mut c = Config::default();
+        c.backend = "gpu".into();
+        let err = Experiment::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("gpu"), "{err}");
+        assert!(err.contains("real"), "{err}");
+        assert!(err.contains("model"), "{err}");
+        assert!(err.contains("auto"), "{err}");
+        assert_eq!("MODELED".parse::<Backend>().unwrap(), Backend::Model);
     }
 
     /// Full experiment pipeline smoke: modeled backend over the threaded

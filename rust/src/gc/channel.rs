@@ -1,35 +1,48 @@
 //! Byte-oriented duplex channels between the two Center servers.
 //!
 //! In the paper's testbed the servers are two PCs on ethernet; here they
-//! are threads. The channel interface is deliberately dumb bytes so that
-//! every protocol message is serialized for real, and the byte/message
-//! counters give exact communication-cost accounting (reported in
-//! EXPERIMENTS.md and used by the network term of the cost model).
+//! are two threads over an in-memory [`Transport`] by default, or two
+//! endpoints of a real TCP connection via
+//! [`crate::net::tcp::tcp_channel`]. The channel interface is
+//! deliberately dumb bytes so that every protocol message is serialized
+//! for real, and the byte/message counters (both directions) give exact
+//! communication-cost accounting (reported in EXPERIMENTS.md and used by
+//! the network term of the cost model).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
+
+use crate::net::{mem_transport_pair, Transport};
 
 /// Shared send/recv statistics for one duplex endpoint.
 #[derive(Default)]
 pub struct ChannelStats {
     /// Bytes sent from this endpoint.
     pub bytes_sent: AtomicU64,
-    /// Messages (send calls) from this endpoint.
+    /// Messages (flushes) from this endpoint.
     pub msgs_sent: AtomicU64,
+    /// Bytes received at this endpoint.
+    pub bytes_recv: AtomicU64,
+    /// Messages received at this endpoint.
+    pub msgs_recv: AtomicU64,
 }
 
 impl ChannelStats {
-    /// Snapshot (bytes, messages).
+    /// Sent-side snapshot (bytes, messages).
     pub fn snapshot(&self) -> (u64, u64) {
         (self.bytes_sent.load(Ordering::Relaxed), self.msgs_sent.load(Ordering::Relaxed))
     }
+
+    /// Received-side snapshot (bytes, messages).
+    pub fn snapshot_recv(&self) -> (u64, u64) {
+        (self.bytes_recv.load(Ordering::Relaxed), self.msgs_recv.load(Ordering::Relaxed))
+    }
 }
 
-/// One endpoint of a duplex byte channel with internal read buffering.
+/// One endpoint of a duplex byte channel with internal read buffering,
+/// over any [`Transport`] (in-memory queue or TCP socket).
 pub struct Channel {
-    tx: SyncSender<Vec<u8>>,
-    rx: Receiver<Vec<u8>>,
+    transport: Box<dyn Transport>,
     /// Pending bytes already received but not yet consumed.
     inbuf: Vec<u8>,
     inpos: usize,
@@ -38,11 +51,22 @@ pub struct Channel {
     stats: Arc<ChannelStats>,
 }
 
-/// Flush threshold for the write-combining buffer (64 KiB keeps the mpsc
+/// Flush threshold for the write-combining buffer (64 KiB keeps the
 /// message rate low while bounding latency).
 const FLUSH_BYTES: usize = 64 * 1024;
 
 impl Channel {
+    /// Wrap a connected transport endpoint in the byte-channel interface.
+    pub fn over(transport: Box<dyn Transport>) -> Channel {
+        Channel {
+            transport,
+            inbuf: Vec::new(),
+            inpos: 0,
+            outbuf: Vec::new(),
+            stats: Arc::new(ChannelStats::default()),
+        }
+    }
+
     /// Send raw bytes (buffered; see [`Channel::flush`]).
     pub fn send(&mut self, bytes: &[u8]) {
         self.outbuf.extend_from_slice(bytes);
@@ -60,7 +84,7 @@ impl Channel {
         self.stats.bytes_sent.fetch_add(msg.len() as u64, Ordering::Relaxed);
         self.stats.msgs_sent.fetch_add(1, Ordering::Relaxed);
         // A closed peer is a protocol bug; surface it loudly.
-        self.tx.send(msg).expect("gc channel peer hung up");
+        self.transport.send_msg(msg).expect("channel peer hung up");
     }
 
     /// Receive exactly `buf.len()` bytes (blocking).
@@ -68,8 +92,10 @@ impl Channel {
         let mut filled = 0;
         while filled < buf.len() {
             if self.inpos == self.inbuf.len() {
-                self.inbuf = self.rx.recv().expect("gc channel peer hung up");
+                self.inbuf = self.transport.recv_msg().expect("channel peer hung up");
                 self.inpos = 0;
+                self.stats.bytes_recv.fetch_add(self.inbuf.len() as u64, Ordering::Relaxed);
+                self.stats.msgs_recv.fetch_add(1, Ordering::Relaxed);
             }
             let take = (self.inbuf.len() - self.inpos).min(buf.len() - filled);
             buf[filled..filled + take]
@@ -127,31 +153,17 @@ impl Channel {
     pub fn stats(&self) -> Arc<ChannelStats> {
         Arc::clone(&self.stats)
     }
+
+    /// The underlying medium's label ("mem", "tcp").
+    pub fn transport_label(&self) -> &'static str {
+        self.transport.label()
+    }
 }
 
 /// Create a connected duplex pair of in-memory channels.
 pub fn mem_channel_pair() -> (Channel, Channel) {
-    // Generous bound: the streaming garbler can run ahead of the evaluator
-    // by up to 256 messages (~16 MiB) before backpressure kicks in.
-    let (tx_ab, rx_ab) = std::sync::mpsc::sync_channel(256);
-    let (tx_ba, rx_ba) = std::sync::mpsc::sync_channel(256);
-    let a = Channel {
-        tx: tx_ab,
-        rx: rx_ba,
-        inbuf: Vec::new(),
-        inpos: 0,
-        outbuf: Vec::new(),
-        stats: Arc::new(ChannelStats::default()),
-    };
-    let b = Channel {
-        tx: tx_ba,
-        rx: rx_ab,
-        inbuf: Vec::new(),
-        inpos: 0,
-        outbuf: Vec::new(),
-        stats: Arc::new(ChannelStats::default()),
-    };
-    (a, b)
+    let (a, b) = mem_transport_pair();
+    (Channel::over(Box::new(a)), Channel::over(Box::new(b)))
 }
 
 #[cfg(test)]
@@ -175,6 +187,11 @@ mod tests {
         let (bytes, msgs) = a.stats().snapshot();
         assert_eq!(bytes, 8 + 8 + 12 + 16);
         assert!(msgs >= 1);
+        // Receive accounting is symmetric: everything a sent, b received.
+        let (rbytes, rmsgs) = b.stats().snapshot_recv();
+        assert_eq!(rbytes, bytes);
+        assert_eq!(rmsgs, msgs);
+        assert_eq!(b.stats().snapshot().0, 0, "b sent nothing");
     }
 
     #[test]
@@ -188,5 +205,8 @@ mod tests {
         });
         let got = b.recv_vec(100);
         assert_eq!(got, (0..100u8).collect::<Vec<_>>());
+        let (rbytes, rmsgs) = b.stats().snapshot_recv();
+        assert_eq!(rbytes, 100);
+        assert_eq!(rmsgs, 100);
     }
 }

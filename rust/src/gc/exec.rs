@@ -63,10 +63,18 @@ pub struct GcSession {
 }
 
 impl GcSession {
-    /// Create a session: connects the two servers and runs the IKNP base
-    /// phase (128 Paillier base OTs).
+    /// Create a session over in-memory channels: connects the two servers
+    /// and runs the IKNP base phase (128 Paillier base OTs).
     pub fn new(seed: u64) -> Self {
-        let (mut chan_g, mut chan_e) = mem_channel_pair();
+        let (chan_g, chan_e) = mem_channel_pair();
+        GcSession::over_channels(chan_g, chan_e, seed)
+    }
+
+    /// Create a session over a pre-connected channel pair — e.g. real TCP
+    /// loopback sockets from [`crate::net::tcp::loopback_channel_pair`],
+    /// so the two Center servers' traffic crosses the kernel network
+    /// stack exactly as in the paper's two-PC testbed.
+    pub fn over_channels(mut chan_g: Channel, mut chan_e: Channel, seed: u64) -> Self {
         let (ot_send, ot_recv) = std::thread::scope(|s| {
             let h = s.spawn(|| {
                 let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x5e55_1011);
@@ -165,6 +173,11 @@ impl GcSession {
     /// Total bytes sent on both channels so far.
     pub fn bytes_transferred(&self) -> u64 {
         self.chan_g.stats().snapshot().0 + self.chan_e.stats().snapshot().0
+    }
+
+    /// Total bytes received on both channels so far.
+    pub fn bytes_received(&self) -> u64 {
+        self.chan_g.stats().snapshot_recv().0 + self.chan_e.stats().snapshot_recv().0
     }
 }
 
@@ -268,5 +281,10 @@ mod tests {
             last_ctr = session.gate_ctr;
         }
         assert!(session.bytes_transferred() > 0);
+        assert_eq!(
+            session.bytes_received(),
+            session.bytes_transferred(),
+            "every byte one server sends, the other receives"
+        );
     }
 }

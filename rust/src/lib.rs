@@ -41,11 +41,17 @@
 //! | [`optim`] | plaintext Newton / PrivLogit optimizers (ground truth) |
 //! | [`protocols`] | the three secure protocols of the paper |
 //! | [`coordinator`] | node/center topology, scheduler, convergence loop |
+//! | [`net`] | wire format, TCP transport, remote fleets, node servers |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
 //! | [`linalg`] | dense matrix/vector algebra, Cholesky, solvers |
 //! | [`data`] | dataset synthesis, real-study stand-ins, partitioning |
 //! | [`config`] | experiment/config system + CLI parsing |
 //! | [`metrics`] | counters, timers, per-phase cost accounting |
+
+// Established test idiom: build a `Config::default()` then override the
+// fields under test. Clearer than `Config { dataset: …, ..Default::default() }`
+// when the point is the delta from the defaults.
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod bigint;
 pub mod config;
@@ -56,6 +62,7 @@ pub mod gc;
 pub mod linalg;
 pub mod metrics;
 pub mod mpc;
+pub mod net;
 pub mod optim;
 pub mod protocols;
 pub mod runtime;

@@ -1,28 +1,101 @@
 //! `privlogit` — the leader binary: run privacy-preserving logistic
-//! regression experiments from the command line.
+//! regression experiments from the command line, in-process or as a real
+//! distributed deployment.
 //!
 //! ```text
 //! privlogit run  [--dataset Loans] [--protocol privlogit-local]
 //!                [--backend auto] [--orgs 4] [--lambda 1.0] [--tol 1e-6]
-//!                [--modulus-bits 1024] [--threaded] [--seed 42]
-//!                [--config FILE]
+//!                [--modulus-bits 1024] [--threaded] [--center-tcp]
+//!                [--seed 42] [--config FILE]
 //! privlogit compare [same flags]    # all three protocols side by side
 //! privlogit list                    # the paper's evaluation suite
+//!
+//! # Distributed (see docs/DEPLOY.md):
+//! privlogit node   --listen 127.0.0.1:9401 --dataset Wine --orgs 4 --org 0
+//! privlogit center --nodes 127.0.0.1:9401,127.0.0.1:9402,... [run flags]
 //! ```
+//!
+//! `node` serves one organization's shard over TCP; `center` connects to
+//! every node, runs the selected protocol over the remote fleet, and
+//! reports wire traffic in both directions.
 
 use privlogit::config::Config;
-use privlogit::coordinator::Experiment;
-use privlogit::data::WORKLOADS;
+use privlogit::coordinator::{run_protocol, Backend, Experiment};
+use privlogit::data::{load_workload, workload, WORKLOADS};
+use privlogit::gc::word::FixedFmt;
 use privlogit::metrics::{beta_preview, render_report};
-use privlogit::protocols::Protocol;
+use privlogit::net::{NodeServer, RemoteFleet};
+use privlogit::protocols::{Protocol, ProtocolConfig};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: privlogit <run|compare|list> [--dataset NAME] [--protocol P] \
+        "usage: privlogit <run|compare|list|node|center> [--dataset NAME] [--protocol P] \
          [--backend real|model|auto] [--orgs N] [--lambda L] [--tol T] \
-         [--max-iters M] [--modulus-bits B] [--threaded] [--seed S] [--config FILE]"
+         [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--seed S] \
+         [--config FILE]\n\
+         \n\
+         distributed mode (docs/DEPLOY.md):\n\
+         privlogit node   --listen ADDR --dataset NAME --orgs N --org J\n\
+         privlogit center --nodes ADDR1,ADDR2,... [run flags]"
     );
     std::process::exit(2)
+}
+
+/// `privlogit node`: serve shard `--org` of `--dataset` (split into
+/// `--orgs` partitions) on `--listen` until killed.
+fn node_main(cfg: &Config) -> anyhow::Result<()> {
+    let Some(w) = workload(&cfg.dataset) else {
+        anyhow::bail!("unknown dataset {:?} — `privlogit list` shows the paper suite", cfg.dataset)
+    };
+    let data = load_workload(w);
+    anyhow::ensure!(
+        cfg.org < cfg.orgs,
+        "--org {} out of range for --orgs {} (0-based shard index)",
+        cfg.org,
+        cfg.orgs
+    );
+    let shard = data.partition(cfg.orgs).swap_remove(cfg.org);
+    let shard_n = shard.n();
+    let engine = privlogit::runtime::default_engine();
+    let mut server = NodeServer::bind_with_engine(&cfg.listen, shard, engine)?;
+    println!(
+        "node serving {} shard {}/{} ({} samples, p={}) on {}",
+        cfg.dataset,
+        cfg.org,
+        cfg.orgs,
+        shard_n,
+        w.p,
+        server.local_addr()?
+    );
+    server.serve_forever()?;
+    Ok(())
+}
+
+/// `privlogit center`: run the protocol over node servers at `--nodes`.
+fn center_main(cfg: &Config) -> anyhow::Result<()> {
+    let addrs: Vec<String> =
+        cfg.nodes.split(',').filter(|a| !a.is_empty()).map(|a| a.trim().to_string()).collect();
+    anyhow::ensure!(
+        !addrs.is_empty(),
+        "--nodes must list at least one node server address (comma-separated)"
+    );
+    let protocol: Protocol = cfg.protocol.parse()?;
+    let backend: Backend = cfg.backend.parse()?;
+    let pcfg = ProtocolConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters };
+    let mut fleet = RemoteFleet::connect(&addrs)?;
+    let report = run_protocol(
+        protocol,
+        backend,
+        cfg.modulus_bits,
+        FixedFmt::DEFAULT,
+        &pcfg,
+        cfg.seed,
+        cfg.center_tcp,
+        &mut fleet,
+    );
+    print!("{}", render_report(&report));
+    println!("  beta: {}", beta_preview(&report.beta));
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -62,6 +135,16 @@ fn main() -> anyhow::Result<()> {
                 println!("{}", report.summary());
             }
             Ok(())
+        }
+        "node" => {
+            let mut cfg = Config::default();
+            cfg.parse_args(&args[1..])?;
+            node_main(&cfg)
+        }
+        "center" => {
+            let mut cfg = Config::default();
+            cfg.parse_args(&args[1..])?;
+            center_main(&cfg)
         }
         _ => usage(),
     }

@@ -32,10 +32,18 @@ pub fn render_report(r: &RunReport) -> String {
         l.ot_bits
     ));
     s.push_str(&format!(
-        "  network: {:.2} MiB in {} rounds\n",
+        "  network: {:.2} MiB sent / {:.2} MiB recv in {} rounds\n",
         l.bytes as f64 / (1024.0 * 1024.0),
+        l.bytes_recv as f64 / (1024.0 * 1024.0),
         l.rounds
     ));
+    if l.fleet_bytes_sent > 0 || l.fleet_bytes_recv > 0 {
+        s.push_str(&format!(
+            "  fleet wire (measured): {:.2} MiB sent / {:.2} MiB recv\n",
+            l.fleet_bytes_sent as f64 / (1024.0 * 1024.0),
+            l.fleet_bytes_recv as f64 / (1024.0 * 1024.0),
+        ));
+    }
     s
 }
 
@@ -96,6 +104,8 @@ mod tests {
         assert!(s.contains("privlogit-local"));
         assert!(s.contains("iterations: 13"));
         assert!(s.contains("setup 1.50s"));
+        assert!(s.contains("sent"), "network line reports both directions");
+        assert!(s.contains("recv"), "network line reports both directions");
     }
 
     #[test]

@@ -104,8 +104,20 @@ pub struct CostLedger {
     pub node_secs: f64,
     /// Seconds attributed to the one-time setup phase.
     pub setup_secs: f64,
-    /// Bytes that crossed node↔center or server↔server boundaries.
+    /// Bytes sent across node↔center or server↔server boundaries.
     pub bytes: u64,
+    /// Bytes received across those boundaries. In a lossless closed
+    /// system this mirrors `bytes`; the two directions are kept separate
+    /// so the accounting is symmetric and checkable.
+    pub bytes_recv: u64,
+    /// Real wire bytes a networked fleet measured, center → nodes
+    /// ([`crate::net::fleet::RemoteFleet`]; zero for in-process fleets).
+    /// Kept apart from `bytes` — which models the *target* deployment's
+    /// ciphertext traffic — so the two are never double-counted and the
+    /// modeled network term stays comparable across fleet kinds.
+    pub fleet_bytes_sent: u64,
+    /// Real wire bytes a networked fleet measured, nodes → center.
+    pub fleet_bytes_recv: u64,
     /// Protocol rounds (for the latency term).
     pub rounds: u64,
     /// Paillier operation counts.

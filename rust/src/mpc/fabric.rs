@@ -28,6 +28,7 @@ use crate::crypto::fixed::FixedCodec;
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, Keypair};
 use crate::crypto::rng::ChaChaRng;
 use crate::gc::backend::CountBackend;
+use crate::gc::channel::Channel;
 use crate::gc::exec::{GcProgram, GcSession};
 use crate::gc::word::FixedFmt;
 use crate::linalg::Matrix;
@@ -186,20 +187,58 @@ pub struct RealFabric {
     rng: ChaChaRng,
     ledger: CostLedger,
     net: CostModel,
+    label: &'static str,
 }
 
 impl RealFabric {
     /// Build a real fabric: generates the Paillier keypair (`modulus_bits`)
-    /// and runs the GC base-OT phase.
+    /// and runs the GC base-OT phase over in-memory center channels.
     pub fn new(modulus_bits: usize, fmt: FixedFmt, seed: u64) -> Self {
+        Self::build(modulus_bits, fmt, seed, None)
+    }
+
+    /// Like [`RealFabric::new`], but the two Center servers talk over
+    /// real TCP loopback sockets (the paper's two-PC testbed shape): all
+    /// garbled tables, OT messages and decode bits cross the kernel
+    /// network stack through the framed, CRC-checked wire format.
+    pub fn new_tcp_loopback(
+        modulus_bits: usize,
+        fmt: FixedFmt,
+        seed: u64,
+    ) -> std::io::Result<Self> {
+        let (chan_g, chan_e) = crate::net::tcp::loopback_channel_pair()?;
+        Ok(Self::build(modulus_bits, fmt, seed, Some((chan_g, chan_e))))
+    }
+
+    fn build(
+        modulus_bits: usize,
+        fmt: FixedFmt,
+        seed: u64,
+        center_link: Option<(Channel, Channel)>,
+    ) -> Self {
         let mut rng = ChaChaRng::from_u64_seed(seed);
         let t0 = Instant::now();
         let kp = Keypair::generate(modulus_bits, &mut rng);
         let codec = FixedCodec::new(kp.pk.n.clone(), fmt.f);
-        let session = GcSession::new(seed ^ 0xFAB);
+        let (session, label) = match center_link {
+            None => (GcSession::new(seed ^ 0xFAB), "real (Paillier + garbled circuits)"),
+            Some((g, e)) => (
+                GcSession::over_channels(g, e, seed ^ 0xFAB),
+                "real (Paillier + garbled circuits; tcp center link)",
+            ),
+        };
         let mut ledger = CostLedger::default();
         ledger.setup_secs += t0.elapsed().as_secs_f64();
-        RealFabric { fmt, kp, codec, session, rng, ledger, net: CostModel::load(CostModel::CALIBRATION_PATH) }
+        RealFabric {
+            fmt,
+            kp,
+            codec,
+            session,
+            rng,
+            ledger,
+            net: CostModel::load(CostModel::CALIBRATION_PATH),
+            label,
+        }
     }
 
     fn bits_of_share(&self, v: u128) -> Vec<bool> {
@@ -241,11 +280,13 @@ impl RealFabric {
         evaluator_bits: Vec<bool>,
     ) -> Vec<bool> {
         let bytes0 = self.session.bytes_transferred();
+        let recv0 = self.session.bytes_received();
         let (out, stats) = self.session.execute(prog, &garbler_bits, &evaluator_bits);
         self.ledger.center_secs += stats.wall;
         self.ledger.gc_ands += stats.ands;
         self.ledger.ot_bits += stats.ot_bits;
         self.ledger.bytes += self.session.bytes_transferred() - bytes0;
+        self.ledger.bytes_recv += self.session.bytes_received() - recv0;
         self.ledger.rounds += 2;
         out
     }
@@ -271,7 +312,9 @@ impl SecureFabric for RealFabric {
             })
             .collect();
         self.ledger.paillier_encs += vals.len() as u64;
-        self.ledger.bytes += cts.iter().map(|c| c.byte_len() as u64).sum::<u64>();
+        let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
+        self.ledger.bytes += sent;
+        self.ledger.bytes_recv += sent; // the Center receives what nodes send
         self.ledger.add_node(node, t0.elapsed().as_secs_f64());
         EncVec { scale: self.fmt.f, data: EncData::Real(cts) }
     }
@@ -341,6 +384,7 @@ impl SecureFabric for RealFabric {
             let blind = lift.add(&rho);
             let blinded = self.kp.pk.add(c, &self.kp.pk.encrypt_trivial(&blind));
             self.ledger.bytes += blinded.byte_len() as u64;
+            self.ledger.bytes_recv += blinded.byte_len() as u64; // S1 receives the blinded ct
             // S1: decrypt y = x + C + ρ (no wrap: |x| < 2^{w-1} ≪ n).
             let y = self.kp.sk.decrypt(&blinded);
             let mask_w = (1u128 << w) - 1;
@@ -366,7 +410,9 @@ impl SecureFabric for RealFabric {
             })
             .collect();
         self.ledger.paillier_decrypts += cts.len() as u64;
-        self.ledger.bytes += cts.iter().map(|c| c.byte_len() as u64).sum::<u64>();
+        let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
+        self.ledger.bytes += sent;
+        self.ledger.bytes_recv += sent; // S1 receives the reveal requests
         self.ledger.rounds += 2;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
         out
@@ -483,7 +529,9 @@ impl SecureFabric for RealFabric {
             .collect();
         self.ledger.paillier_encs += nh as u64;
         self.ledger.paillier_adds += nh as u64;
-        self.ledger.bytes += cts.iter().map(|c| c.byte_len() as u64).sum::<u64>();
+        let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
+        self.ledger.bytes += sent;
+        self.ledger.bytes_recv += sent; // nodes receive the broadcast Enc(H̃⁻¹)
         self.ledger.rounds += 2;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
         EncMat { p, tri: EncVec { scale: self.fmt.f, data: EncData::Real(cts) } }
@@ -511,7 +559,7 @@ impl SecureFabric for RealFabric {
         &self.net
     }
     fn backend_label(&self) -> &'static str {
-        "real (Paillier + garbled circuits)"
+        self.label
     }
 }
 
@@ -552,7 +600,9 @@ fn apply_hinv_real(fab: &mut RealFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
     let cts: Vec<Ciphertext> = rows.into_iter().map(|r| r.unwrap_or_else(|| zero.clone())).collect();
     fab.ledger.paillier_scalar += scalar_ops;
     fab.ledger.paillier_adds += adds;
-    fab.ledger.bytes += cts.iter().map(|c| c.byte_len() as u64).sum::<u64>();
+    let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
+    fab.ledger.bytes += sent;
+    fab.ledger.bytes_recv += sent; // the aggregating Center receives the partials
     EncVec { scale: 2 * fmt.f, data: EncData::Real(cts) }
 }
 
@@ -694,6 +744,7 @@ impl ModelFabric {
         self.ledger.ot_bits += otbits;
         // 32 bytes/AND (two half-gate rows) + 16 bytes per input label.
         self.ledger.bytes += ands * 32 + otbits * 16;
+        self.ledger.bytes_recv += ands * 32 + otbits * 16;
         self.ledger.rounds += 2;
     }
 }
@@ -715,6 +766,7 @@ impl SecureFabric for ModelFabric {
         let vq: Vec<f64> = vals.iter().map(|&v| self.quant(v)).collect();
         self.ledger.paillier_encs += vals.len() as u64;
         self.ledger.bytes += vals.len() as u64 * self.ct_bytes;
+        self.ledger.bytes_recv += vals.len() as u64 * self.ct_bytes;
         self.ledger.add_node(node, vals.len() as f64 * self.cost.t_enc);
         EncVec { scale: self.fmt.f, data: EncData::Model(vq) }
     }
@@ -727,6 +779,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.paillier_scalar += (p * p) as u64;
         self.ledger.paillier_adds += (p * (p - 1)) as u64;
         self.ledger.bytes += p as u64 * self.ct_bytes;
+        self.ledger.bytes_recv += p as u64 * self.ct_bytes;
         apply_hinv_model(self, hinv, gj)
     }
 
@@ -771,6 +824,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.paillier_decrypts += vals.len() as u64;
         self.ledger.center_secs += vals.len() as f64 * (self.cost.t_add + self.cost.t_decrypt);
         self.ledger.bytes += vals.len() as u64 * self.ct_bytes;
+        self.ledger.bytes_recv += vals.len() as u64 * self.ct_bytes;
         self.ledger.rounds += 2;
         SecVec::Model(vals)
     }
@@ -780,6 +834,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.paillier_decrypts += vals.len() as u64;
         self.ledger.center_secs += vals.len() as f64 * self.cost.t_decrypt;
         self.ledger.bytes += vals.len() as u64 * self.ct_bytes;
+        self.ledger.bytes_recv += vals.len() as u64 * self.ct_bytes;
         self.ledger.rounds += 2;
         vals
     }
@@ -833,6 +888,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.center_secs +=
             tri_len(p) as f64 * (self.cost.t_enc + self.cost.t_add);
         self.ledger.bytes += tri_len(p) as u64 * self.ct_bytes;
+        self.ledger.bytes_recv += tri_len(p) as u64 * self.ct_bytes;
         self.ledger.rounds += 2;
         EncMat { p, tri: EncVec { scale: self.fmt.f, data: EncData::Model(tri) } }
     }

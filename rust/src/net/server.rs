@@ -1,0 +1,210 @@
+//! The organization side of the network: a node server owning one data
+//! partition and answering the Center's statistic requests.
+//!
+//! This is the process behind `privlogit node --listen …`. It speaks the
+//! [`super::wire`] protocol over TCP: `MetaReq` describes the shard,
+//! `StatsReq`/`GramReq`/`HessReq` run the node-local plaintext compute
+//! (the same [`crate::optim`] kernels the in-process fleets use) with
+//! self-measured wall seconds in every reply, and `Shutdown` (or a
+//! center disconnect) ends the session. The listener then accepts the
+//! next center connection, so one long-lived node process can serve many
+//! experiment runs.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::time::Instant;
+
+use super::tcp::TcpTransport;
+use super::wire::{self, WireMsg};
+use crate::data::Dataset;
+use crate::protocols::common::pack_tri;
+use crate::runtime::{CpuCompute, NodeCompute};
+
+/// A listening node server bound to one data partition and one compute
+/// engine (the same [`NodeCompute`] seam the in-process fleets use, so
+/// all three fleet kinds share one implementation of the node math).
+pub struct NodeServer {
+    listener: TcpListener,
+    data: Dataset,
+    engine: Box<dyn NodeCompute>,
+}
+
+impl NodeServer {
+    /// Bind to `addr` (use port 0 for an ephemeral port) with the
+    /// deterministic pure-rust engine.
+    pub fn bind(addr: &str, data: Dataset) -> io::Result<NodeServer> {
+        NodeServer::bind_with_engine(addr, data, Box::new(CpuCompute))
+    }
+
+    /// Bind with an explicit engine (e.g. `runtime::default_engine()` to
+    /// pick up the PJRT/Pallas artifacts — what `privlogit node` does).
+    pub fn bind_with_engine(
+        addr: &str,
+        data: Dataset,
+        engine: Box<dyn NodeCompute>,
+    ) -> io::Result<NodeServer> {
+        Ok(NodeServer { listener: TcpListener::bind(addr)?, data, engine })
+    }
+
+    /// The bound address (useful with ephemeral ports).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept one center connection and serve it to completion.
+    pub fn serve_once(&mut self) -> io::Result<()> {
+        let (stream, _) = self.listener.accept()?;
+        let mut t = TcpTransport::accept(stream, wire::ROLE_NODE)?;
+        serve_session(&mut t, &self.data, self.engine.as_mut())
+    }
+
+    /// Serve center connections forever (one at a time). A failed
+    /// *session* (center vanished, protocol error) is logged and the
+    /// next center is awaited; a failed *accept* means the listener
+    /// itself is broken and is propagated.
+    pub fn serve_forever(&mut self) -> io::Result<()> {
+        loop {
+            let (stream, _) = self.listener.accept()?;
+            let session = TcpTransport::accept(stream, wire::ROLE_NODE)
+                .and_then(|mut t| serve_session(&mut t, &self.data, self.engine.as_mut()));
+            if let Err(e) = session {
+                eprintln!("node session ended with error: {e}");
+            }
+        }
+    }
+}
+
+/// Answer requests on one established center connection until `Shutdown`
+/// or disconnect.
+fn serve_session(
+    t: &mut TcpTransport,
+    data: &Dataset,
+    engine: &mut dyn NodeCompute,
+) -> io::Result<()> {
+    loop {
+        let msg = match t.recv_wire() {
+            Ok(m) => m,
+            // EOF without Shutdown: center process exited; treat as done.
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let reply = match msg {
+            WireMsg::MetaReq => WireMsg::Meta {
+                n: data.n() as u64,
+                p: data.p() as u32,
+                name: data.name.split('#').next().unwrap_or("?").to_string(),
+            },
+            WireMsg::StatsReq { beta, scale } => {
+                let t0 = Instant::now();
+                let (grad, loglik) = engine.stats(data, &beta, scale);
+                WireMsg::NodeReply { values: grad, loglik, secs: t0.elapsed().as_secs_f64() }
+            }
+            WireMsg::GramReq { scale } => {
+                let t0 = Instant::now();
+                let h = engine.gram_quarter(data, scale);
+                WireMsg::NodeReply {
+                    values: pack_tri(&h),
+                    loglik: 0.0,
+                    secs: t0.elapsed().as_secs_f64(),
+                }
+            }
+            WireMsg::HessReq { beta, scale } => {
+                let t0 = Instant::now();
+                let h = engine.hessian(data, &beta, scale);
+                WireMsg::NodeReply {
+                    values: pack_tri(&h),
+                    loglik: 0.0,
+                    secs: t0.elapsed().as_secs_f64(),
+                }
+            }
+            WireMsg::Shutdown => return Ok(()),
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("center sent {other:?}, which a node does not serve"),
+                ))
+            }
+        };
+        t.send_wire(&reply)?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{Fleet, LocalFleet};
+    use crate::data::synthesize;
+    use crate::net::RemoteFleet;
+    use crate::runtime::CpuCompute;
+    use crate::testutil::assert_all_close;
+
+    /// Spawn one serving thread per partition; return the addresses.
+    fn spawn_servers(parts: Vec<Dataset>) -> Vec<String> {
+        parts
+            .into_iter()
+            .map(|d| {
+                let mut server = NodeServer::bind("127.0.0.1:0", d).unwrap();
+                let addr = server.local_addr().unwrap().to_string();
+                std::thread::spawn(move || server.serve_once().unwrap());
+                addr
+            })
+            .collect()
+    }
+
+    /// RemoteFleet over real loopback sockets returns bit-identical
+    /// statistics to LocalFleet on the same partitions, and measures
+    /// traffic in both directions.
+    #[test]
+    fn remote_fleet_matches_local_fleet() {
+        let d = synthesize("t", 900, 5, 41);
+        let parts = d.partition(3);
+        let addrs = spawn_servers(parts.clone());
+        let mut local = LocalFleet::new(parts, Box::new(CpuCompute));
+        let mut remote = RemoteFleet::connect(&addrs).unwrap();
+
+        assert_eq!(remote.orgs(), 3);
+        assert_eq!(remote.n_total(), 900);
+        assert_eq!(remote.p(), 5);
+        assert_eq!(remote.dataset_name(), "t");
+
+        let beta = vec![0.1, -0.2, 0.3, 0.0, 0.05];
+        let scale = 1.0 / 900.0;
+        let a = local.stats(&beta, scale);
+        let b = remote.stats(&beta, scale);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_all_close(&x.values, &y.values, 0.0, "stats parity over tcp");
+            assert_eq!(x.loglik.to_bits(), y.loglik.to_bits(), "bit-exact loglik");
+        }
+        let ga = local.gram(scale);
+        let gb = remote.gram(scale);
+        for (x, y) in ga.iter().zip(&gb) {
+            assert_all_close(&x.values, &y.values, 0.0, "gram parity over tcp");
+        }
+        let ha = local.hessian(&beta, scale);
+        let hb = remote.hessian(&beta, scale);
+        for (x, y) in ha.iter().zip(&hb) {
+            assert_all_close(&x.values, &y.values, 0.0, "hessian parity over tcp");
+        }
+
+        let net = remote.net_stats();
+        assert!(net.bytes_sent > 0, "requests crossed the wire");
+        assert!(net.bytes_recv > net.bytes_sent, "replies outweigh requests");
+        // connect meta + 3 rounds, 3 nodes each
+        assert_eq!(net.msgs_sent, net.msgs_recv);
+        assert_eq!(net.msgs_sent, 3 + 3 * 3);
+        drop(remote); // sends Shutdown; server threads exit
+    }
+
+    /// A node answers metadata for a workload-named shard without the
+    /// partition suffix.
+    #[test]
+    fn node_meta_strips_partition_suffix() {
+        let mut d = synthesize("Wine", 60, 3, 1);
+        d.name = "Wine#2".to_string();
+        let addrs = spawn_servers(vec![d]);
+        let remote = RemoteFleet::connect(&addrs).unwrap();
+        assert_eq!(remote.dataset_name(), "Wine");
+        assert_eq!(remote.n_total(), 60);
+    }
+}

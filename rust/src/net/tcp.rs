@@ -1,0 +1,236 @@
+//! TCP transport: the wire format over real sockets.
+//!
+//! A [`TcpTransport`] carries framed messages (see [`super::wire`]) over
+//! one `TcpStream`, after a magic/version handshake in both directions.
+//! Wrapped in a [`Channel`](crate::gc::channel::Channel) it is a drop-in
+//! replacement for the in-memory `mpsc` pair: same duplex byte interface,
+//! same write-combining and flush semantics, same byte/message counters —
+//! which is what lets `RealFabric`'s two Center servers and the node
+//! fleet run across process and machine boundaries.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::wire;
+use super::Transport;
+use crate::gc::channel::Channel;
+
+/// One end of a framed TCP connection (handshake already verified).
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    /// Peer's handshake role byte.
+    pub peer_role: u8,
+}
+
+impl TcpTransport {
+    /// Complete the handshake on a connected stream: send our hello,
+    /// validate the peer's. Both sides write first, so there is no
+    /// ordering deadlock.
+    fn handshake(stream: TcpStream, role: u8) -> io::Result<TcpTransport> {
+        stream.set_nodelay(true)?;
+        let mut writer = BufWriter::new(stream.try_clone()?);
+        let mut reader = BufReader::new(stream);
+        writer.write_all(&wire::hello(role))?;
+        writer.flush()?;
+        let mut peer = [0u8; 8];
+        reader.read_exact(&mut peer)?;
+        let peer_role = wire::check_hello(&peer)?;
+        Ok(TcpTransport { reader, writer, peer_role })
+    }
+
+    /// Connect to `addr` and handshake, announcing `role`.
+    pub fn connect<A: ToSocketAddrs>(addr: A, role: u8) -> io::Result<TcpTransport> {
+        TcpTransport::handshake(TcpStream::connect(addr)?, role)
+    }
+
+    /// Connect with retries until `deadline_in` elapses — servers started
+    /// "at the same time" (scripts, tests, compose files) may not be
+    /// listening yet. Permanent failures (handshake rejection: wrong
+    /// magic or version skew) fail fast instead of burning the deadline.
+    pub fn connect_retry(addr: &str, role: u8, deadline_in: Duration) -> io::Result<TcpTransport> {
+        let deadline = Instant::now() + deadline_in;
+        loop {
+            match TcpTransport::connect(addr, role) {
+                Ok(t) => return Ok(t),
+                Err(e) => {
+                    let retryable = matches!(
+                        e.kind(),
+                        io::ErrorKind::ConnectionRefused
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::ConnectionAborted
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::AddrNotAvailable
+                            | io::ErrorKind::Interrupted
+                            | io::ErrorKind::UnexpectedEof
+                    );
+                    if !retryable || Instant::now() >= deadline {
+                        return Err(io::Error::new(
+                            e.kind(),
+                            format!("connecting to {addr}: {e}"),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Handshake on an accepted stream, announcing `role`.
+    pub fn accept(stream: TcpStream, role: u8) -> io::Result<TcpTransport> {
+        TcpTransport::handshake(stream, role)
+    }
+
+    /// Send one framed [`wire::WireMsg`].
+    pub fn send_wire(&mut self, msg: &wire::WireMsg) -> io::Result<()> {
+        wire::write_frame(&mut self.writer, &msg.encode())
+    }
+
+    /// Receive one framed [`wire::WireMsg`].
+    pub fn recv_wire(&mut self) -> io::Result<wire::WireMsg> {
+        let frame = wire::read_frame(&mut self.reader)?;
+        Ok(wire::WireMsg::decode(&frame)?)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send_msg(&mut self, msg: Vec<u8>) -> io::Result<()> {
+        wire::write_frame(&mut self.writer, &msg)
+    }
+
+    fn recv_msg(&mut self) -> io::Result<Vec<u8>> {
+        wire::read_frame(&mut self.reader)
+    }
+
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+/// Wrap a TCP transport in the duplex byte-channel interface used by the
+/// garbling engine and OT (write combining, flush, counters preserved).
+pub fn tcp_channel(t: TcpTransport) -> Channel {
+    Channel::over(Box::new(t))
+}
+
+/// A connected pair of TCP channels over a loopback socket: the two
+/// Center servers' link as real kernel sockets instead of an in-process
+/// queue. Returns `(garbler_end, evaluator_end)`.
+pub fn loopback_channel_pair() -> io::Result<(Channel, Channel)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let connector = std::thread::spawn(move || TcpTransport::connect(addr, wire::ROLE_PEER));
+    let (accepted, _) = listener.accept()?;
+    let server_end = TcpTransport::accept(accepted, wire::ROLE_PEER)?;
+    let client_end = connector
+        .join()
+        .map_err(|_| io::Error::new(io::ErrorKind::Other, "loopback connector panicked"))??;
+    Ok((tcp_channel(client_end), tcp_channel(server_end)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::WireMsg;
+
+    #[test]
+    fn tcp_transport_frames_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(addr, wire::ROLE_CENTER).unwrap();
+            t.send_wire(&WireMsg::MetaReq).unwrap();
+            t.send_msg(vec![7; 100_000]).unwrap(); // bigger than one TCP segment
+            assert_eq!(t.recv_msg().unwrap(), b"pong".to_vec());
+            t.peer_role
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap();
+        assert_eq!(t.recv_wire().unwrap(), WireMsg::MetaReq);
+        assert_eq!(t.recv_msg().unwrap(), vec![7; 100_000]);
+        t.send_msg(b"pong".to_vec()).unwrap();
+        assert_eq!(t.peer_role, wire::ROLE_CENTER);
+        assert_eq!(client.join().unwrap(), wire::ROLE_NODE);
+    }
+
+    /// A peer that opens with the wrong magic must be rejected during the
+    /// handshake, before any payload parsing.
+    #[test]
+    fn handshake_rejects_bad_magic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let rogue = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET / HT").unwrap(); // an HTTP client, say
+            s.flush().unwrap();
+            // Keep the socket open until the server has judged us.
+            let mut buf = [0u8; 8];
+            let _ = s.read(&mut buf);
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let err = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        rogue.join().unwrap();
+    }
+
+    /// Version skew must be detected symmetrically.
+    #[test]
+    fn handshake_rejects_version_mismatch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let old_peer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut h = wire::hello(wire::ROLE_CENTER);
+            h[4] = 0xFE; // future version 0x__FE
+            h[5] = 0x7F;
+            s.write_all(&h).unwrap();
+            s.flush().unwrap();
+            let mut buf = [0u8; 8];
+            let _ = s.read(&mut buf);
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let err = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("version"), "got: {err}");
+        old_peer.join().unwrap();
+    }
+
+    /// The loopback channel pair must behave exactly like the mpsc pair:
+    /// byte-oriented reads across message boundaries, both directions.
+    #[test]
+    fn loopback_channels_match_channel_semantics() {
+        let (mut a, mut b) = loopback_channel_pair().unwrap();
+        let t = std::thread::spawn(move || {
+            a.send_u64(42);
+            a.send_blob(b"hello center");
+            a.send_u128(0xdead_beef_dead_beef_dead_beef_dead_beefu128);
+            a.flush();
+            assert_eq!(a.recv_u64(), 7);
+            a
+        });
+        assert_eq!(b.recv_u64(), 42);
+        assert_eq!(b.recv_blob(), b"hello center");
+        assert_eq!(b.recv_u128(), 0xdead_beef_dead_beef_dead_beef_dead_beefu128);
+        b.send_u64(7);
+        b.flush();
+        let a = t.join().unwrap();
+        let (sent, msgs) = a.stats().snapshot();
+        assert_eq!(sent, 8 + 8 + 12 + 16);
+        assert!(msgs >= 1);
+        let (recv_bytes, recv_msgs) = a.stats().snapshot_recv();
+        assert_eq!(recv_bytes, 8);
+        assert_eq!(recv_msgs, 1);
+    }
+
+    #[test]
+    fn connect_retry_times_out_with_address_in_error() {
+        // A port from the ephemeral range with nothing listening.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let err = TcpTransport::connect_retry(&addr, wire::ROLE_CENTER, Duration::from_millis(120))
+            .unwrap_err();
+        assert!(err.to_string().contains(&addr), "error should name the address: {err}");
+    }
+}

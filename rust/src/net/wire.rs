@@ -1,0 +1,721 @@
+//! The versioned binary wire format.
+//!
+//! Three layers, bottom-up:
+//!
+//! 1. **Handshake** — on connect, both sides exchange an 8-byte hello
+//!    (`MAGIC` + protocol [`VERSION`] + role byte). Anything else on the
+//!    socket is rejected before a single payload byte is parsed.
+//! 2. **Frames** — every message travels as
+//!    `[u32 LE payload length][payload][u32 LE CRC-32 of payload]`.
+//!    Length is bounded by [`MAX_FRAME`]; the CRC catches corruption and
+//!    framing bugs loudly instead of desynchronizing the stream.
+//! 3. **Messages** — [`WireMsg`]: a tagged codec for every payload that
+//!    crosses a process boundary — fleet statistic requests/replies,
+//!    bigints, Paillier ciphertext vectors, garbled-table and OT blobs.
+//!    Decoding rejects unknown tags, truncated bodies and trailing bytes
+//!    with descriptive [`WireError`]s.
+//!
+//! All integers are little-endian; `f64`s travel as their IEEE-754 bit
+//! pattern (`to_bits`), so encode→decode is the identity on every value
+//! including NaNs and signed zeros.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::sync::OnceLock;
+
+use crate::bigint::BigUint;
+
+/// Wire magic: first bytes of every connection.
+pub const MAGIC: [u8; 4] = *b"PLGT";
+
+/// Wire protocol version. Bump on any incompatible format change.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
+/// length prefix must not drive allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Handshake role byte: the coordinating Center.
+pub const ROLE_CENTER: u8 = b'C';
+/// Handshake role byte: an organization's node server.
+pub const ROLE_NODE: u8 = b'N';
+/// Handshake role byte: the second Center server (GC peer link).
+pub const ROLE_PEER: u8 = b'P';
+
+/// Everything that can go wrong decoding wire data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Body ended before a field was complete.
+    Truncated {
+        /// Bytes the field needed.
+        needed: usize,
+        /// Bytes actually available.
+        have: usize,
+    },
+    /// Decoding finished with unconsumed bytes.
+    TrailingBytes {
+        /// Leftover byte count.
+        extra: usize,
+    },
+    /// The connection did not start with [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The peer speaks a different wire version.
+    VersionMismatch {
+        /// Peer's version.
+        got: u16,
+        /// Our version.
+        want: u16,
+    },
+    /// Frame checksum mismatch (corruption or desync).
+    BadCrc {
+        /// Checksum computed over the received payload.
+        got: u32,
+        /// Checksum carried by the frame.
+        want: u32,
+    },
+    /// Unrecognized message tag.
+    UnknownTag(u8),
+    /// A string field was not valid UTF-8.
+    BadUtf8,
+    /// Frame length prefix exceeds [`MAX_FRAME`].
+    FrameTooLarge {
+        /// Claimed payload length.
+        len: usize,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { needed, have } => {
+                write!(f, "truncated wire data: field needs {needed} bytes, {have} available")
+            }
+            WireError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after message body")
+            }
+            WireError::BadMagic(m) => write!(f, "bad wire magic {m:02x?} (expected \"PLGT\")"),
+            WireError::VersionMismatch { got, want } => {
+                write!(f, "wire version mismatch: peer speaks v{got}, this build speaks v{want}")
+            }
+            WireError::BadCrc { got, want } => {
+                write!(f, "frame CRC mismatch: computed {got:#010x}, frame carries {want:#010x}")
+            }
+            WireError::UnknownTag(t) => write!(f, "unknown wire message tag {t:#04x}"),
+            WireError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+            WireError::FrameTooLarge { len } => {
+                write!(f, "frame payload of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for std::io::Error {
+    fn from(e: WireError) -> Self {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+    }
+}
+
+// ======================================================================
+// CRC-32 (IEEE 802.3, reflected)
+// ======================================================================
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        let mut i = 0u32;
+        while i < 256 {
+            let mut c = i;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i as usize] = c;
+            i += 1;
+        }
+        t
+    })
+}
+
+/// CRC-32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ======================================================================
+// Handshake
+// ======================================================================
+
+/// Build the 8-byte hello: magic, version, role, reserved zero byte.
+pub fn hello(role: u8) -> [u8; 8] {
+    let v = VERSION.to_le_bytes();
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], v[0], v[1], role, 0]
+}
+
+/// Validate a peer hello; returns the peer's role byte.
+pub fn check_hello(buf: &[u8; 8]) -> Result<u8, WireError> {
+    if buf[..4] != MAGIC {
+        return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+    }
+    let got = u16::from_le_bytes([buf[4], buf[5]]);
+    if got != VERSION {
+        return Err(WireError::VersionMismatch { got, want: VERSION });
+    }
+    Ok(buf[6])
+}
+
+// ======================================================================
+// Frames
+// ======================================================================
+
+/// Write one frame (`len ‖ payload ‖ crc`) to `w` and flush it.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME, "frame payload over MAX_FRAME");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    w.flush()
+}
+
+/// Read one frame from `r`, verifying length bound and CRC.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
+    let mut lb = [0u8; 4];
+    r.read_exact(&mut lb)?;
+    let len = u32::from_le_bytes(lb) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge { len }.into());
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut cb = [0u8; 4];
+    r.read_exact(&mut cb)?;
+    let want = u32::from_le_bytes(cb);
+    let got = crc32(&payload);
+    if got != want {
+        return Err(WireError::BadCrc { got, want }.into());
+    }
+    Ok(payload)
+}
+
+// ======================================================================
+// Primitive codecs
+// ======================================================================
+
+/// Append-only encoder for message bodies.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    /// Fresh empty writer.
+    pub fn new() -> Self {
+        WireWriter::default()
+    }
+
+    /// Finish, yielding the encoded bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append a `u8`.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u16` (LE).
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32` (LE).
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64` (LE).
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its IEEE-754 bit pattern.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Append a length-prefixed byte string.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        assert!(v.len() <= u32::MAX as usize, "byte field too long");
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Append a count-prefixed `f64` vector.
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    /// Append a length-prefixed little-endian bigint.
+    pub fn put_biguint(&mut self, v: &BigUint) {
+        self.put_bytes(&v.to_bytes_le());
+    }
+}
+
+/// Cursor-style decoder over a message body.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Require the body to be fully consumed.
+    pub fn expect_end(&self) -> Result<(), WireError> {
+        match self.remaining() {
+            0 => Ok(()),
+            extra => Err(WireError::TrailingBytes { extra }),
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { needed: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u16` (LE).
+    pub fn get_u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Read a `u32` (LE).
+    pub fn get_u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u64` (LE).
+    pub fn get_u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read an `f64` from its bit pattern.
+    pub fn get_f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Read a length-prefixed byte string.
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let len = self.get_u32()? as usize;
+        self.take(len)
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<String, WireError> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    /// Read a count-prefixed `f64` vector.
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.get_u32()? as usize;
+        // Bound the pre-allocation by what the body can actually hold.
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(WireError::Truncated { needed: n * 8, have: self.remaining() });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f64()?);
+        }
+        Ok(v)
+    }
+
+    /// Read a length-prefixed little-endian bigint.
+    pub fn get_biguint(&mut self) -> Result<BigUint, WireError> {
+        Ok(BigUint::from_bytes_le(self.get_bytes()?))
+    }
+}
+
+// ======================================================================
+// Messages
+// ======================================================================
+
+const TAG_STATS_REQ: u8 = 0x01;
+const TAG_GRAM_REQ: u8 = 0x02;
+const TAG_HESS_REQ: u8 = 0x03;
+const TAG_META_REQ: u8 = 0x04;
+const TAG_SHUTDOWN: u8 = 0x05;
+const TAG_NODE_REPLY: u8 = 0x11;
+const TAG_META: u8 = 0x12;
+const TAG_BIGINT: u8 = 0x21;
+const TAG_CIPHERTEXTS: u8 = 0x22;
+const TAG_GARBLED: u8 = 0x23;
+const TAG_OT: u8 = 0x24;
+
+/// Every message that crosses a process boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Center → node: fused gradient + log-likelihood at `beta`, × `scale`.
+    StatsReq {
+        /// Current public coefficients.
+        beta: Vec<f64>,
+        /// `1/n_total` scaling.
+        scale: f64,
+    },
+    /// Center → node: `¼X_jᵀX_j · scale` (packed triangle).
+    GramReq {
+        /// `1/n_total` scaling.
+        scale: f64,
+    },
+    /// Center → node: exact Hessian `X_jᵀAX_j · scale` (packed triangle).
+    HessReq {
+        /// Current public coefficients.
+        beta: Vec<f64>,
+        /// `1/n_total` scaling.
+        scale: f64,
+    },
+    /// Center → node: describe your shard.
+    MetaReq,
+    /// Center → node: session over, exit cleanly.
+    Shutdown,
+    /// Node → center: one statistic reply with node-measured seconds.
+    NodeReply {
+        /// Flat payload (gradient / packed triangle).
+        values: Vec<f64>,
+        /// Log-likelihood share (stats requests only).
+        loglik: f64,
+        /// Node compute seconds (ledger attribution).
+        secs: f64,
+    },
+    /// Node → center: shard description.
+    Meta {
+        /// Samples held by this node.
+        n: u64,
+        /// Dimensionality.
+        p: u32,
+        /// Dataset display name.
+        name: String,
+    },
+    /// An arbitrary-precision integer (Paillier plumbing).
+    Bigint(BigUint),
+    /// A vector of Paillier ciphertexts tagged with its fixed-point scale
+    /// (the `EncVec` wire form).
+    Ciphertexts {
+        /// Fixed-point scale (bits) of the encoded plaintexts.
+        scale: u32,
+        /// Ciphertext values (elements of `Z*_{n²}`).
+        cts: Vec<BigUint>,
+    },
+    /// Garbled-table rows streamed between the two Center servers.
+    GarbledTables(Vec<u8>),
+    /// An OT-extension message between the two Center servers.
+    OtMsg(Vec<u8>),
+}
+
+impl WireMsg {
+    /// Encode to a message body (frame it with [`write_frame`] to send).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            WireMsg::StatsReq { beta, scale } => {
+                w.put_u8(TAG_STATS_REQ);
+                w.put_f64s(beta);
+                w.put_f64(*scale);
+            }
+            WireMsg::GramReq { scale } => {
+                w.put_u8(TAG_GRAM_REQ);
+                w.put_f64(*scale);
+            }
+            WireMsg::HessReq { beta, scale } => {
+                w.put_u8(TAG_HESS_REQ);
+                w.put_f64s(beta);
+                w.put_f64(*scale);
+            }
+            WireMsg::MetaReq => w.put_u8(TAG_META_REQ),
+            WireMsg::Shutdown => w.put_u8(TAG_SHUTDOWN),
+            WireMsg::NodeReply { values, loglik, secs } => {
+                w.put_u8(TAG_NODE_REPLY);
+                w.put_f64s(values);
+                w.put_f64(*loglik);
+                w.put_f64(*secs);
+            }
+            WireMsg::Meta { n, p, name } => {
+                w.put_u8(TAG_META);
+                w.put_u64(*n);
+                w.put_u32(*p);
+                w.put_str(name);
+            }
+            WireMsg::Bigint(v) => {
+                w.put_u8(TAG_BIGINT);
+                w.put_biguint(v);
+            }
+            WireMsg::Ciphertexts { scale, cts } => {
+                w.put_u8(TAG_CIPHERTEXTS);
+                w.put_u32(*scale);
+                w.put_u32(cts.len() as u32);
+                for c in cts {
+                    w.put_biguint(c);
+                }
+            }
+            WireMsg::GarbledTables(b) => {
+                w.put_u8(TAG_GARBLED);
+                w.put_bytes(b);
+            }
+            WireMsg::OtMsg(b) => {
+                w.put_u8(TAG_OT);
+                w.put_bytes(b);
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode a message body, rejecting unknown tags, truncation and
+    /// trailing bytes.
+    pub fn decode(buf: &[u8]) -> Result<WireMsg, WireError> {
+        let mut r = WireReader::new(buf);
+        let tag = r.get_u8()?;
+        let msg = match tag {
+            TAG_STATS_REQ => {
+                let beta = r.get_f64s()?;
+                let scale = r.get_f64()?;
+                WireMsg::StatsReq { beta, scale }
+            }
+            TAG_GRAM_REQ => WireMsg::GramReq { scale: r.get_f64()? },
+            TAG_HESS_REQ => {
+                let beta = r.get_f64s()?;
+                let scale = r.get_f64()?;
+                WireMsg::HessReq { beta, scale }
+            }
+            TAG_META_REQ => WireMsg::MetaReq,
+            TAG_SHUTDOWN => WireMsg::Shutdown,
+            TAG_NODE_REPLY => {
+                let values = r.get_f64s()?;
+                let loglik = r.get_f64()?;
+                let secs = r.get_f64()?;
+                WireMsg::NodeReply { values, loglik, secs }
+            }
+            TAG_META => {
+                let n = r.get_u64()?;
+                let p = r.get_u32()?;
+                let name = r.get_str()?;
+                WireMsg::Meta { n, p, name }
+            }
+            TAG_BIGINT => WireMsg::Bigint(r.get_biguint()?),
+            TAG_CIPHERTEXTS => {
+                let scale = r.get_u32()?;
+                let count = r.get_u32()? as usize;
+                let mut cts = Vec::new();
+                for _ in 0..count {
+                    cts.push(r.get_biguint()?);
+                }
+                WireMsg::Ciphertexts { scale, cts }
+            }
+            TAG_GARBLED => WireMsg::GarbledTables(r.get_bytes()?.to_vec()),
+            TAG_OT => WireMsg::OtMsg(r.get_bytes()?.to_vec()),
+            t => return Err(WireError::UnknownTag(t)),
+        };
+        r.expect_end()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TestRng;
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn sample_msgs(rng: &mut TestRng) -> Vec<WireMsg> {
+        let rand_vec = |rng: &mut TestRng, n: usize| -> Vec<f64> {
+            (0..n).map(|_| rng.range_f64(-1e6, 1e6)).collect()
+        };
+        let rand_big = |rng: &mut TestRng| -> BigUint {
+            let mut bytes = vec![0u8; 1 + rng.below_u64(64) as usize];
+            for b in bytes.iter_mut() {
+                *b = rng.below_u64(256) as u8;
+            }
+            BigUint::from_bytes_le(&bytes)
+        };
+        vec![
+            WireMsg::StatsReq { beta: rand_vec(rng, 7), scale: rng.f64() },
+            WireMsg::StatsReq { beta: vec![], scale: 0.0 },
+            WireMsg::GramReq { scale: rng.f64() },
+            WireMsg::HessReq { beta: rand_vec(rng, 12), scale: -0.0 },
+            WireMsg::MetaReq,
+            WireMsg::Shutdown,
+            WireMsg::NodeReply {
+                values: rand_vec(rng, 78),
+                loglik: rng.range_f64(-1e9, 0.0),
+                secs: rng.f64(),
+            },
+            WireMsg::Meta { n: rng.next_u64(), p: 33, name: "Loans — ωξ".to_string() },
+            WireMsg::Bigint(rand_big(rng)),
+            WireMsg::Bigint(BigUint::zero()),
+            WireMsg::Ciphertexts {
+                scale: 24,
+                cts: (0..5).map(|_| rand_big(rng)).collect(),
+            },
+            WireMsg::Ciphertexts { scale: 0, cts: vec![] },
+            WireMsg::GarbledTables((0..200u8).collect()),
+            WireMsg::OtMsg(vec![]),
+        ]
+    }
+
+    /// Round-trip property: encode→decode is the identity for every
+    /// message type over many random payloads.
+    #[test]
+    fn roundtrip_all_message_types() {
+        let mut rng = TestRng::new(0xA11CE);
+        for trial in 0..50 {
+            for msg in sample_msgs(&mut rng) {
+                let enc = msg.encode();
+                let dec = WireMsg::decode(&enc)
+                    .unwrap_or_else(|e| panic!("trial {trial}: {e} on {msg:?}"));
+                assert_eq!(dec, msg, "trial {trial}");
+            }
+        }
+    }
+
+    /// Every strict prefix of a valid encoding must be rejected as
+    /// truncated (never panic, never succeed).
+    #[test]
+    fn truncated_bodies_rejected() {
+        let mut rng = TestRng::new(0xBEE);
+        for msg in sample_msgs(&mut rng) {
+            let enc = msg.encode();
+            for cut in 0..enc.len() {
+                match WireMsg::decode(&enc[..cut]) {
+                    Err(_) => {}
+                    Ok(other) => panic!("prefix {cut}/{} of {msg:?} decoded as {other:?}", enc.len()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut enc = WireMsg::MetaReq.encode();
+        enc.push(0);
+        assert_eq!(WireMsg::decode(&enc), Err(WireError::TrailingBytes { extra: 1 }));
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert_eq!(WireMsg::decode(&[0xEE]), Err(WireError::UnknownTag(0xEE)));
+        assert!(matches!(WireMsg::decode(&[]), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn oversized_f64_count_rejected_without_allocation() {
+        // Tag + count claiming u32::MAX values with an empty body must be
+        // caught by the remaining-bytes bound, not by allocating 32 GiB.
+        let mut w = WireWriter::new();
+        w.put_u8(0x01); // StatsReq
+        w.put_u32(u32::MAX);
+        let enc = w.finish();
+        assert!(matches!(WireMsg::decode(&enc), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn hello_roundtrip_and_rejection() {
+        let h = hello(ROLE_NODE);
+        assert_eq!(check_hello(&h), Ok(ROLE_NODE));
+
+        let mut bad_magic = h;
+        bad_magic[0] = b'X';
+        assert!(matches!(check_hello(&bad_magic), Err(WireError::BadMagic(_))));
+
+        let mut bad_version = hello(ROLE_CENTER);
+        bad_version[4] = 0xFF;
+        bad_version[5] = 0xFF;
+        assert_eq!(
+            check_hello(&bad_version),
+            Err(WireError::VersionMismatch { got: 0xFFFF, want: VERSION })
+        );
+    }
+
+    #[test]
+    fn frame_roundtrip_and_crc_rejection() {
+        let payload = WireMsg::GramReq { scale: 0.25 }.encode();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        assert_eq!(buf.len(), 4 + payload.len() + 4);
+
+        let mut cur = std::io::Cursor::new(buf.clone());
+        assert_eq!(read_frame(&mut cur).unwrap(), payload);
+
+        // Flip one payload bit: the CRC must catch it.
+        let mut corrupt = buf.clone();
+        corrupt[5] ^= 0x40;
+        let mut cur = std::io::Cursor::new(corrupt);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        // Truncated frame: report an error, never hang or panic.
+        let mut cur = std::io::Cursor::new(buf[..buf.len() - 2].to_vec());
+        assert!(read_frame(&mut cur).is_err());
+
+        // Hostile length prefix.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = std::io::Cursor::new(huge);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    /// f64 bit-pattern transport must preserve every value exactly.
+    #[test]
+    fn f64_bit_exact() {
+        let specials = [0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY, f64::MIN_POSITIVE, 1e-308];
+        let msg = WireMsg::NodeReply { values: specials.to_vec(), loglik: f64::NAN, secs: 0.0 };
+        let dec = WireMsg::decode(&msg.encode()).unwrap();
+        match dec {
+            WireMsg::NodeReply { values, loglik, .. } => {
+                for (a, b) in values.iter().zip(&specials) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert!(loglik.is_nan());
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+}

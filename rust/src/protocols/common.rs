@@ -154,3 +154,17 @@ pub fn aggregate_gradient<F: SecureFabric>(
 pub fn total_secs<F: SecureFabric>(fab: &F) -> f64 {
     fab.ledger().total_secs(fab.cost_model())
 }
+
+/// Final ledger for a [`RunReport`]: the fabric's ledger plus the wire
+/// traffic the fleet itself measured (zero for in-process fleets, real
+/// socket bytes for [`crate::net::fleet::RemoteFleet`]). Fleet traffic
+/// goes to the dedicated `fleet_bytes_*` fields — the `bytes` counters
+/// model the target deployment's ciphertext traffic, which with today's
+/// plaintext-statistics fleet wire would otherwise be double-counted.
+pub fn final_ledger<F: SecureFabric>(fab: &F, fleet: &dyn Fleet) -> CostLedger {
+    let mut ledger = fab.ledger().clone();
+    let net = fleet.net_stats();
+    ledger.fleet_bytes_sent += net.bytes_sent;
+    ledger.fleet_bytes_recv += net.bytes_recv;
+    ledger
+}

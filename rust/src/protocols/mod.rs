@@ -40,7 +40,8 @@ impl Protocol {
     pub const ALL: [Protocol; 3] =
         [Protocol::Newton, Protocol::PrivLogitHessian, Protocol::PrivLogitLocal];
 
-    /// Parse a CLI name.
+    /// Parse a CLI name (no error text; prefer `str::parse::<Protocol>`
+    /// where a descriptive error can reach the user).
     pub fn parse(s: &str) -> Option<Protocol> {
         match s.to_ascii_lowercase().as_str() {
             "newton" => Some(Protocol::Newton),
@@ -59,6 +60,10 @@ impl Protocol {
         }
     }
 
+    /// Valid CLI spellings, for error messages.
+    pub const VALID_NAMES: &'static str =
+        "newton | privlogit-hessian (hessian, plh) | privlogit-local (local, pll)";
+
     /// Dispatch to the protocol implementation.
     pub fn run<F: crate::mpc::SecureFabric>(
         &self,
@@ -71,6 +76,17 @@ impl Protocol {
             Protocol::PrivLogitHessian => run_privlogit_hessian(fab, fleet, cfg),
             Protocol::PrivLogitLocal => run_privlogit_local(fab, fleet, cfg),
         }
+    }
+}
+
+impl std::str::FromStr for Protocol {
+    type Err = anyhow::Error;
+
+    /// Parse a CLI name; a typo's error names the valid spellings.
+    fn from_str(s: &str) -> Result<Protocol, anyhow::Error> {
+        Protocol::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown protocol {s:?} — valid: {}", Protocol::VALID_NAMES)
+        })
     }
 }
 
@@ -197,5 +213,16 @@ mod tests {
         assert_eq!(Protocol::parse("PLH"), Some(Protocol::PrivLogitHessian));
         assert_eq!(Protocol::parse("privlogit-local"), Some(Protocol::PrivLogitLocal));
         assert_eq!(Protocol::parse("sgd"), None);
+    }
+
+    /// A typo's parse error must name the typo and every valid spelling.
+    #[test]
+    fn protocol_parse_errors_are_descriptive() {
+        assert_eq!("pll".parse::<Protocol>().unwrap(), Protocol::PrivLogitLocal);
+        let err = "sgd".parse::<Protocol>().unwrap_err().to_string();
+        assert!(err.contains("sgd"), "{err}");
+        assert!(err.contains("newton"), "{err}");
+        assert!(err.contains("privlogit-hessian"), "{err}");
+        assert!(err.contains("privlogit-local"), "{err}");
     }
 }

@@ -75,6 +75,6 @@ pub fn run_newton<F: SecureFabric>(
         beta,
         setup_secs,
         total_secs: total_secs(fab),
-        ledger: fab.ledger().clone(),
+        ledger: final_ledger(fab, fleet),
     }
 }

@@ -85,6 +85,6 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
         beta,
         setup_secs,
         total_secs: total_secs(fab),
-        ledger: fab.ledger().clone(),
+        ledger: final_ledger(fab, fleet),
     }
 }

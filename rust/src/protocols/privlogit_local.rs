@@ -46,6 +46,7 @@ pub fn run_privlogit_local<F: SecureFabric>(
     // Broadcast cost: p(p+1)/2 ciphertexts to each of S nodes.
     let bcast = (crate::mpc::tri_len(p) * fleet.orgs()) as u64;
     fab.ledger_mut().bytes += bcast * 2 * 128; // ~2·|n|/8 bytes per ct at 1024-bit
+    fab.ledger_mut().bytes_recv += bcast * 2 * 128; // received by the nodes
     fab.ledger_mut().rounds += 1;
     let setup_secs = total_secs(fab);
 
@@ -107,6 +108,6 @@ pub fn run_privlogit_local<F: SecureFabric>(
         beta,
         setup_secs,
         total_secs: total_secs(fab),
-        ledger: fab.ledger().clone(),
+        ledger: final_ledger(fab, fleet),
     }
 }
