@@ -32,7 +32,7 @@ fn main() {
     for proto in [Protocol::PrivLogitHessian, Protocol::PrivLogitLocal] {
         let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
         let mut fab = RealFabric::new(1024, FixedFmt::DEFAULT, 1234);
-        let rep = proto.run(&mut fab, &mut fleet, &cfg);
+        let rep = proto.run(&mut fab, &mut fleet, &cfg).expect("protocol run");
         fits.push((proto.name(), rep.beta));
     }
 

@@ -18,7 +18,7 @@
 //! `docs/DEPLOY.md`.
 
 use privlogit::coordinator::fleet::Fleet;
-use privlogit::coordinator::{run_protocol, Backend};
+use privlogit::coordinator::{run_protocol, Backend, CenterLink};
 use privlogit::data::synthesize;
 use privlogit::gc::word::FixedFmt;
 use privlogit::linalg::r_squared;
@@ -62,15 +62,16 @@ fn main() {
         FixedFmt::DEFAULT,
         &cfg,
         7,
-        true,
+        &CenterLink::TcpLoopback,
         &mut fleet,
-    );
+    )
+    .expect("distributed run");
     print!("{}", render_report(&report));
     println!("  beta: {}", beta_preview(&report.beta));
 
     let net = fleet.net_stats();
     println!(
-        "fleet wire traffic: {:.1} KiB sent / {:.1} KiB recv in {} request-reply pairs",
+        "fleet wire traffic: {:.1} KiB sent / {:.1} KiB recv in {} requests",
         net.bytes_sent as f64 / 1024.0,
         net.bytes_recv as f64 / 1024.0,
         net.msgs_sent

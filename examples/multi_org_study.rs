@@ -43,7 +43,7 @@ fn main() {
     for proto in Protocol::ALL {
         let mut fleet = ThreadedFleet::spawn(parts.clone());
         let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
-        let rep = proto.run(&mut fab, &mut fleet, &cfg);
+        let rep = proto.run(&mut fab, &mut fleet, &cfg).expect("protocol run");
         let r2 = r_squared(&rep.beta, &truth.beta);
         println!("{}", render_report(&rep));
         assert!(r2 > 0.9999, "{}: R² = {r2}", proto.name());

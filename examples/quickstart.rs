@@ -54,7 +54,7 @@ fn main() {
     println!("node engine: {}", engine.label());
     let mut fleet = LocalFleet::new(parts.clone(), engine);
     let mut fab = RealFabric::new(1024, FixedFmt::DEFAULT, 7);
-    let report = run_privlogit_local(&mut fab, &mut fleet, &cfg);
+    let report = run_privlogit_local(&mut fab, &mut fleet, &cfg).expect("secure run");
     print!("{}", render_report(&report));
     println!("  beta: {}", beta_preview(&report.beta));
 

@@ -29,7 +29,7 @@ fn main() {
         for proto in Protocol::ALL {
             let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
             let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
-            let rep = proto.run(&mut fab, &mut fleet, &cfg);
+            let rep = proto.run(&mut fab, &mut fleet, &cfg).expect("protocol run");
             assert!(rep.converged, "{} p={p}", proto.name());
             results.push(rep);
         }

@@ -52,7 +52,7 @@ fn main() {
     ] {
         let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
         let mut fab = RealFabric::new(256, fmt, 62);
-        let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg);
+        let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg).expect("run");
         let r2 = r_squared(&rep.beta, &truth.beta);
         println!(
             "{:>7}/{:<2} {:>12} {:>14.8} {:>10}",
@@ -109,7 +109,7 @@ fn main() {
     let expect = ridge::fit_ridge_plaintext(&parts, 1.0);
     let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
     let mut fab = RealFabric::new(512, FixedFmt::DEFAULT, 65);
-    let rep = ridge::run_ridge(&mut fab, &mut fleet, 1.0);
+    let rep = ridge::run_ridge(&mut fab, &mut fleet, 1.0).expect("run");
     let r2 = r_squared(&rep.beta, &expect);
     println!(
         "ridge p=8: total {:.2}s, {} GC ANDs, R²={:.6} (logistic PL-Hessian needs the same\n\

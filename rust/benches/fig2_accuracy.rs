@@ -36,10 +36,10 @@ fn main() {
             let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
             let rep = if real {
                 let mut fab = RealFabric::new(1024, FixedFmt::DEFAULT, 2024);
-                proto.run(&mut fab, &mut fleet, &cfg)
+                proto.run(&mut fab, &mut fleet, &cfg).expect("protocol run")
             } else {
                 let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
-                proto.run(&mut fab, &mut fleet, &cfg)
+                proto.run(&mut fab, &mut fleet, &cfg).expect("protocol run")
             };
             r2s.push(r_squared(&rep.beta, &truth.beta));
         }

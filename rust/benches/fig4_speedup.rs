@@ -52,7 +52,7 @@ fn main() {
         for (k, proto) in Protocol::ALL.iter().enumerate() {
             let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
             let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
-            let rep = proto.run(&mut fab, &mut fleet, &cfg);
+            let rep = proto.run(&mut fab, &mut fleet, &cfg).expect("protocol run");
             totals[k] = rep.total_secs;
             iterph[k] = rep.total_secs - rep.setup_secs;
         }

@@ -52,6 +52,7 @@ fn run_workload(w: &Workload) -> (usize, usize, [f64; 3], [f64; 3], &'static str
             cfg: ProtocolConfig::default(),
             threaded_nodes: false,
             center_tcp: false,
+            peer: None,
             seed: 99,
         };
         // avoid PJRT client churn across many runs: CPU engine here
@@ -60,11 +61,11 @@ fn run_workload(w: &Workload) -> (usize, usize, [f64; 3], [f64; 3], &'static str
             Backend::Real => {
                 let mut fab =
                     privlogit::mpc::RealFabric::new(exp.modulus_bits, exp.fmt, exp.seed);
-                proto.run(&mut fab, &mut fleet, &exp.cfg)
+                proto.run(&mut fab, &mut fleet, &exp.cfg).expect("run")
             }
             _ => {
                 let mut fab = privlogit::mpc::ModelFabric::new(2048, exp.fmt);
-                proto.run(&mut fab, &mut fleet, &exp.cfg)
+                proto.run(&mut fab, &mut fleet, &exp.cfg).expect("run")
             }
         };
         assert!(rep.converged, "{} on {}", proto.name(), w.name);

@@ -28,13 +28,19 @@ pub struct Config {
     /// Run the two Center servers' GC link over real TCP loopback
     /// sockets (real backend only).
     pub center_tcp: bool,
-    /// `privlogit node`: address to listen on.
+    /// `privlogit node` / `center-b`: address to listen on.
     pub listen: String,
     /// `privlogit node`: which partition (0-based) of the dataset this
     /// node serves, out of `orgs` shards.
     pub org: usize,
-    /// `privlogit center`: comma-separated node server addresses.
+    /// `privlogit center` / `center-a`: comma-separated node server
+    /// addresses.
     pub nodes: String,
+    /// `privlogit center-a`: address of the `center-b` evaluator process.
+    pub peer: String,
+    /// `privlogit center-b`: serve exactly one center-a session, then
+    /// exit (default: serve forever).
+    pub once: bool,
     /// RNG seed.
     pub seed: u64,
 }
@@ -55,6 +61,8 @@ impl Default for Config {
             listen: "127.0.0.1:9401".into(),
             org: 0,
             nodes: String::new(),
+            peer: String::new(),
+            once: false,
             seed: 42,
         }
     }
@@ -78,6 +86,8 @@ impl Config {
             "listen" => self.listen = value.to_string(),
             "org" => self.org = value.parse()?,
             "nodes" => self.nodes = value.to_string(),
+            "peer" => self.peer = value.to_string(),
+            "once" => self.once = value.parse()?,
             "seed" => self.seed = value.parse()?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
@@ -102,7 +112,7 @@ impl Config {
 
     /// Boolean keys that may appear as bare `--flag` (no value) on the
     /// command line.
-    const BOOL_FLAGS: [&'static str; 2] = ["threaded", "center_tcp"];
+    const BOOL_FLAGS: [&'static str; 3] = ["threaded", "center_tcp", "once"];
 
     /// Parse CLI arguments (`--key value` pairs, plus `--config FILE`;
     /// boolean flags may omit the value).
@@ -186,6 +196,20 @@ mod tests {
         let mut c = Config::default();
         c.set("center_tcp", "true").unwrap();
         assert!(c.center_tcp);
+    }
+
+    #[test]
+    fn center_split_keys() {
+        let mut c = Config::default();
+        let args: Vec<String> = ["--peer", "127.0.0.1:9700", "--once"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.parse_args(&args).unwrap();
+        assert_eq!(c.peer, "127.0.0.1:9700");
+        assert!(c.once);
+        assert!(!Config::default().once);
+        assert!(Config::default().peer.is_empty());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The node fleet: the organizations of Figure 1 as workers.
 //!
 //! A [`Fleet`] answers the Center's per-round statistic requests. Two
-//! implementations:
+//! implementations live here:
 //!
 //! * [`LocalFleet`] — sequential in-process evaluation through one
 //!   [`NodeCompute`] engine (PJRT or CPU); per-node wall times are still
@@ -17,28 +17,113 @@
 //! same per-node wall-time attribution plus measured wire bytes
 //! ([`FleetNet`]).
 //!
-//! Node-side values returned here are *plaintext* (organizations compute
-//! freely over their own data — the paper's "privacy-free" node work);
-//! encryption happens at the fabric boundary and is attributed to the
-//! node by the ledger.
+//! Every round method returns `Result`: a fleet whose worker or TCP peer
+//! dies mid-protocol surfaces a descriptive error the protocol bubbles
+//! up to the CLI, instead of panicking.
+//!
+//! **Where encryption happens.** In-process fleets return *plaintext*
+//! statistics ([`NodePayload::Plain`]) — organizations compute freely
+//! over their own data (the paper's "privacy-free" node work) and the
+//! fabric encrypts at its boundary, attributing the cost to the node.
+//! The remote fleet instead installs the Center's Paillier key at the
+//! node servers ([`Fleet::install_key`]); from then on nodes encrypt
+//! their own replies ([`NodePayload::Enc`]) and only ciphertexts cross
+//! the fleet wire — the deployed topology of the paper's threat model.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::bigint::BigUint;
 use crate::data::Dataset;
 use crate::optim::{local_gram_quarter, local_hessian, local_stats};
 use crate::protocols::common::pack_tri;
 use crate::runtime::NodeCompute;
 
-/// One node's reply to a statistics request, with its compute seconds.
+/// Paillier + fixed-point material a fleet needs for node-side
+/// encryption: the public modulus and the fixed-point format. (Only the
+/// modulus travels — the Paillier public key reconstructs from `n`.)
+#[derive(Clone, Debug)]
+pub struct FleetKey {
+    /// Paillier modulus `n`.
+    pub n: BigUint,
+    /// Fixed-point word width (bits).
+    pub w: u32,
+    /// Fixed-point fractional bits.
+    pub f: u32,
+}
+
+/// An encrypted statistic payload as raw ciphertext residues (elements
+/// of `Z*_{n²}`), tagged with its fixed-point scale. The fleet layer
+/// stays free of `mpc` types; `protocols::common` converts to `EncVec`.
+#[derive(Clone, Debug)]
+pub struct EncStat {
+    /// Fixed-point scale (bits) of the encoded plaintexts.
+    pub scale: u32,
+    /// Ciphertext values.
+    pub cts: Vec<BigUint>,
+}
+
+/// Payload of one node statistic reply.
+#[derive(Clone, Debug)]
+pub enum NodePayload {
+    /// Plaintext values (in-process fleets; the fabric encrypts).
+    Plain {
+        /// Flat payload (gradient / packed Hessian triangle).
+        values: Vec<f64>,
+        /// Log-likelihood share (stats requests only).
+        loglik: f64,
+    },
+    /// Node-encrypted Paillier ciphertexts (remote fleets after
+    /// [`Fleet::install_key`]). For stats rounds the encrypted
+    /// log-likelihood share is appended as the last ciphertext.
+    Enc(EncStat),
+}
+
+/// One node's reply to a statistics request, with its compute seconds
+/// (encryption included when the node encrypts).
 #[derive(Clone, Debug)]
 pub struct NodeReply {
-    /// Flat payload (gradient / packed Hessian triangle).
-    pub values: Vec<f64>,
-    /// Log-likelihood share (stats requests only).
-    pub loglik: f64,
+    /// The statistic payload.
+    pub payload: NodePayload,
     /// Node compute seconds (ledger attribution).
+    pub secs: f64,
+}
+
+impl NodeReply {
+    /// Construct a plaintext reply (the in-process fleets' form).
+    pub fn plain(values: Vec<f64>, loglik: f64, secs: f64) -> NodeReply {
+        NodeReply { payload: NodePayload::Plain { values, loglik }, secs }
+    }
+
+    /// Plaintext values. Panics on an encrypted payload — for tests and
+    /// plain-path diagnostics; protocol code matches on the payload.
+    pub fn values(&self) -> &[f64] {
+        match &self.payload {
+            NodePayload::Plain { values, .. } => values,
+            NodePayload::Enc(_) => panic!("encrypted node reply has no plaintext values"),
+        }
+    }
+
+    /// Plaintext log-likelihood share. Panics on an encrypted payload.
+    pub fn loglik(&self) -> f64 {
+        match &self.payload {
+            NodePayload::Plain { loglik, .. } => *loglik,
+            NodePayload::Enc(_) => panic!("encrypted node reply has no plaintext loglik"),
+        }
+    }
+}
+
+/// One node's reply to a PrivLogit-Local step round: the locally-applied
+/// `Enc(H̃⁻¹ g_j)` (scale `2f`) and the encrypted log-likelihood share
+/// (scale `f`). Only fleets with node-side encryption produce these.
+#[derive(Clone, Debug)]
+pub struct StepReply {
+    /// `Enc(H̃⁻¹ g_j)` — the node's partial Newton step.
+    pub part: EncStat,
+    /// `Enc(l_sj)` — one ciphertext.
+    pub loglik: EncStat,
+    /// Node compute seconds (stats + apply + encryption).
     pub secs: f64,
 }
 
@@ -67,17 +152,40 @@ pub trait Fleet {
     /// Dataset display name.
     fn dataset_name(&self) -> String;
     /// Per-node fused gradient + log-likelihood at `beta`, × `scale`.
-    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply>;
+    fn stats(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>>;
     /// Per-node `¼X_jᵀX_j·scale` (packed triangle).
-    fn gram(&mut self, scale: f64) -> Vec<NodeReply>;
+    fn gram(&mut self, scale: f64) -> anyhow::Result<Vec<NodeReply>>;
     /// Per-node exact Hessian `X_jᵀAX_j·scale` (packed triangle).
-    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply>;
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>>;
     /// Engine label for reports.
     fn label(&self) -> String;
     /// Wire traffic between the Center and the nodes (both directions);
     /// zero unless the fleet actually crosses a process boundary.
     fn net_stats(&self) -> FleetNet {
         FleetNet::default()
+    }
+    /// Install the Center's Paillier key material at the nodes. Returns
+    /// `true` iff nodes will encrypt their replies from now on. The
+    /// in-process default declines (plaintext replies, fabric-side
+    /// encryption — nothing crosses a process boundary).
+    fn install_key(&mut self, _key: &FleetKey) -> anyhow::Result<bool> {
+        Ok(false)
+    }
+    /// Whether [`Fleet::install_key`] succeeded and replies arrive
+    /// encrypted.
+    fn nodes_encrypt(&self) -> bool {
+        false
+    }
+    /// Broadcast `Enc(H̃⁻¹)` to the nodes (PrivLogit-Local setup; only
+    /// meaningful after [`Fleet::install_key`] returned `true`).
+    fn install_hinv(&mut self, _hinv: &EncStat) -> anyhow::Result<()> {
+        anyhow::bail!("this fleet does not support node-side Enc(H̃⁻¹) application")
+    }
+    /// One PrivLogit-Local iteration at the nodes: local gradient,
+    /// `Enc(H̃⁻¹)⊗g_j`, encrypted log-likelihood (only after
+    /// [`Fleet::install_hinv`]).
+    fn step(&mut self, _beta: &[f64], _scale: f64) -> anyhow::Result<Vec<StepReply>> {
+        anyhow::bail!("this fleet does not support node-side step rounds")
     }
 }
 
@@ -109,45 +217,40 @@ impl Fleet for LocalFleet {
         self.parts[0].name.split('#').next().unwrap_or("?").to_string()
     }
 
-    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
-        self.parts
+    fn stats(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
+        Ok(self
+            .parts
             .iter()
             .map(|d| {
                 let t0 = Instant::now();
                 let (g, l) = self.engine.stats(d, beta, scale);
-                NodeReply { values: g, loglik: l, secs: t0.elapsed().as_secs_f64() }
+                NodeReply::plain(g, l, t0.elapsed().as_secs_f64())
             })
-            .collect()
+            .collect())
     }
 
-    fn gram(&mut self, scale: f64) -> Vec<NodeReply> {
-        self.parts
+    fn gram(&mut self, scale: f64) -> anyhow::Result<Vec<NodeReply>> {
+        Ok(self
+            .parts
             .iter()
             .map(|d| {
                 let t0 = Instant::now();
                 let h = self.engine.gram_quarter(d, scale);
-                NodeReply {
-                    values: pack_tri(&h),
-                    loglik: 0.0,
-                    secs: t0.elapsed().as_secs_f64(),
-                }
+                NodeReply::plain(pack_tri(&h), 0.0, t0.elapsed().as_secs_f64())
             })
-            .collect()
+            .collect())
     }
 
-    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
-        self.parts
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
+        Ok(self
+            .parts
             .iter()
             .map(|d| {
                 let t0 = Instant::now();
                 let h = self.engine.hessian(d, beta, scale);
-                NodeReply {
-                    values: pack_tri(&h),
-                    loglik: 0.0,
-                    secs: t0.elapsed().as_secs_f64(),
-                }
+                NodeReply::plain(pack_tri(&h), 0.0, t0.elapsed().as_secs_f64())
             })
-            .collect()
+            .collect())
     }
 
     fn label(&self) -> String {
@@ -197,13 +300,20 @@ impl ThreadedFleet {
         ThreadedFleet { workers, n_total, p, name }
     }
 
-    fn round(&mut self, make: impl Fn() -> NodeCmd) -> Vec<NodeReply> {
-        for w in &self.workers {
-            w.cmd.send(make()).expect("node worker alive");
+    fn round(&mut self, make: impl Fn() -> NodeCmd) -> anyhow::Result<Vec<NodeReply>> {
+        for (j, w) in self.workers.iter().enumerate() {
+            w.cmd
+                .send(make())
+                .map_err(|_| anyhow::anyhow!("node worker {j} died before the round"))?;
         }
         self.workers
             .iter()
-            .map(|w| w.reply.recv().expect("node reply"))
+            .enumerate()
+            .map(|(j, w)| {
+                w.reply
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("node worker {j} died mid-round"))
+            })
             .collect()
     }
 }
@@ -214,21 +324,21 @@ fn node_main(data: Dataset, cmd: Receiver<NodeCmd>, reply: Sender<NodeReply>) {
         let rep = match c {
             NodeCmd::Stats { beta, scale } => {
                 let s = local_stats(&data, &beta);
-                NodeReply {
-                    values: s.grad.iter().map(|v| v * scale).collect(),
-                    loglik: s.loglik * scale,
-                    secs: 0.0,
-                }
+                NodeReply::plain(
+                    s.grad.iter().map(|v| v * scale).collect(),
+                    s.loglik * scale,
+                    0.0,
+                )
             }
             NodeCmd::Gram { scale } => {
                 let mut h = local_gram_quarter(&data);
                 h.scale(scale);
-                NodeReply { values: pack_tri(&h), loglik: 0.0, secs: 0.0 }
+                NodeReply::plain(pack_tri(&h), 0.0, 0.0)
             }
             NodeCmd::Hessian { beta, scale } => {
                 let mut h = local_hessian(&data, &beta);
                 h.scale(scale);
-                NodeReply { values: pack_tri(&h), loglik: 0.0, secs: 0.0 }
+                NodeReply::plain(pack_tri(&h), 0.0, 0.0)
             }
             NodeCmd::Shutdown => return,
         };
@@ -253,16 +363,16 @@ impl Fleet for ThreadedFleet {
         self.name.clone()
     }
 
-    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
+    fn stats(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
         let b = beta.to_vec();
         self.round(|| NodeCmd::Stats { beta: b.clone(), scale })
     }
 
-    fn gram(&mut self, scale: f64) -> Vec<NodeReply> {
+    fn gram(&mut self, scale: f64) -> anyhow::Result<Vec<NodeReply>> {
         self.round(|| NodeCmd::Gram { scale })
     }
 
-    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
         let b = beta.to_vec();
         self.round(|| NodeCmd::Hessian { beta: b.clone(), scale })
     }
@@ -300,27 +410,33 @@ mod tests {
         let mut threaded = ThreadedFleet::spawn(parts);
         let beta = vec![0.1, -0.2, 0.3, 0.0, 0.05];
         let scale = 1.0 / 900.0;
-        let a = local.stats(&beta, scale);
-        let b = threaded.stats(&beta, scale);
+        let a = local.stats(&beta, scale).unwrap();
+        let b = threaded.stats(&beta, scale).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
-            assert_all_close(&x.values, &y.values, 1e-12, "stats parity");
-            assert!((x.loglik - y.loglik).abs() < 1e-12);
+            assert_all_close(x.values(), y.values(), 1e-12, "stats parity");
+            assert!((x.loglik() - y.loglik()).abs() < 1e-12);
         }
-        let ga = local.gram(scale);
-        let gb = threaded.gram(scale);
+        let ga = local.gram(scale).unwrap();
+        let gb = threaded.gram(scale).unwrap();
         for (x, y) in ga.iter().zip(&gb) {
-            assert_all_close(&x.values, &y.values, 1e-12, "gram parity");
+            assert_all_close(x.values(), y.values(), 1e-12, "gram parity");
         }
-        let ha = local.hessian(&beta, scale);
-        let hb = threaded.hessian(&beta, scale);
+        let ha = local.hessian(&beta, scale).unwrap();
+        let hb = threaded.hessian(&beta, scale).unwrap();
         for (x, y) in ha.iter().zip(&hb) {
-            assert_all_close(&x.values, &y.values, 1e-12, "hessian parity");
+            assert_all_close(x.values(), y.values(), 1e-12, "hessian parity");
         }
         assert_eq!(threaded.orgs(), 3);
         assert_eq!(threaded.n_total(), 900);
         assert_eq!(threaded.p(), 5);
         assert_eq!(threaded.dataset_name(), "t");
+        // In-process fleets never encrypt node-side.
+        assert!(!threaded.nodes_encrypt());
+        assert!(threaded
+            .install_key(&FleetKey { n: BigUint::from_u64(77), w: 40, f: 24 })
+            .is_ok_and(|enc| !enc));
+        assert!(threaded.step(&beta, scale).is_err());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 pub mod fleet;
 
 use crate::config::Config;
-use crate::data::{load_workload, workload, Dataset};
+use crate::data::{dataset_by_name, Dataset};
 use crate::gc::word::FixedFmt;
 use crate::mpc::{ModelFabric, RealFabric};
 use crate::protocols::{Protocol, ProtocolConfig, RunReport};
@@ -57,6 +57,19 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// How the two Center servers' garbled-circuit link is deployed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CenterLink {
+    /// Both halves as threads of this process over an in-memory queue.
+    Mem,
+    /// Both halves as threads of this process over real TCP loopback
+    /// sockets (the paper's two-PC testbed shape, one process).
+    TcpLoopback,
+    /// The evaluator half is a remote `privlogit center-b` process at
+    /// this address — the fully split deployment.
+    Peer(String),
+}
+
 /// A fully-specified experiment.
 #[derive(Clone, Debug)]
 pub struct Experiment {
@@ -79,6 +92,9 @@ pub struct Experiment {
     /// Run the two Center servers' GC link over real TCP loopback
     /// sockets instead of the in-memory queue (real backend only).
     pub center_tcp: bool,
+    /// Address of a remote `privlogit center-b` evaluator process
+    /// (real backend only; overrides `center_tcp`).
+    pub peer: Option<String>,
     /// RNG seed for the real backend.
     pub seed: u64,
 }
@@ -91,10 +107,11 @@ impl Experiment {
 
     /// Build from a parsed [`Config`].
     pub fn from_config(c: &Config) -> anyhow::Result<Experiment> {
-        let dataset = match workload(&c.dataset) {
-            Some(w) => load_workload(w),
+        let dataset = match dataset_by_name(&c.dataset) {
+            Some(d) => d,
             None => anyhow::bail!(
-                "unknown dataset {:?} — `privlogit list` shows the paper suite",
+                "unknown dataset {:?} — `privlogit list` shows the paper suite, \
+                 or use an inline spec like synth:n=1200,p=4,seed=7",
                 c.dataset
             ),
         };
@@ -110,8 +127,18 @@ impl Experiment {
             cfg: ProtocolConfig { lambda: c.lambda, tol: c.tol, max_iters: c.max_iters },
             threaded_nodes: c.threaded,
             center_tcp: c.center_tcp,
+            peer: (!c.peer.is_empty()).then(|| c.peer.clone()),
             seed: c.seed,
         })
+    }
+
+    /// The center-link deployment this experiment asks for.
+    pub fn center_link(&self) -> CenterLink {
+        match (&self.peer, self.center_tcp) {
+            (Some(addr), _) => CenterLink::Peer(addr.clone()),
+            (None, true) => CenterLink::TcpLoopback,
+            (None, false) => CenterLink::Mem,
+        }
     }
 
     /// Resolve `Auto` for this experiment's dimensionality.
@@ -128,8 +155,9 @@ impl Experiment {
         }
     }
 
-    /// Run the experiment, returning the protocol report.
-    pub fn run(&self) -> RunReport {
+    /// Run the experiment, returning the protocol report (or the error
+    /// a dying node/center peer surfaced).
+    pub fn run(&self) -> anyhow::Result<RunReport> {
         let mut fleet = self.make_fleet();
         run_protocol(
             self.protocol,
@@ -138,7 +166,7 @@ impl Experiment {
             self.fmt,
             &self.cfg,
             self.seed,
-            self.center_tcp,
+            &self.center_link(),
             fleet.as_mut(),
         )
     }
@@ -160,10 +188,16 @@ fn resolve_backend(backend: Backend, p: usize) -> Backend {
 }
 
 /// Run one protocol over an already-built fleet — the shared runner
-/// behind [`Experiment::run`] and the distributed `privlogit center`
-/// mode (which supplies a [`crate::net::RemoteFleet`] and has no local
-/// [`Dataset`]). `Backend::Auto` resolves against the fleet's
-/// dimensionality.
+/// behind [`Experiment::run`] and the distributed `privlogit center` /
+/// `center-a` modes (which supply a [`crate::net::RemoteFleet`] and
+/// have no local [`Dataset`]). `Backend::Auto` resolves against the
+/// fleet's dimensionality.
+///
+/// With the real backend the fabric's Paillier key is first installed
+/// at the fleet ([`Fleet::install_key`]): a remote fleet switches its
+/// node servers to node-side encryption, so only ciphertexts cross the
+/// fleet wire; in-process fleets decline and keep encrypting at the
+/// fabric boundary.
 #[allow(clippy::too_many_arguments)]
 pub fn run_protocol(
     protocol: Protocol,
@@ -172,21 +206,28 @@ pub fn run_protocol(
     fmt: FixedFmt,
     cfg: &ProtocolConfig,
     seed: u64,
-    center_tcp: bool,
+    link: &CenterLink,
     fleet: &mut dyn Fleet,
-) -> RunReport {
+) -> anyhow::Result<RunReport> {
     match resolve_backend(backend, fleet.p()) {
         Backend::Real => {
-            if center_tcp {
-                let mut fab = RealFabric::new_tcp_loopback(modulus_bits, fmt, seed)
-                    .expect("tcp loopback center link");
-                protocol.run(&mut fab, fleet, cfg)
-            } else {
-                let mut fab = RealFabric::new(modulus_bits, fmt, seed);
-                protocol.run(&mut fab, fleet, cfg)
-            }
+            let mut fab = match link {
+                CenterLink::Mem => RealFabric::new(modulus_bits, fmt, seed),
+                CenterLink::TcpLoopback => {
+                    RealFabric::new_tcp_loopback(modulus_bits, fmt, seed)?
+                }
+                CenterLink::Peer(addr) => {
+                    RealFabric::connect_peer(modulus_bits, fmt, seed, addr)?
+                }
+            };
+            fleet.install_key(&fab.fleet_key())?;
+            protocol.run(&mut fab, fleet, cfg)
         }
         Backend::Model | Backend::Auto => {
+            anyhow::ensure!(
+                !matches!(link, CenterLink::Peer(_)),
+                "the remote center-b peer link requires the real backend"
+            );
             let mut fab = ModelFabric::new(2048, fmt);
             protocol.run(&mut fab, fleet, cfg)
         }
@@ -243,7 +284,8 @@ mod tests {
         c.threaded = true;
         c.orgs = 4;
         let e = Experiment::from_config(&c).unwrap();
-        let rep = e.run();
+        assert_eq!(e.center_link(), CenterLink::Mem);
+        let rep = e.run().unwrap();
         assert!(rep.converged);
         assert_eq!(rep.orgs, 4);
         assert_eq!(rep.p, 12);

@@ -231,6 +231,35 @@ pub fn load_workload(w: Workload) -> Dataset {
     synthesize_with_signal(w.name, w.n, w.p, seed, w.sigma2)
 }
 
+/// Resolve a CLI dataset name: a paper workload (`Wine`, `SimuX100`, …)
+/// or an inline synthetic spec `synth:n=1200,p=4,seed=7` (any key may be
+/// omitted; defaults n=1000, p=4, seed=42). The spec form is
+/// deterministic per string, so node servers and the center materialize
+/// identical shards from the same `--dataset` argument.
+pub fn dataset_by_name(name: &str) -> Option<Dataset> {
+    if let Some(spec) = name.strip_prefix("synth:") {
+        let (mut n, mut p, mut seed) = (1000usize, 4usize, 42u64);
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=')?;
+            match k.trim() {
+                "n" => n = v.trim().parse().ok()?,
+                "p" => p = v.trim().parse().ok()?,
+                "seed" => seed = v.trim().parse().ok()?,
+                _ => return None,
+            }
+        }
+        if n == 0 || p == 0 {
+            return None;
+        }
+        return Some(synthesize(name, n, p, seed));
+    }
+    workload(name).map(load_workload)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +328,22 @@ mod tests {
         assert_eq!(workload("News").unwrap().p, 52);
         assert_eq!(workload("SimuX400").unwrap().p, 400);
         assert!(workload("nope").is_none());
+    }
+
+    /// `synth:` inline specs resolve deterministically; workload names
+    /// still resolve through the same entry point; junk is rejected.
+    #[test]
+    fn dataset_by_name_specs() {
+        let d = dataset_by_name("synth:n=300,p=3,seed=9").unwrap();
+        assert_eq!((d.n(), d.p()), (300, 3));
+        let again = dataset_by_name("synth:n=300,p=3,seed=9").unwrap();
+        assert_eq!(d.x.as_slice(), again.x.as_slice(), "deterministic per spec");
+        let defaults = dataset_by_name("synth:").unwrap();
+        assert_eq!((defaults.n(), defaults.p()), (1000, 4));
+        assert_eq!(dataset_by_name("Wine").unwrap().p(), 12);
+        assert!(dataset_by_name("synth:p=0").is_none());
+        assert!(dataset_by_name("synth:bogus=1").is_none());
+        assert!(dataset_by_name("nope").is_none());
     }
 
     #[test]

@@ -87,12 +87,12 @@ impl Channel {
         self.transport.send_msg(msg).expect("channel peer hung up");
     }
 
-    /// Receive exactly `buf.len()` bytes (blocking).
-    pub fn recv(&mut self, buf: &mut [u8]) {
+    /// Fill `buf` exactly, surfacing transport failure as an error.
+    fn fill(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
         let mut filled = 0;
         while filled < buf.len() {
             if self.inpos == self.inbuf.len() {
-                self.inbuf = self.transport.recv_msg().expect("channel peer hung up");
+                self.inbuf = self.transport.recv_msg()?;
                 self.inpos = 0;
                 self.stats.bytes_recv.fetch_add(self.inbuf.len() as u64, Ordering::Relaxed);
                 self.stats.msgs_recv.fetch_add(1, Ordering::Relaxed);
@@ -103,6 +103,13 @@ impl Channel {
             self.inpos += take;
             filled += take;
         }
+        Ok(())
+    }
+
+    /// Receive exactly `buf.len()` bytes (blocking). Mid-protocol a
+    /// vanished peer is a protocol bug, surfaced loudly.
+    pub fn recv(&mut self, buf: &mut [u8]) {
+        self.fill(buf).expect("channel peer hung up")
     }
 
     /// Receive a `Vec<u8>` of exactly `len` bytes.
@@ -147,6 +154,25 @@ impl Channel {
     pub fn recv_blob(&mut self) -> Vec<u8> {
         let len = self.recv_u64() as usize;
         self.recv_vec(len)
+    }
+
+    /// Length-prefixed blob receive that surfaces a vanished peer as
+    /// `Err` instead of panicking — for session loops (e.g. the center-b
+    /// GC evaluator server) that must treat a disconnecting peer at a
+    /// message boundary as an orderly end of session.
+    pub fn try_recv_blob(&mut self) -> std::io::Result<Vec<u8>> {
+        let mut lb = [0u8; 8];
+        self.fill(&mut lb)?;
+        let len = u64::from_le_bytes(lb) as usize;
+        if len > crate::net::wire::MAX_FRAME {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("control blob of {len} bytes exceeds the frame cap"),
+            ));
+        }
+        let mut v = vec![0u8; len];
+        self.fill(&mut v)?;
+        Ok(v)
     }
 
     /// This endpoint's statistics handle.

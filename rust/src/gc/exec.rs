@@ -49,6 +49,69 @@ pub struct ExecStats {
     pub wall: f64,
 }
 
+/// Run the garbler (Center server S1) half of one program execution over
+/// `chan`: stream input labels, serve the evaluator's OT, garble the
+/// circuit, stream the output-decode bits. Returns `(new_gate_ctr,
+/// ands)`.
+///
+/// This is one half of [`GcSession::execute`]; the in-process session
+/// runs it on a scoped thread against [`run_evaluator`], and the
+/// split-process deployment (`privlogit center-a`) runs it against a
+/// remote `privlogit center-b` over TCP (see `mpc::peer`).
+pub fn run_garbler<P: GcProgram>(
+    chan: &mut Channel,
+    ot_send: &mut OtSender,
+    prog: &P,
+    garbler_bits: &[bool],
+    exec_seed: u64,
+    gate_ctr: u64,
+) -> (u64, u64) {
+    assert_eq!(garbler_bits.len(), prog.inputs_garbler(), "garbler input arity");
+    let rng = ChaChaRng::from_u64_seed(exec_seed);
+    let mut g = Garbler::new(chan, rng, gate_ctr);
+    // 1. own inputs
+    let g_wires: Vec<GWire> = garbler_bits.iter().map(|&b| g.input_self(b)).collect();
+    // 2. evaluator inputs via OT (sender side)
+    let mut e_wires = Vec::with_capacity(prog.inputs_evaluator());
+    let mut pairs = Vec::with_capacity(prog.inputs_evaluator());
+    for _ in 0..prog.inputs_evaluator() {
+        let (w, pair) = g.input_evaluator_pair();
+        e_wires.push(w);
+        pairs.push(pair);
+    }
+    g.flush();
+    ot_send.send(g.channel(), &pairs);
+    // 3. circuit
+    let outs = prog.run(&mut g, &g_wires, &e_wires);
+    // 4. decode info
+    for &o in &outs {
+        g.output(o);
+    }
+    g.flush();
+    (g.gate_ctr, g.ands)
+}
+
+/// Run the evaluator (Center server S2) half of one program execution
+/// over `chan`: receive input labels, obtain own labels via OT, evaluate
+/// the streamed circuit, decode the outputs. Returns `(output_bits,
+/// ands)` — the counterpart of [`run_garbler`].
+pub fn run_evaluator<P: GcProgram>(
+    chan: &mut Channel,
+    ot_recv: &mut OtReceiver,
+    prog: &P,
+    evaluator_bits: &[bool],
+    gate_ctr: u64,
+) -> (Vec<bool>, u64) {
+    assert_eq!(evaluator_bits.len(), prog.inputs_evaluator(), "evaluator input arity");
+    let mut e = Evaluator::new(chan, gate_ctr);
+    let g_wires: Vec<GWire> = (0..prog.inputs_garbler()).map(|_| e.input_garbler()).collect();
+    let labels = ot_recv.recv(e.channel(), evaluator_bits);
+    let e_wires: Vec<GWire> = labels.into_iter().map(GWire::Label).collect();
+    let outs = prog.run(&mut e, &g_wires, &e_wires);
+    let bits: Vec<bool> = outs.into_iter().map(|o| e.output(o)).collect();
+    (bits, e.ands)
+}
+
 /// Persistent two-server GC session (base OTs done once at construction).
 pub struct GcSession {
     chan_g: Channel,
@@ -119,41 +182,13 @@ impl GcSession {
         let (outputs, g_ands, e_ands) = std::thread::scope(|s| {
             // ---- Server S1: garbler thread ----
             let garbler_handle = s.spawn(move || {
-                let rng = ChaChaRng::from_u64_seed(exec_seed);
-                let mut g = Garbler::new(chan_g, rng, gate_ctr);
-                // 1. own inputs
-                let g_wires: Vec<GWire> =
-                    garbler_bits.iter().map(|&b| g.input_self(b)).collect();
-                // 2. evaluator inputs via OT (sender side)
-                let mut e_wires = Vec::with_capacity(prog.inputs_evaluator());
-                let mut pairs = Vec::with_capacity(prog.inputs_evaluator());
-                for _ in 0..prog.inputs_evaluator() {
-                    let (w, pair) = g.input_evaluator_pair();
-                    e_wires.push(w);
-                    pairs.push(pair);
-                }
-                g.flush();
-                ot_send.send(g.channel(), &pairs);
-                // 3. circuit
-                let outs = prog.run(&mut g, &g_wires, &e_wires);
-                // 4. decode info
-                for &o in &outs {
-                    g.output(o);
-                }
-                g.flush();
-                (g.gate_ctr, g.ands)
+                run_garbler(chan_g, ot_send, prog, garbler_bits, exec_seed, gate_ctr)
             });
 
             // ---- Server S2: evaluator thread (current thread) ----
-            let mut e = Evaluator::new(chan_e, gate_ctr);
-            let g_wires: Vec<GWire> =
-                (0..prog.inputs_garbler()).map(|_| e.input_garbler()).collect();
-            let labels = ot_recv.recv(e.channel(), evaluator_bits);
-            let e_wires: Vec<GWire> = labels.into_iter().map(GWire::Label).collect();
-            let outs = prog.run(&mut e, &g_wires, &e_wires);
-            let bits: Vec<bool> = outs.into_iter().map(|o| e.output(o)).collect();
+            let (bits, e_ands) = run_evaluator(chan_e, ot_recv, prog, evaluator_bits, gate_ctr);
             let (new_ctr, g_ands) = garbler_handle.join().expect("garbler thread");
-            (bits, g_ands, (new_ctr, e.ands))
+            (bits, g_ands, (new_ctr, e_ands))
         });
 
         let (new_ctr, e_ands) = e_ands;

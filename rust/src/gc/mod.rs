@@ -21,6 +21,13 @@
 //! plaintext ([`backend::PlainBackend`], the correctness oracle), gate
 //! counting ([`backend::CountBackend`], feeds the §5.2 cost model),
 //! garbling and evaluating ([`garble::Garbler`], [`garble::Evaluator`]).
+//!
+//! Two-party execution is split into reusable role halves
+//! ([`exec::run_garbler`] / [`exec::run_evaluator`]): [`exec::GcSession`]
+//! runs them on scoped threads of one process, while the deployed
+//! two-process center (`privlogit center-a` / `center-b`, see
+//! [`crate::mpc::peer`]) runs each half in its own OS process over one
+//! framed TCP connection.
 
 pub mod backend;
 pub mod channel;
@@ -31,5 +38,5 @@ pub mod word;
 
 pub use backend::{CountBackend, GcBackend, PlainBackend};
 pub use channel::{mem_channel_pair, Channel, ChannelStats};
-pub use exec::{GcProgram, GcSession};
+pub use exec::{run_evaluator, run_garbler, GcProgram, GcSession};
 pub use word::{FixedFmt, Word};

@@ -37,16 +37,21 @@
 //! | [`bigint`] | arbitrary-precision integers (substrate for Paillier) |
 //! | [`crypto`] | ChaCha20 CSPRNG, Paillier cryptosystem, fixed-point codec |
 //! | [`gc`] | boolean circuits + Yao garbling (free-XOR, half-gates, OT) |
-//! | [`mpc`] | two-server secure matrix algebra over shares; cost model |
+//! | [`mpc`] | two-server secure matrix algebra over shares; split-process center peer; cost model |
 //! | [`optim`] | plaintext Newton / PrivLogit optimizers (ground truth) |
 //! | [`protocols`] | the three secure protocols of the paper |
 //! | [`coordinator`] | node/center topology, scheduler, convergence loop |
-//! | [`net`] | wire format, TCP transport, remote fleets, node servers |
+//! | [`net`] | wire format, TCP transport, remote fleets, node servers (node-side encryption) |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
 //! | [`linalg`] | dense matrix/vector algebra, Cholesky, solvers |
 //! | [`data`] | dataset synthesis, real-study stand-ins, partitioning |
 //! | [`config`] | experiment/config system + CLI parsing |
 //! | [`metrics`] | counters, timers, per-phase cost accounting |
+//!
+//! The deployed topology (every box of the paper's Figure 1 as its own
+//! OS process — node servers, `center-a` garbler/driver, `center-b`
+//! evaluator, ciphertext-only fleet wire) is documented in
+//! `docs/ARCHITECTURE.md` and `docs/DEPLOY.md`.
 
 // Established test idiom: build a `Config::default()` then override the
 // fields under test. Clearer than `Config { dataset: …, ..Default::default() }`

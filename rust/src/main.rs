@@ -11,32 +11,40 @@
 //! privlogit list                    # the paper's evaluation suite
 //!
 //! # Distributed (see docs/DEPLOY.md):
-//! privlogit node   --listen 127.0.0.1:9401 --dataset Wine --orgs 4 --org 0
-//! privlogit center --nodes 127.0.0.1:9401,127.0.0.1:9402,... [run flags]
+//! privlogit node     --listen 127.0.0.1:9401 --dataset Wine --orgs 4 --org 0
+//! privlogit center-b --listen 127.0.0.1:9700 [--once]
+//! privlogit center-a --peer 127.0.0.1:9700 --nodes 127.0.0.1:9401,... [run flags]
+//! privlogit center   --nodes 127.0.0.1:9401,... [run flags]   # single-process center
 //! ```
 //!
-//! `node` serves one organization's shard over TCP; `center` connects to
-//! every node, runs the selected protocol over the remote fleet, and
-//! reports wire traffic in both directions.
+//! `node` serves one organization's shard over TCP and, once the center
+//! installs its Paillier key, encrypts every statistic itself — only
+//! ciphertexts cross the fleet wire. `center-b` serves the garbled-circuit
+//! evaluator (Center server S2); `center-a` garbles, drives the protocol
+//! against the node fleet, and reports wire traffic in both directions.
+//! `center` runs both Center halves in one process (threads).
 
 use privlogit::config::Config;
-use privlogit::coordinator::{run_protocol, Backend, Experiment};
-use privlogit::data::{load_workload, workload, WORKLOADS};
+use privlogit::coordinator::{run_protocol, Backend, CenterLink, Experiment};
+use privlogit::data::{dataset_by_name, WORKLOADS};
 use privlogit::gc::word::FixedFmt;
 use privlogit::metrics::{beta_preview, render_report};
+use privlogit::mpc::PeerGcServer;
 use privlogit::net::{NodeServer, RemoteFleet};
-use privlogit::protocols::{Protocol, ProtocolConfig};
+use privlogit::protocols::{Protocol, ProtocolConfig, RunReport};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: privlogit <run|compare|list|node|center> [--dataset NAME] [--protocol P] \
-         [--backend real|model|auto] [--orgs N] [--lambda L] [--tol T] \
+        "usage: privlogit <run|compare|list|node|center|center-a|center-b> [--dataset NAME] \
+         [--protocol P] [--backend real|model|auto] [--orgs N] [--lambda L] [--tol T] \
          [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--seed S] \
          [--config FILE]\n\
          \n\
          distributed mode (docs/DEPLOY.md):\n\
-         privlogit node   --listen ADDR --dataset NAME --orgs N --org J\n\
-         privlogit center --nodes ADDR1,ADDR2,... [run flags]"
+         privlogit node     --listen ADDR --dataset NAME --orgs N --org J\n\
+         privlogit center-b --listen ADDR [--once]\n\
+         privlogit center-a --peer ADDR --nodes ADDR1,ADDR2,... [run flags]\n\
+         privlogit center   --nodes ADDR1,ADDR2,... [run flags]"
     );
     std::process::exit(2)
 }
@@ -44,10 +52,13 @@ fn usage() -> ! {
 /// `privlogit node`: serve shard `--org` of `--dataset` (split into
 /// `--orgs` partitions) on `--listen` until killed.
 fn node_main(cfg: &Config) -> anyhow::Result<()> {
-    let Some(w) = workload(&cfg.dataset) else {
-        anyhow::bail!("unknown dataset {:?} — `privlogit list` shows the paper suite", cfg.dataset)
+    let Some(data) = dataset_by_name(&cfg.dataset) else {
+        anyhow::bail!(
+            "unknown dataset {:?} — `privlogit list` shows the paper suite, \
+             or use an inline spec like synth:n=1200,p=4,seed=7",
+            cfg.dataset
+        )
     };
-    let data = load_workload(w);
     anyhow::ensure!(
         cfg.org < cfg.orgs,
         "--org {} out of range for --orgs {} (0-based shard index)",
@@ -55,8 +66,10 @@ fn node_main(cfg: &Config) -> anyhow::Result<()> {
         cfg.orgs
     );
     let shard = data.partition(cfg.orgs).swap_remove(cfg.org);
-    let shard_n = shard.n();
+    let (shard_n, shard_p) = (shard.n(), shard.p());
     let engine = privlogit::runtime::default_engine();
+    // Paillier randomness stays on the per-process entropy default —
+    // co-deployed nodes must not share an encryption-randomness stream.
     let mut server = NodeServer::bind_with_engine(&cfg.listen, shard, engine)?;
     println!(
         "node serving {} shard {}/{} ({} samples, p={}) on {}",
@@ -64,15 +77,32 @@ fn node_main(cfg: &Config) -> anyhow::Result<()> {
         cfg.org,
         cfg.orgs,
         shard_n,
-        w.p,
+        shard_p,
         server.local_addr()?
     );
     server.serve_forever()?;
     Ok(())
 }
 
-/// `privlogit center`: run the protocol over node servers at `--nodes`.
-fn center_main(cfg: &Config) -> anyhow::Result<()> {
+/// `privlogit center-b`: serve the garbled-circuit evaluator (Center
+/// server S2) on `--listen`; `--once` exits after one center-a session.
+fn center_b_main(cfg: &Config) -> anyhow::Result<()> {
+    let mut server = PeerGcServer::bind(&cfg.listen, cfg.seed ^ 0xB)?;
+    println!("center-b (GC evaluator) listening on {}", server.local_addr()?);
+    if cfg.once {
+        server.serve_once()?;
+        println!("center-b session complete");
+        Ok(())
+    } else {
+        server.serve_forever()?;
+        Ok(())
+    }
+}
+
+/// Run the protocol over remote node servers, converting a mid-protocol
+/// channel panic (a vanished center-b peer) into a clean error so the
+/// CLI exits non-zero with a message instead of a raw panic.
+fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
     let addrs: Vec<String> =
         cfg.nodes.split(',').filter(|a| !a.is_empty()).map(|a| a.trim().to_string()).collect();
     anyhow::ensure!(
@@ -83,16 +113,36 @@ fn center_main(cfg: &Config) -> anyhow::Result<()> {
     let backend: Backend = cfg.backend.parse()?;
     let pcfg = ProtocolConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters };
     let mut fleet = RemoteFleet::connect(&addrs)?;
-    let report = run_protocol(
-        protocol,
-        backend,
-        cfg.modulus_bits,
-        FixedFmt::DEFAULT,
-        &pcfg,
-        cfg.seed,
-        cfg.center_tcp,
-        &mut fleet,
-    );
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_protocol(
+            protocol,
+            backend,
+            cfg.modulus_bits,
+            FixedFmt::DEFAULT,
+            &pcfg,
+            cfg.seed,
+            &link,
+            &mut fleet,
+        )
+    }));
+    match run {
+        Ok(report) => report,
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".to_string());
+            anyhow::bail!("protocol aborted mid-run: {msg}")
+        }
+    }
+}
+
+/// `privlogit center` / `center-a`: run the protocol over node servers
+/// at `--nodes` (center-a additionally garbles against a remote
+/// `center-b` at `--peer`).
+fn center_main(cfg: &Config, link: CenterLink) -> anyhow::Result<()> {
+    let report = run_over_nodes(cfg, link)?;
     print!("{}", render_report(&report));
     println!("  beta: {}", beta_preview(&report.beta));
     Ok(())
@@ -119,7 +169,7 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
             let exp = Experiment::from_config(&cfg)?;
-            let report = exp.run();
+            let report = exp.run()?;
             print!("{}", render_report(&report));
             println!("  beta: {}", beta_preview(&report.beta));
             Ok(())
@@ -131,7 +181,7 @@ fn main() -> anyhow::Result<()> {
                 let mut c = cfg.clone();
                 c.protocol = proto.name().to_string();
                 let exp = Experiment::from_config(&c)?;
-                let report = exp.run();
+                let report = exp.run()?;
                 println!("{}", report.summary());
             }
             Ok(())
@@ -144,7 +194,28 @@ fn main() -> anyhow::Result<()> {
         "center" => {
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
-            center_main(&cfg)
+            let link = if cfg.center_tcp {
+                CenterLink::TcpLoopback
+            } else {
+                CenterLink::Mem
+            };
+            center_main(&cfg, link)
+        }
+        "center-a" => {
+            let mut cfg = Config::default();
+            cfg.parse_args(&args[1..])?;
+            anyhow::ensure!(
+                !cfg.peer.is_empty(),
+                "center-a needs --peer ADDR (the center-b evaluator); \
+                 use `privlogit center` for the single-process center"
+            );
+            let link = CenterLink::Peer(cfg.peer.clone());
+            center_main(&cfg, link)
+        }
+        "center-b" => {
+            let mut cfg = Config::default();
+            cfg.parse_args(&args[1..])?;
+            center_b_main(&cfg)
         }
         _ => usage(),
     }

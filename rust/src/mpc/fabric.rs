@@ -23,13 +23,14 @@ use super::circuits::{
     SIGMA,
 };
 use super::costmodel::{CostLedger, CostModel};
+use super::peer::{execute_local, PeerGcClient, ProgSpec};
 use crate::bigint::{BigInt, BigUint, RandomSource};
+use crate::coordinator::fleet::FleetKey;
 use crate::crypto::fixed::FixedCodec;
-use crate::crypto::paillier::{ChaChaSource, Ciphertext, Keypair};
+use crate::crypto::paillier::{ChaChaSource, Ciphertext, Keypair, PublicKey};
 use crate::crypto::rng::ChaChaRng;
 use crate::gc::backend::CountBackend;
-use crate::gc::channel::Channel;
-use crate::gc::exec::{GcProgram, GcSession};
+use crate::gc::exec::{ExecStats, GcProgram, GcSession};
 use crate::gc::word::FixedFmt;
 use crate::linalg::Matrix;
 
@@ -178,12 +179,65 @@ pub trait SecureFabric {
 // Real backend
 // ======================================================================
 
+/// The transport behind the two Center servers' garbled-circuit work.
+pub enum GcLink {
+    /// Both halves in this process: a [`GcSession`] over scoped threads
+    /// (in-memory queue or TCP loopback, depending on construction).
+    Local(GcSession),
+    /// The evaluator half is a remote `privlogit center-b` process
+    /// reached over TCP (see [`crate::mpc::peer`]).
+    Peer(PeerGcClient),
+}
+
+impl GcLink {
+    fn execute(
+        &mut self,
+        spec: &ProgSpec,
+        fmt: FixedFmt,
+        garbler_bits: &[bool],
+        evaluator_bits: &[bool],
+    ) -> (Vec<bool>, ExecStats) {
+        match self {
+            GcLink::Local(session) => {
+                execute_local(session, spec, fmt, garbler_bits, evaluator_bits)
+            }
+            GcLink::Peer(client) => client.execute(spec, fmt, garbler_bits, evaluator_bits),
+        }
+    }
+
+    /// Bytes that crossed the center link so far. Both accessors return
+    /// the *total over both directions* — `GcSession` sums its two
+    /// endpoints' sent (resp. received) counters, and every byte one
+    /// server sends the other receives, so sent-totals, received-totals
+    /// and the peer client's `sent + received` are all the same number.
+    fn bytes_transferred(&self) -> u64 {
+        match self {
+            GcLink::Local(session) => session.bytes_transferred(),
+            GcLink::Peer(client) => client.bytes_sent() + client.bytes_received(),
+        }
+    }
+
+    fn bytes_received(&self) -> u64 {
+        match self {
+            GcLink::Local(session) => session.bytes_received(),
+            GcLink::Peer(client) => client.bytes_sent() + client.bytes_received(),
+        }
+    }
+}
+
+/// Which center-link transport [`RealFabric::build`] should establish.
+enum LinkSpec<'a> {
+    Mem,
+    TcpLoopback,
+    Peer(&'a str),
+}
+
 /// Fully-executed backend: real Paillier, real OT, real garbling.
 pub struct RealFabric {
     fmt: FixedFmt,
     kp: Keypair,
     codec: FixedCodec,
-    session: GcSession,
+    link: GcLink,
     rng: ChaChaRng,
     ledger: CostLedger,
     net: CostModel,
@@ -194,7 +248,8 @@ impl RealFabric {
     /// Build a real fabric: generates the Paillier keypair (`modulus_bits`)
     /// and runs the GC base-OT phase over in-memory center channels.
     pub fn new(modulus_bits: usize, fmt: FixedFmt, seed: u64) -> Self {
-        Self::build(modulus_bits, fmt, seed, None)
+        Self::build(modulus_bits, fmt, seed, LinkSpec::Mem)
+            .expect("in-memory center link cannot fail")
     }
 
     /// Like [`RealFabric::new`], but the two Center servers talk over
@@ -206,39 +261,66 @@ impl RealFabric {
         fmt: FixedFmt,
         seed: u64,
     ) -> std::io::Result<Self> {
-        let (chan_g, chan_e) = crate::net::tcp::loopback_channel_pair()?;
-        Ok(Self::build(modulus_bits, fmt, seed, Some((chan_g, chan_e))))
+        Self::build(modulus_bits, fmt, seed, LinkSpec::TcpLoopback)
+    }
+
+    /// Like [`RealFabric::new`], but the GC evaluator (Center server S2)
+    /// is a remote `privlogit center-b` process at `addr` — the paper's
+    /// two-server Center as two genuinely separate OS processes.
+    pub fn connect_peer(
+        modulus_bits: usize,
+        fmt: FixedFmt,
+        seed: u64,
+        addr: &str,
+    ) -> std::io::Result<Self> {
+        Self::build(modulus_bits, fmt, seed, LinkSpec::Peer(addr))
     }
 
     fn build(
         modulus_bits: usize,
         fmt: FixedFmt,
         seed: u64,
-        center_link: Option<(Channel, Channel)>,
-    ) -> Self {
+        link: LinkSpec<'_>,
+    ) -> std::io::Result<Self> {
         let mut rng = ChaChaRng::from_u64_seed(seed);
         let t0 = Instant::now();
         let kp = Keypair::generate(modulus_bits, &mut rng);
         let codec = FixedCodec::new(kp.pk.n.clone(), fmt.f);
-        let (session, label) = match center_link {
-            None => (GcSession::new(seed ^ 0xFAB), "real (Paillier + garbled circuits)"),
-            Some((g, e)) => (
-                GcSession::over_channels(g, e, seed ^ 0xFAB),
-                "real (Paillier + garbled circuits; tcp center link)",
+        let (link, label) = match link {
+            LinkSpec::Mem => (
+                GcLink::Local(GcSession::new(seed ^ 0xFAB)),
+                "real (Paillier + garbled circuits)",
+            ),
+            LinkSpec::TcpLoopback => {
+                let (g, e) = crate::net::tcp::loopback_channel_pair()?;
+                (
+                    GcLink::Local(GcSession::over_channels(g, e, seed ^ 0xFAB)),
+                    "real (Paillier + garbled circuits; tcp center link)",
+                )
+            }
+            LinkSpec::Peer(addr) => (
+                GcLink::Peer(PeerGcClient::connect(addr, seed ^ 0xFAB)?),
+                "real (Paillier + garbled circuits; remote center-b peer)",
             ),
         };
         let mut ledger = CostLedger::default();
         ledger.setup_secs += t0.elapsed().as_secs_f64();
-        RealFabric {
+        Ok(RealFabric {
             fmt,
             kp,
             codec,
-            session,
+            link,
             rng,
             ledger,
             net: CostModel::load(CostModel::CALIBRATION_PATH),
             label,
-        }
+        })
+    }
+
+    /// The Paillier + fixed-point material node servers need to encrypt
+    /// their statistic replies themselves (`Fleet::install_key`).
+    pub fn fleet_key(&self) -> FleetKey {
+        FleetKey { n: self.kp.pk.n.clone(), w: self.fmt.w as u32, f: self.fmt.f }
     }
 
     fn bits_of_share(&self, v: u128) -> Vec<bool> {
@@ -273,20 +355,20 @@ impl RealFabric {
         }
     }
 
-    fn run_gc<P: GcProgram>(
+    fn run_gc(
         &mut self,
-        prog: &P,
+        spec: ProgSpec,
         garbler_bits: Vec<bool>,
         evaluator_bits: Vec<bool>,
     ) -> Vec<bool> {
-        let bytes0 = self.session.bytes_transferred();
-        let recv0 = self.session.bytes_received();
-        let (out, stats) = self.session.execute(prog, &garbler_bits, &evaluator_bits);
+        let bytes0 = self.link.bytes_transferred();
+        let recv0 = self.link.bytes_received();
+        let (out, stats) = self.link.execute(&spec, self.fmt, &garbler_bits, &evaluator_bits);
         self.ledger.center_secs += stats.wall;
         self.ledger.gc_ands += stats.ands;
         self.ledger.ot_bits += stats.ot_bits;
-        self.ledger.bytes += self.session.bytes_transferred() - bytes0;
-        self.ledger.bytes_recv += self.session.bytes_received() - recv0;
+        self.ledger.bytes += self.link.bytes_transferred() - bytes0;
+        self.ledger.bytes_recv += self.link.bytes_received() - recv0;
         self.ledger.rounds += 2;
         out
     }
@@ -419,7 +501,6 @@ impl SecureFabric for RealFabric {
     }
 
     fn newton_step(&mut self, h_tri: &SecVec, g: &SecVec, p: usize) -> Vec<f64> {
-        let prog = NewtonStepProg { p, fmt: self.fmt };
         let h = self.expect_shares(h_tri);
         let gv = self.expect_shares(g);
         let mut ga = Vec::new();
@@ -428,12 +509,11 @@ impl SecureFabric for RealFabric {
             ga.extend(self.bits_of_share(s.a));
             ea.extend(self.bits_of_share(s.b));
         }
-        let out = self.run_gc(&prog, ga, ea);
+        let out = self.run_gc(ProgSpec::Newton { p }, ga, ea);
         self.decode_out_words(&out)
     }
 
     fn cholesky_shares(&mut self, h_tri: &SecVec, p: usize) -> SecVec {
-        let prog = CholeskyShareProg { p, fmt: self.fmt };
         let h = self.expect_shares(h_tri).to_vec();
         let nh = tri_len(p);
         let w = self.fmt.w;
@@ -450,7 +530,7 @@ impl SecureFabric for RealFabric {
         for &m in &masks {
             ga.extend(self.bits_of_share(m));
         }
-        let out = self.run_gc(&prog, ga, ea);
+        let out = self.run_gc(ProgSpec::CholeskyShare { p }, ga, ea);
         let shares = out
             .chunks(w)
             .zip(&masks)
@@ -468,7 +548,6 @@ impl SecureFabric for RealFabric {
     }
 
     fn solve_reveal(&mut self, l_tri: &SecVec, g: &SecVec, p: usize) -> Vec<f64> {
-        let prog = SolveProg { p, fmt: self.fmt };
         let l = self.expect_shares(l_tri);
         let gv = self.expect_shares(g);
         let mut ga = Vec::new();
@@ -477,13 +556,12 @@ impl SecureFabric for RealFabric {
             ga.extend(self.bits_of_share(s.a));
             ea.extend(self.bits_of_share(s.b));
         }
-        let out = self.run_gc(&prog, ga, ea);
+        let out = self.run_gc(ProgSpec::Solve { p }, ga, ea);
         self.decode_out_words(&out)
     }
 
     fn inverse_to_enc(&mut self, h_tri: &SecVec, p: usize) -> EncMat {
-        let prog = InverseMaskedProg { p, fmt: self.fmt };
-        let wide = prog.wide();
+        let wide = InverseMaskedProg { p, fmt: self.fmt }.wide();
         let h = self.expect_shares(h_tri).to_vec();
         let nh = tri_len(p);
         let w = self.fmt.w;
@@ -503,7 +581,7 @@ impl SecureFabric for RealFabric {
         for &m in &masks {
             ga.extend((0..w + SIGMA).map(|i| (m >> i) & 1 == 1));
         }
-        let out = self.run_gc(&prog, ga, ea);
+        let out = self.run_gc(ProgSpec::InverseMasked { p }, ga, ea);
         // S2: assemble wide masked integers, encrypt; subtract Enc(C + r).
         let t0 = Instant::now();
         let lift = BigUint::one().shl(w - 1);
@@ -538,14 +616,13 @@ impl SecureFabric for RealFabric {
     }
 
     fn converged(&mut self, l_new: &SecVec, l_old: &SecVec, tol: f64) -> bool {
-        let prog = ConvergedProg { fmt: self.fmt, tol };
         let ln = self.expect_shares(l_new)[0];
         let lo = self.expect_shares(l_old)[0];
         let mut ga = self.bits_of_share(ln.a);
         ga.extend(self.bits_of_share(lo.a));
         let mut ea = self.bits_of_share(ln.b);
         ea.extend(self.bits_of_share(lo.b));
-        let out = self.run_gc(&prog, ga, ea);
+        let out = self.run_gc(ProgSpec::Converged { tol }, ga, ea);
         out[0]
     }
 
@@ -563,24 +640,32 @@ impl SecureFabric for RealFabric {
     }
 }
 
-/// Shared implementation of `Enc(H̃⁻¹) ⊗ v` (node or center attribution
-/// is handled by the caller). Uses signed small-exponent scalar
-/// multiplication — the cheap primitive PL-Local is built on.
-fn apply_hinv_real(fab: &mut RealFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
-    let p = hinv.p;
+/// `Enc(H̃⁻¹) ⊗ v` over raw ciphertexts: multiply-by-(small signed)
+/// constant rows — the cheap primitive PrivLogit-Local is built on.
+/// Shared by the center-side fabric and [`crate::net::NodeServer`],
+/// which performs it locally in the deployed topology (Alg. 3 step 7).
+///
+/// Returns the `p` row ciphertexts (scale `2f`) plus the scalar-op and
+/// homomorphic-addition counts for ledger attribution.
+pub fn apply_hinv_cts(
+    pk: &PublicKey,
+    fmt: FixedFmt,
+    p: usize,
+    tri: &[Ciphertext],
+    v: &[f64],
+) -> (Vec<Ciphertext>, u64, u64) {
     assert_eq!(v.len(), p);
-    let tri = match &hinv.tri.data {
-        EncData::Real(c) => c,
-        _ => panic!("model EncMat in RealFabric"),
-    };
-    let pk = &fab.kp.pk;
-    let fmt = fab.fmt;
+    assert_eq!(tri.len(), tri_len(p));
     let mut rows: Vec<Option<Ciphertext>> = vec![None; p];
     let mut scalar_ops = 0u64;
     let mut adds = 0u64;
     for i in 0..p {
         for j in 0..p {
-            let idx = if i >= j { super::circuits::tri_idx(i, j) } else { super::circuits::tri_idx(j, i) };
+            let idx = if i >= j {
+                super::circuits::tri_idx(i, j)
+            } else {
+                super::circuits::tri_idx(j, i)
+            };
             let raw = fmt.encode(v[j]); // small signed constant (≤ w bits)
             if raw == 0 {
                 continue;
@@ -597,7 +682,20 @@ fn apply_hinv_real(fab: &mut RealFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
         }
     }
     let zero = pk.encrypt_trivial(&BigUint::zero());
-    let cts: Vec<Ciphertext> = rows.into_iter().map(|r| r.unwrap_or_else(|| zero.clone())).collect();
+    let cts: Vec<Ciphertext> =
+        rows.into_iter().map(|r| r.unwrap_or_else(|| zero.clone())).collect();
+    (cts, scalar_ops, adds)
+}
+
+/// Fabric-side wrapper over [`apply_hinv_cts`] (node or center time
+/// attribution is handled by the caller).
+fn apply_hinv_real(fab: &mut RealFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
+    let tri = match &hinv.tri.data {
+        EncData::Real(c) => c,
+        _ => panic!("model EncMat in RealFabric"),
+    };
+    let fmt = fab.fmt;
+    let (cts, scalar_ops, adds) = apply_hinv_cts(&fab.kp.pk, fmt, hinv.p, tri, v);
     fab.ledger.paillier_scalar += scalar_ops;
     fab.ledger.paillier_adds += adds;
     let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();

@@ -9,12 +9,17 @@
 //!   as garbled programs ([`circuits`]);
 //! * the [`fabric::SecureFabric`] facade with a fully-executed backend
 //!   ([`fabric::RealFabric`]) and a calibrated cost-model backend
-//!   ([`fabric::ModelFabric`]) for paper-scale sweeps ([`costmodel`]).
+//!   ([`fabric::ModelFabric`]) for paper-scale sweeps ([`costmodel`]);
+//! * the two Center servers as separate OS processes ([`peer`]): a
+//!   serializable program spec plus garbler-client / evaluator-server
+//!   halves behind `privlogit center-a` / `center-b`.
 
 pub mod circuits;
 pub mod costmodel;
 pub mod fabric;
+pub mod peer;
 
 pub use circuits::{tri_idx, tri_len};
 pub use costmodel::{CostLedger, CostModel};
 pub use fabric::{EncData, EncMat, EncVec, ModelFabric, RealFabric, SecVec, SecureFabric, Shared};
+pub use peer::{PeerGcClient, PeerGcServer, ProgSpec};

@@ -1,0 +1,464 @@
+//! The two Center servers as separate OS processes.
+//!
+//! The paper's Figure 1 deploys the Center as *two mutually untrusting
+//! servers*: S1 garbles and holds the Paillier key, S2 evaluates and
+//! aggregates. In-process they are the two halves of
+//! [`GcSession::execute`](crate::gc::exec::GcSession) running on scoped
+//! threads; this module puts the evaluator half behind a real TCP
+//! endpoint so `privlogit center-a` (garbler + protocol driver) and
+//! `privlogit center-b` (evaluator) run as genuinely separate processes:
+//!
+//! * [`ProgSpec`] — a serializable description of the five garbled
+//!   programs ([`crate::mpc::circuits`]), so center-b can reconstruct
+//!   the exact circuit center-a is about to garble (garbling is
+//!   streamed; both sides must walk the same deterministic program).
+//! * [`PeerGcClient`] — center-a's end: sends a
+//!   [`WireMsg::GcExec`] control frame, runs
+//!   [`run_garbler`](crate::gc::exec::run_garbler) over the same
+//!   channel, then reads the [`WireMsg::GcOut`] output bits.
+//! * [`PeerGcServer`] — center-b's end: answers each `GcExec` by running
+//!   [`run_evaluator`](crate::gc::exec::run_evaluator) and returning the
+//!   decoded output bits.
+//!
+//! Everything — control frames, garbled tables, OT extension, decode
+//! bits — crosses one framed, CRC-checked TCP connection (handshake role
+//! [`wire::ROLE_PEER`]). Control frames travel as length-prefixed
+//! [`Channel`] blobs, and the two phases strictly alternate, so the byte
+//! stream never desynchronizes.
+//!
+//! Honest scope note (see `docs/ARCHITECTURE.md`): this splits the GC
+//! *transport and execution* across processes. The protocol driver in
+//! center-a still computes both servers' additive shares and ships
+//! center-b its evaluator inputs, exactly as the in-process simulation
+//! does — custody of the shares is not yet split.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::time::{Duration, Instant};
+
+use super::circuits::{
+    CholeskyShareProg, ConvergedProg, InverseMaskedProg, NewtonStepProg, SolveProg,
+};
+use crate::crypto::rng::ChaChaRng;
+use crate::gc::channel::Channel;
+use crate::gc::exec::{run_evaluator, run_garbler, ExecStats, GcSession};
+use crate::gc::ot::{OtReceiver, OtSender};
+use crate::gc::word::FixedFmt;
+use crate::net::tcp::{tcp_channel, TcpTransport};
+use crate::net::wire::{self, WireMsg};
+
+/// How long [`PeerGcClient::connect`] retries the center-b address
+/// (covers start-up ordering between the two center processes).
+pub const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A wire-serializable description of one garbled program — everything
+/// center-b needs to reconstruct the circuit (`fmt` travels separately
+/// in the [`WireMsg::GcExec`] frame).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProgSpec {
+    /// Full Newton step: Cholesky + solve, Δ revealed.
+    Newton {
+        /// Dimensionality.
+        p: usize,
+    },
+    /// Cholesky with re-shared (masked) output.
+    CholeskyShare {
+        /// Dimensionality.
+        p: usize,
+    },
+    /// Back-substitution on shared `L`, Δ revealed.
+    Solve {
+        /// Dimensionality.
+        p: usize,
+    },
+    /// `H⁻¹` with Paillier-ready masked wide reveal.
+    InverseMasked {
+        /// Dimensionality.
+        p: usize,
+    },
+    /// Single-bit relative-convergence check.
+    Converged {
+        /// Relative tolerance.
+        tol: f64,
+    },
+}
+
+impl ProgSpec {
+    /// Wire kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            ProgSpec::Newton { .. } => 1,
+            ProgSpec::CholeskyShare { .. } => 2,
+            ProgSpec::Solve { .. } => 3,
+            ProgSpec::InverseMasked { .. } => 4,
+            ProgSpec::Converged { .. } => 5,
+        }
+    }
+
+    /// Dimensionality parameter (0 for the convergence check).
+    pub fn p(&self) -> usize {
+        match *self {
+            ProgSpec::Newton { p }
+            | ProgSpec::CholeskyShare { p }
+            | ProgSpec::Solve { p }
+            | ProgSpec::InverseMasked { p } => p,
+            ProgSpec::Converged { .. } => 0,
+        }
+    }
+
+    /// Tolerance parameter (0 except for the convergence check).
+    pub fn tol(&self) -> f64 {
+        match *self {
+            ProgSpec::Converged { tol } => tol,
+            _ => 0.0,
+        }
+    }
+
+    /// Rebuild from wire parts; `None` for an unknown kind byte.
+    pub fn from_parts(kind: u8, p: usize, tol: f64) -> Option<ProgSpec> {
+        match kind {
+            1 => Some(ProgSpec::Newton { p }),
+            2 => Some(ProgSpec::CholeskyShare { p }),
+            3 => Some(ProgSpec::Solve { p }),
+            4 => Some(ProgSpec::InverseMasked { p }),
+            5 => Some(ProgSpec::Converged { tol }),
+            _ => None,
+        }
+    }
+}
+
+/// Run the garbler half for `spec` (monomorphized dispatch over the five
+/// concrete programs).
+fn garble_spec(
+    spec: &ProgSpec,
+    fmt: FixedFmt,
+    chan: &mut Channel,
+    ot: &mut OtSender,
+    bits: &[bool],
+    exec_seed: u64,
+    gate_ctr: u64,
+) -> (u64, u64) {
+    match *spec {
+        ProgSpec::Newton { p } => {
+            run_garbler(chan, ot, &NewtonStepProg { p, fmt }, bits, exec_seed, gate_ctr)
+        }
+        ProgSpec::CholeskyShare { p } => {
+            run_garbler(chan, ot, &CholeskyShareProg { p, fmt }, bits, exec_seed, gate_ctr)
+        }
+        ProgSpec::Solve { p } => {
+            run_garbler(chan, ot, &SolveProg { p, fmt }, bits, exec_seed, gate_ctr)
+        }
+        ProgSpec::InverseMasked { p } => {
+            run_garbler(chan, ot, &InverseMaskedProg { p, fmt }, bits, exec_seed, gate_ctr)
+        }
+        ProgSpec::Converged { tol } => {
+            run_garbler(chan, ot, &ConvergedProg { fmt, tol }, bits, exec_seed, gate_ctr)
+        }
+    }
+}
+
+/// Run the evaluator half for `spec` (center-b side of [`garble_spec`]).
+fn evaluate_spec(
+    spec: &ProgSpec,
+    fmt: FixedFmt,
+    chan: &mut Channel,
+    ot: &mut OtReceiver,
+    bits: &[bool],
+    gate_ctr: u64,
+) -> (Vec<bool>, u64) {
+    match *spec {
+        ProgSpec::Newton { p } => {
+            run_evaluator(chan, ot, &NewtonStepProg { p, fmt }, bits, gate_ctr)
+        }
+        ProgSpec::CholeskyShare { p } => {
+            run_evaluator(chan, ot, &CholeskyShareProg { p, fmt }, bits, gate_ctr)
+        }
+        ProgSpec::Solve { p } => {
+            run_evaluator(chan, ot, &SolveProg { p, fmt }, bits, gate_ctr)
+        }
+        ProgSpec::InverseMasked { p } => {
+            run_evaluator(chan, ot, &InverseMaskedProg { p, fmt }, bits, gate_ctr)
+        }
+        ProgSpec::Converged { tol } => {
+            run_evaluator(chan, ot, &ConvergedProg { fmt, tol }, bits, gate_ctr)
+        }
+    }
+}
+
+/// Execute `spec` on an in-process [`GcSession`] (both halves on scoped
+/// threads) — the [`ProgSpec`]-dispatch twin of [`PeerGcClient::execute`]
+/// used by the single-process and loopback center links.
+pub fn execute_local(
+    session: &mut GcSession,
+    spec: &ProgSpec,
+    fmt: FixedFmt,
+    garbler_bits: &[bool],
+    evaluator_bits: &[bool],
+) -> (Vec<bool>, ExecStats) {
+    match *spec {
+        ProgSpec::Newton { p } => {
+            session.execute(&NewtonStepProg { p, fmt }, garbler_bits, evaluator_bits)
+        }
+        ProgSpec::CholeskyShare { p } => {
+            session.execute(&CholeskyShareProg { p, fmt }, garbler_bits, evaluator_bits)
+        }
+        ProgSpec::Solve { p } => {
+            session.execute(&SolveProg { p, fmt }, garbler_bits, evaluator_bits)
+        }
+        ProgSpec::InverseMasked { p } => {
+            session.execute(&InverseMaskedProg { p, fmt }, garbler_bits, evaluator_bits)
+        }
+        ProgSpec::Converged { tol } => {
+            session.execute(&ConvergedProg { fmt, tol }, garbler_bits, evaluator_bits)
+        }
+    }
+}
+
+/// Center-a's connection to a remote center-b evaluator: the garbler's
+/// persistent state (base OTs done once at connect) plus the shared
+/// AND-gate counter both processes advance in lockstep.
+pub struct PeerGcClient {
+    chan: Channel,
+    ot_send: OtSender,
+    gate_ctr: u64,
+    rng_seed: u64,
+    execs: u64,
+}
+
+impl PeerGcClient {
+    /// Connect to a `privlogit center-b` at `addr` (retrying for up to
+    /// [`PEER_CONNECT_TIMEOUT`]) and run the IKNP base-OT phase.
+    pub fn connect(addr: &str, seed: u64) -> io::Result<PeerGcClient> {
+        let transport =
+            TcpTransport::connect_retry(addr, wire::ROLE_PEER, PEER_CONNECT_TIMEOUT)?;
+        let mut chan = tcp_channel(transport);
+        let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x5e55_1011);
+        let ot_send = OtSender::setup(&mut chan, &mut rng);
+        Ok(PeerGcClient { chan, ot_send, gate_ctr: 0, rng_seed: seed, execs: 0 })
+    }
+
+    /// Execute one garbled program against the remote evaluator; returns
+    /// the output bits (decoded on center-b, returned in the
+    /// [`WireMsg::GcOut`] control frame) and execution stats.
+    ///
+    /// Panics if center-b vanishes mid-program — the same loud-failure
+    /// contract as every [`Channel`] user; `privlogit center-a` converts
+    /// it into a clean CLI error at the top level.
+    pub fn execute(
+        &mut self,
+        spec: &ProgSpec,
+        fmt: FixedFmt,
+        garbler_bits: &[bool],
+        evaluator_bits: &[bool],
+    ) -> (Vec<bool>, ExecStats) {
+        let t0 = Instant::now();
+        self.execs += 1;
+        let exec_seed = self.rng_seed ^ self.execs.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let exec = WireMsg::GcExec {
+            prog: spec.kind(),
+            p: spec.p() as u32,
+            w: fmt.w as u32,
+            f: fmt.f,
+            tol: spec.tol(),
+            gate_ctr: self.gate_ctr,
+            eval_bits: evaluator_bits.to_vec(),
+        };
+        self.chan.send_blob(&exec.encode());
+        let (new_ctr, ands) = garble_spec(
+            spec,
+            fmt,
+            &mut self.chan,
+            &mut self.ot_send,
+            garbler_bits,
+            exec_seed,
+            self.gate_ctr,
+        );
+        self.gate_ctr = new_ctr;
+        let reply = self.chan.try_recv_blob().expect("center-b peer hung up mid-program");
+        let bits = match WireMsg::decode(&reply) {
+            Ok(WireMsg::GcOut { bits }) => bits,
+            Ok(other) => panic!("center-b sent {other:?} where GcOut was expected"),
+            Err(e) => panic!("center-b sent an undecodable control frame: {e}"),
+        };
+        let stats = ExecStats {
+            ands,
+            ot_bits: evaluator_bits.len() as u64,
+            wall: t0.elapsed().as_secs_f64(),
+        };
+        (bits, stats)
+    }
+
+    /// Bytes sent to center-b so far (control + labels + tables + OT).
+    pub fn bytes_sent(&self) -> u64 {
+        self.chan.stats().snapshot().0
+    }
+
+    /// Bytes received from center-b so far (OT columns + output frames).
+    pub fn bytes_received(&self) -> u64 {
+        self.chan.stats().snapshot_recv().0
+    }
+}
+
+impl Drop for PeerGcClient {
+    fn drop(&mut self) {
+        // Best-effort: let center-b exit its session loop cleanly. The
+        // channel panics if the peer is already gone; a panic here (or
+        // during unwind) must not abort the process.
+        let chan = &mut self.chan;
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            chan.send_blob(&WireMsg::Shutdown.encode());
+        }));
+    }
+}
+
+/// The center-b process: a listening GC evaluator server. Each accepted
+/// center-a connection gets a fresh OT session and is served to
+/// completion (`Shutdown` or disconnect).
+pub struct PeerGcServer {
+    listener: TcpListener,
+    seed: u64,
+}
+
+impl PeerGcServer {
+    /// Bind to `addr` (port 0 for an ephemeral port). `seed` drives this
+    /// server's own randomness (base-OT messages).
+    pub fn bind(addr: &str, seed: u64) -> io::Result<PeerGcServer> {
+        Ok(PeerGcServer { listener: TcpListener::bind(addr)?, seed })
+    }
+
+    /// The bound address (useful with ephemeral ports).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept one center-a connection and serve it to completion.
+    pub fn serve_once(&mut self) -> io::Result<()> {
+        let (stream, _) = self.listener.accept()?;
+        let transport = TcpTransport::accept(stream, wire::ROLE_PEER)?;
+        self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        serve_session(tcp_channel(transport), self.seed)
+    }
+
+    /// Serve center-a connections forever (one at a time). A failed
+    /// *session* is logged and the next connection awaited; a failed
+    /// *accept* means the listener itself is broken and is propagated.
+    pub fn serve_forever(&mut self) -> io::Result<()> {
+        loop {
+            let (stream, _) = self.listener.accept()?;
+            self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let seed = self.seed;
+            let session = TcpTransport::accept(stream, wire::ROLE_PEER)
+                .map(tcp_channel)
+                .and_then(|chan| serve_session(chan, seed));
+            if let Err(e) = session {
+                eprintln!("center-b session ended with error: {e}");
+            }
+        }
+    }
+}
+
+/// Answer [`WireMsg::GcExec`] frames on one established center-a
+/// connection until `Shutdown` or disconnect.
+fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
+    let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x0e1e_2021);
+    let mut ot_recv = OtReceiver::setup(&mut chan, &mut rng);
+    loop {
+        let blob = match chan.try_recv_blob() {
+            Ok(b) => b,
+            // EOF at a control boundary: center-a exited; orderly end.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::UnexpectedEof
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                return Ok(())
+            }
+            Err(e) => return Err(e),
+        };
+        match WireMsg::decode(&blob).map_err(io::Error::from)? {
+            WireMsg::Shutdown => return Ok(()),
+            WireMsg::GcExec { prog, p, w, f, tol, gate_ctr, eval_bits } => {
+                let fmt = FixedFmt { w: w as usize, f };
+                let spec = ProgSpec::from_parts(prog, p as usize, tol).ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("unknown garbled-program kind {prog:#04x}"),
+                    )
+                })?;
+                let (bits, _ands) =
+                    evaluate_spec(&spec, fmt, &mut chan, &mut ot_recv, &eval_bits, gate_ctr);
+                chan.send_blob(&WireMsg::GcOut { bits }.encode());
+            }
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("center-a sent {other:?}, which center-b does not serve"),
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::backend::PlainBackend;
+    use crate::gc::exec::GcProgram;
+    use crate::mpc::circuits::tri_len;
+    use crate::mpc::fabric::share_vec;
+
+    const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+    /// Split-process GC (client garbler ↔ server evaluator over real
+    /// loopback TCP) must produce bit-identical outputs to the plain
+    /// backend oracle, across repeated executions on one session.
+    #[test]
+    fn peer_client_server_matches_plain_backend() {
+        let mut server = PeerGcServer::bind("127.0.0.1:0", 7).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve_once().unwrap());
+
+        let mut client = PeerGcClient::connect(&addr, 41).unwrap();
+        let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(9);
+        let p = 3;
+
+        for trial in 0..2 {
+            // A well-conditioned SPD matrix and gradient, as shares.
+            let mut tri = Vec::new();
+            for i in 0..p {
+                for j in 0..=i {
+                    tri.push(if i == j { 2.0 + i as f64 } else { 0.25 });
+                }
+            }
+            let g = vec![1.0, -0.5, 0.25];
+            let h_shares = share_vec(FMT, &tri, &mut rng);
+            let g_shares = share_vec(FMT, &g, &mut rng);
+            let mut ga = Vec::new();
+            let mut ea = Vec::new();
+            for s in h_shares.iter().chain(&g_shares) {
+                for i in 0..FMT.w {
+                    ga.push((s.a >> i) & 1 == 1);
+                    ea.push((s.b >> i) & 1 == 1);
+                }
+            }
+            let spec = ProgSpec::Newton { p };
+            let (bits, stats) = client.execute(&spec, FMT, &ga, &ea);
+            assert!(stats.ands > 0, "trial {trial}: gates streamed");
+
+            // Plain-backend oracle over the same inputs.
+            let prog = NewtonStepProg { p, fmt: FMT };
+            let mut pb = PlainBackend;
+            let expect = prog.run(&mut pb, &ga, &ea);
+            assert_eq!(bits, expect, "trial {trial}: remote GC != plain backend");
+            assert_eq!(bits.len(), p * FMT.w);
+            assert_eq!(tri.len(), tri_len(p));
+        }
+
+        assert!(client.bytes_sent() > 0 && client.bytes_received() > 0);
+        drop(client); // sends Shutdown; server exits cleanly
+        server_thread.join().unwrap();
+    }
+}

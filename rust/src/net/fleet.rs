@@ -8,16 +8,32 @@
 //! seconds, so the ledger's parallel-round accounting stays exact across
 //! machine boundaries (network time is measured separately, from the
 //! wire byte counters and round structure).
+//!
+//! After [`Fleet::install_key`] the node servers hold the Center's
+//! Paillier public key and encrypt every statistic reply themselves:
+//! only [`WireMsg::Ciphertexts`] payloads cross the fleet wire, matching
+//! the paper's threat model (the Center never sees node plaintext). The
+//! per-connection wire-tag census ([`RemoteFleet::reply_tag_counts`])
+//! lets tests *prove* that no plaintext statistic reply ever crossed.
+//!
+//! A node that fails mid-protocol surfaces as a clean `Err` from the
+//! round — the [`Fleet`] contract threads `Result` all the way to the
+//! CLI, so `privlogit center` exits with a message naming the node
+//! instead of panicking.
 
+use std::collections::BTreeMap;
 use std::io;
 use std::time::Duration;
 
 use super::tcp::TcpTransport;
 use super::wire::{self, WireMsg};
 use super::Transport;
-use crate::coordinator::fleet::{Fleet, FleetNet, NodeReply};
+use crate::coordinator::fleet::{
+    EncStat, Fleet, FleetKey, FleetNet, NodePayload, NodeReply, StepReply,
+};
 
-/// One persistent connection to a node server, with wire counters.
+/// One persistent connection to a node server, with wire counters and a
+/// census of reply tag bytes (used to assert the ciphertext-only wire).
 struct NodeConn {
     addr: String,
     transport: TcpTransport,
@@ -25,34 +41,89 @@ struct NodeConn {
     bytes_recv: u64,
     msgs_sent: u64,
     msgs_recv: u64,
+    reply_tags: BTreeMap<u8, u64>,
+    /// Set once the key is installed: from then on a plaintext
+    /// statistic reply is a protocol violation, not a fallback.
+    require_enc: bool,
 }
 
 /// Frame overhead per message: u32 length prefix + u32 CRC.
 const FRAME_OVERHEAD: u64 = 8;
 
 impl NodeConn {
-    /// One request/reply exchange, counting framed bytes both directions.
-    fn exchange(&mut self, req: &WireMsg) -> io::Result<WireMsg> {
+    fn send(&mut self, req: &WireMsg) -> io::Result<()> {
         let body = req.encode();
         self.bytes_sent += body.len() as u64 + FRAME_OVERHEAD;
         self.msgs_sent += 1;
-        self.transport.send_msg(body)?;
+        self.transport.send_msg(body)
+    }
+
+    fn recv(&mut self) -> io::Result<WireMsg> {
         let reply = self.transport.recv_msg()?;
         self.bytes_recv += reply.len() as u64 + FRAME_OVERHEAD;
         self.msgs_recv += 1;
+        if let Some(&tag) = reply.first() {
+            *self.reply_tags.entry(tag).or_insert(0) += 1;
+        }
         Ok(WireMsg::decode(&reply)?)
     }
 
-    fn expect_node_reply(&mut self, req: &WireMsg) -> io::Result<NodeReply> {
+    /// One request/reply exchange, counting framed bytes both directions.
+    fn exchange(&mut self, req: &WireMsg) -> io::Result<WireMsg> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// A statistic reply in either form: plaintext (no key installed) or
+    /// node-encrypted ciphertexts. After the key install, a plaintext
+    /// reply is rejected — the ciphertext-only wire is enforced, not
+    /// just observed.
+    fn expect_stat_reply(&mut self, req: &WireMsg) -> io::Result<NodeReply> {
         match self.exchange(req)? {
+            WireMsg::NodeReply { .. } if self.require_enc => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "node downgraded to a plaintext statistic after the key install",
+            )),
             WireMsg::NodeReply { values, loglik, secs } => {
-                Ok(NodeReply { values, loglik, secs })
+                Ok(NodeReply { payload: NodePayload::Plain { values, loglik }, secs })
+            }
+            WireMsg::Ciphertexts { scale, secs, cts } => {
+                Ok(NodeReply { payload: NodePayload::Enc(EncStat { scale, cts }), secs })
             }
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("node sent {other:?} where a statistic reply was expected"),
             )),
         }
+    }
+
+    fn expect_ciphertexts(&mut self) -> io::Result<(EncStat, f64)> {
+        match self.recv()? {
+            WireMsg::Ciphertexts { scale, secs, cts } => Ok((EncStat { scale, cts }, secs)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("node sent {other:?} where ciphertexts were expected"),
+            )),
+        }
+    }
+
+    fn expect_ack(&mut self, req: &WireMsg) -> io::Result<()> {
+        match self.exchange(req)? {
+            WireMsg::Ack => Ok(()),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("node sent {other:?} where an acknowledgement was expected"),
+            )),
+        }
+    }
+
+    /// One step round: `StepReq` out, two `Ciphertexts` frames back
+    /// (partial step, then log-likelihood).
+    fn expect_step_reply(&mut self, req: &WireMsg) -> io::Result<StepReply> {
+        self.send(req)?;
+        let (part, secs) = self.expect_ciphertexts()?;
+        let (loglik, _) = self.expect_ciphertexts()?;
+        Ok(StepReply { part, loglik, secs })
     }
 }
 
@@ -63,6 +134,7 @@ pub struct RemoteFleet {
     n_total: usize,
     p: usize,
     name: String,
+    encrypted: bool,
 }
 
 /// How long `connect` keeps retrying each node address before giving up
@@ -89,6 +161,8 @@ impl RemoteFleet {
                 bytes_recv: 0,
                 msgs_sent: 0,
                 msgs_recv: 0,
+                reply_tags: BTreeMap::new(),
+                require_enc: false,
             };
             match conn.exchange(&WireMsg::MetaReq)? {
                 WireMsg::Meta { n, p: node_p, name: node_name } => {
@@ -108,37 +182,54 @@ impl RemoteFleet {
             }
             conns.push(conn);
         }
-        Ok(RemoteFleet { conns, n_total, p, name })
+        Ok(RemoteFleet { conns, n_total, p, name, encrypted: false })
     }
 
     /// Broadcast one request to every node concurrently and collect the
-    /// replies in node order.
-    ///
-    /// A node that fails mid-protocol aborts the run with a message
-    /// naming the node — the [`Fleet`] contract has no error channel
-    /// (in-process fleets can only fail on program bugs), so a dropped
-    /// TCP peer cannot yet be surfaced as a clean `Err`; threading
-    /// `Result` through `Fleet` is on the roadmap.
-    fn round(&mut self, req: WireMsg) -> Vec<NodeReply> {
-        std::thread::scope(|s| {
+    /// per-node results in node order; any node's failure aborts the
+    /// round with an error naming that node.
+    fn round_with<T: Send>(
+        &mut self,
+        per_node: impl Fn(&mut NodeConn) -> io::Result<T> + Sync,
+    ) -> anyhow::Result<Vec<T>> {
+        let per_node = &per_node;
+        let results: Vec<(String, io::Result<T>)> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .conns
                 .iter_mut()
-                .map(|c| {
-                    let req = req.clone();
-                    s.spawn(move || (c.addr.clone(), c.expect_node_reply(&req)))
-                })
+                .map(|c| s.spawn(move || (c.addr.clone(), per_node(c))))
                 .collect();
             handles
                 .into_iter()
-                .map(|h| {
-                    let (addr, reply) = h.join().expect("node round thread");
-                    reply.unwrap_or_else(|e| {
-                        panic!("node server {addr} failed mid-protocol: {e}")
-                    })
+                .map(|h| match h.join() {
+                    Ok(pair) => pair,
+                    Err(_) => (
+                        "?".to_string(),
+                        Err(io::Error::new(io::ErrorKind::Other, "node round worker panicked")),
+                    ),
                 })
                 .collect()
-        })
+        });
+        results
+            .into_iter()
+            .map(|(addr, r)| {
+                r.map_err(|e| anyhow::anyhow!("node server {addr} failed mid-protocol: {e}"))
+            })
+            .collect()
+    }
+
+    /// Census of reply tag bytes received from the nodes, merged across
+    /// connections (tag byte → count). With node-side encryption
+    /// installed, `wire::TAG_NODE_REPLY` must never appear — the
+    /// assertion the ciphertext-only integration test makes.
+    pub fn reply_tag_counts(&self) -> BTreeMap<u8, u64> {
+        let mut out = BTreeMap::new();
+        for c in &self.conns {
+            for (&tag, &count) in &c.reply_tags {
+                *out.entry(tag).or_insert(0) += count;
+            }
+        }
+        out
     }
 }
 
@@ -156,20 +247,28 @@ impl Fleet for RemoteFleet {
         self.name.clone()
     }
 
-    fn stats(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
-        self.round(WireMsg::StatsReq { beta: beta.to_vec(), scale })
+    fn stats(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
+        let req = WireMsg::StatsReq { beta: beta.to_vec(), scale };
+        self.round_with(|c| c.expect_stat_reply(&req))
     }
 
-    fn gram(&mut self, scale: f64) -> Vec<NodeReply> {
-        self.round(WireMsg::GramReq { scale })
+    fn gram(&mut self, scale: f64) -> anyhow::Result<Vec<NodeReply>> {
+        let req = WireMsg::GramReq { scale };
+        self.round_with(|c| c.expect_stat_reply(&req))
     }
 
-    fn hessian(&mut self, beta: &[f64], scale: f64) -> Vec<NodeReply> {
-        self.round(WireMsg::HessReq { beta: beta.to_vec(), scale })
+    fn hessian(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
+        let req = WireMsg::HessReq { beta: beta.to_vec(), scale };
+        self.round_with(|c| c.expect_stat_reply(&req))
     }
 
     fn label(&self) -> String {
-        format!("remote fleet ({} node servers over tcp)", self.conns.len())
+        let mode = if self.encrypted {
+            "node-side encryption"
+        } else {
+            "plaintext statistics"
+        };
+        format!("remote fleet ({} node servers over tcp; {mode})", self.conns.len())
     }
 
     fn net_stats(&self) -> FleetNet {
@@ -181,6 +280,34 @@ impl Fleet for RemoteFleet {
             net.msgs_recv += c.msgs_recv;
         }
         net
+    }
+
+    fn install_key(&mut self, key: &FleetKey) -> anyhow::Result<bool> {
+        let req = WireMsg::SetKey { n: key.n.clone(), w: key.w, f: key.f };
+        self.round_with(|c| {
+            c.expect_ack(&req)?;
+            c.require_enc = true;
+            Ok(())
+        })?;
+        self.encrypted = true;
+        Ok(true)
+    }
+
+    fn nodes_encrypt(&self) -> bool {
+        self.encrypted
+    }
+
+    fn install_hinv(&mut self, hinv: &EncStat) -> anyhow::Result<()> {
+        anyhow::ensure!(self.encrypted, "install the Paillier key before Enc(H̃⁻¹)");
+        let req = WireMsg::SetHinv { scale: hinv.scale, cts: hinv.cts.clone() };
+        self.round_with(|c| c.expect_ack(&req))?;
+        Ok(())
+    }
+
+    fn step(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<StepReply>> {
+        anyhow::ensure!(self.encrypted, "step rounds need node-side encryption installed");
+        let req = WireMsg::StepReq { beta: beta.to_vec(), scale };
+        self.round_with(|c| c.expect_step_reply(&req))
     }
 }
 

@@ -23,18 +23,29 @@
 //!   one data partition and answers statistic requests
 //!   (`privlogit node --listen …`).
 //!
-//! The CLI wires these together (`privlogit node`, `privlogit center`);
-//! see `docs/DEPLOY.md` for invocation lines and
-//! `examples/distributed_loopback.rs` for a self-contained loopback run.
+//! The CLI wires these together (`privlogit node`, `privlogit center`,
+//! and the split two-server center `privlogit center-a`/`center-b` —
+//! the peer half lives in [`crate::mpc::peer`]); see `docs/DEPLOY.md`
+//! for invocation lines, `docs/ARCHITECTURE.md` for the wire-protocol
+//! reference, and `examples/distributed_loopback.rs` for a
+//! self-contained loopback run.
 //!
-//! Privacy note: as with [`LocalFleet`](crate::coordinator::fleet::LocalFleet)
-//! and `ThreadedFleet`, the statistics crossing the fleet wire are the
-//! node-*plaintext* summaries (organizations compute freely over their own
-//! data — the paper's "privacy-free" node work); Paillier encryption
-//! happens at the fabric boundary and is attributed to the node by the
-//! ledger. Moving the fabric's node-side encryption into
-//! [`server::NodeServer`] (so only ciphertexts cross the wire) is the next
-//! step this subsystem's [`wire`] ciphertext codecs exist for.
+//! Privacy note: once the center installs its Paillier key
+//! (`Fleet::install_key` → [`wire::WireMsg::SetKey`]), node servers
+//! encrypt every statistic themselves and only
+//! [`wire::WireMsg::Ciphertexts`] payloads cross the fleet wire — the
+//! paper's Figure 1 data flow, in which the Center never sees node
+//! plaintext. The in-process fleets (and the cost-model backend, which
+//! has no key) instead return plaintext summaries that the *fabric*
+//! encrypts at its boundary, attributing the cost to the node.
+//!
+//! Cheap wire-format round trip:
+//!
+//! ```
+//! use privlogit::net::wire::WireMsg;
+//! let msg = WireMsg::GramReq { scale: 0.25 };
+//! assert_eq!(WireMsg::decode(&msg.encode()).unwrap(), msg);
+//! ```
 
 pub mod fleet;
 pub mod server;

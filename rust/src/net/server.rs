@@ -9,6 +9,16 @@
 //! center disconnect) ends the session. The listener then accepts the
 //! next center connection, so one long-lived node process can serve many
 //! experiment runs.
+//!
+//! **Node-side encryption** (the paper's Figure 1 data flow): when the
+//! center opens the session with [`WireMsg::SetKey`], this node builds
+//! the Paillier public key from the modulus and from then on encrypts
+//! every statistic itself — replies become [`WireMsg::Ciphertexts`] and
+//! no plaintext statistic ever crosses the wire. [`WireMsg::SetHinv`]
+//! additionally stores the broadcast `Enc(H̃⁻¹)`, enabling the
+//! PrivLogit-Local step round ([`WireMsg::StepReq`]): gradient,
+//! `Enc(H̃⁻¹)⊗g_j` via [`crate::mpc::fabric::apply_hinv_cts`], and the
+//! encrypted log-likelihood share, all computed here at the node.
 
 use std::io;
 use std::net::{SocketAddr, TcpListener};
@@ -16,7 +26,12 @@ use std::time::Instant;
 
 use super::tcp::TcpTransport;
 use super::wire::{self, WireMsg};
+use crate::crypto::fixed::FixedCodec;
+use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
+use crate::crypto::rng::ChaChaRng;
 use crate::data::Dataset;
+use crate::gc::word::FixedFmt;
+use crate::mpc::fabric::apply_hinv_cts;
 use crate::protocols::common::pack_tri;
 use crate::runtime::{CpuCompute, NodeCompute};
 
@@ -27,6 +42,7 @@ pub struct NodeServer {
     listener: TcpListener,
     data: Dataset,
     engine: Box<dyn NodeCompute>,
+    seed: u64,
 }
 
 impl NodeServer {
@@ -43,7 +59,19 @@ impl NodeServer {
         data: Dataset,
         engine: Box<dyn NodeCompute>,
     ) -> io::Result<NodeServer> {
-        Ok(NodeServer { listener: TcpListener::bind(addr)?, data, engine })
+        Ok(NodeServer {
+            listener: TcpListener::bind(addr)?,
+            data,
+            engine,
+            seed: entropy_seed(),
+        })
+    }
+
+    /// Override this node's own randomness seed (Paillier encryption
+    /// randomness; give each organization a distinct value).
+    pub fn with_seed(mut self, seed: u64) -> NodeServer {
+        self.seed = seed;
+        self
     }
 
     /// The bound address (useful with ephemeral ports).
@@ -55,7 +83,8 @@ impl NodeServer {
     pub fn serve_once(&mut self) -> io::Result<()> {
         let (stream, _) = self.listener.accept()?;
         let mut t = TcpTransport::accept(stream, wire::ROLE_NODE)?;
-        serve_session(&mut t, &self.data, self.engine.as_mut())
+        self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        serve_session(&mut t, &self.data, self.engine.as_mut(), self.seed)
     }
 
     /// Serve center connections forever (one at a time). A failed
@@ -65,12 +94,59 @@ impl NodeServer {
     pub fn serve_forever(&mut self) -> io::Result<()> {
         loop {
             let (stream, _) = self.listener.accept()?;
+            self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let seed = self.seed;
             let session = TcpTransport::accept(stream, wire::ROLE_NODE)
-                .and_then(|mut t| serve_session(&mut t, &self.data, self.engine.as_mut()));
+                .and_then(|mut t| serve_session(&mut t, &self.data, self.engine.as_mut(), seed));
             if let Err(e) = session {
                 eprintln!("node session ended with error: {e}");
             }
         }
+    }
+}
+
+/// A distinct-per-process default seed for this node's Paillier
+/// encryption randomness. Co-deployed nodes must NOT share a randomness
+/// stream: with DJN encryption `c = (1+mn)·hˢ`, two ciphertexts built
+/// from the same short exponent `s` reveal the plaintext difference to
+/// any wire observer (`c_A·c_B⁻¹ = 1+(m_A−m_B)·n`). Mixes OS entropy
+/// (when readable) with the clock and pid; [`NodeServer::with_seed`]
+/// overrides it for deterministic tests.
+fn entropy_seed() -> u64 {
+    use std::io::Read as _;
+    let mut seed = 0x9A11u64;
+    let mut buf = [0u8; 8];
+    let urandom = std::fs::File::open("/dev/urandom")
+        .and_then(|mut f| f.read_exact(&mut buf));
+    if urandom.is_ok() {
+        seed ^= u64::from_le_bytes(buf);
+    }
+    let clock = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    seed ^ clock.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((std::process::id() as u64) << 32)
+}
+
+/// Per-session Paillier state, established by [`WireMsg::SetKey`].
+struct SessionCrypto {
+    pk: PublicKey,
+    codec: FixedCodec,
+    fmt: FixedFmt,
+    rng: ChaChaRng,
+    /// Broadcast `Enc(H̃⁻¹)` (scale, packed triangle), once installed.
+    hinv: Option<(u32, Vec<Ciphertext>)>,
+}
+
+impl SessionCrypto {
+    /// Encrypt a statistics vector at the session scale `f`.
+    fn encrypt_vec(&mut self, vals: &[f64]) -> Vec<crate::bigint::BigUint> {
+        vals.iter()
+            .map(|&v| {
+                let m = self.codec.encode(v);
+                self.pk.encrypt(&m, &mut ChaChaSource(&mut self.rng)).0
+            })
+            .collect()
     }
 }
 
@@ -80,7 +156,9 @@ fn serve_session(
     t: &mut TcpTransport,
     data: &Dataset,
     engine: &mut dyn NodeCompute,
+    seed: u64,
 ) -> io::Result<()> {
+    let mut crypto: Option<SessionCrypto> = None;
     loop {
         let msg = match t.recv_wire() {
             Ok(m) => m,
@@ -94,28 +172,107 @@ fn serve_session(
                 p: data.p() as u32,
                 name: data.name.split('#').next().unwrap_or("?").to_string(),
             },
+            WireMsg::SetKey { n, w, f } => {
+                let n2 = n.mul(&n);
+                crypto = Some(SessionCrypto {
+                    pk: PublicKey::from_modulus(n.clone(), n2),
+                    codec: FixedCodec::new(n, f),
+                    fmt: FixedFmt { w: w as usize, f },
+                    rng: ChaChaRng::from_u64_seed(seed),
+                    hinv: None,
+                });
+                WireMsg::Ack
+            }
+            WireMsg::SetHinv { scale, cts } => match crypto.as_mut() {
+                Some(c) => {
+                    // Wire-controlled data: validate here so a malformed
+                    // broadcast is a session error, not a node panic
+                    // inside `apply_hinv_cts`'s assertions.
+                    let need = crate::mpc::tri_len(data.p());
+                    if cts.len() != need {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!(
+                                "Enc(H̃⁻¹) broadcast has {} ciphertexts, p={} needs {need}",
+                                cts.len(),
+                                data.p()
+                            ),
+                        ));
+                    }
+                    c.hinv = Some((scale, cts.into_iter().map(Ciphertext).collect()));
+                    WireMsg::Ack
+                }
+                None => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "center sent Enc(H̃⁻¹) before the Paillier key",
+                    ))
+                }
+            },
             WireMsg::StatsReq { beta, scale } => {
                 let t0 = Instant::now();
                 let (grad, loglik) = engine.stats(data, &beta, scale);
-                WireMsg::NodeReply { values: grad, loglik, secs: t0.elapsed().as_secs_f64() }
+                match crypto.as_mut() {
+                    Some(c) => {
+                        // Gradient ciphertexts, encrypted loglik share last.
+                        let mut cts = c.encrypt_vec(&grad);
+                        cts.extend(c.encrypt_vec(&[loglik]));
+                        WireMsg::Ciphertexts {
+                            scale: c.fmt.f,
+                            secs: t0.elapsed().as_secs_f64(),
+                            cts,
+                        }
+                    }
+                    None => WireMsg::NodeReply {
+                        values: grad,
+                        loglik,
+                        secs: t0.elapsed().as_secs_f64(),
+                    },
+                }
             }
             WireMsg::GramReq { scale } => {
                 let t0 = Instant::now();
                 let h = engine.gram_quarter(data, scale);
-                WireMsg::NodeReply {
-                    values: pack_tri(&h),
-                    loglik: 0.0,
-                    secs: t0.elapsed().as_secs_f64(),
-                }
+                matrix_reply(pack_tri(&h), t0, crypto.as_mut())
             }
             WireMsg::HessReq { beta, scale } => {
                 let t0 = Instant::now();
                 let h = engine.hessian(data, &beta, scale);
-                WireMsg::NodeReply {
-                    values: pack_tri(&h),
-                    loglik: 0.0,
-                    secs: t0.elapsed().as_secs_f64(),
-                }
+                matrix_reply(pack_tri(&h), t0, crypto.as_mut())
+            }
+            WireMsg::StepReq { beta, scale } => {
+                let t0 = Instant::now();
+                let Some(c) = crypto.as_mut() else {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "center sent StepReq before the Paillier key",
+                    ));
+                };
+                let Some((hinv_scale, hinv)) = c.hinv.take() else {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "center sent StepReq before Enc(H̃⁻¹)",
+                    ));
+                };
+                let (grad, loglik) = engine.stats(data, &beta, scale);
+                let (part, _, _) = apply_hinv_cts(&c.pk, c.fmt, data.p(), &hinv, &grad);
+                c.hinv = Some((hinv_scale, hinv));
+                let loglik_cts = c.encrypt_vec(&[loglik]);
+                let secs = t0.elapsed().as_secs_f64();
+                // Two frames: the partial step (the broadcast's scale
+                // plus f from the multiply-by-constant), then the
+                // encrypted log-likelihood share (scale f).
+                t.send_wire(&WireMsg::Ciphertexts {
+                    scale: hinv_scale + c.fmt.f,
+                    secs,
+                    cts: part.into_iter().map(|ct| ct.0).collect(),
+                })?;
+                t.send_wire(&WireMsg::Ciphertexts {
+                    scale: c.fmt.f,
+                    secs: 0.0,
+                    cts: loglik_cts,
+                })?;
+                continue;
             }
             WireMsg::Shutdown => return Ok(()),
             other => {
@@ -126,6 +283,18 @@ fn serve_session(
             }
         };
         t.send_wire(&reply)?;
+    }
+}
+
+/// Package a packed-triangle statistic as the session's reply form.
+fn matrix_reply(tri: Vec<f64>, t0: Instant, crypto: Option<&mut SessionCrypto>) -> WireMsg {
+    match crypto {
+        Some(c) => WireMsg::Ciphertexts {
+            scale: c.fmt.f,
+            secs: t0.elapsed().as_secs_f64(),
+            cts: c.encrypt_vec(&tri),
+        },
+        None => WireMsg::NodeReply { values: tri, loglik: 0.0, secs: t0.elapsed().as_secs_f64() },
     }
 }
 
@@ -152,8 +321,8 @@ mod tests {
     }
 
     /// RemoteFleet over real loopback sockets returns bit-identical
-    /// statistics to LocalFleet on the same partitions, and measures
-    /// traffic in both directions.
+    /// statistics to LocalFleet on the same partitions (no key installed
+    /// → plaintext replies), and measures traffic in both directions.
     #[test]
     fn remote_fleet_matches_local_fleet() {
         let d = synthesize("t", 900, 5, 41);
@@ -166,25 +335,26 @@ mod tests {
         assert_eq!(remote.n_total(), 900);
         assert_eq!(remote.p(), 5);
         assert_eq!(remote.dataset_name(), "t");
+        assert!(!remote.nodes_encrypt());
 
         let beta = vec![0.1, -0.2, 0.3, 0.0, 0.05];
         let scale = 1.0 / 900.0;
-        let a = local.stats(&beta, scale);
-        let b = remote.stats(&beta, scale);
+        let a = local.stats(&beta, scale).unwrap();
+        let b = remote.stats(&beta, scale).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
-            assert_all_close(&x.values, &y.values, 0.0, "stats parity over tcp");
-            assert_eq!(x.loglik.to_bits(), y.loglik.to_bits(), "bit-exact loglik");
+            assert_all_close(x.values(), y.values(), 0.0, "stats parity over tcp");
+            assert_eq!(x.loglik().to_bits(), y.loglik().to_bits(), "bit-exact loglik");
         }
-        let ga = local.gram(scale);
-        let gb = remote.gram(scale);
+        let ga = local.gram(scale).unwrap();
+        let gb = remote.gram(scale).unwrap();
         for (x, y) in ga.iter().zip(&gb) {
-            assert_all_close(&x.values, &y.values, 0.0, "gram parity over tcp");
+            assert_all_close(x.values(), y.values(), 0.0, "gram parity over tcp");
         }
-        let ha = local.hessian(&beta, scale);
-        let hb = remote.hessian(&beta, scale);
+        let ha = local.hessian(&beta, scale).unwrap();
+        let hb = remote.hessian(&beta, scale).unwrap();
         for (x, y) in ha.iter().zip(&hb) {
-            assert_all_close(&x.values, &y.values, 0.0, "hessian parity over tcp");
+            assert_all_close(x.values(), y.values(), 0.0, "hessian parity over tcp");
         }
 
         let net = remote.net_stats();
@@ -193,6 +363,10 @@ mod tests {
         // connect meta + 3 rounds, 3 nodes each
         assert_eq!(net.msgs_sent, net.msgs_recv);
         assert_eq!(net.msgs_sent, 3 + 3 * 3);
+        // All replies were plaintext statistics (or metadata).
+        let tags = remote.reply_tag_counts();
+        assert_eq!(tags.get(&wire::TAG_NODE_REPLY), Some(&9));
+        assert_eq!(tags.get(&wire::TAG_CIPHERTEXTS), None);
         drop(remote); // sends Shutdown; server threads exit
     }
 

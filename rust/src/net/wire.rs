@@ -29,7 +29,12 @@ use crate::bigint::BigUint;
 pub const MAGIC: [u8; 4] = *b"PLGT";
 
 /// Wire protocol version. Bump on any incompatible format change.
-pub const VERSION: u16 = 1;
+///
+/// v2: node-side encryption ([`WireMsg::SetKey`], [`WireMsg::SetHinv`],
+/// [`WireMsg::StepReq`], [`WireMsg::Ack`]), node compute seconds on
+/// [`WireMsg::Ciphertexts`], and the center-peer GC control messages
+/// ([`WireMsg::GcExec`], [`WireMsg::GcOut`]).
+pub const VERSION: u16 = 2;
 
 /// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
 /// length prefix must not drive allocation.
@@ -375,17 +380,59 @@ impl<'a> WireReader<'a> {
 // Messages
 // ======================================================================
 
-const TAG_STATS_REQ: u8 = 0x01;
-const TAG_GRAM_REQ: u8 = 0x02;
-const TAG_HESS_REQ: u8 = 0x03;
-const TAG_META_REQ: u8 = 0x04;
-const TAG_SHUTDOWN: u8 = 0x05;
-const TAG_NODE_REPLY: u8 = 0x11;
-const TAG_META: u8 = 0x12;
-const TAG_BIGINT: u8 = 0x21;
-const TAG_CIPHERTEXTS: u8 = 0x22;
-const TAG_GARBLED: u8 = 0x23;
-const TAG_OT: u8 = 0x24;
+/// Tag byte: [`WireMsg::StatsReq`].
+pub const TAG_STATS_REQ: u8 = 0x01;
+/// Tag byte: [`WireMsg::GramReq`].
+pub const TAG_GRAM_REQ: u8 = 0x02;
+/// Tag byte: [`WireMsg::HessReq`].
+pub const TAG_HESS_REQ: u8 = 0x03;
+/// Tag byte: [`WireMsg::MetaReq`].
+pub const TAG_META_REQ: u8 = 0x04;
+/// Tag byte: [`WireMsg::Shutdown`].
+pub const TAG_SHUTDOWN: u8 = 0x05;
+/// Tag byte: [`WireMsg::SetKey`].
+pub const TAG_SET_KEY: u8 = 0x06;
+/// Tag byte: [`WireMsg::SetHinv`].
+pub const TAG_SET_HINV: u8 = 0x07;
+/// Tag byte: [`WireMsg::StepReq`].
+pub const TAG_STEP_REQ: u8 = 0x08;
+/// Tag byte: [`WireMsg::NodeReply`] (plaintext statistics — only sent
+/// when no [`WireMsg::SetKey`] arrived this session).
+pub const TAG_NODE_REPLY: u8 = 0x11;
+/// Tag byte: [`WireMsg::Meta`].
+pub const TAG_META: u8 = 0x12;
+/// Tag byte: [`WireMsg::Ack`].
+pub const TAG_ACK: u8 = 0x13;
+/// Tag byte: [`WireMsg::Bigint`].
+pub const TAG_BIGINT: u8 = 0x21;
+/// Tag byte: [`WireMsg::Ciphertexts`].
+pub const TAG_CIPHERTEXTS: u8 = 0x22;
+/// Tag byte: [`WireMsg::GarbledTables`].
+pub const TAG_GARBLED: u8 = 0x23;
+/// Tag byte: [`WireMsg::OtMsg`].
+pub const TAG_OT: u8 = 0x24;
+/// Tag byte: [`WireMsg::GcExec`].
+pub const TAG_GC_EXEC: u8 = 0x31;
+/// Tag byte: [`WireMsg::GcOut`].
+pub const TAG_GC_OUT: u8 = 0x32;
+
+/// Pack bools LSB-first into bytes (zero-padded tail).
+fn pack_bools(bits: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; bits.len().div_ceil(8)];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+fn unpack_bools(bytes: &[u8], count: usize) -> Result<Vec<bool>, WireError> {
+    if bytes.len() != count.div_ceil(8) {
+        return Err(WireError::Truncated { needed: count.div_ceil(8), have: bytes.len() });
+    }
+    Ok((0..count).map(|i| (bytes[i / 8] >> (i % 8)) & 1 == 1).collect())
+}
 
 /// Every message that crosses a process boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -413,6 +460,40 @@ pub enum WireMsg {
     MetaReq,
     /// Center → node: session over, exit cleanly.
     Shutdown,
+    /// Center → node: the Center's Paillier public modulus and the
+    /// fixed-point format. From here on the node encrypts every
+    /// statistic reply itself ([`WireMsg::Ciphertexts`]) — plaintext
+    /// statistics never cross the wire again this session.
+    SetKey {
+        /// Paillier modulus `n`.
+        n: BigUint,
+        /// Fixed-point word width (bits).
+        w: u32,
+        /// Fixed-point fractional bits.
+        f: u32,
+    },
+    /// Center → node: the encrypted inverse Hessian bound `Enc(H̃⁻¹)`
+    /// (packed lower triangle), broadcast once after PrivLogit-Local
+    /// setup so nodes can run the multiply-by-constant step locally.
+    SetHinv {
+        /// Fixed-point scale (bits) of the encoded entries.
+        scale: u32,
+        /// Packed-triangle ciphertexts.
+        cts: Vec<BigUint>,
+    },
+    /// Center → node: one PrivLogit-Local iteration — compute your local
+    /// gradient at `beta`, apply the stored `Enc(H̃⁻¹)`, and reply with
+    /// `Enc(H̃⁻¹ g_j)` followed by `Enc(l_sj)` (two
+    /// [`WireMsg::Ciphertexts`] frames).
+    StepReq {
+        /// Current public coefficients.
+        beta: Vec<f64>,
+        /// `1/n_total` scaling.
+        scale: f64,
+    },
+    /// Node → center: bare acknowledgement (replies to [`WireMsg::SetKey`]
+    /// and [`WireMsg::SetHinv`]).
+    Ack,
     /// Node → center: one statistic reply with node-measured seconds.
     NodeReply {
         /// Flat payload (gradient / packed triangle).
@@ -434,10 +515,14 @@ pub enum WireMsg {
     /// An arbitrary-precision integer (Paillier plumbing).
     Bigint(BigUint),
     /// A vector of Paillier ciphertexts tagged with its fixed-point scale
-    /// (the `EncVec` wire form).
+    /// (the `EncVec` wire form). As a node statistic reply it also
+    /// carries the node-measured compute seconds (encryption included),
+    /// keeping the ledger's parallel-round attribution exact.
     Ciphertexts {
         /// Fixed-point scale (bits) of the encoded plaintexts.
         scale: u32,
+        /// Node compute seconds (0 outside statistic replies).
+        secs: f64,
         /// Ciphertext values (elements of `Z*_{n²}`).
         cts: Vec<BigUint>,
     },
@@ -445,9 +530,57 @@ pub enum WireMsg {
     GarbledTables(Vec<u8>),
     /// An OT-extension message between the two Center servers.
     OtMsg(Vec<u8>),
+    /// Center-a → center-b: execute one garbled program. Center-a then
+    /// plays the garbler on the same channel while center-b plays the
+    /// evaluator; center-b answers with [`WireMsg::GcOut`].
+    GcExec {
+        /// Program kind byte (see `mpc::peer::ProgSpec`).
+        prog: u8,
+        /// Dimensionality parameter `p` (0 for the convergence check).
+        p: u32,
+        /// Fixed-point word width (bits).
+        w: u32,
+        /// Fixed-point fractional bits.
+        f: u32,
+        /// Convergence tolerance (convergence check only; 0 otherwise).
+        tol: f64,
+        /// Garbler/evaluator AND-gate counter at program start (hash
+        /// tweak uniqueness across executions — both sides must agree).
+        gate_ctr: u64,
+        /// The evaluator's input bits for this execution.
+        eval_bits: Vec<bool>,
+    },
+    /// Center-b → center-a: the output bits the evaluator learned.
+    GcOut {
+        /// Output bits in program order.
+        bits: Vec<bool>,
+    },
 }
 
 impl WireMsg {
+    /// The tag byte this message encodes with (wire-traffic census).
+    pub fn tag(&self) -> u8 {
+        match self {
+            WireMsg::StatsReq { .. } => TAG_STATS_REQ,
+            WireMsg::GramReq { .. } => TAG_GRAM_REQ,
+            WireMsg::HessReq { .. } => TAG_HESS_REQ,
+            WireMsg::MetaReq => TAG_META_REQ,
+            WireMsg::Shutdown => TAG_SHUTDOWN,
+            WireMsg::SetKey { .. } => TAG_SET_KEY,
+            WireMsg::SetHinv { .. } => TAG_SET_HINV,
+            WireMsg::StepReq { .. } => TAG_STEP_REQ,
+            WireMsg::NodeReply { .. } => TAG_NODE_REPLY,
+            WireMsg::Meta { .. } => TAG_META,
+            WireMsg::Ack => TAG_ACK,
+            WireMsg::Bigint(_) => TAG_BIGINT,
+            WireMsg::Ciphertexts { .. } => TAG_CIPHERTEXTS,
+            WireMsg::GarbledTables(_) => TAG_GARBLED,
+            WireMsg::OtMsg(_) => TAG_OT,
+            WireMsg::GcExec { .. } => TAG_GC_EXEC,
+            WireMsg::GcOut { .. } => TAG_GC_OUT,
+        }
+    }
+
     /// Encode to a message body (frame it with [`write_frame`] to send).
     pub fn encode(&self) -> Vec<u8> {
         let mut w = WireWriter::new();
@@ -468,6 +601,26 @@ impl WireMsg {
             }
             WireMsg::MetaReq => w.put_u8(TAG_META_REQ),
             WireMsg::Shutdown => w.put_u8(TAG_SHUTDOWN),
+            WireMsg::SetKey { n, w: width, f } => {
+                w.put_u8(TAG_SET_KEY);
+                w.put_biguint(n);
+                w.put_u32(*width);
+                w.put_u32(*f);
+            }
+            WireMsg::SetHinv { scale, cts } => {
+                w.put_u8(TAG_SET_HINV);
+                w.put_u32(*scale);
+                w.put_u32(cts.len() as u32);
+                for c in cts {
+                    w.put_biguint(c);
+                }
+            }
+            WireMsg::StepReq { beta, scale } => {
+                w.put_u8(TAG_STEP_REQ);
+                w.put_f64s(beta);
+                w.put_f64(*scale);
+            }
+            WireMsg::Ack => w.put_u8(TAG_ACK),
             WireMsg::NodeReply { values, loglik, secs } => {
                 w.put_u8(TAG_NODE_REPLY);
                 w.put_f64s(values);
@@ -484,9 +637,10 @@ impl WireMsg {
                 w.put_u8(TAG_BIGINT);
                 w.put_biguint(v);
             }
-            WireMsg::Ciphertexts { scale, cts } => {
+            WireMsg::Ciphertexts { scale, secs, cts } => {
                 w.put_u8(TAG_CIPHERTEXTS);
                 w.put_u32(*scale);
+                w.put_f64(*secs);
                 w.put_u32(cts.len() as u32);
                 for c in cts {
                     w.put_biguint(c);
@@ -499,6 +653,22 @@ impl WireMsg {
             WireMsg::OtMsg(b) => {
                 w.put_u8(TAG_OT);
                 w.put_bytes(b);
+            }
+            WireMsg::GcExec { prog, p, w: width, f, tol, gate_ctr, eval_bits } => {
+                w.put_u8(TAG_GC_EXEC);
+                w.put_u8(*prog);
+                w.put_u32(*p);
+                w.put_u32(*width);
+                w.put_u32(*f);
+                w.put_f64(*tol);
+                w.put_u64(*gate_ctr);
+                w.put_u32(eval_bits.len() as u32);
+                w.put_bytes(&pack_bools(eval_bits));
+            }
+            WireMsg::GcOut { bits } => {
+                w.put_u8(TAG_GC_OUT);
+                w.put_u32(bits.len() as u32);
+                w.put_bytes(&pack_bools(bits));
             }
         }
         w.finish()
@@ -523,6 +693,27 @@ impl WireMsg {
             }
             TAG_META_REQ => WireMsg::MetaReq,
             TAG_SHUTDOWN => WireMsg::Shutdown,
+            TAG_SET_KEY => {
+                let n = r.get_biguint()?;
+                let w = r.get_u32()?;
+                let f = r.get_u32()?;
+                WireMsg::SetKey { n, w, f }
+            }
+            TAG_SET_HINV => {
+                let scale = r.get_u32()?;
+                let count = r.get_u32()? as usize;
+                let mut cts = Vec::new();
+                for _ in 0..count {
+                    cts.push(r.get_biguint()?);
+                }
+                WireMsg::SetHinv { scale, cts }
+            }
+            TAG_STEP_REQ => {
+                let beta = r.get_f64s()?;
+                let scale = r.get_f64()?;
+                WireMsg::StepReq { beta, scale }
+            }
+            TAG_ACK => WireMsg::Ack,
             TAG_NODE_REPLY => {
                 let values = r.get_f64s()?;
                 let loglik = r.get_f64()?;
@@ -538,15 +729,31 @@ impl WireMsg {
             TAG_BIGINT => WireMsg::Bigint(r.get_biguint()?),
             TAG_CIPHERTEXTS => {
                 let scale = r.get_u32()?;
+                let secs = r.get_f64()?;
                 let count = r.get_u32()? as usize;
                 let mut cts = Vec::new();
                 for _ in 0..count {
                     cts.push(r.get_biguint()?);
                 }
-                WireMsg::Ciphertexts { scale, cts }
+                WireMsg::Ciphertexts { scale, secs, cts }
             }
             TAG_GARBLED => WireMsg::GarbledTables(r.get_bytes()?.to_vec()),
             TAG_OT => WireMsg::OtMsg(r.get_bytes()?.to_vec()),
+            TAG_GC_EXEC => {
+                let prog = r.get_u8()?;
+                let p = r.get_u32()?;
+                let w = r.get_u32()?;
+                let f = r.get_u32()?;
+                let tol = r.get_f64()?;
+                let gate_ctr = r.get_u64()?;
+                let count = r.get_u32()? as usize;
+                let eval_bits = unpack_bools(r.get_bytes()?, count)?;
+                WireMsg::GcExec { prog, p, w, f, tol, gate_ctr, eval_bits }
+            }
+            TAG_GC_OUT => {
+                let count = r.get_u32()? as usize;
+                WireMsg::GcOut { bits: unpack_bools(r.get_bytes()?, count)? }
+            }
             t => return Err(WireError::UnknownTag(t)),
         };
         r.expect_end()?;
@@ -593,11 +800,38 @@ mod tests {
             WireMsg::Bigint(BigUint::zero()),
             WireMsg::Ciphertexts {
                 scale: 24,
+                secs: rng.f64(),
                 cts: (0..5).map(|_| rand_big(rng)).collect(),
             },
-            WireMsg::Ciphertexts { scale: 0, cts: vec![] },
+            WireMsg::Ciphertexts { scale: 0, secs: 0.0, cts: vec![] },
             WireMsg::GarbledTables((0..200u8).collect()),
             WireMsg::OtMsg(vec![]),
+            WireMsg::SetKey { n: rand_big(rng), w: 40, f: 24 },
+            WireMsg::SetHinv {
+                scale: 24,
+                cts: (0..6).map(|_| rand_big(rng)).collect(),
+            },
+            WireMsg::StepReq { beta: rand_vec(rng, 5), scale: rng.f64() },
+            WireMsg::Ack,
+            WireMsg::GcExec {
+                prog: 3,
+                p: 12,
+                w: 40,
+                f: 24,
+                tol: 1e-6,
+                gate_ctr: rng.next_u64(),
+                eval_bits: (0..131).map(|_| rng.bernoulli(0.5)).collect(),
+            },
+            WireMsg::GcExec {
+                prog: 5,
+                p: 0,
+                w: 40,
+                f: 24,
+                tol: 0.0,
+                gate_ctr: 0,
+                eval_bits: vec![],
+            },
+            WireMsg::GcOut { bits: (0..40).map(|_| rng.bernoulli(0.5)).collect() },
         ]
     }
 

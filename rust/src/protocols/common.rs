@@ -1,9 +1,18 @@
 //! Shared protocol plumbing: configuration, run reports, and the
 //! node-round / aggregation helpers all three protocols use.
+//!
+//! The node-round helpers absorb the two encryption topologies behind
+//! one interface: in-process fleets reply in plaintext and the *fabric*
+//! encrypts at its boundary ([`SecureFabric::node_encrypt_vec`]); remote
+//! fleets with an installed key reply with ciphertexts the nodes
+//! encrypted themselves, which the helpers merely unwrap into [`EncVec`]s
+//! — so protocol code is written once and runs over either.
 
-use crate::coordinator::fleet::Fleet;
+use crate::bigint::BigUint;
+use crate::coordinator::fleet::{EncStat, Fleet, NodePayload, NodeReply};
+use crate::crypto::paillier::Ciphertext;
 use crate::linalg::Matrix;
-use crate::mpc::{tri_idx, tri_len, CostLedger, EncVec, SecureFabric};
+use crate::mpc::{tri_idx, tri_len, CostLedger, EncData, EncVec, SecureFabric};
 
 /// Protocol configuration (paper §6 defaults).
 #[derive(Clone, Copy, Debug)]
@@ -86,6 +95,26 @@ pub fn reg_diag_tri(p: usize, lambda_scaled: f64) -> Vec<f64> {
     v
 }
 
+/// Wrap node-encrypted ciphertext residues as the fabric's
+/// ciphertext-vector form (consuming — no per-ciphertext copies).
+pub fn enc_vec_from(scale: u32, cts: Vec<BigUint>) -> EncVec {
+    EncVec { scale, data: EncData::Real(cts.into_iter().map(Ciphertext).collect()) }
+}
+
+/// Extract the raw ciphertexts of a real [`EncVec`] for the fleet wire
+/// (errors on a modeled vector — modeled ciphertexts are plaintext and
+/// must never cross a process boundary).
+pub fn enc_stat_of(v: &EncVec) -> anyhow::Result<EncStat> {
+    match &v.data {
+        EncData::Real(cts) => {
+            Ok(EncStat { scale: v.scale, cts: cts.iter().map(|c| c.0.clone()).collect() })
+        }
+        EncData::Model(_) => {
+            anyhow::bail!("modeled ciphertexts cannot cross the fleet wire")
+        }
+    }
+}
+
 /// One node round: every organization computes + encrypts its local
 /// gradient and log-likelihood shares at `beta` (Alg. 1 steps 3–7).
 /// Returns (per-node Enc(g_j), per-node Enc(l_sj)).
@@ -94,32 +123,55 @@ pub fn node_stats_round<F: SecureFabric>(
     fleet: &mut dyn Fleet,
     beta: &[f64],
     scale: f64,
-) -> (Vec<EncVec>, Vec<EncVec>) {
-    let replies = fleet.stats(beta, scale);
+) -> anyhow::Result<(Vec<EncVec>, Vec<EncVec>)> {
+    let replies = fleet.stats(beta, scale)?;
     let mut enc_g = Vec::with_capacity(replies.len());
     let mut enc_l = Vec::with_capacity(replies.len());
-    for (j, r) in replies.iter().enumerate() {
+    for (j, r) in replies.into_iter().enumerate() {
         fab.ledger_mut().add_node(j, r.secs);
-        enc_g.push(fab.node_encrypt_vec(j, &r.values));
-        enc_l.push(fab.node_encrypt_vec(j, &[r.loglik]));
+        match r.payload {
+            NodePayload::Plain { values, loglik } => {
+                enc_g.push(fab.node_encrypt_vec(j, &values));
+                enc_l.push(fab.node_encrypt_vec(j, &[loglik]));
+            }
+            NodePayload::Enc(stat) => {
+                // The node encrypted grad ‖ loglik itself; split them.
+                anyhow::ensure!(
+                    stat.cts.len() >= 2,
+                    "node {j} stats reply too short: {} ciphertexts",
+                    stat.cts.len()
+                );
+                fab.ledger_mut().paillier_encs += stat.cts.len() as u64;
+                let EncStat { scale, mut cts } = stat;
+                let ll = cts.pop().expect("length checked above");
+                enc_g.push(enc_vec_from(scale, cts));
+                enc_l.push(enc_vec_from(scale, vec![ll]));
+            }
+        }
     }
     fab.ledger_mut().end_node_round();
-    (enc_g, enc_l)
+    Ok((enc_g, enc_l))
 }
 
-/// One node matrix round (Gram or exact Hessian): encrypt each node's
-/// packed triangle.
+/// One node matrix round (Gram or exact Hessian): each node's packed
+/// triangle as ciphertexts (fabric-encrypted or node-encrypted).
 pub fn node_matrix_round<F: SecureFabric>(
     fab: &mut F,
-    replies: Vec<crate::coordinator::fleet::NodeReply>,
-) -> Vec<EncVec> {
+    replies: Vec<NodeReply>,
+) -> anyhow::Result<Vec<EncVec>> {
     let mut enc = Vec::with_capacity(replies.len());
-    for (j, r) in replies.iter().enumerate() {
+    for (j, r) in replies.into_iter().enumerate() {
         fab.ledger_mut().add_node(j, r.secs);
-        enc.push(fab.node_encrypt_vec(j, &r.values));
+        match r.payload {
+            NodePayload::Plain { values, .. } => enc.push(fab.node_encrypt_vec(j, &values)),
+            NodePayload::Enc(stat) => {
+                fab.ledger_mut().paillier_encs += stat.cts.len() as u64;
+                enc.push(enc_vec_from(stat.scale, stat.cts));
+            }
+        }
     }
     fab.ledger_mut().end_node_round();
-    enc
+    Ok(enc)
 }
 
 /// Aggregate the per-node log-likelihood shares and apply the public

@@ -11,7 +11,30 @@
 //!
 //! All three run against either [`crate::mpc::RealFabric`] (everything
 //! executed) or [`crate::mpc::ModelFabric`] (calibrated cost model for
-//! paper-scale p — DESIGN.md §7), with identical protocol logic.
+//! paper-scale p — DESIGN.md §7), with identical protocol logic, and
+//! over any [`crate::coordinator::fleet::Fleet`] — in-process, threaded
+//! or remote TCP node servers. Every run returns `Result`: a node or
+//! center peer that dies mid-protocol surfaces as a descriptive error,
+//! not a panic.
+//!
+//! Cheap end-to-end run (modeled backend, tiny synthetic study):
+//!
+//! ```
+//! use privlogit::coordinator::fleet::LocalFleet;
+//! use privlogit::data::synthesize;
+//! use privlogit::gc::word::FixedFmt;
+//! use privlogit::mpc::ModelFabric;
+//! use privlogit::protocols::{Protocol, ProtocolConfig};
+//! use privlogit::runtime::CpuCompute;
+//!
+//! let parts = synthesize("doc", 300, 3, 7).partition(2);
+//! let mut fleet = LocalFleet::new(parts, Box::new(CpuCompute));
+//! let mut fab = ModelFabric::new(2048, FixedFmt::DEFAULT);
+//! let report = Protocol::PrivLogitLocal
+//!     .run(&mut fab, &mut fleet, &ProtocolConfig::default())
+//!     .unwrap();
+//! assert!(report.converged);
+//! ```
 
 pub mod common;
 pub mod newton;
@@ -64,13 +87,14 @@ impl Protocol {
     pub const VALID_NAMES: &'static str =
         "newton | privlogit-hessian (hessian, plh) | privlogit-local (local, pll)";
 
-    /// Dispatch to the protocol implementation.
+    /// Dispatch to the protocol implementation. A node or center peer
+    /// that dies mid-protocol surfaces as `Err`.
     pub fn run<F: crate::mpc::SecureFabric>(
         &self,
         fab: &mut F,
         fleet: &mut dyn crate::coordinator::fleet::Fleet,
         cfg: &ProtocolConfig,
-    ) -> RunReport {
+    ) -> anyhow::Result<RunReport> {
         match self {
             Protocol::Newton => run_newton(fab, fleet, cfg),
             Protocol::PrivLogitHessian => run_privlogit_hessian(fab, fleet, cfg),
@@ -127,7 +151,7 @@ mod tests {
                     Box::new(LocalFleet::new(parts.clone(), Box::new(CpuCompute)))
                 };
             let mut fab = RealFabric::new(256, FMT, 0xBEEF ^ proto.name().len() as u64);
-            let rep = proto.run(&mut fab, fleet.as_mut(), &cfg);
+            let rep = proto.run(&mut fab, fleet.as_mut(), &cfg).unwrap();
             assert!(rep.converged, "{} converged", proto.name());
             let r2 = r_squared(&rep.beta, &newton_ref.beta);
             assert!(r2 > 0.9999, "{}: R² = {r2}", proto.name());
@@ -159,7 +183,7 @@ mod tests {
         for proto in Protocol::ALL {
             let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
             let mut fab = ModelFabric::new(2048, FMT);
-            let rep = proto.run(&mut fab, &mut fleet, &cfg);
+            let rep = proto.run(&mut fab, &mut fleet, &cfg).unwrap();
             assert!(rep.converged, "{}", proto.name());
             totals.push((proto, rep.total_secs, rep.iterations));
         }
@@ -184,7 +208,7 @@ mod tests {
             let run = |proto: Protocol| {
                 let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
                 let mut fab = ModelFabric::new(2048, FMT);
-                let r = proto.run(&mut fab, &mut fleet, &cfg);
+                let r = proto.run(&mut fab, &mut fleet, &cfg).unwrap();
                 (r.total_secs, r.total_secs - r.setup_secs)
             };
             let newton = run(Protocol::Newton);

@@ -13,12 +13,13 @@ use super::common::*;
 use crate::coordinator::fleet::Fleet;
 use crate::mpc::SecureFabric;
 
-/// Run the secure Newton baseline over a node fleet.
+/// Run the secure Newton baseline over a node fleet. A node that dies
+/// mid-protocol surfaces as `Err`.
 pub fn run_newton<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
     cfg: &ProtocolConfig,
-) -> RunReport {
+) -> anyhow::Result<RunReport> {
     let p = fleet.p();
     let n = fleet.n_total();
     let scale = 1.0 / n as f64;
@@ -30,9 +31,9 @@ pub fn run_newton<F: SecureFabric>(
 
     for _ in 0..cfg.max_iters {
         // --- node round: exact Hessian + gradient + log-likelihood ---
-        let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale);
-        let h_replies = fleet.hessian(&beta, scale);
-        let enc_h = node_matrix_round(fab, h_replies);
+        let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale)?;
+        let h_replies = fleet.hessian(&beta, scale)?;
+        let enc_h = node_matrix_round(fab, h_replies)?;
 
         // --- center: aggregate + regularize ---
         let g = aggregate_gradient(fab, enc_g, &beta, cfg.lambda, scale);
@@ -62,7 +63,7 @@ pub fn run_newton<F: SecureFabric>(
         iterations += 1;
     }
 
-    RunReport {
+    Ok(RunReport {
         protocol: "newton",
         backend: fab.backend_label().to_string(),
         engine: fleet.label(),
@@ -76,5 +77,5 @@ pub fn run_newton<F: SecureFabric>(
         setup_secs,
         total_secs: total_secs(fab),
         ledger: final_ledger(fab, fleet),
-    }
+    })
 }

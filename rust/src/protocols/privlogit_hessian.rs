@@ -18,28 +18,29 @@ pub fn setup_once<F: SecureFabric>(
     fleet: &mut dyn Fleet,
     lambda: f64,
     scale: f64,
-) -> SecVec {
+) -> anyhow::Result<SecVec> {
     let p = fleet.p();
-    let replies = fleet.gram(scale);
-    let enc_h = node_matrix_round(fab, replies);
+    let replies = fleet.gram(scale)?;
+    let enc_h = node_matrix_round(fab, replies)?;
     let agg = fab.aggregate(enc_h);
     let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale));
     let h_shares = fab.to_shares(&h);
-    fab.cholesky_shares(&h_shares, p)
+    Ok(fab.cholesky_shares(&h_shares, p))
 }
 
-/// Run PrivLogit-Hessian (Algorithm 1).
+/// Run PrivLogit-Hessian (Algorithm 1). A node that dies mid-protocol
+/// surfaces as `Err`.
 pub fn run_privlogit_hessian<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
     cfg: &ProtocolConfig,
-) -> RunReport {
+) -> anyhow::Result<RunReport> {
     let p = fleet.p();
     let n = fleet.n_total();
     let scale = 1.0 / n as f64;
 
     // Step 1: SetupOnce (the one-time O(p³) phase).
-    let l_shares = setup_once(fab, fleet, cfg.lambda, scale);
+    let l_shares = setup_once(fab, fleet, cfg.lambda, scale)?;
     let setup_secs = total_secs(fab);
 
     let mut beta = vec![0.0; p];
@@ -49,7 +50,7 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
 
     for _ in 0..cfg.max_iters {
         // Steps 3–7: node gradient + log-likelihood round.
-        let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale);
+        let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale)?;
         // Steps 8, 11: aggregation + public regularization terms.
         let g = aggregate_gradient(fab, enc_g, &beta, cfg.lambda, scale);
         let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale);
@@ -72,7 +73,7 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
         iterations += 1;
     }
 
-    RunReport {
+    Ok(RunReport {
         protocol: "privlogit-hessian",
         backend: fab.backend_label().to_string(),
         engine: fleet.label(),
@@ -86,5 +87,5 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
         setup_secs,
         total_secs: total_secs(fab),
         ledger: final_ledger(fab, fleet),
-    }
+    })
 }

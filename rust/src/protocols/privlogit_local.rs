@@ -10,8 +10,8 @@
 //! in the iteration loop except the single-bit convergence check.
 
 use super::common::*;
-use crate::coordinator::fleet::Fleet;
-use crate::mpc::{EncMat, SecureFabric};
+use crate::coordinator::fleet::{Fleet, NodePayload};
+use crate::mpc::{EncMat, EncVec, SecureFabric};
 
 /// Setup: `SetupOnce` + Algorithm 3 step 2 (materialize `Enc(H̃⁻¹)`).
 pub fn setup_inverse<F: SecureFabric>(
@@ -19,30 +19,84 @@ pub fn setup_inverse<F: SecureFabric>(
     fleet: &mut dyn Fleet,
     lambda: f64,
     scale: f64,
-) -> EncMat {
+) -> anyhow::Result<EncMat> {
     let p = fleet.p();
-    let replies = fleet.gram(scale);
-    let enc_h = node_matrix_round(fab, replies);
+    let replies = fleet.gram(scale)?;
+    let enc_h = node_matrix_round(fab, replies)?;
     let agg = fab.aggregate(enc_h);
     let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale));
     let h_shares = fab.to_shares(&h);
     // One garbled program: Cholesky + triangular inverse + TᵀT + masked
     // wide reveal, re-encrypted so nodes receive Enc(H̃⁻¹) (scale f).
-    fab.inverse_to_enc(&h_shares, p)
+    Ok(fab.inverse_to_enc(&h_shares, p))
 }
 
-/// Run PrivLogit-Local (Algorithm 3).
+/// One iteration's node round: per-node `Enc(H̃⁻¹ g_j)` and `Enc(l_sj)`.
+///
+/// Two topologies, one interface: with node-side encryption installed
+/// (the deployed remote fleet) the nodes apply their stored `Enc(H̃⁻¹)`
+/// themselves and only ciphertexts cross the wire; otherwise the nodes
+/// return plaintext statistics and the fabric performs the encryption
+/// and the multiply-by-constant, attributing the cost to the node.
+fn node_step_round<F: SecureFabric>(
+    fab: &mut F,
+    fleet: &mut dyn Fleet,
+    hinv: &EncMat,
+    beta: &[f64],
+    scale: f64,
+) -> anyhow::Result<(Vec<EncVec>, Vec<EncVec>)> {
+    let p = hinv.p;
+    let mut enc_parts = Vec::new();
+    let mut enc_l = Vec::new();
+    if fleet.nodes_encrypt() {
+        for (j, r) in fleet.step(beta, scale)?.into_iter().enumerate() {
+            fab.ledger_mut().add_node(j, r.secs);
+            enc_parts.push(enc_vec_from(r.part.scale, r.part.cts));
+            enc_l.push(enc_vec_from(r.loglik.scale, r.loglik.cts));
+            // Node-performed crypto: the exact scalar/add tally is the
+            // node's private business (it depends on which encoded
+            // gradient constants are zero), so charge the same p²/p(p−1)
+            // model `ModelFabric::node_apply_hinv` uses, keeping op
+            // tables comparable across deployment topologies.
+            fab.ledger_mut().paillier_scalar += (p * p) as u64;
+            fab.ledger_mut().paillier_adds += (p * (p - 1)) as u64;
+            fab.ledger_mut().paillier_encs += 1;
+        }
+    } else {
+        for (j, r) in fleet.stats(beta, scale)?.into_iter().enumerate() {
+            fab.ledger_mut().add_node(j, r.secs);
+            match r.payload {
+                NodePayload::Plain { values, loglik } => {
+                    enc_l.push(fab.node_encrypt_vec(j, &[loglik]));
+                    enc_parts.push(fab.node_apply_hinv(j, hinv, &values));
+                }
+                NodePayload::Enc(_) => anyhow::bail!(
+                    "node {j} sent ciphertexts but no Enc(H̃⁻¹) was installed"
+                ),
+            }
+        }
+    }
+    fab.ledger_mut().end_node_round();
+    Ok((enc_parts, enc_l))
+}
+
+/// Run PrivLogit-Local (Algorithm 3). A node or center peer that dies
+/// mid-protocol surfaces as `Err`.
 pub fn run_privlogit_local<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
     cfg: &ProtocolConfig,
-) -> RunReport {
+) -> anyhow::Result<RunReport> {
     let p = fleet.p();
     let n = fleet.n_total();
     let scale = 1.0 / n as f64;
 
-    // Steps 1–2: setup; Enc(H̃⁻¹) is then broadcast to all nodes.
-    let hinv = setup_inverse(fab, fleet, cfg.lambda, scale);
+    // Steps 1–2: setup; Enc(H̃⁻¹) is then broadcast to all nodes — for
+    // real over the wire when the fleet's nodes hold the key.
+    let hinv = setup_inverse(fab, fleet, cfg.lambda, scale)?;
+    if fleet.nodes_encrypt() {
+        fleet.install_hinv(&enc_stat_of(&hinv.tri)?)?;
+    }
     // Broadcast cost: p(p+1)/2 ciphertexts to each of S nodes.
     let bcast = (crate::mpc::tri_len(p) * fleet.orgs()) as u64;
     fab.ledger_mut().bytes += bcast * 2 * 128; // ~2·|n|/8 bytes per ct at 1024-bit
@@ -58,15 +112,7 @@ pub fn run_privlogit_local<F: SecureFabric>(
     for _ in 0..cfg.max_iters {
         // Steps 4–9: nodes compute l_sj (encrypted) and the *local*
         // partial Newton step Enc(H̃⁻¹ g_j) via multiply-by-constant.
-        let replies = fleet.stats(&beta, scale);
-        let mut enc_parts = Vec::with_capacity(replies.len());
-        let mut enc_l = Vec::with_capacity(replies.len());
-        for (j, r) in replies.iter().enumerate() {
-            fab.ledger_mut().add_node(j, r.secs);
-            enc_l.push(fab.node_encrypt_vec(j, &[r.loglik]));
-            enc_parts.push(fab.node_apply_hinv(j, &hinv, &r.values));
-        }
-        fab.ledger_mut().end_node_round();
+        let (enc_parts, enc_l) = node_step_round(fab, fleet, &hinv, &beta, scale)?;
 
         // Step 10: compose the global step; regularization term
         // Enc(λ·H̃⁻¹β) from the public β (computed center-side).
@@ -95,7 +141,7 @@ pub fn run_privlogit_local<F: SecureFabric>(
         iterations += 1;
     }
 
-    RunReport {
+    Ok(RunReport {
         protocol: "privlogit-local",
         backend: fab.backend_label().to_string(),
         engine: fleet.label(),
@@ -109,5 +155,5 @@ pub fn run_privlogit_local<F: SecureFabric>(
         setup_secs,
         total_secs: total_secs(fab),
         ledger: final_ledger(fab, fleet),
-    }
+    })
 }

@@ -60,20 +60,20 @@ pub fn run_ridge<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
     lambda: f64,
-) -> RunReport {
+) -> anyhow::Result<RunReport> {
     let p = fleet.p();
     let n = fleet.n_total();
     let scale = 1.0 / n as f64;
 
     // Node round: both moment sets. (Fleet's gram hook returns ¼XᵀX for
     // PrivLogit — undo the ¼ homomorphically-free at the node by scaling.)
-    let gram_replies = fleet.gram(4.0 * scale); // ¼·4 = 1
-    let enc_gram = node_matrix_round(fab, gram_replies);
+    let gram_replies = fleet.gram(4.0 * scale)?; // ¼·4 = 1
+    let enc_gram = node_matrix_round(fab, gram_replies)?;
     // Xᵀy is not a Fleet hook (logistic never needs it): compute via the
     // stats hook at β=0 — g(0) = Xᵀ(y − ½) = Xᵀy − ½Xᵀ1, and for
     // standardized columns Xᵀ1 = 0, so g(0) = Xᵀy exactly.
     let zero_beta = vec![0.0; p];
-    let (enc_xty, _enc_l) = node_stats_round(fab, fleet, &zero_beta, scale);
+    let (enc_xty, _enc_l) = node_stats_round(fab, fleet, &zero_beta, scale)?;
 
     let a = {
         let agg = fab.aggregate(enc_gram);
@@ -85,7 +85,7 @@ pub fn run_ridge<F: SecureFabric>(
     let b_shares = fab.to_shares(&b);
     let beta = fab.newton_step(&a_shares, &b_shares, p); // Cholesky + solve
 
-    RunReport {
+    Ok(RunReport {
         protocol: "ridge",
         backend: fab.backend_label().to_string(),
         engine: fleet.label(),
@@ -99,7 +99,7 @@ pub fn run_ridge<F: SecureFabric>(
         setup_secs: 0.0,
         total_secs: total_secs(fab),
         ledger: fab.ledger().clone(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -143,7 +143,7 @@ mod tests {
         let expect = fit_ridge_plaintext(&parts, 1.0);
         let mut fleet = LocalFleet::new(parts, Box::new(CpuCompute));
         let mut fab = RealFabric::new(256, FMT, 93);
-        let rep = run_ridge(&mut fab, &mut fleet, 1.0);
+        let rep = run_ridge(&mut fab, &mut fleet, 1.0).unwrap();
         assert_all_close(&rep.beta, &expect, 2e-3, "secure ridge");
         let r2 = r_squared(&rep.beta, &expect);
         assert!(r2 > 0.9999, "R²={r2}");
@@ -157,7 +157,7 @@ mod tests {
         let expect = fit_ridge_plaintext(&parts, 1.0);
         let mut fleet = LocalFleet::new(parts, Box::new(CpuCompute));
         let mut fab = ModelFabric::new(2048, FMT);
-        let rep = run_ridge(&mut fab, &mut fleet, 1.0);
+        let rep = run_ridge(&mut fab, &mut fleet, 1.0).unwrap();
         assert_all_close(&rep.beta, &expect, 1e-4, "modeled ridge");
         assert_eq!(rep.iterations, 1);
     }

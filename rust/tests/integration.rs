@@ -30,7 +30,7 @@ fn real_crypto_threaded_fleet_all_protocols() {
     for proto in Protocol::ALL {
         let mut fleet = ThreadedFleet::spawn(parts.clone());
         let mut fab = RealFabric::new(256, FMT, 4242);
-        let rep = proto.run(&mut fab, &mut fleet, &cfg);
+        let rep = proto.run(&mut fab, &mut fleet, &cfg).unwrap();
         assert!(rep.converged, "{}", proto.name());
         let r2 = r_squared(&rep.beta, &truth.beta);
         assert!(r2 > 0.9999, "{}: R²={r2}", proto.name());
@@ -50,11 +50,11 @@ fn model_backend_matches_real_backend_iterates() {
 
     let mut fleet_r = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
     let mut fab_r = RealFabric::new(256, FMT, 99);
-    let real = Protocol::PrivLogitLocal.run(&mut fab_r, &mut fleet_r, &cfg);
+    let real = Protocol::PrivLogitLocal.run(&mut fab_r, &mut fleet_r, &cfg).unwrap();
 
     let mut fleet_m = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
     let mut fab_m = ModelFabric::new(2048, FMT);
-    let model = Protocol::PrivLogitLocal.run(&mut fab_m, &mut fleet_m, &cfg);
+    let model = Protocol::PrivLogitLocal.run(&mut fab_m, &mut fleet_m, &cfg).unwrap();
 
     assert!(
         (real.iterations as i64 - model.iterations as i64).abs() <= 1,
@@ -76,7 +76,7 @@ fn org_count_invariance() {
     for orgs in [2usize, 5, 15] {
         let mut fleet = LocalFleet::new(d.partition(orgs), Box::new(CpuCompute));
         let mut fab = ModelFabric::new(2048, FMT);
-        let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg);
+        let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg).unwrap();
         betas.push((orgs, rep.iterations, rep.beta));
     }
     for w in betas.windows(2) {
@@ -98,7 +98,7 @@ fn lambda_shrinks_coefficients() {
         let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
         let mut fab = ModelFabric::new(2048, FMT);
         let cfg = ProtocolConfig { lambda, ..Default::default() };
-        let rep = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg);
+        let rep = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg).unwrap();
         privlogit::linalg::norm2(&rep.beta)
     };
     let loose = norm(0.1);
@@ -119,7 +119,7 @@ fn experiment_from_config_file() {
     cfg.load_file(path.to_str().unwrap()).unwrap();
     let exp = Experiment::from_config(&cfg).unwrap();
     assert_eq!(exp.effective_backend(), Backend::Model);
-    let rep = exp.run();
+    let rep = exp.run().unwrap();
     assert!(rep.converged);
     assert_eq!(rep.orgs, 6);
     assert_eq!(rep.protocol, "privlogit-hessian");
@@ -150,14 +150,15 @@ fn pll_iterations_are_gc_light() {
         &mut fleet,
         cfg.lambda,
         1.0 / d.n() as f64,
-    );
+    )
+    .unwrap();
     let setup_ands = fab.ledger().gc_ands;
     assert!(setup_ands > 0);
     drop(hinv);
 
     let mut fleet2 = LocalFleet::new(parts, Box::new(CpuCompute));
     let mut fab2 = ModelFabric::new(2048, FMT);
-    let rep = Protocol::PrivLogitLocal.run(&mut fab2, &mut fleet2, &cfg);
+    let rep = Protocol::PrivLogitLocal.run(&mut fab2, &mut fleet2, &cfg).unwrap();
     let total_ands = fab2.ledger().gc_ands;
     // per-iteration GC is only the 1-bit convergence circuit
     let per_iter = (total_ands - setup_ands) as f64 / rep.iterations as f64;

@@ -1,0 +1,273 @@
+//! The paper's deployment diagram, literally runnable: center-a (garbler
+//! + protocol driver), center-b (GC evaluator) and ≥3 organization node
+//! servers as separate TCP endpoints on loopback — plus the failure
+//! paths: a node dying mid-protocol must surface as a clean `Err`, and
+//! the `privlogit center` CLI must exit non-zero without panicking.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+
+use privlogit::coordinator::fleet::Fleet;
+use privlogit::coordinator::{run_protocol, Backend, CenterLink};
+use privlogit::data::{synthesize, Dataset};
+use privlogit::gc::word::FixedFmt;
+use privlogit::linalg::r_squared;
+use privlogit::mpc::PeerGcServer;
+use privlogit::net::wire::{self, WireMsg};
+use privlogit::net::{NodeServer, RemoteFleet, TcpTransport};
+use privlogit::optim::{fit, Method, OptimConfig};
+use privlogit::protocols::{Protocol, ProtocolConfig};
+
+const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+/// One listening node server thread per partition; returns addresses.
+fn spawn_node_servers(parts: Vec<Dataset>) -> Vec<String> {
+    parts
+        .into_iter()
+        .enumerate()
+        .map(|(j, shard)| {
+            let mut server = NodeServer::bind("127.0.0.1:0", shard)
+                .unwrap()
+                .with_seed(0xD0DE ^ j as u64);
+            let addr = server.local_addr().unwrap().to_string();
+            std::thread::spawn(move || server.serve_once().unwrap());
+            addr
+        })
+        .collect()
+}
+
+/// The tentpole topology: center-a + center-b + 3 node servers, all
+/// separate TCP endpoints; real crypto; R² > 0.9999 vs plaintext; and —
+/// via the per-connection wire-tag census — *only* ciphertext payloads
+/// ever crossed the fleet wire as statistic replies.
+#[test]
+fn three_center_split_ciphertext_only_fleet_wire() {
+    let d = synthesize("split", 1200, 4, 90);
+    let parts = d.partition(3);
+    let cfg = ProtocolConfig::default();
+    let truth = fit(
+        &parts,
+        Method::Newton,
+        OptimConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters },
+    );
+
+    // Three node-server endpoints + the center-b evaluator endpoint.
+    let node_addrs = spawn_node_servers(parts);
+    let mut peer = PeerGcServer::bind("127.0.0.1:0", 0xB0B).unwrap();
+    let peer_addr = peer.local_addr().unwrap().to_string();
+    let peer_thread = std::thread::spawn(move || peer.serve_once().unwrap());
+
+    // Center-a: connects to everything and drives the protocol.
+    let mut fleet = RemoteFleet::connect(&node_addrs).unwrap();
+    let report = run_protocol(
+        Protocol::PrivLogitLocal,
+        Backend::Real,
+        256,
+        FMT,
+        &cfg,
+        0xA11CE,
+        &CenterLink::Peer(peer_addr),
+        &mut fleet,
+    )
+    .unwrap();
+
+    assert!(report.converged, "converged across three processes");
+    assert_eq!(report.orgs, 3);
+    assert!(report.backend.contains("center-b"), "backend label: {}", report.backend);
+    assert!(fleet.nodes_encrypt(), "real backend must install the key");
+    let r2 = r_squared(&report.beta, &truth.beta);
+    assert!(r2 > 0.9999, "R² = {r2} vs plaintext optimum");
+
+    // Wire-tag census: statistic replies were exclusively ciphertexts.
+    // Metadata (Meta) and control acknowledgements (Ack) are the only
+    // other reply tags; TAG_NODE_REPLY (plaintext statistics) must
+    // never appear.
+    let tags = fleet.reply_tag_counts();
+    assert!(tags.get(&wire::TAG_NODE_REPLY).is_none(), "plaintext stats crossed: {tags:?}");
+    assert!(tags.get(&wire::TAG_CIPHERTEXTS).copied().unwrap_or(0) > 0, "{tags:?}");
+    for tag in tags.keys() {
+        assert!(
+            [wire::TAG_META, wire::TAG_ACK, wire::TAG_CIPHERTEXTS].contains(tag),
+            "unexpected reply tag {tag:#04x} on the fleet wire: {tags:?}"
+        );
+    }
+
+    let net = fleet.net_stats();
+    assert!(net.bytes_sent > 0 && net.bytes_recv > 0, "both directions: {net:?}");
+    drop(fleet); // Shutdown to the nodes
+    peer_thread.join().unwrap(); // PeerGcClient drop sent Shutdown
+}
+
+/// A fake node that answers the metadata handshake, then drops the
+/// connection on the first statistic request.
+fn spawn_dying_node() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap();
+        assert_eq!(t.recv_wire().unwrap(), WireMsg::MetaReq);
+        t.send_wire(&WireMsg::Meta { n: 300, p: 3, name: "dying".into() }).unwrap();
+        // Wait for the first real request, then vanish mid-protocol.
+        let _ = t.recv_wire();
+    });
+    addr
+}
+
+/// Killing a node mid-protocol yields `Err` from the fleet round — and
+/// from the whole protocol run — naming the node, with no panic.
+#[test]
+fn node_death_mid_protocol_is_clean_error() {
+    let addr = spawn_dying_node();
+    let mut fleet = RemoteFleet::connect(&[addr.clone()]).unwrap();
+    assert_eq!(fleet.p(), 3);
+
+    let err = fleet.stats(&[0.0, 0.0, 0.0], 1.0 / 300.0).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("failed mid-protocol"), "error: {msg}");
+    assert!(msg.contains(&addr), "error names the node: {msg}");
+
+    // The same failure through the full protocol runner: Err, not panic.
+    let addr2 = spawn_dying_node();
+    let mut fleet2 = RemoteFleet::connect(&[addr2]).unwrap();
+    let cfg = ProtocolConfig::default();
+    let run = run_protocol(
+        Protocol::PrivLogitHessian,
+        Backend::Model,
+        256,
+        FMT,
+        &cfg,
+        1,
+        &CenterLink::Mem,
+        &mut fleet2,
+    );
+    assert!(run.is_err(), "protocol must surface the dead node as Err");
+    assert!(run.unwrap_err().to_string().contains("failed mid-protocol"));
+}
+
+/// `privlogit center` against a node that dies mid-protocol: the process
+/// exits non-zero with the error on stderr — no panic backtrace needed.
+#[test]
+fn center_cli_exits_nonzero_on_node_failure() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_privlogit") else {
+        eprintln!("skipping: privlogit binary not built for this test harness");
+        return;
+    };
+    let addr = spawn_dying_node();
+    let out = Command::new(bin)
+        .args(["center", "--nodes", &addr, "--backend", "model", "--protocol", "plh"])
+        .output()
+        .expect("run privlogit center");
+    assert!(!out.status.success(), "center must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("failed mid-protocol"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "no panic on the node-failure path: {stderr}");
+}
+
+/// Reserve `k` distinct loopback ports (bind ephemeral, record, drop).
+fn free_ports(k: usize) -> Vec<u16> {
+    let listeners: Vec<TcpListener> =
+        (0..k).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    listeners.iter().map(|l| l.local_addr().unwrap().port()).collect()
+}
+
+struct KillOnDrop(Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// The full CLI topology as five real OS processes: three `privlogit
+/// node`, one `privlogit center-b --once`, one `privlogit center-a`.
+/// The center-a report must show convergence and measured fleet wire
+/// traffic; center-b must exit cleanly after its single session.
+#[test]
+fn five_process_cli_topology_end_to_end() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_privlogit") else {
+        eprintln!("skipping: privlogit binary not built for this test harness");
+        return;
+    };
+    let ports = free_ports(4);
+    let dataset = "synth:n=900,p=3,seed=17";
+    let mut nodes: Vec<KillOnDrop> = Vec::new();
+    for org in 0..3 {
+        let child = Command::new(bin)
+            .args([
+                "node",
+                "--listen",
+                &format!("127.0.0.1:{}", ports[org]),
+                "--dataset",
+                dataset,
+                "--orgs",
+                "3",
+                "--org",
+                &org.to_string(),
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn node");
+        nodes.push(KillOnDrop(child));
+    }
+    let peer_addr = format!("127.0.0.1:{}", ports[3]);
+    let center_b = Command::new(bin)
+        .args(["center-b", "--listen", &peer_addr, "--once"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn center-b");
+    let mut center_b = KillOnDrop(center_b);
+
+    let node_list = format!(
+        "127.0.0.1:{},127.0.0.1:{},127.0.0.1:{}",
+        ports[0], ports[1], ports[2]
+    );
+    let out = Command::new(bin)
+        .args([
+            "center-a",
+            "--peer",
+            &peer_addr,
+            "--nodes",
+            &node_list,
+            "--protocol",
+            "privlogit-local",
+            "--backend",
+            "real",
+            "--modulus-bits",
+            "256",
+        ])
+        .output()
+        .expect("run center-a");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "center-a failed.\nstdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("converged: true"), "stdout: {stdout}");
+    assert!(stdout.contains("fleet wire (measured)"), "stdout: {stdout}");
+
+    // center-b was started with --once: it must exit on its own.
+    let status = center_b.0.wait().expect("center-b wait");
+    assert!(status.success(), "center-b --once must exit cleanly: {status:?}");
+}
+
+/// A rogue client speaking a different wire version is rejected before
+/// any payload parsing — exercised against a real node server endpoint.
+#[test]
+fn node_rejects_version_skew() {
+    let d = synthesize("skew", 60, 3, 3);
+    let mut server = NodeServer::bind("127.0.0.1:0", d).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.serve_once());
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut hello = wire::hello(wire::ROLE_CENTER);
+    hello[4] = 0xFF; // future version
+    hello[5] = 0x7F;
+    s.write_all(&hello).unwrap();
+    s.flush().unwrap();
+    let result = server_thread.join().unwrap();
+    let err = result.unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("version"), "got: {err}");
+}

@@ -76,7 +76,7 @@ fn run_reveals_only_by_design_values() {
     let cfg = ProtocolConfig::default();
     let mut fleet = LocalFleet::new(parts, Box::new(CpuCompute));
     let mut fab = RealFabric::new(256, FMT, 4);
-    let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg);
+    let rep = Protocol::PrivLogitHessian.run(&mut fab, &mut fleet, &cfg).unwrap();
     let l = &rep.ledger;
     // decrypts = share conversions (blinded; reveal nothing) only. The
     // coefficient update Δ comes out of the garbled circuit, not a
@@ -110,7 +110,8 @@ fn inverse_masking_is_fresh_per_run() {
             &mut fleet,
             1.0,
             1.0 / 500.0,
-        );
+        )
+        .unwrap();
         let EncData::Real(cts) = &hinv.tri.data else { panic!() };
         let transcript: Vec<u8> = cts.iter().flat_map(|c| c.0.to_bytes_le()).collect();
         let vals = fab.decrypt_reveal(&hinv.tri);
@@ -135,7 +136,7 @@ fn independent_keys_same_results() {
     for seed in [100u64, 200] {
         let mut fleet = LocalFleet::new(parts.clone(), Box::new(CpuCompute));
         let mut fab = RealFabric::new(256, FMT, seed);
-        let rep = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg);
+        let rep = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg).unwrap();
         betas.push(rep.beta);
     }
     let r2 = privlogit::linalg::r_squared(&betas[0], &betas[1]);
