@@ -1,27 +1,47 @@
 //! Micro-benchmarks of every secure primitive — the calibration source
-//! for the cost model (DESIGN.md §7).
+//! for the cost model (DESIGN.md §7) and the perf-trajectory artifact.
 //!
-//! Writes `artifacts/calibration.txt`, which [`privlogit::mpc::CostModel`]
-//! loads for all modeled experiments. Run before the table/figure benches
-//! for machine-accurate modeling:
+//! Writes two artifacts:
+//!
+//! * `artifacts/calibration.txt` — per-primitive seconds, loaded by
+//!   [`privlogit::mpc::CostModel`] for all modeled experiments. The
+//!   measured constants come from the *fast* paths (fixed-base
+//!   encryption, Straus multi-exp, cached CRT decryption), so the cost
+//!   model picks up every optimization automatically.
+//! * `BENCH_primitives.json` at the repo root — machine-readable op
+//!   timings (ns/op) plus fast-vs-reference speedups, modulus bits,
+//!   worker-thread count and git revision, so future PRs can track the
+//!   perf trajectory. Schema documented in docs/ARCHITECTURE.md.
+//!
+//! Run before the table/figure benches for machine-accurate modeling:
 //!
 //! ```sh
 //! cargo bench --bench micro_primitives
 //! ```
+//!
+//! Env knobs: `PRIVLOGIT_MODBITS` (modulus bits, default 1024),
+//! `PRIVLOGIT_BENCH_QUICK` (any value: fewer reps — the CI smoke mode),
+//! `PRIVLOGIT_THREADS` (worker count for the parallel entries).
 
 use std::time::Instant;
 
 use privlogit::bigint::{BigUint, RandomSource};
-use privlogit::crypto::paillier::{ChaChaSource, Keypair};
+use privlogit::crypto::paillier::{ChaChaSource, Ciphertext, Keypair};
 use privlogit::crypto::rng::ChaChaRng;
 use privlogit::gc::word::{self, FixedFmt};
 use privlogit::gc::{GcBackend, GcProgram, GcSession};
+use privlogit::mpc::fabric::{apply_hinv_cts_reference, PreparedHinv};
+use privlogit::mpc::tri_len;
+use privlogit::runtime::pool;
 
 const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
 /// Paillier modulus for calibration — scaled from the paper's 2048-bit
 /// parameter (all protocols scale identically in the key size; see
 /// DESIGN.md §7). Override with PRIVLOGIT_MODBITS.
 const DEFAULT_MODBITS: usize = 1024;
+/// Row dimensionality for the `apply_hinv` row primitive (a mid-size
+/// PrivLogit-Local workload shape).
+const APPLY_P: usize = 16;
 
 /// A mult-chain program: measures amortized per-AND cost through the full
 /// streamed garble+eval+OT pipeline.
@@ -48,15 +68,58 @@ impl GcProgram for MulChain {
     }
 }
 
-fn time_it<T>(label: &str, reps: usize, mut f: impl FnMut() -> T) -> f64 {
-    f(); // warm-up
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        std::hint::black_box(f());
+/// Timed ops collected for the JSON artifact (name → seconds/op).
+struct OpLog(Vec<(&'static str, f64)>);
+
+impl OpLog {
+    fn time_it<T>(&mut self, label: &'static str, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+        f(); // warm-up
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(f());
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("{label:<26} {per:>12.3e} s/op  ({reps} reps)");
+        self.0.push((label, per));
+        per
     }
-    let per = t0.elapsed().as_secs_f64() / reps as f64;
-    println!("{label:<18} {per:>12.3e} s/op  ({reps} reps)");
-    per
+
+    fn push(&mut self, label: &'static str, per: f64) {
+        self.0.push((label, per));
+    }
+
+    /// Like [`OpLog::time_it`], but attributes each rep's cost across
+    /// `items` units (rows of an apply, ciphertexts of a batch); the
+    /// warm-up call also fills any lazy tables so the steady state is
+    /// what gets timed.
+    fn time_scaled<T>(
+        &mut self,
+        label: &'static str,
+        reps: usize,
+        items: usize,
+        note: &str,
+        mut f: impl FnMut() -> T,
+    ) -> f64 {
+        f(); // warm-up
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(f());
+        }
+        let per = t0.elapsed().as_secs_f64() / (reps * items) as f64;
+        println!("{label:<26} {per:>12.3e} s/unit ({note})");
+        self.0.push((label, per));
+        per
+    }
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 fn main() {
@@ -64,63 +127,165 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(DEFAULT_MODBITS);
-    println!("=== micro_primitives (modulus {modbits} bits, W={} F={}) ===", FMT.w, FMT.f);
+    let quick = std::env::var("PRIVLOGIT_BENCH_QUICK").is_ok();
+    let r = |full: usize, q: usize| if quick { q } else { full };
+    let workers = pool::threads();
+    println!(
+        "=== micro_primitives (modulus {modbits} bits, W={} F={}, {workers} workers{}) ===",
+        FMT.w,
+        FMT.f,
+        if quick { ", quick" } else { "" }
+    );
     let mut rng = ChaChaRng::from_u64_seed(0xCA11B);
     let kp = Keypair::generate(modbits, &mut rng);
+    let mut log = OpLog(Vec::new());
 
+    // --- Paillier encryption: fixed-base fast path vs generic modpow ---
     let m = rng.below(&kp.pk.n);
-    let t_enc = time_it("paillier_enc", 50, || {
+    let t_enc = log.time_it("paillier_enc", r(50, 8), || {
         kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng))
     });
+    let t_enc_ref = log.time_it("paillier_enc_reference", r(50, 8), || {
+        kp.pk.encrypt_reference(&m, &mut ChaChaSource(&mut rng))
+    });
+
     let c1 = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
     let c2 = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng));
-    let t_add = time_it("paillier_add", 2000, || kp.pk.add(&c1, &c2));
+    let t_add = log.time_it("paillier_add", r(2000, 200), || kp.pk.add(&c1, &c2));
+
+    // --- Subtraction: modular inverse vs scalar-multiply-by-(n−1) ---
+    let t_sub = log.time_it("paillier_sub", r(200, 20), || kp.pk.sub(&c1, &c2));
+    let t_sub_ref =
+        log.time_it("paillier_sub_reference", r(50, 8), || kp.pk.sub_reference(&c1, &c2));
+
     let full_k = rng.below(&kp.pk.n);
-    let t_scalar_full = time_it("scalar_full", 50, || kp.pk.scalar_mul(&c1, &full_k));
+    let t_scalar_full = log.time_it("scalar_full", r(50, 8), || kp.pk.scalar_mul(&c1, &full_k));
     let small_k = BigUint::from_u64(rng.next_u64() >> 24); // ~f-bit exponent
-    let t_scalar_small = time_it("scalar_small", 200, || kp.pk.scalar_mul(&c1, &small_k));
-    let t_decrypt = time_it("blind_decrypt", 50, || {
+    let t_scalar_small =
+        log.time_it("scalar_small", r(200, 20), || kp.pk.scalar_mul(&c1, &small_k));
+    // Tiny exponents take the table-free square-and-multiply fast path.
+    let tiny_k = BigUint::from_u64((rng.next_u64() >> 52) | 1); // ≤ 12-bit exponent
+    log.time_it("scalar_tiny", r(400, 40), || kp.pk.scalar_mul(&c1, &tiny_k));
+
+    let t_decrypt = log.time_it("blind_decrypt", r(50, 8), || {
         // blind + decrypt, the to_shares unit
         let rho = rng.below(&kp.pk.n);
         let blinded = kp.pk.add(&c1, &kp.pk.encrypt_trivial(&rho));
         kp.sk.decrypt(&blinded)
     });
 
-    // GC: amortized AND cost through a real session.
+    // --- apply_hinv row primitive: Straus multi-exp vs naive loop ---
+    // (single-threaded for the algorithmic comparison, plus the
+    // parallel-row figure at the configured worker count)
+    let tri: Vec<Ciphertext> = (0..tri_len(APPLY_P))
+        .map(|i| {
+            kp.pk.encrypt(&BigUint::from_u64(10_000 + i as u64), &mut ChaChaSource(&mut rng))
+        })
+        .collect();
+    let v: Vec<f64> = (0..APPLY_P)
+        .map(|j| {
+            let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+            sign * (0.05 + j as f64 * 0.07)
+        })
+        .collect();
+    let apply_reps = r(5, 2);
+    let prepared_1 = PreparedHinv::prepare(&kp.pk, APPLY_P, &tri, 1);
+    let t_row = log.time_scaled("apply_hinv_row", apply_reps, APPLY_P, "1 worker", || {
+        prepared_1.apply(FMT, &v, 1)
+    });
+    let t_row_ref =
+        log.time_scaled("apply_hinv_row_reference", apply_reps, APPLY_P, "naive loop", || {
+            apply_hinv_cts_reference(&kp.pk, FMT, APPLY_P, &tri, &v)
+        });
+    let prepared_n = PreparedHinv::prepare(&kp.pk, APPLY_P, &tri, workers);
+    let note_workers = format!("{workers} workers");
+    let t_row_par =
+        log.time_scaled("apply_hinv_row_parallel", apply_reps, APPLY_P, &note_workers, || {
+            prepared_n.apply(FMT, &v, workers)
+        });
+
+    // --- Batch encryption at the configured worker count ---
+    let batch_ms: Vec<BigUint> = (0..32u64).map(BigUint::from_u64).collect();
+    log.time_scaled("paillier_enc_batch", r(5, 2), batch_ms.len(), &note_workers, || {
+        kp.pk.encrypt_batch(&batch_ms, &mut ChaChaSource(&mut rng), workers)
+    });
+
+    // --- GC: amortized AND cost through a real session ---
     let mut session = GcSession::new(0xCA11);
-    let prog = MulChain { rounds: 64 };
+    let prog = MulChain { rounds: r(64, 16) };
     let ga: Vec<bool> = (0..FMT.w).map(|i| i % 3 == 0).collect();
     let ea: Vec<bool> = (0..FMT.w).map(|i| i % 5 == 0).collect();
     let (_, s0) = session.execute(&prog, &ga, &ea); // warm-up
     let t0 = Instant::now();
     let mut ands = 0u64;
-    let reps = 5;
+    let reps = r(5, 2);
     for _ in 0..reps {
         let (_, s) = session.execute(&prog, &ga, &ea);
         ands += s.ands;
     }
     let t_and = t0.elapsed().as_secs_f64() / ands as f64;
     println!("gc_and             {t_and:>12.3e} s/gate ({ands} gates; warm-up {})", s0.ands);
+    log.push("gc_and", t_and);
 
     // OT extension amortized per evaluator-input bit.
     let prog_small = MulChain { rounds: 1 };
     let t0 = Instant::now();
-    let ot_reps = 50;
+    let ot_reps = r(50, 10);
     for _ in 0..ot_reps {
         session.execute(&prog_small, &ga, &ea);
     }
     let t_ot = t0.elapsed().as_secs_f64() / (ot_reps * FMT.w) as f64;
     println!("ot_per_bit(approx) {t_ot:>12.3e} s/bit");
+    log.push("ot_per_bit", t_ot);
 
+    // --- calibration.txt (cost-model input; fast-path constants) ---
+    let t_apply_term = t_row / APPLY_P as f64;
     let cal = format!(
         "# measured by `cargo bench --bench micro_primitives` (modulus {modbits} bits)\n\
          t_and = {t_and:.3e}\nt_ot = {t_ot:.3e}\nt_enc = {t_enc:.3e}\nt_add = {t_add:.3e}\n\
          t_scalar_full = {t_scalar_full:.3e}\nt_scalar_small = {t_scalar_small:.3e}\n\
-         t_decrypt = {t_decrypt:.3e}\n"
+         t_apply_term = {t_apply_term:.3e}\nt_decrypt = {t_decrypt:.3e}\n"
     );
     std::fs::create_dir_all("artifacts").ok();
     std::fs::write("artifacts/calibration.txt", &cal).expect("write calibration");
     println!("\nwrote artifacts/calibration.txt:\n{cal}");
+
+    // --- BENCH_primitives.json (perf trajectory artifact) ---
+    let speedup_enc = t_enc_ref / t_enc;
+    let speedup_sub = t_sub_ref / t_sub;
+    let speedup_row = t_row_ref / t_row;
+    let speedup_row_par = t_row_ref / t_row_par;
+    let mut ops_json = String::new();
+    for (i, (name, secs)) in log.0.iter().enumerate() {
+        if i > 0 {
+            ops_json.push_str(",\n");
+        }
+        ops_json.push_str(&format!("    \"{name}\": {:.1}", secs * 1e9));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"privlogit-bench-primitives/v1\",\n  \"git_rev\": \"{}\",\n  \
+         \"modulus_bits\": {modbits},\n  \"threads\": {workers},\n  \"quick\": {quick},\n  \
+         \"ops_ns\": {{\n{ops_json}\n  }},\n  \"speedups\": {{\n    \
+         \"encrypt_fixed_base\": {speedup_enc:.2},\n    \
+         \"sub_inverse\": {speedup_sub:.2},\n    \
+         \"apply_hinv_row_multiexp\": {speedup_row:.2},\n    \
+         \"apply_hinv_row_parallel\": {speedup_row_par:.2}\n  }}\n}}\n",
+        git_rev()
+    );
+    // The artifact lives at the repo root (the bench runs with cwd =
+    // rust/); fall back to the cwd when run from elsewhere.
+    let json_path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_primitives.json"
+    } else {
+        "BENCH_primitives.json"
+    };
+    std::fs::write(json_path, &json).expect("write BENCH_primitives.json");
+    println!("wrote {json_path}:\n{json}");
+
+    println!(
+        "speedups: encrypt {speedup_enc:.2}x, sub {speedup_sub:.2}x, \
+         apply_hinv row {speedup_row:.2}x (parallel {speedup_row_par:.2}x)"
+    );
     assert!(
         t_scalar_small < t_scalar_full,
         "PrivLogit-Local's premise: multiply-by-small-constant must be cheaper"

@@ -13,7 +13,7 @@ mod monty;
 mod prime;
 mod signed;
 
-pub use monty::Montgomery;
+pub use monty::{FixedBase, MontElem, Montgomery, StrausTable};
 pub use prime::{gen_prime, is_probable_prime};
 pub use signed::BigInt;
 

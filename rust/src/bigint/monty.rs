@@ -3,9 +3,82 @@
 //! Paillier spends virtually all of its time in `modpow` over the (odd)
 //! moduli `n` and `n²`, so this is the crate's number-theoretic hot path.
 //! The implementation is CIOS (coarsely integrated operand scanning)
-//! Montgomery multiplication with a 4-bit fixed window exponentiation.
+//! Montgomery multiplication with four exponentiation strategies layered
+//! on top:
+//!
+//! * [`Montgomery::pow`] / [`Montgomery::pow_elem`] — 4-bit fixed-window
+//!   exponentiation for general (base, exponent) pairs, with a plain
+//!   square-and-multiply fast path for short exponents (≤ 16 bits) that
+//!   skips building the window table — the common case for
+//!   PrivLogit-Local's small signed multiply-by-constant exponents.
+//! * [`Montgomery::fixed_base`] / [`Montgomery::pow_fixed`] — one-time
+//!   radix-2^w precomputation for a base that is reused across many
+//!   exponentiations (Paillier's `h_n` under one public key), turning
+//!   each exponentiation into ~`bits/w` multiplications with **zero**
+//!   squarings.
+//! * [`Montgomery::multi_pow`] — Straus/Shamir simultaneous
+//!   multi-exponentiation `∏ bᵢ^eᵢ` with 2-bit windows per term
+//!   ([`StrausTable`]), sharing one squaring chain across all terms of a
+//!   product — the `Enc(H̃⁻¹) ⊗ g` row primitive.
+//! * [`MontElem`] — values resident in Montgomery form, so batch
+//!   algebra (ciphertext aggregation folds, precomputed tables) enters
+//!   and leaves the Montgomery domain exactly once instead of on every
+//!   multiplication.
 
 use super::BigUint;
+
+/// Exponent bit-length at or below which [`Montgomery::pow_elem`] uses
+/// plain square-and-multiply instead of building the 16-entry window
+/// table (the table's 15 setup multiplications dominate short chains).
+const SMALL_EXP_BITS: usize = 16;
+
+/// Window width (bits) of [`Montgomery::fixed_base`] tables. Each
+/// exponentiation costs ~`bits/FIXED_BASE_WINDOW` multiplications; the
+/// table holds `⌈bits/w⌉·(2^w − 1)` residues (≈ 700 KB for a 256-bit
+/// exponent range over a 2048-bit modulus at w = 6).
+const FIXED_BASE_WINDOW: usize = 6;
+
+/// A value of `Z_m` held in Montgomery form (`a·R mod m`, fixed-width
+/// limbs). Produced by [`Montgomery::enter`]; all element operations are
+/// methods on the owning [`Montgomery`] context, and mixing elements
+/// across contexts is a logic error the type system does not catch.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct MontElem {
+    limbs: Vec<u64>,
+}
+
+/// 2-bit window table for one base of a [`Montgomery::multi_pow`]:
+/// `b, b², b³`, Montgomery-resident. Build once per base with
+/// [`Montgomery::straus_table`]; reusable across any number of
+/// multi-exponentiations (e.g. every row and every iteration that
+/// touches one `Enc(H̃⁻¹)` triangle entry).
+pub struct StrausTable {
+    pw: [MontElem; 3],
+}
+
+impl StrausTable {
+    /// The base `b` itself (Montgomery-resident) — e.g. to recover the
+    /// plain value via [`Montgomery::exit`] when building an
+    /// inverse-base table.
+    pub fn base(&self) -> &MontElem {
+        &self.pw[0]
+    }
+}
+
+/// Fixed-base exponentiation table: `table[w][d−1] = b^(d·2^(w·W))` in
+/// Montgomery form, for window digits `d ∈ 1..2^W`. See
+/// [`Montgomery::fixed_base`].
+pub struct FixedBase {
+    table: Vec<Vec<MontElem>>,
+    max_bits: usize,
+}
+
+impl FixedBase {
+    /// Largest exponent bit-length this table covers.
+    pub fn max_bits(&self) -> usize {
+        self.max_bits
+    }
+}
 
 /// Precomputed Montgomery context for an odd modulus `m`.
 pub struct Montgomery {
@@ -90,28 +163,84 @@ impl Montgomery {
         BigUint::from_limbs(self.mont_mul(a, &one))
     }
 
-    /// `base^exp mod m` using 4-bit fixed windows.
+    /// Bring a value into Montgomery form (one reduction + one
+    /// Montgomery multiplication). The inverse is [`Montgomery::exit`].
+    pub fn enter(&self, a: &BigUint) -> MontElem {
+        MontElem { limbs: self.to_mont(a) }
+    }
+
+    /// Leave Montgomery form, returning the canonical residue `< m`.
+    pub fn exit(&self, a: &MontElem) -> BigUint {
+        self.from_mont(&a.limbs)
+    }
+
+    /// The multiplicative identity in Montgomery form (`R mod m`).
+    pub fn one_elem(&self) -> MontElem {
+        let mut limbs = self.r.limbs.clone();
+        limbs.resize(self.k, 0);
+        MontElem { limbs }
+    }
+
+    /// Montgomery-domain product: both operands and the result stay
+    /// resident (`aR · bR · R⁻¹ = abR`). One CIOS pass, no divisions.
+    pub fn mul_elem(&self, a: &MontElem, b: &MontElem) -> MontElem {
+        MontElem { limbs: self.mont_mul(&a.limbs, &b.limbs) }
+    }
+
+    /// Mixed product `a·b mod m` of a resident element and a plain
+    /// value: the `R` factors cancel (`aR · b · R⁻¹ = ab`), so this is
+    /// the natural *exit* multiplication at a batch boundary — one CIOS
+    /// pass replaces an `exit` plus a plain multiplication.
+    pub fn mul_elem_plain(&self, a: &MontElem, b: &BigUint) -> BigUint {
+        let mut bl = b.rem(&self.modulus()).limbs;
+        bl.resize(self.k, 0);
+        BigUint::from_limbs(self.mont_mul(&a.limbs, &bl))
+    }
+
+    /// `base^exp mod m` (general path: 4-bit fixed windows, with the
+    /// short-exponent fast path of [`Montgomery::pow_elem`]).
     pub fn pow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
         if exp.is_zero() {
             return BigUint::one().rem(&self.modulus());
         }
-        let bm = self.to_mont(base);
-        // Precompute bm^0..bm^15 (bm^0 = R mod m).
-        let mut table = Vec::with_capacity(16);
-        let mut one_m = self.r.limbs.clone();
-        one_m.resize(self.k, 0);
-        table.push(one_m);
-        for i in 1..16 {
-            table.push(self.mont_mul(&table[i - 1], &bm));
-        }
+        self.exit(&self.pow_elem(&self.enter(base), exp))
+    }
+
+    /// `base^exp` over a Montgomery-resident base, resident result.
+    ///
+    /// Exponents of ≤ [`SMALL_EXP_BITS`] bits take a table-free plain
+    /// square-and-multiply (the 15 setup multiplications of the window
+    /// table would dominate such short chains); longer exponents use
+    /// 4-bit fixed windows.
+    pub fn pow_elem(&self, base: &MontElem, exp: &BigUint) -> MontElem {
         let bits = exp.bit_len();
+        if bits == 0 {
+            return self.one_elem();
+        }
+        if bits <= SMALL_EXP_BITS {
+            // Top bit is always set: start from the base itself.
+            let mut acc = base.clone();
+            for i in (0..bits - 1).rev() {
+                acc = self.mul_elem(&acc, &acc);
+                if exp.bit(i) {
+                    acc = self.mul_elem(&acc, base);
+                }
+            }
+            return acc;
+        }
+        // Precompute base^0..base^15 (base^0 = R mod m).
+        let mut table = Vec::with_capacity(16);
+        table.push(self.one_elem());
+        for i in 1..16 {
+            let next = self.mul_elem(&table[i - 1], base);
+            table.push(next);
+        }
         let windows = bits.div_ceil(4);
-        let mut acc = table[0].clone(); // R mod m == 1 in Montgomery form
-        let mut started = false;
+        let mut acc: Option<MontElem> = None;
         for w in (0..windows).rev() {
-            if started {
+            if let Some(a) = &mut acc {
                 for _ in 0..4 {
-                    acc = self.mont_mul(&acc, &acc);
+                    *a = self.mul_elem(a, a);
                 }
             }
             let mut idx = 0usize;
@@ -122,27 +251,111 @@ impl Montgomery {
                 }
             }
             if idx != 0 {
-                acc = self.mont_mul(&acc, &table[idx]);
-                started = true;
-            } else if started {
-                // window of zeros: squarings already applied
-            } else {
-                // leading zero windows: nothing yet
+                acc = Some(match acc.take() {
+                    None => table[idx].clone(),
+                    Some(a) => self.mul_elem(&a, &table[idx]),
+                });
             }
         }
-        if !started {
-            return BigUint::one().rem(&self.modulus());
+        acc.unwrap_or_else(|| self.one_elem())
+    }
+
+    /// Build a fixed-base table covering exponents up to `max_bits`
+    /// bits: `table[w][d−1] = base^(d·2^(w·W))` for every window `w` and
+    /// digit `d`. One-time cost ≈ `⌈max_bits/W⌉·2^W` multiplications;
+    /// afterwards [`Montgomery::pow_fixed`] needs **no squarings**.
+    pub fn fixed_base(&self, base: &BigUint, max_bits: usize) -> FixedBase {
+        let d_max = (1usize << FIXED_BASE_WINDOW) - 1;
+        let nwin = max_bits.div_ceil(FIXED_BASE_WINDOW).max(1);
+        let mut table = Vec::with_capacity(nwin);
+        let mut g = self.enter(base);
+        for w in 0..nwin {
+            let mut row = Vec::with_capacity(d_max);
+            row.push(g.clone());
+            for _ in 2..=d_max {
+                let next = self.mul_elem(row.last().expect("row nonempty"), &g);
+                row.push(next);
+            }
+            if w + 1 < nwin {
+                // g^(2^W) = g^(2^W − 1) · g — one multiply, no squarings.
+                g = self.mul_elem(row.last().expect("row nonempty"), &g);
+            }
+            table.push(row);
         }
-        self.from_mont(&acc)
+        FixedBase { table, max_bits: nwin * FIXED_BASE_WINDOW }
+    }
+
+    /// Fixed-base exponentiation: `∏_w table[w][digit_w]`, i.e. one
+    /// multiplication per nonzero radix-2^W digit of `exp` and nothing
+    /// else. Panics if `exp` exceeds the table's range.
+    pub fn pow_fixed(&self, fb: &FixedBase, exp: &BigUint) -> MontElem {
+        assert!(
+            exp.bit_len() <= fb.max_bits,
+            "fixed-base exponent of {} bits exceeds table range {}",
+            exp.bit_len(),
+            fb.max_bits
+        );
+        let mut acc: Option<MontElem> = None;
+        for (w, row) in fb.table.iter().enumerate() {
+            let mut d = 0usize;
+            for b in 0..FIXED_BASE_WINDOW {
+                if exp.bit(w * FIXED_BASE_WINDOW + b) {
+                    d |= 1 << b;
+                }
+            }
+            if d != 0 {
+                acc = Some(match acc.take() {
+                    None => row[d - 1].clone(),
+                    Some(a) => self.mul_elem(&a, &row[d - 1]),
+                });
+            }
+        }
+        acc.unwrap_or_else(|| self.one_elem())
+    }
+
+    /// 2-bit window table `b, b², b³` for one [`Montgomery::multi_pow`]
+    /// base (two multiplications).
+    pub fn straus_table(&self, b: &MontElem) -> StrausTable {
+        let b2 = self.mul_elem(b, b);
+        let b3 = self.mul_elem(&b2, b);
+        StrausTable { pw: [b.clone(), b2, b3] }
+    }
+
+    /// Straus/Shamir simultaneous multi-exponentiation `∏ᵢ bᵢ^eᵢ`
+    /// (resident result): one shared squaring chain over the longest
+    /// exponent, plus per-term window multiplications — versus one full
+    /// squaring chain *per term* for repeated [`Montgomery::pow`]. The
+    /// small-constant exponents of `Enc(H̃⁻¹) ⊗ g` fit easily in `u128`;
+    /// zero-exponent terms are skipped.
+    pub fn multi_pow(&self, terms: &[(&StrausTable, u128)]) -> MontElem {
+        let maxbits =
+            terms.iter().map(|&(_, e)| 128 - e.leading_zeros() as usize).max().unwrap_or(0);
+        if maxbits == 0 {
+            return self.one_elem();
+        }
+        let windows = maxbits.div_ceil(2);
+        let mut acc: Option<MontElem> = None;
+        for w in (0..windows).rev() {
+            if let Some(a) = &mut acc {
+                let s = self.mul_elem(a, a);
+                *a = self.mul_elem(&s, &s);
+            }
+            for &(tab, e) in terms {
+                let d = ((e >> (2 * w)) & 3) as usize;
+                if d != 0 {
+                    acc = Some(match acc.take() {
+                        None => tab.pw[d - 1].clone(),
+                        Some(a) => self.mul_elem(&a, &tab.pw[d - 1]),
+                    });
+                }
+            }
+        }
+        acc.unwrap_or_else(|| self.one_elem())
     }
 
     /// Montgomery-accelerated modular multiplication `a·b mod m`.
     pub fn mul(&self, a: &BigUint, b: &BigUint) -> BigUint {
-        let am = self.to_mont(a);
-        let mut bl = b.rem(&self.modulus()).limbs.clone();
-        bl.resize(self.k, 0);
-        // a·R · b · R⁻¹ = a·b
-        BigUint::from_limbs(self.mont_mul(&am, &bl))
+        self.mul_elem_plain(&self.enter(a), b)
     }
 }
 
@@ -217,17 +430,20 @@ mod tests {
         assert_eq!(mont.pow(&BigUint::zero(), &BigUint::from_u64(5)), BigUint::zero());
     }
 
-    /// Property: Montgomery pow == division-based square-and-multiply.
+    /// Property: Montgomery pow == division-based square-and-multiply,
+    /// across the small-exponent fast path (< 16 bits) and the windowed
+    /// path.
     #[test]
     fn pow_property_random() {
         let mut rng = TestRng::new(11);
-        for _ in 0..8 {
+        for round in 0..12 {
             let mut m = random_biguint(&mut rng, 512);
             m.set_bit(0); // force odd
             m.set_bit(511);
             let mont = Montgomery::new(&m);
             let base = random_biguint(&mut rng, 512);
-            let exp = random_biguint(&mut rng, 64);
+            let exp_bits = [3, 8, 15, 16, 17, 64][round % 6];
+            let exp = random_biguint(&mut rng, exp_bits);
             // reference: square-and-multiply with divrem reduction
             let b = base.rem(&m);
             let mut acc = BigUint::one();
@@ -237,7 +453,7 @@ mod tests {
                     acc = acc.mul_mod(&b, &m);
                 }
             }
-            assert_eq!(mont.pow(&base, &exp), acc);
+            assert_eq!(mont.pow(&base, &exp), acc, "exp_bits={exp_bits}");
         }
     }
 
@@ -252,6 +468,98 @@ mod tests {
             let a = random_biguint(&mut rng, 256);
             let b = random_biguint(&mut rng, 256);
             assert_eq!(mont.mul(&a, &b), a.mul_mod(&b, &m));
+        }
+    }
+
+    #[test]
+    fn enter_exit_roundtrip() {
+        let mut rng = TestRng::new(17);
+        let mut m = random_biguint(&mut rng, 320);
+        m.set_bit(0);
+        m.set_bit(319);
+        let mont = Montgomery::new(&m);
+        for _ in 0..10 {
+            let a = random_biguint(&mut rng, 400);
+            assert_eq!(mont.exit(&mont.enter(&a)), a.rem(&m));
+        }
+        assert_eq!(mont.exit(&mont.one_elem()), BigUint::one());
+    }
+
+    #[test]
+    fn mul_elem_stays_resident() {
+        let mut rng = TestRng::new(19);
+        let mut m = random_biguint(&mut rng, 256);
+        m.set_bit(0);
+        m.set_bit(255);
+        let mont = Montgomery::new(&m);
+        let a = random_biguint(&mut rng, 256);
+        let b = random_biguint(&mut rng, 256);
+        let c = random_biguint(&mut rng, 256);
+        // (a·b)·c through resident chain == plain mul_mod chain.
+        let ab = mont.mul_elem(&mont.enter(&a), &mont.enter(&b));
+        let abc = mont.mul_elem_plain(&ab, &c);
+        assert_eq!(abc, a.mul_mod(&b, &m).mul_mod(&c, &m));
+    }
+
+    /// Fixed-base exponentiation must agree with the general path for
+    /// every exponent in range, including zero and the table edge.
+    #[test]
+    fn fixed_base_matches_pow() {
+        let mut rng = TestRng::new(23);
+        let mut m = random_biguint(&mut rng, 512);
+        m.set_bit(0);
+        m.set_bit(511);
+        let mont = Montgomery::new(&m);
+        let base = random_biguint(&mut rng, 512).rem(&m);
+        let fb = mont.fixed_base(&base, 128);
+        assert!(fb.max_bits() >= 128);
+        assert_eq!(mont.exit(&mont.pow_fixed(&fb, &BigUint::zero())), BigUint::one());
+        for bits in [1usize, 5, 13, 40, 127] {
+            let e = random_biguint(&mut rng, bits);
+            assert_eq!(
+                mont.exit(&mont.pow_fixed(&fb, &e)),
+                mont.pow(&base, &e),
+                "bits={bits}"
+            );
+        }
+        // All-ones exponent exercises every table row.
+        let mut e = BigUint::zero();
+        for i in 0..128 {
+            e.set_bit(i);
+        }
+        assert_eq!(mont.exit(&mont.pow_fixed(&fb, &e)), mont.pow(&base, &e));
+    }
+
+    /// Straus multi-exponentiation == product of independent pows.
+    #[test]
+    fn multi_pow_matches_pow_product() {
+        let mut rng = TestRng::new(29);
+        let mut m = random_biguint(&mut rng, 384);
+        m.set_bit(0);
+        m.set_bit(383);
+        let mont = Montgomery::new(&m);
+        for terms_n in [0usize, 1, 3, 7] {
+            let bases: Vec<BigUint> =
+                (0..terms_n).map(|_| random_biguint(&mut rng, 384).rem(&m)).collect();
+            let exps: Vec<u128> = (0..terms_n)
+                .map(|i| {
+                    if i == 0 {
+                        0 // zero-exponent terms must be skipped
+                    } else {
+                        (rng.next_u64() >> (i * 7)) as u128
+                    }
+                })
+                .collect();
+            let tabs: Vec<StrausTable> =
+                bases.iter().map(|b| mont.straus_table(&mont.enter(b))).collect();
+            let term_refs: Vec<(&StrausTable, u128)> =
+                tabs.iter().zip(&exps).map(|(t, &e)| (t, e)).collect();
+            let got = mont.exit(&mont.multi_pow(&term_refs));
+            let mut expect = BigUint::one();
+            for (b, &e) in bases.iter().zip(&exps) {
+                expect = expect.mul_mod(&mont.pow(b, &BigUint::from_u128(e)), &m);
+            }
+            assert_eq!(got, expect, "terms={terms_n}");
         }
     }
 }

@@ -11,5 +11,5 @@ pub mod paillier;
 pub mod rng;
 
 pub use fixed::{FixedCodec, DEFAULT_FRAC_BITS};
-pub use paillier::{Ciphertext, Keypair, PrivateKey, PublicKey};
+pub use paillier::{Ciphertext, Keypair, MontCiphertext, PrivateKey, PublicKey};
 pub use rng::ChaChaRng;

@@ -8,10 +8,33 @@
 //! `c = (1 + m·n) · rⁿ mod n²` (one modpow instead of two) and decryption
 //! `m = L(c^λ mod n²) · μ mod n` with `L(u) = (u − 1)/n`.
 //! Decryption uses the CRT split over `p²`/`q²` (≈4× speedup).
+//!
+//! ## Hot-path engineering
+//!
+//! * **Fixed-base encryption** — the DJN short-exponent base `h_n` is
+//!   the same for every `encrypt`/`rerandomize` under a key, so the key
+//!   carries a one-time radix-2^w table ([`crate::bigint::FixedBase`])
+//!   that turns each encryption's modpow into ~`256/w` multiplications
+//!   with zero squarings. [`PublicKey::encrypt_reference`] keeps the
+//!   generic-modpow path callable for parity tests and benches.
+//! * **Cached CRT contexts** — [`PrivateKey`] holds the Montgomery
+//!   contexts for `p²`/`q²` (and the fixed exponents `p−1`, `q−1`), so
+//!   decryption never rebuilds `R`/`R²` per call.
+//! * **Cheap `⊖`** — [`PublicKey::sub`] inverts the subtrahend with one
+//!   extended-gcd modular inverse instead of a modulus-sized
+//!   exponentiation ([`PublicKey::sub_reference`]).
+//! * **Montgomery-resident batches** — [`MontCiphertext`] /
+//!   [`PublicKey::add_many`] keep ciphertexts in Montgomery form across
+//!   an aggregation fold, entering the domain once per operand.
+//! * **Batch encryption** — [`PublicKey::encrypt_batch`] draws all
+//!   randomness serially (the RNG stream is identical to sequential
+//!   `encrypt` calls, so outputs are bit-identical) and fans the modpow
+//!   work across scoped worker threads.
 
 use std::sync::Arc;
 
-use crate::bigint::{gen_prime, BigUint, Montgomery, RandomSource};
+use crate::bigint::{gen_prime, BigUint, FixedBase, MontElem, Montgomery, RandomSource};
+use crate::runtime::pool;
 
 /// Paillier public key (modulus `n`, implicit generator `g = n+1`).
 #[derive(Clone)]
@@ -27,6 +50,9 @@ pub struct PublicKey {
     /// nothing-up-my-sleeve value derived by hashing `n`, so the key
     /// reconstructs identically on every party.
     h_n: Arc<BigUint>,
+    /// Fixed-base table for `h_n` over the short-exponent range — the
+    /// per-key precomputation behind fast `encrypt`/`rerandomize`.
+    h_fb: Arc<FixedBase>,
 }
 
 /// Short-exponent bits for DJN-style encryption (≥2× statistical security
@@ -69,6 +95,12 @@ pub struct PrivateKey {
     q: BigUint,
     /// `q^-1 mod p` for CRT recombination.
     qinv_p: BigUint,
+    /// Cached Montgomery contexts for the CRT moduli (decryption never
+    /// rebuilds `R`/`R²` per call) and the fixed CRT exponents.
+    mont_p2: Arc<Montgomery>,
+    mont_q2: Arc<Montgomery>,
+    p1: BigUint,
+    q1: BigUint,
 }
 
 /// Key pair.
@@ -80,6 +112,14 @@ pub struct Keypair {
 /// A Paillier ciphertext (an element of `Z*_{n²}`).
 #[derive(Clone, PartialEq, Eq, Debug)]
 pub struct Ciphertext(pub BigUint);
+
+/// A Paillier ciphertext resident in Montgomery form mod `n²`. Used by
+/// add-heavy batches ([`PublicKey::add_mont`]): each value enters the
+/// Montgomery domain once ([`PublicKey::ct_to_mont`]) however many
+/// homomorphic additions it participates in, and leaves once at the
+/// wire/batch boundary ([`PublicKey::ct_from_mont`]).
+#[derive(Clone)]
+pub struct MontCiphertext(MontElem);
 
 impl Ciphertext {
     /// Serialized size in bytes (for communication accounting).
@@ -122,6 +162,8 @@ impl Keypair {
         let hp = Self::h_exp(&n, &p, &p2, &p1);
         let hq = Self::h_exp(&n, &q, &q2, &q1);
         let qinv_p = q.modinv(&p).expect("p, q coprime");
+        let mont_p2 = Arc::new(Montgomery::new(&p2));
+        let mont_q2 = Arc::new(Montgomery::new(&q2));
         let sk = PrivateKey {
             lambda,
             mu,
@@ -133,6 +175,10 @@ impl Keypair {
             p,
             q,
             qinv_p,
+            mont_p2,
+            mont_q2,
+            p1,
+            q1,
         };
         Keypair { pk, sk }
     }
@@ -149,25 +195,83 @@ impl Keypair {
 impl PublicKey {
     /// Rebuild a public key from its modulus (e.g. received over a
     /// channel; `n²` passed in to avoid recomputing when already known).
+    /// Builds the per-key fixed-base encryption table (a one-time
+    /// `O(2^w·256/w)`-multiplication precomputation).
     pub fn from_modulus(n: BigUint, n2: BigUint) -> Self {
         debug_assert_eq!(n.mul(&n), n2);
         let mont = Montgomery::new(&n2);
         let h0 = derive_h0(&n);
         let h_n = mont.pow(&h0, &n);
-        PublicKey { mont_n2: Arc::new(mont), n, n2, h_n: Arc::new(h_n) }
+        let h_fb = mont.fixed_base(&h_n, SHORT_EXP_BITS);
+        PublicKey {
+            mont_n2: Arc::new(mont),
+            n,
+            n2,
+            h_n: Arc::new(h_n),
+            h_fb: Arc::new(h_fb),
+        }
+    }
+
+    /// The shared Montgomery context for `n²` — for batch ciphertext
+    /// algebra (multi-exponentiation, Montgomery-resident folds) built
+    /// on [`crate::bigint::MontElem`].
+    pub fn n2_mont(&self) -> Arc<Montgomery> {
+        self.mont_n2.clone()
+    }
+
+    /// Draw a short DJN exponent (the per-encryption randomness).
+    fn short_exp(rng: &mut ChaChaSource<'_>) -> BigUint {
+        let mut sbytes = [0u8; SHORT_EXP_BITS / 8];
+        rng.0.fill_bytes(&mut sbytes);
+        BigUint::from_bytes_le(&sbytes)
     }
 
     /// Encrypt plaintext `m ∈ Z_n`: `c = (1 + m·n) · h^s mod n²` with a
-    /// short random exponent `s` (DJN-style; §Perf — one 256-bit modpow
-    /// instead of a full |n|-bit one).
+    /// short random exponent `s` (DJN-style). `h^s` comes from the
+    /// per-key fixed-base table — ~43 multiplications, zero squarings —
+    /// and the final product is one mixed Montgomery multiplication.
     pub fn encrypt(&self, m: &BigUint, rng: &mut ChaChaSource<'_>) -> Ciphertext {
+        let s = Self::short_exp(rng);
+        self.encrypt_with_short_exp(m, &s)
+    }
+
+    /// Deterministic DJN encryption with a caller-chosen short exponent
+    /// (the batch-encryption worker body; randomness is drawn by the
+    /// caller so parallel execution preserves the RNG stream).
+    pub fn encrypt_with_short_exp(&self, m: &BigUint, s: &BigUint) -> Ciphertext {
         let m = m.rem(&self.n);
-        let mut sbytes = [0u8; SHORT_EXP_BITS / 8];
-        rng.0.fill_bytes(&mut sbytes);
-        let s = BigUint::from_bytes_le(&sbytes);
+        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        let hs = self.mont_n2.pow_fixed(&self.h_fb, s);
+        Ciphertext(self.mont_n2.mul_elem_plain(&hs, &gm))
+    }
+
+    /// Reference DJN encryption through the generic windowed modpow (the
+    /// pre-fixed-base hot path). Bit-identical to [`PublicKey::encrypt`]
+    /// on the same RNG stream; kept callable for parity tests and the
+    /// micro-bench speedup comparison.
+    pub fn encrypt_reference(&self, m: &BigUint, rng: &mut ChaChaSource<'_>) -> Ciphertext {
+        let s = Self::short_exp(rng);
+        let m = m.rem(&self.n);
         let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
         let hs = self.mont_n2.pow(&self.h_n, &s);
         Ciphertext(self.mont_n2.mul(&gm, &hs))
+    }
+
+    /// Batch DJN encryption: all short exponents are drawn from `rng`
+    /// first (serially — the stream is identical to sequential
+    /// [`PublicKey::encrypt`] calls, so the ciphertexts are
+    /// bit-identical whatever `workers` is), then the modpow work fans
+    /// out across scoped worker threads.
+    pub fn encrypt_batch(
+        &self,
+        ms: &[BigUint],
+        rng: &mut ChaChaSource<'_>,
+        workers: usize,
+    ) -> Vec<Ciphertext> {
+        let exps: Vec<BigUint> = ms.iter().map(|_| Self::short_exp(rng)).collect();
+        pool::par_map_indexed(ms.len(), workers, |i| {
+            self.encrypt_with_short_exp(&ms[i], &exps[i])
+        })
     }
 
     /// Full-range-randomness encryption `c = (1 + m·n) · rⁿ mod n²`
@@ -181,7 +285,7 @@ impl PublicKey {
     /// Deterministic encryption with caller-chosen randomness (tests,
     /// blinding protocols that must reuse `r`).
     pub fn encrypt_with_r(&self, m: &BigUint, r: &BigUint) -> Ciphertext {
-        let gm = BigUint::one().add(&m.mul(&self.n)).rem(&self.n2);
+        let gm = BigUint::one().add(&m.rem(&self.n).mul(&self.n)).rem(&self.n2);
         let rn = self.mont_n2.pow(r, &self.n);
         Ciphertext(self.mont_n2.mul(&gm, &rn))
     }
@@ -197,9 +301,56 @@ impl PublicKey {
         Ciphertext(self.mont_n2.mul(&a.0, &b.0))
     }
 
-    /// Homomorphic subtraction `Enc(a) ⊖ Enc(b) = Enc(a − b)`.
+    /// Bring a ciphertext into Montgomery-resident form for a batch of
+    /// additions.
+    pub fn ct_to_mont(&self, c: &Ciphertext) -> MontCiphertext {
+        MontCiphertext(self.mont_n2.enter(&c.0))
+    }
+
+    /// Leave Montgomery-resident form (canonical ciphertext residue).
+    pub fn ct_from_mont(&self, c: &MontCiphertext) -> Ciphertext {
+        Ciphertext(self.mont_n2.exit(&c.0))
+    }
+
+    /// Homomorphic addition over Montgomery-resident ciphertexts: one
+    /// CIOS pass, no domain conversions, no divisions.
+    pub fn add_mont(&self, a: &MontCiphertext, b: &MontCiphertext) -> MontCiphertext {
+        MontCiphertext(self.mont_n2.mul_elem(&a.0, &b.0))
+    }
+
+    /// `⊕`-fold a batch of ciphertexts: every operand enters the
+    /// Montgomery domain exactly once (the accumulator stays resident;
+    /// the last operand rides the exit multiplication), versus one
+    /// re-entry per addition for a fold over [`PublicKey::add`].
+    /// Panics on an empty batch.
+    pub fn add_many(&self, cts: &[&Ciphertext]) -> Ciphertext {
+        assert!(!cts.is_empty(), "add_many needs at least one ciphertext");
+        if cts.len() == 1 {
+            return cts[0].clone();
+        }
+        let m = &self.mont_n2;
+        let mut acc = m.enter(&cts[0].0);
+        for c in &cts[1..cts.len() - 1] {
+            acc = m.mul_elem(&acc, &m.enter(&c.0));
+        }
+        Ciphertext(m.mul_elem_plain(&acc, &cts[cts.len() - 1].0))
+    }
+
+    /// Homomorphic subtraction `Enc(a) ⊖ Enc(b) = Enc(a − b)`: one
+    /// extended-gcd modular inverse of the subtrahend (`Enc(b)⁻¹ mod n²`
+    /// is a valid encryption of `−b`) plus one multiplication — versus
+    /// the modulus-sized exponentiation of [`PublicKey::sub_reference`].
+    /// The result decrypts identically but is not bit-equal to the
+    /// reference (the implicit randomness exponent differs in sign).
     pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        // Enc(-b) = Enc(b)^(n-1) — i.e. scalar multiply by n−1 ≡ −1 (mod n).
+        let inv = b.0.modinv(&self.n2).expect("ciphertext invertible mod n²");
+        Ciphertext(self.mont_n2.mul(&a.0, &inv))
+    }
+
+    /// Reference subtraction via `Enc(b)^(n−1)` — a full modulus-sized
+    /// scalar multiplication per call (the hidden perf bug this module
+    /// fixed); kept callable for parity tests and the micro-bench.
+    pub fn sub_reference(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         let neg_b = self.scalar_mul(b, &self.n.sub_u64(1));
         self.add(a, &neg_b)
     }
@@ -210,13 +361,11 @@ impl PublicKey {
     }
 
     /// Re-randomize: multiply by a fresh encryption of zero (short
-    /// exponent, like [`PublicKey::encrypt`]).
+    /// exponent through the fixed-base table, like [`PublicKey::encrypt`]).
     pub fn rerandomize(&self, a: &Ciphertext, rng: &mut ChaChaSource<'_>) -> Ciphertext {
-        let mut sbytes = [0u8; SHORT_EXP_BITS / 8];
-        rng.0.fill_bytes(&mut sbytes);
-        let s = BigUint::from_bytes_le(&sbytes);
-        let hs = self.mont_n2.pow(&self.h_n, &s);
-        Ciphertext(self.mont_n2.mul(&a.0, &hs))
+        let s = Self::short_exp(rng);
+        let hs = self.mont_n2.pow_fixed(&self.h_fb, &s);
+        Ciphertext(self.mont_n2.mul_elem_plain(&hs, &a.0))
     }
 
     /// Serialized public-key bytes (communication accounting).
@@ -227,12 +376,11 @@ impl PublicKey {
 
 impl PrivateKey {
     /// Decrypt via CRT: `m_p = L_p(c^{p−1} mod p²)·h_p mod p` (same for q),
-    /// recombined with Garner's formula.
+    /// recombined with Garner's formula. The `p²`/`q²` Montgomery
+    /// contexts are cached on the key.
     pub fn decrypt(&self, c: &Ciphertext) -> BigUint {
-        let p1 = self.p.sub_u64(1);
-        let q1 = self.q.sub_u64(1);
-        let cp = c.0.rem(&self.p2).modpow(&p1, &self.p2);
-        let cq = c.0.rem(&self.q2).modpow(&q1, &self.q2);
+        let cp = self.mont_p2.pow(&c.0.rem(&self.p2), &self.p1);
+        let cq = self.mont_q2.pow(&c.0.rem(&self.q2), &self.q1);
         let mp = cp.sub_u64(1).divrem(&self.p).0.mul_mod(&self.hp, &self.p);
         let mq = cq.sub_u64(1).divrem(&self.q).0.mul_mod(&self.hq, &self.q);
         // Garner: m = mq + q * ((mp - mq) * qinv mod p)
@@ -287,6 +435,39 @@ mod tests {
         }
     }
 
+    /// The fixed-base encryption path is bit-identical to the generic
+    /// modpow reference on the same RNG stream.
+    #[test]
+    fn fixed_base_encrypt_matches_reference() {
+        let (kp, _) = setup();
+        let mut rng_a = ChaChaRng::from_u64_seed(777);
+        let mut rng_b = ChaChaRng::from_u64_seed(777);
+        for v in [0u64, 3, 1 << 33, u64::MAX] {
+            let m = BigUint::from_u64(v);
+            let fast = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng_a));
+            let refc = kp.pk.encrypt_reference(&m, &mut ChaChaSource(&mut rng_b));
+            assert_eq!(fast, refc, "fixed-base vs reference at {v}");
+        }
+    }
+
+    /// Batch encryption is bit-identical to sequential encryption on the
+    /// same stream, for any worker count.
+    #[test]
+    fn batch_encrypt_matches_serial() {
+        let (kp, _) = setup();
+        let ms: Vec<BigUint> = (0..9u64).map(|i| BigUint::from_u64(i * i + 5)).collect();
+        let mut rng_serial = ChaChaRng::from_u64_seed(31);
+        let serial: Vec<Ciphertext> = ms
+            .iter()
+            .map(|m| kp.pk.encrypt(m, &mut ChaChaSource(&mut rng_serial)))
+            .collect();
+        for workers in [1usize, 4] {
+            let mut rng_batch = ChaChaRng::from_u64_seed(31);
+            let batch = kp.pk.encrypt_batch(&ms, &mut ChaChaSource(&mut rng_batch), workers);
+            assert_eq!(batch, serial, "workers={workers}");
+        }
+    }
+
     #[test]
     fn crt_matches_plain_decrypt() {
         let (kp, mut rng) = setup();
@@ -309,6 +490,22 @@ mod tests {
         // subtraction that wraps (negative result ≡ n - diff)
         let wrapped = kp.sk.decrypt(&kp.pk.sub(&ca, &cb));
         assert_eq!(wrapped, kp.pk.n.sub(&b.sub(&a)));
+    }
+
+    /// The inverse-based `⊖` decrypts identically to the reference
+    /// scalar-multiplication path in both orders.
+    #[test]
+    fn sub_matches_reference_path() {
+        let (kp, mut rng) = setup();
+        for (x, y) in [(5u64, 3u64), (3, 5), (1 << 30, 77), (0, 12)] {
+            let cx = kp.pk.encrypt(&BigUint::from_u64(x), &mut ChaChaSource(&mut rng));
+            let cy = kp.pk.encrypt(&BigUint::from_u64(y), &mut ChaChaSource(&mut rng));
+            assert_eq!(
+                kp.sk.decrypt(&kp.pk.sub(&cx, &cy)),
+                kp.sk.decrypt(&kp.pk.sub_reference(&cx, &cy)),
+                "sub parity at ({x}, {y})"
+            );
+        }
     }
 
     #[test]
@@ -361,5 +558,33 @@ mod tests {
             expect = expect.add(&m);
         }
         assert_eq!(kp.sk.decrypt(&acc), expect);
+    }
+
+    /// The Montgomery-resident fold is bit-identical to a chain of
+    /// plain `add`s, and `ct_to_mont`/`ct_from_mont` round-trips.
+    #[test]
+    fn montgomery_resident_fold_matches_add_chain() {
+        let (kp, mut rng) = setup();
+        let cts: Vec<Ciphertext> = (1..=7u64)
+            .map(|i| kp.pk.encrypt(&BigUint::from_u64(i * 13), &mut ChaChaSource(&mut rng)))
+            .collect();
+        let mut chain = cts[0].clone();
+        for c in &cts[1..] {
+            chain = kp.pk.add(&chain, c);
+        }
+        let refs: Vec<&Ciphertext> = cts.iter().collect();
+        assert_eq!(kp.pk.add_many(&refs), chain, "fold vs chain");
+        assert_eq!(kp.pk.add_many(&refs[..1]), cts[0], "singleton fold");
+
+        let rt = kp.pk.ct_from_mont(&kp.pk.ct_to_mont(&cts[0]));
+        assert_eq!(rt, cts[0], "resident round-trip");
+        let ab = kp.pk.add_mont(&kp.pk.ct_to_mont(&cts[0]), &kp.pk.ct_to_mont(&cts[1]));
+        assert_eq!(kp.pk.ct_from_mont(&ab), kp.pk.add(&cts[0], &cts[1]), "add_mont parity");
+        // Resident scalar-mul (pow over a Montgomery-resident base)
+        // round-trips to the plain-form scalar_mul result.
+        let mont = kp.pk.n2_mont();
+        let k = BigUint::from_u64(0xBEEF);
+        let resident = mont.exit(&mont.pow_elem(&mont.enter(&cts[0].0), &k));
+        assert_eq!(resident, kp.pk.scalar_mul(&cts[0], &k).0, "resident scalar-mul parity");
     }
 }

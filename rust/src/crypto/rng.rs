@@ -2,8 +2,8 @@
 //!
 //! The `rand`/`rand_chacha` crates are unavailable in the build image, so
 //! the ChaCha20 block function (RFC 8439) is implemented here. Seeding
-//! comes from the OS (`getrandom`) or an explicit 32-byte seed for
-//! reproducible protocol runs.
+//! comes from the OS entropy pool (`/dev/urandom`) or an explicit
+//! 32-byte seed for reproducible protocol runs.
 
 use crate::bigint::{BigUint, RandomSource};
 
@@ -17,10 +17,16 @@ pub struct ChaChaRng {
 }
 
 impl ChaChaRng {
-    /// Seed from the operating system entropy pool.
+    /// Seed from the operating system entropy pool (`/dev/urandom`).
+    /// Panics if the pool is unreadable — this RNG seeds Paillier key
+    /// generation, so a silent low-entropy fallback would be a key
+    /// compromise, not a convenience.
     pub fn from_os() -> Self {
+        use std::io::Read as _;
         let mut seed = [0u8; 32];
-        getrandom::fill(&mut seed).expect("OS entropy unavailable");
+        std::fs::File::open("/dev/urandom")
+            .and_then(|mut f| f.read_exact(&mut seed))
+            .expect("OS entropy unavailable (/dev/urandom)");
         Self::from_seed(seed)
     }
 

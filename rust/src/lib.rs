@@ -42,7 +42,7 @@
 //! | [`protocols`] | the three secure protocols of the paper |
 //! | [`coordinator`] | node/center topology, scheduler, convergence loop |
 //! | [`net`] | wire format, TCP transport, remote fleets, node servers (node-side encryption) |
-//! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
+//! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts; scoped-thread worker pool |
 //! | [`linalg`] | dense matrix/vector algebra, Cholesky, solvers |
 //! | [`data`] | dataset synthesis, real-study stand-ins, partitioning |
 //! | [`config`] | experiment/config system + CLI parsing |

@@ -31,6 +31,14 @@ pub struct CostModel {
     /// Scalar multiply with a small (fixed-point, ≈ f-bit) exponent —
     /// the PrivLogit-Local "multiplication-by-constant" primitive.
     pub t_scalar_small: f64,
+    /// One term of an `Enc(H̃⁻¹)⊗g` row computed by the Straus
+    /// multi-exponentiation path (squaring chain and additions
+    /// amortized across the row; single-threaded) — what the real
+    /// backend actually pays per (row, column) pair, measured as
+    /// `apply_hinv_row / p` by the micro-bench. Substantially below
+    /// `t_scalar_small`, which times a standalone scalar multiply with
+    /// its own full squaring chain.
+    pub t_apply_term: f64,
     /// Blinded decryption round (mask + decrypt + unmask).
     pub t_decrypt: f64,
     /// One-way message latency (models the paper's ethernet; applied per
@@ -51,6 +59,7 @@ impl Default for CostModel {
             t_add: 2e-6,
             t_scalar_full: 450e-6,
             t_scalar_small: 40e-6,
+            t_apply_term: 12e-6,
             t_decrypt: 900e-6,
             latency: 200e-6,
             bandwidth: 117e6, // ~1 Gb ethernet, the paper's testbed link
@@ -80,6 +89,7 @@ impl CostModel {
                 "t_add" => m.t_add = v,
                 "t_scalar_full" => m.t_scalar_full = v,
                 "t_scalar_small" => m.t_scalar_small = v,
+                "t_apply_term" => m.t_apply_term = v,
                 "t_decrypt" => m.t_decrypt = v,
                 "latency" => m.latency = v,
                 "bandwidth" => m.bandwidth = v,
@@ -174,6 +184,10 @@ mod tests {
         assert!(
             m.t_scalar_small < m.t_scalar_full,
             "small-exponent scalar mul must be cheaper — PrivLogit-Local depends on it"
+        );
+        assert!(
+            m.t_apply_term < m.t_scalar_small,
+            "a Straus-amortized row term must be cheaper than a standalone scalar mul"
         );
     }
 

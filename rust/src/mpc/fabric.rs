@@ -16,15 +16,16 @@
 //! [`SecureFabric`], so both backends run the *same* protocol logic.
 
 use std::collections::HashMap;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use super::circuits::{
-    tri_len, CholeskyShareProg, ConvergedProg, InverseMaskedProg, NewtonStepProg, SolveProg,
-    SIGMA,
+    tri_idx, tri_len, CholeskyShareProg, ConvergedProg, InverseMaskedProg, NewtonStepProg,
+    SolveProg, SIGMA,
 };
 use super::costmodel::{CostLedger, CostModel};
 use super::peer::{execute_local, PeerGcClient, ProgSpec};
-use crate::bigint::{BigInt, BigUint, RandomSource};
+use crate::bigint::{BigInt, BigUint, Montgomery, RandomSource, StrausTable};
 use crate::coordinator::fleet::FleetKey;
 use crate::crypto::fixed::FixedCodec;
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, Keypair, PublicKey};
@@ -33,6 +34,7 @@ use crate::gc::backend::CountBackend;
 use crate::gc::exec::{ExecStats, GcProgram, GcSession};
 use crate::gc::word::FixedFmt;
 use crate::linalg::Matrix;
+use crate::runtime::pool;
 
 /// Additive shares of one value mod 2^w. `a` is held by Center server S1
 /// (the garbler / key holder), `b` by S2 (the evaluator / aggregator).
@@ -242,6 +244,10 @@ pub struct RealFabric {
     ledger: CostLedger,
     net: CostModel,
     label: &'static str,
+    /// Straus-prepared `Enc(H̃⁻¹)`, keyed by the triangle it was built
+    /// from — PrivLogit-Local applies the same broadcast triangle every
+    /// iteration, so the window tables are built once, not per round.
+    prepared_hinv: Option<(Vec<Ciphertext>, PreparedHinv)>,
 }
 
 impl RealFabric {
@@ -314,6 +320,7 @@ impl RealFabric {
             ledger,
             net: CostModel::load(CostModel::CALIBRATION_PATH),
             label,
+            prepared_hinv: None,
         })
     }
 
@@ -386,13 +393,9 @@ impl SecureFabric for RealFabric {
 
     fn node_encrypt_vec(&mut self, node: usize, vals: &[f64]) -> EncVec {
         let t0 = Instant::now();
-        let cts: Vec<Ciphertext> = vals
-            .iter()
-            .map(|&v| {
-                let m = self.codec.encode(v);
-                self.kp.pk.encrypt(&m, &mut ChaChaSource(&mut self.rng))
-            })
-            .collect();
+        let ms: Vec<BigUint> = vals.iter().map(|&v| self.codec.encode(v)).collect();
+        let cts =
+            self.kp.pk.encrypt_batch(&ms, &mut ChaChaSource(&mut self.rng), pool::threads());
         self.ledger.paillier_encs += vals.len() as u64;
         let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
         self.ledger.bytes += sent;
@@ -420,16 +423,23 @@ impl SecureFabric for RealFabric {
         let t0 = Instant::now();
         let scale = parts[0].scale;
         let len = parts[0].len();
-        let mut acc: Vec<Ciphertext> = self.expect_real(&parts[0]).to_vec();
-        for part in &parts[1..] {
-            assert_eq!(part.scale, scale, "scale mismatch in aggregation");
-            let cts = self.expect_real(part);
-            assert_eq!(cts.len(), len);
-            for (a, c) in acc.iter_mut().zip(cts) {
-                *a = self.kp.pk.add(a, c);
-            }
-            self.ledger.paillier_adds += len as u64;
-        }
+        let cols: Vec<&[Ciphertext]> = parts
+            .iter()
+            .map(|part| {
+                assert_eq!(part.scale, scale, "scale mismatch in aggregation");
+                let cts = self.expect_real(part);
+                assert_eq!(cts.len(), len);
+                cts
+            })
+            .collect();
+        // Per-element Montgomery-resident fold, fanned across workers;
+        // wall time (not summed per-thread time) goes to the ledger.
+        let pk = &self.kp.pk;
+        let acc: Vec<Ciphertext> = pool::par_map_indexed(len, pool::threads(), |i| {
+            let column: Vec<&Ciphertext> = cols.iter().map(|cts| &cts[i]).collect();
+            pk.add_many(&column)
+        });
+        self.ledger.paillier_adds += ((parts.len() - 1) * len) as u64;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
         self.ledger.rounds += 1;
         EncVec { scale, data: EncData::Real(acc) }
@@ -459,20 +469,29 @@ impl SecureFabric for RealFabric {
         let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
         let mask_bound = BigUint::one().shl(w + SIGMA);
         let cts = self.expect_real(v).to_vec();
+        // S2's blinds are drawn serially (fixed RNG stream); the
+        // blind-encrypt-decrypt pipeline then fans out per element.
+        let rhos: Vec<BigUint> = cts.iter().map(|_| self.rng.below(&mask_bound)).collect();
+        let pk = &self.kp.pk;
+        let sk = &self.kp.sk;
+        let lift_ref = &lift;
+        let mask_w = (1u128 << w) - 1;
+        let blinded: Vec<(Shared, u64)> =
+            pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                // S2: blind with C + ρ.
+                let blind = lift_ref.add(&rhos[i]);
+                let blinded = pk.add(&cts[i], &pk.encrypt_trivial(&blind));
+                // S1: decrypt y = x + C + ρ (no wrap: |x| < 2^{w-1} ≪ n).
+                let y = sk.decrypt(&blinded);
+                let a = u128_of(&y) & mask_w;
+                let b = (1u128 << w).wrapping_sub(u128_of(&blind) & mask_w) & mask_w;
+                (Shared { a, b }, blinded.byte_len() as u64)
+            });
         let mut shares = Vec::with_capacity(cts.len());
-        for c in &cts {
-            // S2: blind with C + ρ.
-            let rho = self.rng.below(&mask_bound);
-            let blind = lift.add(&rho);
-            let blinded = self.kp.pk.add(c, &self.kp.pk.encrypt_trivial(&blind));
-            self.ledger.bytes += blinded.byte_len() as u64;
-            self.ledger.bytes_recv += blinded.byte_len() as u64; // S1 receives the blinded ct
-            // S1: decrypt y = x + C + ρ (no wrap: |x| < 2^{w-1} ≪ n).
-            let y = self.kp.sk.decrypt(&blinded);
-            let mask_w = (1u128 << w) - 1;
-            let a = u128_of(&y) & mask_w;
-            let b = (1u128 << w).wrapping_sub(u128_of(&blind) & mask_w) & mask_w;
-            shares.push(Shared { a, b });
+        for (share, ct_bytes) in blinded {
+            self.ledger.bytes += ct_bytes;
+            self.ledger.bytes_recv += ct_bytes; // S1 receives the blinded ct
+            shares.push(share);
         }
         self.ledger.paillier_adds += cts.len() as u64;
         self.ledger.paillier_decrypts += cts.len() as u64;
@@ -484,13 +503,11 @@ impl SecureFabric for RealFabric {
     fn decrypt_reveal(&mut self, v: &EncVec) -> Vec<f64> {
         let t0 = Instant::now();
         let cts = self.expect_real(v);
-        let out: Vec<f64> = cts
-            .iter()
-            .map(|c| {
-                let m = self.kp.sk.decrypt(c);
-                self.codec.decode_scaled(&m, v.scale)
-            })
-            .collect();
+        let sk = &self.kp.sk;
+        let codec = &self.codec;
+        let out: Vec<f64> = pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+            codec.decode_scaled(&sk.decrypt(&cts[i]), v.scale)
+        });
         self.ledger.paillier_decrypts += cts.len() as u64;
         let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
         self.ledger.bytes += sent;
@@ -585,26 +602,29 @@ impl SecureFabric for RealFabric {
         // S2: assemble wide masked integers, encrypt; subtract Enc(C + r).
         let t0 = Instant::now();
         let lift = BigUint::one().shl(w - 1);
-        let cts: Vec<Ciphertext> = out
+        let ys: Vec<BigUint> = out
             .chunks(wide)
-            .zip(&masks)
-            .map(|(chunk, &r)| {
+            .map(|chunk| {
                 let mut y: u128 = 0;
                 for (i, &bit) in chunk.iter().enumerate() {
                     if bit {
                         y |= 1 << i;
                     }
                 }
-                let enc_y = self
-                    .kp
-                    .pk
-                    .encrypt(&BigUint::from_u128(y), &mut ChaChaSource(&mut self.rng));
-                // S1 contributes Enc(C + r) — trivial encryption suffices
-                // for correctness; hiding comes from enc_y's randomness.
-                let cr = lift.add(&BigUint::from_u128(r));
-                self.kp.pk.sub(&enc_y, &self.kp.pk.encrypt_trivial(&cr))
+                BigUint::from_u128(y)
             })
             .collect();
+        // S2 encrypts the masked values as one parallel batch (the RNG
+        // stream matches sequential encryption), then S1's Enc(C + r)
+        // correction is subtracted per element — trivial encryption
+        // suffices for correctness; hiding comes from enc_y's randomness.
+        let enc_ys =
+            self.kp.pk.encrypt_batch(&ys, &mut ChaChaSource(&mut self.rng), pool::threads());
+        let pk = &self.kp.pk;
+        let cts: Vec<Ciphertext> = pool::par_map_indexed(enc_ys.len(), pool::threads(), |i| {
+            let cr = lift.add(&BigUint::from_u128(masks[i]));
+            pk.sub(&enc_ys[i], &pk.encrypt_trivial(&cr))
+        });
         self.ledger.paillier_encs += nh as u64;
         self.ledger.paillier_adds += nh as u64;
         let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
@@ -640,14 +660,116 @@ impl SecureFabric for RealFabric {
     }
 }
 
+/// `Enc(H̃⁻¹)` prepared for repeated weighted-row application: every
+/// packed-triangle ciphertext resident in Montgomery form with its
+/// Straus window table built once, plus lazily-built inverse-base tables
+/// for negative coefficients (one extended-gcd inverse per triangle
+/// entry *ever*, versus one per row×column occurrence for the naive
+/// loop). [`crate::net::NodeServer`] builds this once per `SetHinv`
+/// broadcast and reuses it across every `StepReq` round.
+pub struct PreparedHinv {
+    p: usize,
+    mont: Arc<Montgomery>,
+    n2: BigUint,
+    pos: Vec<StrausTable>,
+    neg: Vec<OnceLock<StrausTable>>,
+}
+
+impl PreparedHinv {
+    /// Enter the triangle into Montgomery form and build the per-entry
+    /// Straus tables (fanned across `workers` threads).
+    ///
+    /// Contract: every triangle entry must be a unit of `Z_{n²}` (all
+    /// honestly-constructed ciphertexts are); a non-invertible entry
+    /// panics later, inside [`PreparedHinv::apply`], when a negative
+    /// coefficient first needs its inverse table. Wire-facing callers
+    /// validate before preparing (see `net::server`'s `SetHinv`).
+    pub fn prepare(pk: &PublicKey, p: usize, tri: &[Ciphertext], workers: usize) -> PreparedHinv {
+        assert_eq!(tri.len(), tri_len(p));
+        let mont = pk.n2_mont();
+        let mref = &mont;
+        let pos: Vec<StrausTable> = pool::par_map_indexed(tri.len(), workers, |i| {
+            mref.straus_table(&mref.enter(&tri[i].0))
+        });
+        let neg = (0..tri.len()).map(|_| OnceLock::new()).collect();
+        PreparedHinv { p, mont, n2: pk.n2.clone(), pos, neg }
+    }
+
+    /// Dimensionality of the prepared triangle.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    fn table(&self, idx: usize, positive: bool) -> &StrausTable {
+        if positive {
+            &self.pos[idx]
+        } else {
+            self.neg[idx].get_or_init(|| {
+                let b = self.mont.exit(self.pos[idx].base());
+                let inv = b.modinv(&self.n2).expect("ciphertext invertible mod n²");
+                self.mont.straus_table(&self.mont.enter(&inv))
+            })
+        }
+    }
+
+    /// `Enc(H̃⁻¹) ⊗ v`: each output row `i` is the single simultaneous
+    /// multi-exponentiation `∏_j tri[idx(i,j)]^{k_j}` with the small
+    /// signed constants `k_j = encode(v_j)` — one shared squaring chain
+    /// per row instead of one per term. Rows fan out across `workers`
+    /// threads; the result is bit-identical to
+    /// [`apply_hinv_cts_reference`] for any worker count.
+    ///
+    /// Returns the `p` row ciphertexts plus the scalar-op and
+    /// homomorphic-addition counts for ledger attribution (computed from
+    /// the coefficient structure, so they match the reference loop
+    /// exactly and never depend on scheduling).
+    pub fn apply(&self, fmt: FixedFmt, v: &[f64], workers: usize) -> (Vec<Ciphertext>, u64, u64) {
+        let p = self.p;
+        assert_eq!(v.len(), p);
+        let k: Vec<i128> = v.iter().map(|&x| fmt.encode(x)).collect();
+        let nnz = k.iter().filter(|&&x| x != 0).count() as u64;
+        let scalar_ops = p as u64 * nnz;
+        let adds = p as u64 * nnz.saturating_sub(1);
+        let kref = &k;
+        let rows: Vec<Ciphertext> = pool::par_map_indexed(p, workers, |i| {
+            let mut terms: Vec<(&StrausTable, u128)> = Vec::with_capacity(p);
+            for (j, &kj) in kref.iter().enumerate() {
+                if kj == 0 {
+                    continue;
+                }
+                let idx = if i >= j { tri_idx(i, j) } else { tri_idx(j, i) };
+                terms.push((self.table(idx, kj > 0), kj.unsigned_abs()));
+            }
+            Ciphertext(self.mont.exit(&self.mont.multi_pow(&terms)))
+        });
+        (rows, scalar_ops, adds)
+    }
+}
+
 /// `Enc(H̃⁻¹) ⊗ v` over raw ciphertexts: multiply-by-(small signed)
 /// constant rows — the cheap primitive PrivLogit-Local is built on.
-/// Shared by the center-side fabric and [`crate::net::NodeServer`],
-/// which performs it locally in the deployed topology (Alg. 3 step 7).
+/// Shared by the center-side fabric and [`crate::net::NodeServer`]
+/// (Alg. 3 step 7). One-shot convenience over [`PreparedHinv`]; callers
+/// that apply the same triangle repeatedly should prepare once.
 ///
 /// Returns the `p` row ciphertexts (scale `2f`) plus the scalar-op and
 /// homomorphic-addition counts for ledger attribution.
 pub fn apply_hinv_cts(
+    pk: &PublicKey,
+    fmt: FixedFmt,
+    p: usize,
+    tri: &[Ciphertext],
+    v: &[f64],
+) -> (Vec<Ciphertext>, u64, u64) {
+    let workers = pool::threads();
+    PreparedHinv::prepare(pk, p, tri, workers).apply(fmt, v, workers)
+}
+
+/// Reference `Enc(H̃⁻¹) ⊗ v`: the naive per-term loop (one full windowed
+/// `pow` per nonzero coefficient, one `⊕` per accumulation) this module
+/// replaced with Straus multi-exponentiation. Kept callable for parity
+/// property tests and the micro-bench speedup comparison.
+pub fn apply_hinv_cts_reference(
     pk: &PublicKey,
     fmt: FixedFmt,
     p: usize,
@@ -661,11 +783,7 @@ pub fn apply_hinv_cts(
     let mut adds = 0u64;
     for i in 0..p {
         for j in 0..p {
-            let idx = if i >= j {
-                super::circuits::tri_idx(i, j)
-            } else {
-                super::circuits::tri_idx(j, i)
-            };
+            let idx = if i >= j { tri_idx(i, j) } else { tri_idx(j, i) };
             let raw = fmt.encode(v[j]); // small signed constant (≤ w bits)
             if raw == 0 {
                 continue;
@@ -687,15 +805,23 @@ pub fn apply_hinv_cts(
     (cts, scalar_ops, adds)
 }
 
-/// Fabric-side wrapper over [`apply_hinv_cts`] (node or center time
-/// attribution is handled by the caller).
+/// Fabric-side wrapper over [`PreparedHinv`] (node or center time
+/// attribution is handled by the caller). The prepared triangle is
+/// cached on the fabric and rebuilt only when the broadcast changes.
 fn apply_hinv_real(fab: &mut RealFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
     let tri = match &hinv.tri.data {
         EncData::Real(c) => c,
         _ => panic!("model EncMat in RealFabric"),
     };
     let fmt = fab.fmt;
-    let (cts, scalar_ops, adds) = apply_hinv_cts(&fab.kp.pk, fmt, hinv.p, tri, v);
+    let workers = pool::threads();
+    let cache_hit = matches!(&fab.prepared_hinv, Some((key, _)) if key.as_slice() == &tri[..]);
+    if !cache_hit {
+        let prepared = PreparedHinv::prepare(&fab.kp.pk, hinv.p, tri, workers);
+        fab.prepared_hinv = Some((tri.clone(), prepared));
+    }
+    let (_, prepared) = fab.prepared_hinv.as_ref().expect("cached above");
+    let (cts, scalar_ops, adds) = prepared.apply(fmt, v, workers);
     fab.ledger.paillier_scalar += scalar_ops;
     fab.ledger.paillier_adds += adds;
     let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
@@ -871,8 +997,12 @@ impl SecureFabric for ModelFabric {
 
     fn node_apply_hinv(&mut self, node: usize, hinv: &EncMat, gj: &[f64]) -> EncVec {
         let p = hinv.p;
-        let secs = (p * p) as f64 * self.cost.t_scalar_small
-            + (p * (p - 1)) as f64 * self.cost.t_add;
+        // Modeled as the real backend's Straus multi-exp row primitive:
+        // p² row terms at the amortized per-term cost (squarings and
+        // additions included), single-threaded — conservative versus
+        // the parallel node servers. Op *counts* below keep the
+        // homomorphic-operation semantics for cross-backend tables.
+        let secs = (p * p) as f64 * self.cost.t_apply_term;
         self.ledger.add_node(node, secs);
         self.ledger.paillier_scalar += (p * p) as u64;
         self.ledger.paillier_adds += (p * (p - 1)) as u64;
@@ -883,8 +1013,7 @@ impl SecureFabric for ModelFabric {
 
     fn center_apply_hinv(&mut self, hinv: &EncMat, v: &[f64]) -> EncVec {
         let p = hinv.p;
-        self.ledger.center_secs += (p * p) as f64 * self.cost.t_scalar_small
-            + (p * (p - 1)) as f64 * self.cost.t_add;
+        self.ledger.center_secs += (p * p) as f64 * self.cost.t_apply_term;
         self.ledger.paillier_scalar += (p * p) as u64;
         self.ledger.paillier_adds += (p * (p - 1)) as u64;
         apply_hinv_model(self, hinv, v)
@@ -1240,6 +1369,43 @@ mod tests {
         let (solve400, _) = fab.gc_cost(ProgKind::Solve(400));
         assert!(t0.elapsed().as_secs_f64() < 30.0, "interp path must be fast");
         assert!(newton400 > 50 * solve400, "p³ vs p² separation at p=400 (~p/6)");
+    }
+
+    /// The Straus multi-exp apply path is bit-identical to the naive
+    /// reference loop for any worker count — including zero coefficients
+    /// (skipped terms), negative coefficients (lazy inverse tables) and
+    /// the ledger op counts.
+    #[test]
+    fn apply_hinv_matches_reference_bit_exact() {
+        let mut rng = ChaChaRng::from_u64_seed(99);
+        let kp = crate::crypto::paillier::Keypair::generate(256, &mut rng);
+        let p = 5;
+        let mut trng = TestRng::new(12);
+        let tri: Vec<Ciphertext> = (0..tri_len(p))
+            .map(|i| {
+                kp.pk.encrypt(&BigUint::from_u64(1000 + i as u64), &mut ChaChaSource(&mut rng))
+            })
+            .collect();
+        let v: Vec<f64> = (0..p)
+            .map(|j| if j == 0 { 0.0 } else { trng.gaussian() })
+            .collect();
+        let (want, s_ref, a_ref) = apply_hinv_cts_reference(&kp.pk, FMT, p, &tri, &v);
+        let prepared = PreparedHinv::prepare(&kp.pk, p, &tri, 2);
+        assert_eq!(prepared.p(), p);
+        for workers in [1usize, 4] {
+            let (got, s, a) = prepared.apply(FMT, &v, workers);
+            assert_eq!(got, want, "rows must be bit-identical (workers={workers})");
+            assert_eq!((s, a), (s_ref, a_ref), "ledger counts (workers={workers})");
+        }
+        // All-zero coefficient vector: every row is the trivial zero.
+        let zeros = vec![0.0; p];
+        let (got0, s0, a0) = prepared.apply(FMT, &zeros, 2);
+        let (want0, s0r, a0r) = apply_hinv_cts_reference(&kp.pk, FMT, p, &tri, &zeros);
+        assert_eq!(got0, want0);
+        assert_eq!((s0, a0), (s0r, a0r));
+        // One-shot wrapper agrees too.
+        let (got1, ..) = apply_hinv_cts(&kp.pk, FMT, p, &tri, &v);
+        assert_eq!(got1, want);
     }
 
     #[test]

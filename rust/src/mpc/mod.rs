@@ -21,5 +21,7 @@ pub mod peer;
 
 pub use circuits::{tri_idx, tri_len};
 pub use costmodel::{CostLedger, CostModel};
-pub use fabric::{EncData, EncMat, EncVec, ModelFabric, RealFabric, SecVec, SecureFabric, Shared};
+pub use fabric::{
+    EncData, EncMat, EncVec, ModelFabric, PreparedHinv, RealFabric, SecVec, SecureFabric, Shared,
+};
 pub use peer::{PeerGcClient, PeerGcServer, ProgSpec};

@@ -31,9 +31,9 @@ use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
 use crate::crypto::rng::ChaChaRng;
 use crate::data::Dataset;
 use crate::gc::word::FixedFmt;
-use crate::mpc::fabric::apply_hinv_cts;
+use crate::mpc::fabric::PreparedHinv;
 use crate::protocols::common::pack_tri;
-use crate::runtime::{CpuCompute, NodeCompute};
+use crate::runtime::{pool, CpuCompute, NodeCompute};
 
 /// A listening node server bound to one data partition and one compute
 /// engine (the same [`NodeCompute`] seam the in-process fleets use, so
@@ -43,6 +43,10 @@ pub struct NodeServer {
     data: Dataset,
     engine: Box<dyn NodeCompute>,
     seed: u64,
+    /// Worker threads for batch encryption and `Enc(H̃⁻¹)⊗g` rows
+    /// (default: `PRIVLOGIT_THREADS` / available parallelism). Replies
+    /// are bit-identical for any value — randomness is drawn serially.
+    threads: usize,
 }
 
 impl NodeServer {
@@ -64,6 +68,7 @@ impl NodeServer {
             data,
             engine,
             seed: entropy_seed(),
+            threads: pool::threads(),
         })
     }
 
@@ -71,6 +76,13 @@ impl NodeServer {
     /// randomness; give each organization a distinct value).
     pub fn with_seed(mut self, seed: u64) -> NodeServer {
         self.seed = seed;
+        self
+    }
+
+    /// Override the worker-thread count (tests pin 1 vs N to prove that
+    /// parallel replies are byte-identical to single-threaded ones).
+    pub fn with_threads(mut self, threads: usize) -> NodeServer {
+        self.threads = threads.max(1);
         self
     }
 
@@ -84,7 +96,7 @@ impl NodeServer {
         let (stream, _) = self.listener.accept()?;
         let mut t = TcpTransport::accept(stream, wire::ROLE_NODE)?;
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        serve_session(&mut t, &self.data, self.engine.as_mut(), self.seed)
+        serve_session(&mut t, &self.data, self.engine.as_mut(), self.seed, self.threads)
     }
 
     /// Serve center connections forever (one at a time). A failed
@@ -96,8 +108,10 @@ impl NodeServer {
             let (stream, _) = self.listener.accept()?;
             self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
             let seed = self.seed;
-            let session = TcpTransport::accept(stream, wire::ROLE_NODE)
-                .and_then(|mut t| serve_session(&mut t, &self.data, self.engine.as_mut(), seed));
+            let threads = self.threads;
+            let session = TcpTransport::accept(stream, wire::ROLE_NODE).and_then(|mut t| {
+                serve_session(&mut t, &self.data, self.engine.as_mut(), seed, threads)
+            });
             if let Err(e) = session {
                 eprintln!("node session ended with error: {e}");
             }
@@ -134,18 +148,24 @@ struct SessionCrypto {
     codec: FixedCodec,
     fmt: FixedFmt,
     rng: ChaChaRng,
-    /// Broadcast `Enc(H̃⁻¹)` (scale, packed triangle), once installed.
-    hinv: Option<(u32, Vec<Ciphertext>)>,
+    /// Broadcast `Enc(H̃⁻¹)` (scale, triangle prepared for repeated
+    /// Straus application), once installed.
+    hinv: Option<(u32, PreparedHinv)>,
+    /// Worker threads for encryption/apply batches.
+    threads: usize,
 }
 
 impl SessionCrypto {
-    /// Encrypt a statistics vector at the session scale `f`.
+    /// Encrypt a statistics vector at the session scale `f` (randomness
+    /// drawn serially, modpows fanned across the session workers — the
+    /// reply bytes are identical for any thread count).
     fn encrypt_vec(&mut self, vals: &[f64]) -> Vec<crate::bigint::BigUint> {
-        vals.iter()
-            .map(|&v| {
-                let m = self.codec.encode(v);
-                self.pk.encrypt(&m, &mut ChaChaSource(&mut self.rng)).0
-            })
+        let ms: Vec<crate::bigint::BigUint> =
+            vals.iter().map(|&v| self.codec.encode(v)).collect();
+        self.pk
+            .encrypt_batch(&ms, &mut ChaChaSource(&mut self.rng), self.threads)
+            .into_iter()
+            .map(|ct| ct.0)
             .collect()
     }
 }
@@ -157,6 +177,7 @@ fn serve_session(
     data: &Dataset,
     engine: &mut dyn NodeCompute,
     seed: u64,
+    threads: usize,
 ) -> io::Result<()> {
     let mut crypto: Option<SessionCrypto> = None;
     loop {
@@ -180,6 +201,7 @@ fn serve_session(
                     fmt: FixedFmt { w: w as usize, f },
                     rng: ChaChaRng::from_u64_seed(seed),
                     hinv: None,
+                    threads,
                 });
                 WireMsg::Ack
             }
@@ -199,7 +221,23 @@ fn serve_session(
                             ),
                         ));
                     }
-                    c.hinv = Some((scale, cts.into_iter().map(Ciphertext).collect()));
+                    // Every entry must be a unit of Z_{n²}: StepReq's
+                    // multi-exp inverts entries paired with negative
+                    // gradient coefficients, and a non-invertible value
+                    // must be a session error here, not a worker panic
+                    // there. (Honest ciphertexts are units by
+                    // construction; this only rejects corrupt peers.)
+                    if let Some(bad) = cts.iter().position(|ct| !ct.gcd(&c.pk.n2).is_one()) {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("Enc(H̃⁻¹) ciphertext {bad} is not invertible mod n²"),
+                        ));
+                    }
+                    // Prepare once: Montgomery-resident triangle + Straus
+                    // tables, reused by every StepReq of the session.
+                    let cts: Vec<Ciphertext> = cts.into_iter().map(Ciphertext).collect();
+                    let prepared = PreparedHinv::prepare(&c.pk, data.p(), &cts, c.threads);
+                    c.hinv = Some((scale, prepared));
                     WireMsg::Ack
                 }
                 None => {
@@ -248,15 +286,19 @@ fn serve_session(
                         "center sent StepReq before the Paillier key",
                     ));
                 };
-                let Some((hinv_scale, hinv)) = c.hinv.take() else {
+                // Validate the ordering *before* the (expensive) full
+                // statistics pass over the partition.
+                if c.hinv.is_none() {
                     return Err(io::Error::new(
                         io::ErrorKind::InvalidData,
                         "center sent StepReq before Enc(H̃⁻¹)",
                     ));
-                };
+                }
                 let (grad, loglik) = engine.stats(data, &beta, scale);
-                let (part, _, _) = apply_hinv_cts(&c.pk, c.fmt, data.p(), &hinv, &grad);
-                c.hinv = Some((hinv_scale, hinv));
+                let (hinv_scale, part) = {
+                    let (s, prepared) = c.hinv.as_ref().expect("checked above");
+                    (*s, prepared.apply(c.fmt, &grad, c.threads).0)
+                };
                 let loglik_cts = c.encrypt_vec(&[loglik]);
                 let secs = t0.elapsed().as_secs_f64();
                 // Two frames: the partial step (the broadcast's scale

@@ -13,7 +13,15 @@
 //!
 //! [`CpuCompute`] is the pure-rust fallback (identical results via
 //! [`crate::optim`]) used when artifacts are absent; every experiment
-//! records which engine produced it.
+//! records which engine produced it. (In this build image the PJRT
+//! bindings themselves are stubbed — see `runtime::xla` — so the
+//! fallback is always taken; the seam is unchanged.)
+//!
+//! This module also hosts [`pool`], the crate-wide scoped-thread worker
+//! pool used by the Paillier hot paths (`PRIVLOGIT_THREADS`).
+
+pub mod pool;
+mod xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

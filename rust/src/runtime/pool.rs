@@ -1,0 +1,100 @@
+//! Dependency-free data parallelism over `std::thread::scope`.
+//!
+//! The crate deliberately carries no heavy dependencies (no rayon), but
+//! the Paillier hot paths — batch encryption, per-row `Enc(H̃⁻¹) ⊗ g`
+//! multi-exponentiation, per-element ciphertext aggregation — are
+//! embarrassingly parallel. This module is the one shared primitive
+//! they use: a bounded fan-out of scoped worker threads over an index
+//! range, with results collected in index order so every parallel path
+//! is **bit-identical** to its sequential execution.
+//!
+//! Worker count: callers pass an explicit count (tests pin 1 vs N to
+//! prove determinism); [`threads`] reads the `PRIVLOGIT_THREADS`
+//! environment variable and falls back to the machine's available
+//! parallelism.
+//!
+//! Ledger note: callers attribute *wall* seconds measured around the
+//! parallel section (never summed per-thread time), so cost accounting
+//! stays exact whatever the worker count.
+
+/// Worker count for parallel sections: `PRIVLOGIT_THREADS` if set to a
+/// positive integer, else the machine's available parallelism, else 1.
+/// (An unset, zero or unparsable variable falls through to the machine
+/// default rather than silently degrading to one worker.)
+pub fn threads() -> usize {
+    std::env::var("PRIVLOGIT_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Map `f` over `0..n` using at most `workers` scoped threads, returning
+/// results in index order. `workers <= 1` (or `n <= 1`) runs inline on
+/// the calling thread — the two executions produce identical results,
+/// since `f(i)` must not depend on evaluation order.
+pub fn par_map_indexed<U, F>(n: usize, workers: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<U>> = Vec::new();
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for (c, slots) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = c * chunk;
+                for (off, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(f(base + off));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_index_order() {
+        for workers in [1usize, 2, 3, 8, 64] {
+            let got = par_map_indexed(17, workers, |i| i * i);
+            let expect: Vec<usize> = (0..17).map(|i| i * i).collect();
+            assert_eq!(got, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(par_map_indexed(0, 8, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map_indexed(1, 8, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_on_heavyish_work() {
+        let work = |i: usize| {
+            let mut acc = i as u64;
+            for _ in 0..1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            }
+            acc
+        };
+        assert_eq!(par_map_indexed(33, 4, work), par_map_indexed(33, 1, work));
+    }
+
+    #[test]
+    fn threads_is_positive() {
+        assert!(threads() >= 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Stub PJRT bindings.
+//!
+//! The real `xla` crate (PJRT C-API bindings for executing the AOT HLO
+//! artifacts) is not available in this build image, so this module
+//! provides the same surface with a client constructor that reports
+//! unavailability. [`super::PjrtCompute::open`] therefore fails cleanly
+//! and [`super::default_engine`] falls back to the pure-rust
+//! [`super::CpuCompute`] — the degradation path the runtime was designed
+//! around. Re-enabling real PJRT execution means deleting this module
+//! and adding the `xla` crate to `Cargo.toml`; no call site changes.
+
+/// Error type mirroring the binding crate's (only its `Debug` rendering
+/// is consumed by the runtime layer).
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error("PJRT bindings are not built into this binary".to_string()))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Open the CPU PJRT client — unavailable in this build.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    /// Compile a computation — unreachable while `cpu()` fails.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with on-host literals — unreachable in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to a host literal — unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module text (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an `.hlo.txt` artifact — unavailable in this build.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A host literal (stub constructors so call sites type-check).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(_vals: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    /// Reshape — unreachable in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Extract a host vector — unreachable in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    /// Untuple — unreachable in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}

@@ -1,0 +1,183 @@
+//! Cross-layer parity for the Paillier hot-path overhaul: every
+//! optimized path must be bit-identical (or decrypt-identical where the
+//! randomness representation legitimately differs) to its reference
+//! implementation, for any worker-thread count — including a full
+//! NodeServer session served single-threaded vs parallel.
+
+use privlogit::bigint::BigUint;
+use privlogit::coordinator::fleet::{Fleet, FleetKey, NodePayload};
+use privlogit::crypto::paillier::{ChaChaSource, Ciphertext, Keypair};
+use privlogit::crypto::rng::ChaChaRng;
+use privlogit::data::synthesize;
+use privlogit::gc::word::FixedFmt;
+use privlogit::mpc::fabric::{apply_hinv_cts, apply_hinv_cts_reference, PreparedHinv};
+use privlogit::mpc::tri_len;
+use privlogit::net::{NodeServer, RemoteFleet};
+
+const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+fn keypair(seed: u64) -> (Keypair, ChaChaRng) {
+    let mut rng = ChaChaRng::from_u64_seed(seed);
+    let kp = Keypair::generate(256, &mut rng);
+    (kp, rng)
+}
+
+/// Fixed-base encryption and the generic-modpow reference produce
+/// bit-identical ciphertexts on the same RNG stream, and the fast path
+/// decrypts like full-range-randomness encryption.
+#[test]
+fn encryption_paths_agree() {
+    let (kp, _) = keypair(41);
+    let mut rng_a = ChaChaRng::from_u64_seed(7);
+    let mut rng_b = ChaChaRng::from_u64_seed(7);
+    for v in [0u64, 1, 999_999_937, u64::MAX] {
+        let m = BigUint::from_u64(v);
+        let fast = kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng_a));
+        let reference = kp.pk.encrypt_reference(&m, &mut ChaChaSource(&mut rng_b));
+        assert_eq!(fast, reference, "bit parity at {v}");
+        assert_eq!(kp.sk.decrypt(&fast), m, "roundtrip at {v}");
+        let mut rng_c = ChaChaRng::from_u64_seed(v ^ 3);
+        let full = kp.pk.encrypt_full(&m, &mut ChaChaSource(&mut rng_c));
+        assert_eq!(kp.sk.decrypt(&full), m, "encrypt_full roundtrip at {v}");
+    }
+}
+
+/// Straus multi-exp `apply_hinv` == naive reference, bit-exact, for any
+/// worker count, with identical ledger op counts.
+#[test]
+fn apply_hinv_parity_random_triangles() {
+    let (kp, mut rng) = keypair(42);
+    for p in [1usize, 3, 7] {
+        let tri: Vec<Ciphertext> = (0..tri_len(p))
+            .map(|i| {
+                let m = BigUint::from_u64((i as u64 + 1) * 7919);
+                kp.pk.encrypt(&m, &mut ChaChaSource(&mut rng))
+            })
+            .collect();
+        let v: Vec<f64> = (0..p)
+            .map(|j| match j % 4 {
+                0 => 0.0,
+                1 => 0.625,
+                2 => -1.375,
+                _ => 2.0,
+            })
+            .collect();
+        let (want, s_ref, a_ref) = apply_hinv_cts_reference(&kp.pk, FMT, p, &tri, &v);
+        let (got, s, a) = apply_hinv_cts(&kp.pk, FMT, p, &tri, &v);
+        assert_eq!(got, want, "one-shot parity p={p}");
+        assert_eq!((s, a), (s_ref, a_ref), "op counts p={p}");
+        let prepared = PreparedHinv::prepare(&kp.pk, p, &tri, 3);
+        for workers in [1usize, 2, 8] {
+            let (rows, ..) = prepared.apply(FMT, &v, workers);
+            assert_eq!(rows, want, "prepared parity p={p} workers={workers}");
+        }
+    }
+}
+
+/// Montgomery-resident aggregation and the fast `⊖` agree with their
+/// references under decryption.
+#[test]
+fn aggregation_and_sub_parity() {
+    let (kp, mut rng) = keypair(43);
+    let cts: Vec<Ciphertext> = (1..=9u64)
+        .map(|i| kp.pk.encrypt(&BigUint::from_u64(i * i), &mut ChaChaSource(&mut rng)))
+        .collect();
+    let refs: Vec<&Ciphertext> = cts.iter().collect();
+    let folded = kp.pk.add_many(&refs);
+    let mut chain = cts[0].clone();
+    for c in &cts[1..] {
+        chain = kp.pk.add(&chain, c);
+    }
+    assert_eq!(folded, chain, "add_many bit parity");
+    let a = &cts[0];
+    let b = &cts[1];
+    assert_eq!(
+        kp.sk.decrypt(&kp.pk.sub(a, b)),
+        kp.sk.decrypt(&kp.pk.sub_reference(a, b)),
+        "sub decrypt parity"
+    );
+}
+
+/// A malformed `Enc(H̃⁻¹)` broadcast (non-invertible ciphertext) is a
+/// clean session error on the node — not a worker-thread panic later in
+/// the step round.
+#[test]
+fn malformed_hinv_broadcast_is_session_error() {
+    let (kp, _) = keypair(45);
+    let p = 3;
+    let data = synthesize("bad", 60, p, 5);
+    let mut server = NodeServer::bind("127.0.0.1:0", data).unwrap().with_seed(7);
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_once());
+    let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f };
+    fleet.install_key(&key).unwrap();
+    let mut cts: Vec<BigUint> = (0..tri_len(p)).map(|_| BigUint::one()).collect();
+    cts[1] = BigUint::zero(); // gcd(0, n²) = n² — not a unit
+    let res = fleet
+        .install_hinv(&privlogit::coordinator::fleet::EncStat { scale: FMT.f, cts });
+    assert!(res.is_err(), "node must reject a non-invertible broadcast");
+    drop(fleet);
+    // The session ended with an orderly Err; the server thread did NOT
+    // panic (join succeeds and hands back the session result).
+    let session = handle.join().expect("node thread must not panic");
+    assert!(session.is_err(), "session must surface the broadcast error");
+}
+
+/// A NodeServer session served with parallel workers produces replies
+/// byte-identical to a single-threaded session: same key, same node
+/// seed, same requests — the per-node RNG stream is preserved because
+/// randomness is drawn serially before the fan-out.
+#[test]
+fn node_server_parallel_replies_byte_identical() {
+    let (kp, mut rng) = keypair(44);
+    let p = 4;
+    let data = synthesize("parity", 150, p, 77);
+    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f };
+    // A broadcastable Enc(H̃⁻¹) triangle (any valid ciphertexts work).
+    let hinv_cts: Vec<BigUint> = (0..tri_len(p))
+        .map(|i| {
+            kp.pk
+                .encrypt(&BigUint::from_u64(100 + i as u64), &mut ChaChaSource(&mut rng))
+                .0
+        })
+        .collect();
+    let beta = vec![0.05, -0.1, 0.2, 0.0];
+    let scale = 1.0 / 150.0;
+
+    let run = |threads: usize| -> (Vec<Vec<BigUint>>, Vec<BigUint>, Vec<BigUint>) {
+        let mut server = NodeServer::bind("127.0.0.1:0", data.clone())
+            .unwrap()
+            .with_seed(99)
+            .with_threads(threads);
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve_once().unwrap());
+        let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+        fleet.install_key(&key).unwrap();
+        let stats: Vec<Vec<BigUint>> = fleet
+            .stats(&beta, scale)
+            .unwrap()
+            .into_iter()
+            .map(|r| match r.payload {
+                NodePayload::Enc(e) => e.cts,
+                NodePayload::Plain { .. } => panic!("expected ciphertexts"),
+            })
+            .collect();
+        fleet
+            .install_hinv(&privlogit::coordinator::fleet::EncStat {
+                scale: FMT.f,
+                cts: hinv_cts.clone(),
+            })
+            .unwrap();
+        let step = fleet.step(&beta, scale).unwrap().remove(0);
+        drop(fleet);
+        handle.join().unwrap();
+        (stats, step.part.cts, step.loglik.cts)
+    };
+
+    let (stats_1, part_1, loglik_1) = run(1);
+    let (stats_n, part_n, loglik_n) = run(4);
+    assert_eq!(stats_1, stats_n, "statistic replies must be byte-identical");
+    assert_eq!(part_1, part_n, "step partials must be byte-identical");
+    assert_eq!(loglik_1, loglik_n, "loglik ciphertexts must be byte-identical");
+}
