@@ -51,7 +51,8 @@ fn main() {
     let full_k = rng.below(&kp.pk.n);
     let tfull = time_it("scalar_mul full exponent", 10, || kp.pk.scalar_mul(&c, &full_k));
     let small_k = BigUint::from_u64(1 << 30);
-    let tsmall = time_it("scalar_mul small (f-bit) exponent", 50, || kp.pk.scalar_mul(&c, &small_k));
+    let tsmall =
+        time_it("scalar_mul small (f-bit) exponent", 50, || kp.pk.scalar_mul(&c, &small_k));
     println!("  -> scalar speedup {:.1}x (PL-Local's primitive)\n", tfull / tsmall);
 
     // 4. inverse circuit: naive p-column solves vs triangular T=L^-1,Z=T'T

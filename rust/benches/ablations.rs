@@ -100,7 +100,9 @@ fn main() {
     // scaling claim: ops grow superlinearly in modulus bits, uniformly —
     // every protocol pays the same factor, preserving relative speedups.
     assert!(encs[2] > encs[1] && encs[1] > encs[0], "monotone in key size");
-    println!("(uniform scaling across primitives → relative Table-2 ratios are key-size invariant)\n");
+    println!(
+        "(uniform scaling across primitives → relative Table-2 ratios are key-size invariant)\n"
+    );
 
     // ---- 3. ridge one-shot baseline ----
     println!("=== ablation 3: one-shot secure ridge (Nikolaenko'13 shape) ===");

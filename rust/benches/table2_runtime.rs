@@ -91,7 +91,10 @@ fn main() {
             continue;
         }
         let (it_n, it_pl, totals, iter_phase, label) = run_workload(w);
-        println!("{}  <- ours [{label}]", table2_row(w.name, (it_n, it_pl), (totals[0], totals[1], totals[2])));
+        println!(
+            "{}  <- ours [{label}]",
+            table2_row(w.name, (it_n, it_pl), (totals[0], totals[1], totals[2]))
+        );
         if let Some(ps) = paper_secs(w.name) {
             println!(
                 "{}  <- paper",

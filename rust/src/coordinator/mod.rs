@@ -240,8 +240,7 @@ mod tests {
 
     #[test]
     fn auto_backend_switches_on_p() {
-        let mut c = Config::default();
-        c.dataset = "Wine".into();
+        let mut c = Config { dataset: "Wine".into(), ..Config::default() };
         let e = Experiment::from_config(&c).unwrap();
         assert_eq!(e.effective_backend(), Backend::Real); // p=12
         c.dataset = "SimuX100".into();
@@ -251,11 +250,9 @@ mod tests {
 
     #[test]
     fn from_config_rejects_unknowns() {
-        let mut c = Config::default();
-        c.dataset = "nope".into();
+        let c = Config { dataset: "nope".into(), ..Config::default() };
         assert!(Experiment::from_config(&c).is_err());
-        let mut c = Config::default();
-        c.protocol = "sgd".into();
+        let c = Config { protocol: "sgd".into(), ..Config::default() };
         assert!(Experiment::from_config(&c).is_err());
     }
 
@@ -263,8 +260,7 @@ mod tests {
     /// "unknown" (the errors surface verbatim from `privlogit run`).
     #[test]
     fn parse_errors_name_valid_spellings() {
-        let mut c = Config::default();
-        c.backend = "gpu".into();
+        let c = Config { backend: "gpu".into(), ..Config::default() };
         let err = Experiment::from_config(&c).unwrap_err().to_string();
         assert!(err.contains("gpu"), "{err}");
         assert!(err.contains("real"), "{err}");
@@ -277,12 +273,14 @@ mod tests {
     /// fleet on a paper workload.
     #[test]
     fn experiment_runs_end_to_end_modeled() {
-        let mut c = Config::default();
-        c.dataset = "Wine".into();
-        c.protocol = "privlogit-local".into();
-        c.backend = "model".into();
-        c.threaded = true;
-        c.orgs = 4;
+        let c = Config {
+            dataset: "Wine".into(),
+            protocol: "privlogit-local".into(),
+            backend: "model".into(),
+            threaded: true,
+            orgs: 4,
+            ..Config::default()
+        };
         let e = Experiment::from_config(&c).unwrap();
         assert_eq!(e.center_link(), CenterLink::Mem);
         let rep = e.run().unwrap();

@@ -208,16 +208,79 @@ pub struct Workload {
 /// `sigma2` reproduces each dataset's conditioning (see Table 2).
 pub const WORKLOADS: &[Workload] = &[
     Workload { name: "Wine", paper_n: 6_497, p: 12, n: 6_497, sigma2: 3.3, paper_iters: (5, 13) },
-    Workload { name: "Loans", paper_n: 122_578, p: 33, n: 24_000, sigma2: 3.6, paper_iters: (6, 17) },
-    Workload { name: "Insurance", paper_n: 9_882, p: 38, n: 9_882, sigma2: 12.0, paper_iters: (7, 59) },
+    Workload {
+        name: "Loans",
+        paper_n: 122_578,
+        p: 33,
+        n: 24_000,
+        sigma2: 3.6,
+        paper_iters: (6, 17),
+    },
+    Workload {
+        name: "Insurance",
+        paper_n: 9_882,
+        p: 38,
+        n: 9_882,
+        sigma2: 12.0,
+        paper_iters: (7, 59),
+    },
     Workload { name: "News", paper_n: 39_082, p: 52, n: 16_000, sigma2: 3.0, paper_iters: (5, 13) },
-    Workload { name: "SimuX10", paper_n: 50_000, p: 10, n: 20_000, sigma2: 4.6, paper_iters: (6, 20) },
-    Workload { name: "SimuX12", paper_n: 1_000_000, p: 12, n: 20_000, sigma2: 5.0, paper_iters: (6, 22) },
-    Workload { name: "SimuX50", paper_n: 1_000_000, p: 50, n: 16_000, sigma2: 7.0, paper_iters: (6, 32) },
-    Workload { name: "SimuX100", paper_n: 3_000_000, p: 100, n: 12_000, sigma2: 12.0, paper_iters: (7, 59) },
-    Workload { name: "SimuX150", paper_n: 4_000_000, p: 150, n: 12_000, sigma2: 16.0, paper_iters: (7, 83) },
-    Workload { name: "SimuX200", paper_n: 5_000_000, p: 200, n: 10_000, sigma2: 20.0, paper_iters: (8, 105) },
-    Workload { name: "SimuX400", paper_n: 50_000_000, p: 400, n: 8_000, sigma2: 33.0, paper_iters: (8, 206) },
+    Workload {
+        name: "SimuX10",
+        paper_n: 50_000,
+        p: 10,
+        n: 20_000,
+        sigma2: 4.6,
+        paper_iters: (6, 20),
+    },
+    Workload {
+        name: "SimuX12",
+        paper_n: 1_000_000,
+        p: 12,
+        n: 20_000,
+        sigma2: 5.0,
+        paper_iters: (6, 22),
+    },
+    Workload {
+        name: "SimuX50",
+        paper_n: 1_000_000,
+        p: 50,
+        n: 16_000,
+        sigma2: 7.0,
+        paper_iters: (6, 32),
+    },
+    Workload {
+        name: "SimuX100",
+        paper_n: 3_000_000,
+        p: 100,
+        n: 12_000,
+        sigma2: 12.0,
+        paper_iters: (7, 59),
+    },
+    Workload {
+        name: "SimuX150",
+        paper_n: 4_000_000,
+        p: 150,
+        n: 12_000,
+        sigma2: 16.0,
+        paper_iters: (7, 83),
+    },
+    Workload {
+        name: "SimuX200",
+        paper_n: 5_000_000,
+        p: 200,
+        n: 10_000,
+        sigma2: 20.0,
+        paper_iters: (8, 105),
+    },
+    Workload {
+        name: "SimuX400",
+        paper_n: 50_000_000,
+        p: 400,
+        n: 8_000,
+        sigma2: 33.0,
+        paper_iters: (8, 206),
+    },
 ];
 
 /// Look up a workload by (case-insensitive) name.
@@ -227,7 +290,8 @@ pub fn workload(name: &str) -> Option<Workload> {
 
 /// Materialize a workload (deterministic per name).
 pub fn load_workload(w: Workload) -> Dataset {
-    let seed = w.name.bytes().fold(0xBEEFu64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+    let seed =
+        w.name.bytes().fold(0xBEEFu64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
     synthesize_with_signal(w.name, w.n, w.p, seed, w.sigma2)
 }
 

@@ -280,7 +280,8 @@ mod tests {
             let mut s = OtSender::setup(&mut ca, &mut rng);
             s.send(&mut ca, &pairs_s);
             // second extend on the same session must also work
-            let more: Vec<(u128, u128)> = (0..64).map(|i| (i as u128, (i + 1000) as u128)).collect();
+            let more: Vec<(u128, u128)> =
+                (0..64).map(|i| (i as u128, (i + 1000) as u128)).collect();
             s.send(&mut ca, &more);
         });
         let mut rng = ChaChaRng::from_u64_seed(2002);

@@ -38,6 +38,31 @@ impl FixedFmt {
     /// convergence threshold.
     pub const DEFAULT: FixedFmt = FixedFmt { w: 40, f: 24 };
 
+    /// Largest supported word width. Share arithmetic lives in `u128`
+    /// words and the masked wide reveals carry `w + σ + 1` bits with the
+    /// σ = 40 statistical-mask parameter, so `w` must leave headroom:
+    /// `1u128 << w` and the wide-chunk assembly both overflow silently
+    /// (or panic, depending on build profile) once `w` approaches 128.
+    /// 64 bits is far beyond any useful fixed-point precision here.
+    pub const MAX_W: usize = 64;
+
+    /// Validating constructor for wire-controlled formats. Everything a
+    /// remote peer sends (`SetKey`, `GcExec`) must pass through here so
+    /// an out-of-range width is a session error at the trust boundary,
+    /// not an overflow deep inside the share arithmetic.
+    pub fn try_new(w: usize, f: u32) -> anyhow::Result<FixedFmt> {
+        anyhow::ensure!(
+            (2..=Self::MAX_W).contains(&w),
+            "fixed-point word width {w} outside the supported range 2..={}",
+            Self::MAX_W
+        );
+        anyhow::ensure!(
+            (f as usize) < w,
+            "fixed-point fraction bits {f} must be smaller than the word width {w}"
+        );
+        Ok(FixedFmt { w, f })
+    }
+
     /// Encode an `f64` to the fixed-point integer (two's complement in
     /// `w` bits, as i128 for headroom).
     pub fn encode(&self, v: f64) -> i128 {
@@ -344,7 +369,11 @@ mod tests {
         v
     }
 
-    fn eval2(f: impl Fn(&mut PlainBackend, &Word<bool>, &Word<bool>) -> Word<bool>, a: f64, x: f64) -> f64 {
+    fn eval2(
+        f: impl Fn(&mut PlainBackend, &Word<bool>, &Word<bool>) -> Word<bool>,
+        a: f64,
+        x: f64,
+    ) -> f64 {
         let mut b = PlainBackend;
         let wa = to_word(&mut b, FMT.encode(a), FMT.w);
         let wx = to_word(&mut b, FMT.encode(x), FMT.w);
@@ -503,5 +532,22 @@ mod tests {
         let mut b = CountBackend::default();
         div(&mut b, &a, &x, FMT);
         assert!((b.ands as usize) < 4 * n * (n + 2), "div gate count {}", b.ands);
+    }
+
+    /// Wire-controlled formats must be bounds-checked: widths that would
+    /// overflow the `u128` share arithmetic (`w = 128` turns
+    /// `1u128 << w` into an overflow) are rejected, as are degenerate
+    /// fraction layouts.
+    #[test]
+    fn try_new_rejects_out_of_range_formats() {
+        assert!(FixedFmt::try_new(40, 24).is_ok());
+        assert!(FixedFmt::try_new(FixedFmt::MAX_W, 24).is_ok());
+        for (w, f) in [(128usize, 24u32), (65, 24), (1, 0), (0, 0), (40, 40), (40, 64)] {
+            assert!(FixedFmt::try_new(w, f).is_err(), "w={w} f={f} must be rejected");
+        }
+        let fmt = FixedFmt::try_new(FixedFmt::MAX_W, 32).unwrap();
+        // The limit width must actually be usable by the share masks.
+        let mask = (1u128 << fmt.w).wrapping_sub(1);
+        assert_ne!(mask, 0);
     }
 }

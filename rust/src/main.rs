@@ -19,10 +19,13 @@
 //!
 //! `node` serves one organization's shard over TCP and, once the center
 //! installs its Paillier key, encrypts every statistic itself — only
-//! ciphertexts cross the fleet wire. `center-b` serves the garbled-circuit
-//! evaluator (Center server S2); `center-a` garbles, drives the protocol
-//! against the node fleet, and reports wire traffic in both directions.
-//! `center` runs both Center halves in one process (threads).
+//! ciphertexts cross the fleet wire. `center-b` is Center server S2 for
+//! real: the garbled-circuit evaluator that also aggregates relayed node
+//! ciphertexts, draws its own blinds and keeps its own additive shares
+//! (share material never crosses the peer wire). `center-a` garbles,
+//! holds the Paillier key, drives the protocol against the node fleet,
+//! and reports wire traffic in both directions. `center` runs both
+//! Center halves in one process (threads).
 
 use privlogit::config::Config;
 use privlogit::coordinator::{run_protocol, Backend, CenterLink, Experiment};
@@ -84,11 +87,12 @@ fn node_main(cfg: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `privlogit center-b`: serve the garbled-circuit evaluator (Center
-/// server S2) on `--listen`; `--once` exits after one center-a session.
+/// `privlogit center-b`: serve Center server S2 — GC evaluator,
+/// ciphertext aggregator and share custodian — on `--listen`; `--once`
+/// exits after one center-a session.
 fn center_b_main(cfg: &Config) -> anyhow::Result<()> {
     let mut server = PeerGcServer::bind(&cfg.listen, cfg.seed ^ 0xB)?;
-    println!("center-b (GC evaluator) listening on {}", server.local_addr()?);
+    println!("center-b (S2: evaluator + aggregator) listening on {}", server.local_addr()?);
     if cfg.once {
         server.serve_once()?;
         println!("center-b session complete");

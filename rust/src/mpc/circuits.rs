@@ -263,8 +263,12 @@ impl GcProgram for InverseMaskedProg {
                 // s = Σ_{k=j..i-1} l[i][k]·t[k][j]
                 let mut s: Option<Word<B::Wire>> = None;
                 for k in j..i {
-                    let prod =
-                        word::mul(b, &l[tri_idx(i, k)], t[tri_idx(k, j)].as_ref().unwrap(), self.fmt);
+                    let prod = word::mul(
+                        b,
+                        &l[tri_idx(i, k)],
+                        t[tri_idx(k, j)].as_ref().unwrap(),
+                        self.fmt,
+                    );
                     s = Some(match s {
                         None => prod,
                         Some(acc) => word::add(b, &acc, &prod),

@@ -36,10 +36,10 @@ use crate::gc::word::FixedFmt;
 use crate::linalg::Matrix;
 use crate::runtime::pool;
 
-/// Additive shares of one value mod 2^w. `a` is held by Center server S1
-/// (the garbler / key holder), `b` by S2 (the evaluator / aggregator).
-/// The struct carries both halves only because this is an in-process
-/// simulation; protocol code never recombines them outside the fabric.
+/// Both additive halves of one value mod 2^w in a single hand. This is a
+/// **test/driver helper type only** (see [`share_vec`]): the fabric's own
+/// share custody is [`ShareVec`], which keeps S2's halves either inline
+/// (in-process simulation) or at the remote center-b — never recombined.
 #[derive(Clone, Copy, Debug)]
 pub struct Shared {
     /// S1's share.
@@ -48,11 +48,51 @@ pub struct Shared {
     pub b: u128,
 }
 
+/// Where Center server S2's halves of a shared vector live.
+#[derive(Clone, Debug)]
+pub enum S2Custody {
+    /// In-process simulation (`Mem` / `TcpLoopback` center links): both
+    /// servers are threads of this process, so S2's halves sit right
+    /// here. Same trust shape as before the split — one logical party.
+    Local(Vec<u128>),
+    /// Split custody: the remote `privlogit center-b` process holds its
+    /// halves under this session handle. The values never crossed the
+    /// peer wire; S1 only ever sees the opaque handle (the element
+    /// count lives in the sibling `a` vector — one source of truth).
+    Remote {
+        /// Session-scoped handle center-b stores the halves under.
+        handle: u64,
+    },
+}
+
+/// S1's view of a secret-shared vector: its own additive shares plus
+/// custody information for S2's halves. Protocol code treats this as an
+/// opaque token; only the fabric (and center-b) touch the halves.
+#[derive(Clone, Debug)]
+pub struct ShareVec {
+    /// S1's shares, one w-bit word per element.
+    pub a: Vec<u128>,
+    /// Custody of S2's halves.
+    pub b: S2Custody,
+}
+
+impl ShareVec {
+    /// Number of shared values.
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    /// True iff empty.
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+}
+
 /// A vector of secret-shared values (or their modeled plaintext).
 #[derive(Clone, Debug)]
 pub enum SecVec {
-    /// Real additive shares.
-    Shares(Vec<Shared>),
+    /// Real additive shares (S1's halves + S2 custody).
+    Shares(ShareVec),
     /// Cost-model backend: plaintext values on the fixed-point grid.
     Model(Vec<f64>),
 }
@@ -136,8 +176,13 @@ pub trait SecureFabric {
 
     // ---- center-side Paillier (S2, aggregation) ----
 
-    /// `⊕`-aggregate per-node vectors (Alg. 1 step 8).
-    fn aggregate(&mut self, parts: Vec<EncVec>) -> EncVec;
+    /// `⊕`-aggregate per-node vectors (Alg. 1 step 8). Node-reply
+    /// ciphertext vectors are wire-controlled data, so shape violations
+    /// (scale or length mismatch, modeled payloads on the real backend)
+    /// are session errors — one malformed node must not panic the
+    /// center. With a remote center-b peer the parts are relayed without
+    /// decryption and S2 performs the fold itself.
+    fn aggregate(&mut self, parts: Vec<EncVec>) -> anyhow::Result<EncVec>;
     /// Homomorphically add a public plaintext vector (regularization
     /// terms; pass negated values for `⊖`).
     fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> EncVec;
@@ -147,7 +192,10 @@ pub trait SecureFabric {
     // ---- conversions ----
 
     /// Blind-convert ciphertexts (scale f) into additive shares mod 2^w.
-    fn to_shares(&mut self, v: &EncVec) -> SecVec;
+    /// The input scale traces back to node replies, so a mismatch is a
+    /// session error, not a panic. With a remote center-b peer, S2 draws
+    /// the blinds ρ and keeps its own halves.
+    fn to_shares(&mut self, v: &EncVec) -> anyhow::Result<SecVec>;
     /// Blind-decrypt values that the protocol *reveals by design*
     /// (the Newton step Δ / the coefficient update — paper §5.3).
     fn decrypt_reveal(&mut self, v: &EncVec) -> Vec<f64>;
@@ -181,32 +229,24 @@ pub trait SecureFabric {
 // Real backend
 // ======================================================================
 
-/// The transport behind the two Center servers' garbled-circuit work.
-pub enum GcLink {
+/// The link to Center server S2 — both its garbled-circuit half **and**
+/// its share custody. The fabric is S1's view; everything S2-side
+/// (aggregation, blinding, evaluator inputs, share storage) happens
+/// behind this seam, either inline (in-process simulation) or at a
+/// remote `privlogit center-b` process.
+pub enum ShareLink {
     /// Both halves in this process: a [`GcSession`] over scoped threads
     /// (in-memory queue or TCP loopback, depending on construction).
+    /// S2's share halves travel inline as [`S2Custody::Local`].
     Local(GcSession),
-    /// The evaluator half is a remote `privlogit center-b` process
-    /// reached over TCP (see [`crate::mpc::peer`]).
+    /// S2 is a remote `privlogit center-b` process reached over TCP
+    /// (see [`crate::mpc::peer`]): it aggregates relayed node
+    /// ciphertexts, draws its own blinds, stores its own share halves
+    /// ([`S2Custody::Remote`]) and feeds them into the GC evaluator.
     Peer(PeerGcClient),
 }
 
-impl GcLink {
-    fn execute(
-        &mut self,
-        spec: &ProgSpec,
-        fmt: FixedFmt,
-        garbler_bits: &[bool],
-        evaluator_bits: &[bool],
-    ) -> (Vec<bool>, ExecStats) {
-        match self {
-            GcLink::Local(session) => {
-                execute_local(session, spec, fmt, garbler_bits, evaluator_bits)
-            }
-            GcLink::Peer(client) => client.execute(spec, fmt, garbler_bits, evaluator_bits),
-        }
-    }
-
+impl ShareLink {
     /// Bytes that crossed the center link so far. Both accessors return
     /// the *total over both directions* — `GcSession` sums its two
     /// endpoints' sent (resp. received) counters, and every byte one
@@ -214,15 +254,15 @@ impl GcLink {
     /// and the peer client's `sent + received` are all the same number.
     fn bytes_transferred(&self) -> u64 {
         match self {
-            GcLink::Local(session) => session.bytes_transferred(),
-            GcLink::Peer(client) => client.bytes_sent() + client.bytes_received(),
+            ShareLink::Local(session) => session.bytes_transferred(),
+            ShareLink::Peer(client) => client.bytes_sent() + client.bytes_received(),
         }
     }
 
     fn bytes_received(&self) -> u64 {
         match self {
-            GcLink::Local(session) => session.bytes_received(),
-            GcLink::Peer(client) => client.bytes_sent() + client.bytes_received(),
+            ShareLink::Local(session) => session.bytes_received(),
+            ShareLink::Peer(client) => client.bytes_sent() + client.bytes_received(),
         }
     }
 }
@@ -234,16 +274,36 @@ enum LinkSpec<'a> {
     Peer(&'a str),
 }
 
-/// Fully-executed backend: real Paillier, real OT, real garbling.
+/// S2's inputs to one GC execution (see [`RealFabric::eval_input`]).
+enum EvalInput {
+    /// In-process: the evaluator bits themselves.
+    Bits(Vec<bool>),
+    /// Remote custody: center-b's stored share handles, in input order.
+    Handles(Vec<u64>),
+}
+
+/// What came back from the masked-inverse execution: raw output bits
+/// (in-process — this side plays S2 too) or the finished ciphertexts
+/// (center-b encrypted its own wide outputs).
+enum InverseOutcome {
+    Bits(Vec<bool>),
+    Cts(Vec<Ciphertext>),
+}
+
+/// Fully-executed backend: real Paillier, real OT, real garbling. This
+/// is **S1's view** of the two-server Center — with a remote center-b
+/// peer, S2's share halves and blinds exist only behind [`ShareLink`].
 pub struct RealFabric {
     fmt: FixedFmt,
     kp: Keypair,
     codec: FixedCodec,
-    link: GcLink,
+    link: ShareLink,
     rng: ChaChaRng,
     ledger: CostLedger,
     net: CostModel,
     label: &'static str,
+    /// Next S2 share handle (peer link only; the driver allocates ids).
+    next_handle: u64,
     /// Straus-prepared `Enc(H̃⁻¹)`, keyed by the triangle it was built
     /// from — PrivLogit-Local applies the same broadcast triangle every
     /// iteration, so the window tables are built once, not per round.
@@ -294,20 +354,26 @@ impl RealFabric {
         let codec = FixedCodec::new(kp.pk.n.clone(), fmt.f);
         let (link, label) = match link {
             LinkSpec::Mem => (
-                GcLink::Local(GcSession::new(seed ^ 0xFAB)),
+                ShareLink::Local(GcSession::new(seed ^ 0xFAB)),
                 "real (Paillier + garbled circuits)",
             ),
             LinkSpec::TcpLoopback => {
                 let (g, e) = crate::net::tcp::loopback_channel_pair()?;
                 (
-                    GcLink::Local(GcSession::over_channels(g, e, seed ^ 0xFAB)),
+                    ShareLink::Local(GcSession::over_channels(g, e, seed ^ 0xFAB)),
                     "real (Paillier + garbled circuits; tcp center link)",
                 )
             }
-            LinkSpec::Peer(addr) => (
-                GcLink::Peer(PeerGcClient::connect(addr, seed ^ 0xFAB)?),
-                "real (Paillier + garbled circuits; remote center-b peer)",
-            ),
+            LinkSpec::Peer(addr) => {
+                let mut client = PeerGcClient::connect(addr, seed ^ 0xFAB)?;
+                // S2 needs the public key to aggregate, blind and
+                // re-encrypt; only the modulus travels (public material).
+                client.install_key(&kp.pk.n, fmt)?;
+                (
+                    ShareLink::Peer(client),
+                    "real (Paillier + garbled circuits; remote center-b peer)",
+                )
+            }
         };
         let mut ledger = CostLedger::default();
         ledger.setup_secs += t0.elapsed().as_secs_f64();
@@ -320,6 +386,7 @@ impl RealFabric {
             ledger,
             net: CostModel::load(CostModel::CALIBRATION_PATH),
             label,
+            next_handle: 1,
             prepared_hinv: None,
         })
     }
@@ -355,34 +422,127 @@ impl RealFabric {
         }
     }
 
-    fn expect_shares<'a>(&self, v: &'a SecVec) -> &'a [Shared] {
+    /// Like [`RealFabric::expect_real`], but for wire-controlled inputs
+    /// (node-reply ciphertexts): a shape violation is a session error,
+    /// never a center panic.
+    fn real_cts<'a>(&self, v: &'a EncVec) -> anyhow::Result<&'a [Ciphertext]> {
+        match &v.data {
+            EncData::Real(c) => Ok(c),
+            EncData::Model(_) => {
+                anyhow::bail!("modeled ciphertext payload reached the real center backend")
+            }
+        }
+    }
+
+    fn expect_shares<'a>(&self, v: &'a SecVec) -> &'a ShareVec {
         match v {
             SecVec::Shares(s) => s,
             SecVec::Model(_) => panic!("model SecVec passed to RealFabric"),
         }
     }
 
-    fn run_gc(
-        &mut self,
-        spec: ProgSpec,
-        garbler_bits: Vec<bool>,
-        evaluator_bits: Vec<bool>,
-    ) -> Vec<bool> {
-        let bytes0 = self.link.bytes_transferred();
-        let recv0 = self.link.bytes_received();
-        let (out, stats) = self.link.execute(&spec, self.fmt, &garbler_bits, &evaluator_bits);
+    /// Local-custody S2 halves of `v` (in-process links only).
+    fn local_b<'a>(&self, v: &'a ShareVec) -> &'a [u128] {
+        match &v.b {
+            S2Custody::Local(b) => b,
+            S2Custody::Remote { .. } => panic!(
+                "remote share handle met an in-process center link — \
+                 shares from a peer session cannot be replayed locally"
+            ),
+        }
+    }
+
+    /// Remote handle of `v`'s S2 halves (peer link only).
+    fn remote_handle(&self, v: &ShareVec) -> u64 {
+        match &v.b {
+            S2Custody::Remote { handle } => *handle,
+            S2Custody::Local(_) => panic!(
+                "locally-held shares met a remote center-b link — \
+                 S2 custody must stay with center-b for the whole session"
+            ),
+        }
+    }
+
+    /// Concatenated S1 input bits for the GC inputs `parts`.
+    fn garbler_bits_of(&self, parts: &[&ShareVec]) -> Vec<bool> {
+        let mut ga = Vec::new();
+        for part in parts {
+            for &v in &part.a {
+                ga.extend(self.bits_of_share(v));
+            }
+        }
+        ga
+    }
+
+    /// Concatenated S2 input bits (local custody) for `parts`.
+    fn evaluator_bits_of(&self, parts: &[&ShareVec]) -> Vec<bool> {
+        let mut ea = Vec::new();
+        for part in parts {
+            for &v in self.local_b(part) {
+                ea.extend(self.bits_of_share(v));
+            }
+        }
+        ea
+    }
+
+    /// Charge one link round-trip's stats and bytes to the ledger.
+    fn charge_link(&mut self, stats: ExecStats, bytes0: u64, recv0: u64) {
         self.ledger.center_secs += stats.wall;
         self.ledger.gc_ands += stats.ands;
         self.ledger.ot_bits += stats.ot_bits;
         self.ledger.bytes += self.link.bytes_transferred() - bytes0;
         self.ledger.bytes_recv += self.link.bytes_received() - recv0;
         self.ledger.rounds += 2;
+    }
+
+    /// S2's input specification for a GC execution, matched to the link
+    /// kind: literal bits in-process, stored-handle references remotely.
+    fn eval_input(&self, parts: &[&ShareVec]) -> EvalInput {
+        match &self.link {
+            ShareLink::Local(_) => EvalInput::Bits(self.evaluator_bits_of(parts)),
+            ShareLink::Peer(_) => {
+                EvalInput::Handles(parts.iter().map(|p| self.remote_handle(p)).collect())
+            }
+        }
+    }
+
+    /// Run one *revealing* garbled program (Newton step, solve,
+    /// convergence bit): S1 contributes `ga`; S2's inputs come from its
+    /// own custody of `eval_parts` — bits fed directly in-process,
+    /// handle references over the peer wire.
+    fn run_gc(&mut self, spec: ProgSpec, ga: Vec<bool>, eval_parts: &[&ShareVec]) -> Vec<bool> {
+        let bytes0 = self.link.bytes_transferred();
+        let recv0 = self.link.bytes_received();
+        let fmt = self.fmt;
+        let input = self.eval_input(eval_parts);
+        let (out, stats) = match (&mut self.link, input) {
+            (ShareLink::Local(session), EvalInput::Bits(ea)) => {
+                execute_local(session, &spec, fmt, &ga, &ea)
+            }
+            (ShareLink::Peer(client), EvalInput::Handles(handles)) => {
+                client.execute_reveal(&spec, fmt, &ga, &handles)
+            }
+            _ => unreachable!("eval_input always matches the link kind"),
+        };
+        self.charge_link(stats, bytes0, recv0);
         out
     }
 
     /// The public key (nodes encrypt against it).
     pub fn public_key(&self) -> &crate::crypto::paillier::PublicKey {
         &self.kp.pk
+    }
+
+    /// The peer link's control-frame census (tag byte → count, both
+    /// directions), when this fabric talks to a remote center-b. Tests
+    /// use it to prove no S2 share material ever crossed: the only
+    /// frame that can carry share values toward center-b is
+    /// `ShareInput`, and it must never appear in a protocol run.
+    pub fn peer_census(&self) -> Option<crate::mpc::peer::PeerCensus> {
+        match &self.link {
+            ShareLink::Peer(client) => Some(client.census()),
+            ShareLink::Local(_) => None,
+        }
     }
 }
 
@@ -418,31 +578,61 @@ impl SecureFabric for RealFabric {
         out
     }
 
-    fn aggregate(&mut self, parts: Vec<EncVec>) -> EncVec {
-        assert!(!parts.is_empty());
+    fn aggregate(&mut self, parts: Vec<EncVec>) -> anyhow::Result<EncVec> {
+        anyhow::ensure!(!parts.is_empty(), "aggregation needs at least one part");
         let t0 = Instant::now();
         let scale = parts[0].scale;
         let len = parts[0].len();
-        let cols: Vec<&[Ciphertext]> = parts
-            .iter()
-            .map(|part| {
-                assert_eq!(part.scale, scale, "scale mismatch in aggregation");
-                let cts = self.expect_real(part);
-                assert_eq!(cts.len(), len);
-                cts
-            })
-            .collect();
-        // Per-element Montgomery-resident fold, fanned across workers;
-        // wall time (not summed per-thread time) goes to the ledger.
-        let pk = &self.kp.pk;
-        let acc: Vec<Ciphertext> = pool::par_map_indexed(len, pool::threads(), |i| {
-            let column: Vec<&Ciphertext> = cols.iter().map(|cts| &cts[i]).collect();
-            pk.add_many(&column)
-        });
+        // Node-reply shape is wire-controlled: validate as session
+        // errors so one malformed node cannot panic the center.
+        let mut cols: Vec<&[Ciphertext]> = Vec::with_capacity(parts.len());
+        for (j, part) in parts.iter().enumerate() {
+            anyhow::ensure!(
+                part.scale == scale,
+                "aggregation scale mismatch: part {j} carries scale {}, part 0 carries {scale}",
+                part.scale
+            );
+            let cts = self.real_cts(part)?;
+            anyhow::ensure!(
+                cts.len() == len,
+                "aggregation length mismatch: part {j} has {} ciphertexts, part 0 has {len}",
+                cts.len()
+            );
+            cols.push(cts);
+        }
+        let bytes0 = self.link.bytes_transferred();
+        let recv0 = self.link.bytes_received();
+        let acc: Vec<Ciphertext> = match &mut self.link {
+            // Per-element Montgomery-resident fold, fanned across
+            // workers; wall time (not summed per-thread time) goes to
+            // the ledger.
+            ShareLink::Local(_) => {
+                let pk = &self.kp.pk;
+                pool::par_map_indexed(len, pool::threads(), |i| {
+                    let column: Vec<&Ciphertext> = cols.iter().map(|cts| &cts[i]).collect();
+                    pk.add_many(&column)
+                })
+            }
+            // Split custody: relay the per-node vectors to center-b
+            // without decrypting — S2 is the aggregator of Figure 1.
+            // Center-b is mutually untrusting wire-controlled data too:
+            // a malformed reply is a session error, not a center panic.
+            ShareLink::Peer(client) => {
+                let acc = client.aggregate(scale, &cols);
+                anyhow::ensure!(
+                    acc.len() == len,
+                    "center-b answered Aggregate with {} ciphertexts, expected {len}",
+                    acc.len()
+                );
+                acc
+            }
+        };
         self.ledger.paillier_adds += ((parts.len() - 1) * len) as u64;
+        self.ledger.bytes += self.link.bytes_transferred() - bytes0;
+        self.ledger.bytes_recv += self.link.bytes_received() - recv0;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
         self.ledger.rounds += 1;
-        EncVec { scale, data: EncData::Real(acc) }
+        Ok(EncVec { scale, data: EncData::Real(acc) })
     }
 
     fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> EncVec {
@@ -462,42 +652,77 @@ impl SecureFabric for RealFabric {
         EncVec { scale: v.scale, data: EncData::Real(out) }
     }
 
-    fn to_shares(&mut self, v: &EncVec) -> SecVec {
-        assert_eq!(v.scale, self.fmt.f, "to_shares expects scale-f values");
+    fn to_shares(&mut self, v: &EncVec) -> anyhow::Result<SecVec> {
+        anyhow::ensure!(
+            v.scale == self.fmt.f,
+            "to_shares expects scale-f ({}) values, got scale {}",
+            self.fmt.f,
+            v.scale
+        );
         let t0 = Instant::now();
         let w = self.fmt.w;
-        let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
-        let mask_bound = BigUint::one().shl(w + SIGMA);
-        let cts = self.expect_real(v).to_vec();
-        // S2's blinds are drawn serially (fixed RNG stream); the
-        // blind-encrypt-decrypt pipeline then fans out per element.
-        let rhos: Vec<BigUint> = cts.iter().map(|_| self.rng.below(&mask_bound)).collect();
-        let pk = &self.kp.pk;
-        let sk = &self.kp.sk;
-        let lift_ref = &lift;
         let mask_w = (1u128 << w) - 1;
-        let blinded: Vec<(Shared, u64)> =
-            pool::par_map_indexed(cts.len(), pool::threads(), |i| {
-                // S2: blind with C + ρ.
-                let blind = lift_ref.add(&rhos[i]);
-                let blinded = pk.add(&cts[i], &pk.encrypt_trivial(&blind));
-                // S1: decrypt y = x + C + ρ (no wrap: |x| < 2^{w-1} ≪ n).
-                let y = sk.decrypt(&blinded);
-                let a = u128_of(&y) & mask_w;
-                let b = (1u128 << w).wrapping_sub(u128_of(&blind) & mask_w) & mask_w;
-                (Shared { a, b }, blinded.byte_len() as u64)
-            });
-        let mut shares = Vec::with_capacity(cts.len());
-        for (share, ct_bytes) in blinded {
-            self.ledger.bytes += ct_bytes;
-            self.ledger.bytes_recv += ct_bytes; // S1 receives the blinded ct
-            shares.push(share);
-        }
+        let cts = self.real_cts(v)?.to_vec();
+        let handle = self.next_handle;
+        let shares = match &mut self.link {
+            ShareLink::Local(_) => {
+                let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
+                let mask_bound = BigUint::one().shl(w + SIGMA);
+                // S2's blinds are drawn serially (fixed RNG stream); the
+                // blind-encrypt-decrypt pipeline then fans out per element.
+                let rhos: Vec<BigUint> =
+                    cts.iter().map(|_| self.rng.below(&mask_bound)).collect();
+                let pk = &self.kp.pk;
+                let sk = &self.kp.sk;
+                let lift_ref = &lift;
+                let blinded: Vec<((u128, u128), u64)> =
+                    pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                        // S2: blind with C + ρ.
+                        let blind = lift_ref.add(&rhos[i]);
+                        let blinded = pk.add(&cts[i], &pk.encrypt_trivial(&blind));
+                        // S1: decrypt y = x + C + ρ (no wrap: |x| < 2^{w-1} ≪ n).
+                        let y = sk.decrypt(&blinded);
+                        let a = u128_of(&y) & mask_w;
+                        let b = blind_b_half(&blind, w);
+                        ((a, b), blinded.byte_len() as u64)
+                    });
+                let mut a = Vec::with_capacity(cts.len());
+                let mut b = Vec::with_capacity(cts.len());
+                for ((ai, bi), ct_bytes) in blinded {
+                    self.ledger.bytes += ct_bytes;
+                    self.ledger.bytes_recv += ct_bytes; // S1 receives the blinded ct
+                    a.push(ai);
+                    b.push(bi);
+                }
+                ShareVec { a, b: S2Custody::Local(b) }
+            }
+            ShareLink::Peer(client) => {
+                self.next_handle += 1;
+                let bytes0 = client.bytes_sent() + client.bytes_received();
+                // S2 draws the blinds ρ itself, keeps its halves under
+                // `handle`, and only the blinded ciphertexts come back.
+                let blinded = client.blind(handle, &cts);
+                anyhow::ensure!(
+                    blinded.len() == cts.len(),
+                    "center-b answered Blind with {} ciphertexts, expected {}",
+                    blinded.len(),
+                    cts.len()
+                );
+                let sk = &self.kp.sk;
+                let a: Vec<u128> = pool::par_map_indexed(blinded.len(), pool::threads(), |i| {
+                    u128_of(&sk.decrypt(&blinded[i])) & mask_w
+                });
+                let delta = client.bytes_sent() + client.bytes_received() - bytes0;
+                self.ledger.bytes += delta;
+                self.ledger.bytes_recv += delta;
+                ShareVec { a, b: S2Custody::Remote { handle } }
+            }
+        };
         self.ledger.paillier_adds += cts.len() as u64;
         self.ledger.paillier_decrypts += cts.len() as u64;
         self.ledger.rounds += 2;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
-        SecVec::Shares(shares)
+        Ok(SecVec::Shares(shares))
     }
 
     fn decrypt_reveal(&mut self, v: &EncVec) -> Vec<f64> {
@@ -520,66 +745,72 @@ impl SecureFabric for RealFabric {
     fn newton_step(&mut self, h_tri: &SecVec, g: &SecVec, p: usize) -> Vec<f64> {
         let h = self.expect_shares(h_tri);
         let gv = self.expect_shares(g);
-        let mut ga = Vec::new();
-        let mut ea = Vec::new();
-        for s in h.iter().chain(gv) {
-            ga.extend(self.bits_of_share(s.a));
-            ea.extend(self.bits_of_share(s.b));
-        }
-        let out = self.run_gc(ProgSpec::Newton { p }, ga, ea);
+        let ga = self.garbler_bits_of(&[h, gv]);
+        let out = self.run_gc(ProgSpec::Newton { p }, ga, &[h, gv]);
         self.decode_out_words(&out)
     }
 
     fn cholesky_shares(&mut self, h_tri: &SecVec, p: usize) -> SecVec {
-        let h = self.expect_shares(h_tri).to_vec();
+        let h = self.expect_shares(h_tri);
         let nh = tri_len(p);
         let w = self.fmt.w;
+        let fmt = self.fmt;
         let mask_w = (1u128 << w) - 1;
         let masks: Vec<u128> = (0..nh)
             .map(|_| ((self.rng.next_u64() as u128) << 64 | self.rng.next_u64() as u128) & mask_w)
             .collect();
-        let mut ga = Vec::new();
-        let mut ea = Vec::new();
-        for s in &h {
-            ga.extend(self.bits_of_share(s.a));
-            ea.extend(self.bits_of_share(s.b));
-        }
+        let mut ga = self.garbler_bits_of(&[h]);
         for &m in &masks {
             ga.extend(self.bits_of_share(m));
         }
-        let out = self.run_gc(ProgSpec::CholeskyShare { p }, ga, ea);
-        let shares = out
-            .chunks(w)
-            .zip(&masks)
-            .map(|(chunk, &m)| {
-                let mut b: u128 = 0;
-                for (i, &bit) in chunk.iter().enumerate() {
-                    if bit {
-                        b |= 1 << i;
-                    }
-                }
-                Shared { a: (1u128 << w).wrapping_sub(m) & mask_w, b }
-            })
-            .collect();
-        SecVec::Shares(shares)
+        // S1's output shares come from its own masks; S2's are the
+        // masked program outputs — held locally in-process, stored at
+        // center-b under a fresh handle over the peer link.
+        let a_out: Vec<u128> =
+            masks.iter().map(|&m| (1u128 << w).wrapping_sub(m) & mask_w).collect();
+        let out_handle = self.next_handle;
+        let bytes0 = self.link.bytes_transferred();
+        let recv0 = self.link.bytes_received();
+        let input = self.eval_input(&[h]);
+        let (bvals, stats) = match (&mut self.link, input) {
+            (ShareLink::Local(session), EvalInput::Bits(ea)) => {
+                let (out, stats) =
+                    execute_local(session, &ProgSpec::CholeskyShare { p }, fmt, &ga, &ea);
+                (Some(words_of_bits(&out, w)), stats)
+            }
+            (ShareLink::Peer(client), EvalInput::Handles(handles)) => {
+                self.next_handle += 1;
+                let stats = client.execute_to_share(
+                    &ProgSpec::CholeskyShare { p },
+                    fmt,
+                    &ga,
+                    &handles,
+                    out_handle,
+                );
+                (None, stats)
+            }
+            _ => unreachable!("eval_input always matches the link kind"),
+        };
+        self.charge_link(stats, bytes0, recv0);
+        let b = match bvals {
+            Some(b) => S2Custody::Local(b),
+            None => S2Custody::Remote { handle: out_handle },
+        };
+        SecVec::Shares(ShareVec { a: a_out, b })
     }
 
     fn solve_reveal(&mut self, l_tri: &SecVec, g: &SecVec, p: usize) -> Vec<f64> {
         let l = self.expect_shares(l_tri);
         let gv = self.expect_shares(g);
-        let mut ga = Vec::new();
-        let mut ea = Vec::new();
-        for s in l.iter().chain(gv) {
-            ga.extend(self.bits_of_share(s.a));
-            ea.extend(self.bits_of_share(s.b));
-        }
-        let out = self.run_gc(ProgSpec::Solve { p }, ga, ea);
+        let ga = self.garbler_bits_of(&[l, gv]);
+        let out = self.run_gc(ProgSpec::Solve { p }, ga, &[l, gv]);
         self.decode_out_words(&out)
     }
 
     fn inverse_to_enc(&mut self, h_tri: &SecVec, p: usize) -> EncMat {
-        let wide = InverseMaskedProg { p, fmt: self.fmt }.wide();
-        let h = self.expect_shares(h_tri).to_vec();
+        let fmt = self.fmt;
+        let wide = InverseMaskedProg { p, fmt }.wide();
+        let h = self.expect_shares(h_tri);
         let nh = tri_len(p);
         let w = self.fmt.w;
         // garbler masks r_i: (w+σ)-bit
@@ -589,42 +820,81 @@ impl SecureFabric for RealFabric {
                     & ((1u128 << (w + SIGMA)) - 1)
             })
             .collect();
-        let mut ga = Vec::new();
-        let mut ea = Vec::new();
-        for s in &h {
-            ga.extend(self.bits_of_share(s.a));
-            ea.extend(self.bits_of_share(s.b));
-        }
+        let mut ga = self.garbler_bits_of(&[h]);
         for &m in &masks {
             ga.extend((0..w + SIGMA).map(|i| (m >> i) & 1 == 1));
         }
-        let out = self.run_gc(ProgSpec::InverseMasked { p }, ga, ea);
-        // S2: assemble wide masked integers, encrypt; subtract Enc(C + r).
-        let t0 = Instant::now();
         let lift = BigUint::one().shl(w - 1);
-        let ys: Vec<BigUint> = out
-            .chunks(wide)
-            .map(|chunk| {
-                let mut y: u128 = 0;
-                for (i, &bit) in chunk.iter().enumerate() {
-                    if bit {
-                        y |= 1 << i;
-                    }
-                }
-                BigUint::from_u128(y)
-            })
-            .collect();
-        // S2 encrypts the masked values as one parallel batch (the RNG
-        // stream matches sequential encryption), then S1's Enc(C + r)
-        // correction is subtracted per element — trivial encryption
-        // suffices for correctness; hiding comes from enc_y's randomness.
-        let enc_ys =
-            self.kp.pk.encrypt_batch(&ys, &mut ChaChaSource(&mut self.rng), pool::threads());
-        let pk = &self.kp.pk;
-        let cts: Vec<Ciphertext> = pool::par_map_indexed(enc_ys.len(), pool::threads(), |i| {
-            let cr = lift.add(&BigUint::from_u128(masks[i]));
-            pk.sub(&enc_ys[i], &pk.encrypt_trivial(&cr))
-        });
+        let bytes0 = self.link.bytes_transferred();
+        let recv0 = self.link.bytes_received();
+        let input = self.eval_input(&[h]);
+        let (outcome, stats) = match (&mut self.link, input) {
+            (ShareLink::Local(session), EvalInput::Bits(ea)) => {
+                let (out, stats) =
+                    execute_local(session, &ProgSpec::InverseMasked { p }, fmt, &ga, &ea);
+                (InverseOutcome::Bits(out), stats)
+            }
+            (ShareLink::Peer(client), EvalInput::Handles(handles)) => {
+                // S1's corrections Enc(C + r_i) travel to center-b, so
+                // they must be *randomized* encryptions — a trivial
+                // encryption would hand S2 the masks r and with them the
+                // unmasked H̃⁻¹ entries.
+                let crs: Vec<BigUint> =
+                    masks.iter().map(|&m| lift.add(&BigUint::from_u128(m))).collect();
+                let corrections = self.kp.pk.encrypt_batch(
+                    &crs,
+                    &mut ChaChaSource(&mut self.rng),
+                    pool::threads(),
+                );
+                let (cts, stats) = client.execute_encrypt(
+                    &ProgSpec::InverseMasked { p },
+                    fmt,
+                    &ga,
+                    &handles,
+                    &corrections,
+                );
+                (InverseOutcome::Cts(cts), stats)
+            }
+            _ => unreachable!("eval_input always matches the link kind"),
+        };
+        self.charge_link(stats, bytes0, recv0);
+        let t0 = Instant::now();
+        let cts: Vec<Ciphertext> = match outcome {
+            // In-process: this side also plays S2 — assemble the wide
+            // masked integers, encrypt, subtract Enc(C + r).
+            InverseOutcome::Bits(out) => {
+                let ys: Vec<BigUint> =
+                    words_of_bits(&out, wide).into_iter().map(BigUint::from_u128).collect();
+                // S2 encrypts the masked values as one parallel batch
+                // (the RNG stream matches sequential encryption), then
+                // S1's Enc(C + r) correction is subtracted per element —
+                // trivial encryption suffices in-process; hiding comes
+                // from enc_y's randomness.
+                let enc_ys = self.kp.pk.encrypt_batch(
+                    &ys,
+                    &mut ChaChaSource(&mut self.rng),
+                    pool::threads(),
+                );
+                let pk = &self.kp.pk;
+                pool::par_map_indexed(enc_ys.len(), pool::threads(), |i| {
+                    let cr = lift.add(&BigUint::from_u128(masks[i]));
+                    pk.sub(&enc_ys[i], &pk.encrypt_trivial(&cr))
+                })
+            }
+            // Split custody: center-b already encrypted its wide outputs
+            // and subtracted S1's randomized corrections itself. A short
+            // reply aborts loudly (the GC path's contract; the center
+            // CLIs convert the unwind into a clean error exit).
+            InverseOutcome::Cts(cts) => {
+                assert_eq!(
+                    cts.len(),
+                    nh,
+                    "center-b answered the masked inverse with a wrong-length ciphertext vector"
+                );
+                self.ledger.paillier_encs += nh as u64; // S1's corrections
+                cts
+            }
+        };
         self.ledger.paillier_encs += nh as u64;
         self.ledger.paillier_adds += nh as u64;
         let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
@@ -636,13 +906,14 @@ impl SecureFabric for RealFabric {
     }
 
     fn converged(&mut self, l_new: &SecVec, l_old: &SecVec, tol: f64) -> bool {
-        let ln = self.expect_shares(l_new)[0];
-        let lo = self.expect_shares(l_old)[0];
-        let mut ga = self.bits_of_share(ln.a);
-        ga.extend(self.bits_of_share(lo.a));
-        let mut ea = self.bits_of_share(ln.b);
-        ea.extend(self.bits_of_share(lo.b));
-        let out = self.run_gc(ProgSpec::Converged { tol }, ga, ea);
+        let ln = self.expect_shares(l_new);
+        let lo = self.expect_shares(l_old);
+        // The convergence check compares two aggregated scalars; handles
+        // are whole-vector references, so the inputs must be 1-element.
+        assert_eq!(ln.len(), 1, "converged expects a 1-element share vector");
+        assert_eq!(lo.len(), 1, "converged expects a 1-element share vector");
+        let ga = self.garbler_bits_of(&[ln, lo]);
+        let out = self.run_gc(ProgSpec::Converged { tol }, ga, &[ln, lo]);
         out[0]
     }
 
@@ -848,7 +1119,36 @@ fn scalar_mul_signed(
     }
 }
 
-fn u128_of(v: &BigUint) -> u128 {
+/// Assemble little-endian bit chunks of width `chunk` into words. The
+/// fabric's in-process S2 arms and the center-b peer server must pack
+/// output bits into share words identically, or shares would not
+/// recombine across deployments — one implementation, shared.
+pub(crate) fn words_of_bits(bits: &[bool], chunk: usize) -> Vec<u128> {
+    bits.chunks(chunk)
+        .map(|c| {
+            let mut v: u128 = 0;
+            for (i, &bit) in c.iter().enumerate() {
+                if bit {
+                    v |= 1 << i;
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+/// S2's share half for a blind `C + ρ`: `b = 2^w − ((C + ρ) mod 2^w)`.
+/// The fabric's in-process arm and the center-b peer server must derive
+/// the half identically, or in-process and split-process shares would
+/// recombine differently — one implementation, shared.
+pub(crate) fn blind_b_half(blind: &BigUint, w: usize) -> u128 {
+    let mask_w = (1u128 << w) - 1;
+    (1u128 << w).wrapping_sub(u128_of(blind) & mask_w) & mask_w
+}
+
+/// Low 128 bits of a little-endian bigint (share-word extraction;
+/// shared with the center-b peer server).
+pub(crate) fn u128_of(v: &BigUint) -> u128 {
     let bytes = v.to_bytes_le();
     let mut buf = [0u8; 16];
     let n = bytes.len().min(16);
@@ -1019,13 +1319,22 @@ impl SecureFabric for ModelFabric {
         apply_hinv_model(self, hinv, v)
     }
 
-    fn aggregate(&mut self, parts: Vec<EncVec>) -> EncVec {
-        assert!(!parts.is_empty());
+    fn aggregate(&mut self, parts: Vec<EncVec>) -> anyhow::Result<EncVec> {
+        anyhow::ensure!(!parts.is_empty(), "aggregation needs at least one part");
         let scale = parts[0].scale;
         let len = parts[0].len();
         let mut acc = vec![0.0; len];
-        for part in &parts {
-            assert_eq!(part.scale, scale);
+        for (j, part) in parts.iter().enumerate() {
+            anyhow::ensure!(
+                part.scale == scale,
+                "aggregation scale mismatch: part {j} carries scale {}, part 0 carries {scale}",
+                part.scale
+            );
+            anyhow::ensure!(
+                part.len() == len,
+                "aggregation length mismatch: part {j} has {} values, part 0 has {len}",
+                part.len()
+            );
             for (a, v) in acc.iter_mut().zip(self.expect_model(part)) {
                 *a += v;
             }
@@ -1033,7 +1342,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.paillier_adds += ((parts.len() - 1) * len) as u64;
         self.ledger.center_secs += ((parts.len() - 1) * len) as f64 * self.cost.t_add;
         self.ledger.rounds += 1;
-        EncVec { scale, data: EncData::Model(acc) }
+        Ok(EncVec { scale, data: EncData::Model(acc) })
     }
 
     fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> EncVec {
@@ -1044,8 +1353,13 @@ impl SecureFabric for ModelFabric {
         EncVec { scale: v.scale, data: EncData::Model(out) }
     }
 
-    fn to_shares(&mut self, v: &EncVec) -> SecVec {
-        assert_eq!(v.scale, self.fmt.f);
+    fn to_shares(&mut self, v: &EncVec) -> anyhow::Result<SecVec> {
+        anyhow::ensure!(
+            v.scale == self.fmt.f,
+            "to_shares expects scale-f ({}) values, got scale {}",
+            self.fmt.f,
+            v.scale
+        );
         let vals = self.expect_model(v).to_vec();
         self.ledger.paillier_adds += vals.len() as u64;
         self.ledger.paillier_decrypts += vals.len() as u64;
@@ -1053,7 +1367,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.bytes += vals.len() as u64 * self.ct_bytes;
         self.ledger.bytes_recv += vals.len() as u64 * self.ct_bytes;
         self.ledger.rounds += 2;
-        SecVec::Model(vals)
+        Ok(SecVec::Model(vals))
     }
 
     fn decrypt_reveal(&mut self, v: &EncVec) -> Vec<f64> {
@@ -1233,16 +1547,40 @@ mod tests {
         let g_half: Vec<f64> = g.iter().map(|v| v / 2.0).collect();
         let e1 = fab.node_encrypt_vec(0, &tri_half);
         let e2 = fab.node_encrypt_vec(1, &tri_half);
-        let eh = fab.aggregate(vec![e1, e2]);
+        let eh = fab.aggregate(vec![e1, e2]).unwrap();
         let g1 = fab.node_encrypt_vec(0, &g_half);
         let g2 = fab.node_encrypt_vec(1, &g_half);
-        let eg = fab.aggregate(vec![g1, g2]);
-        let hs = fab.to_shares(&eh);
-        let gs = fab.to_shares(&eg);
+        let eg = fab.aggregate(vec![g1, g2]).unwrap();
+        let hs = fab.to_shares(&eh).unwrap();
+        let gs = fab.to_shares(&eg).unwrap();
         let delta = fab.newton_step(&hs, &gs, p);
         assert_all_close(&delta, &expect, 1e-3, "secure newton step");
         assert!(fab.ledger().gc_ands > 0);
         assert!(fab.ledger().paillier_encs >= 12);
+    }
+
+    /// Malformed "node" input — mismatched ciphertext counts or scales —
+    /// must surface as a session `Err` from aggregation, never a panic
+    /// (one rogue node must not take the center down).
+    #[test]
+    fn aggregate_rejects_malformed_parts_without_panicking() {
+        let mut fab = RealFabric::new(256, FMT, 46);
+        let a = fab.node_encrypt_vec(0, &[1.0, 2.0]);
+        let short = fab.node_encrypt_vec(1, &[1.0]);
+        let err = fab.aggregate(vec![a.clone(), short]).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+        let mut wrong_scale = fab.node_encrypt_vec(1, &[1.0, 2.0]);
+        wrong_scale.scale = 99;
+        let err = fab.aggregate(vec![a.clone(), wrong_scale]).unwrap_err().to_string();
+        assert!(err.contains("scale mismatch"), "{err}");
+        assert!(fab.aggregate(vec![]).is_err(), "empty aggregation is an error");
+        // to_shares also rejects a wire-controlled scale, as Err.
+        let mut bad = a;
+        bad.scale = 7;
+        assert!(fab.to_shares(&bad).is_err());
+        // The fabric is still usable after the rejected rounds.
+        let ok = fab.node_encrypt_vec(0, &[0.25]);
+        assert_eq!(fab.decrypt_reveal(&ok), vec![0.25]);
     }
 
     /// Real fabric: cholesky_shares + solve_reveal == plaintext solve.
@@ -1256,10 +1594,10 @@ mod tests {
         let expect = a.solve_spd(&g).unwrap();
 
         let eh = fab.node_encrypt_vec(0, &tri);
-        let hs = fab.to_shares(&eh);
+        let hs = fab.to_shares(&eh).unwrap();
         let ls = fab.cholesky_shares(&hs, p);
         let eg = fab.node_encrypt_vec(0, &g);
-        let gs = fab.to_shares(&eg);
+        let gs = fab.to_shares(&eg).unwrap();
         let x = fab.solve_reveal(&ls, &gs, p);
         assert_all_close(&x, &expect, 2e-3, "cholesky+solve");
     }
@@ -1276,7 +1614,7 @@ mod tests {
         let expect = a.inverse_spd().unwrap().matvec(&g);
 
         let eh = fab.node_encrypt_vec(0, &tri);
-        let hs = fab.to_shares(&eh);
+        let hs = fab.to_shares(&eh).unwrap();
         let hinv = fab.inverse_to_enc(&hs, p);
         let applied = fab.node_apply_hinv(0, &hinv, &g);
         assert_eq!(applied.scale, 2 * FMT.f);
@@ -1284,16 +1622,94 @@ mod tests {
         assert_all_close(&got, &expect, 2e-3, "Enc(H⁻¹)⊗g");
     }
 
+    /// Split custody end-to-end against a remote center-b: every S2
+    /// operation — relay-aggregate, blind (S2 keeps its halves), GC
+    /// reveal, share-output Cholesky, solve over a remote-held `L`,
+    /// masked inverse with S2-side encryption, convergence bit — matches
+    /// the plaintext reference, and the control-frame census shows no
+    /// share material ever crossed toward or from center-a.
+    #[test]
+    fn real_fabric_peer_custody_end_to_end() {
+        use crate::mpc::peer::PeerGcServer;
+        use crate::net::wire;
+
+        let mut server = PeerGcServer::bind("127.0.0.1:0", 0x51).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve_once().unwrap());
+
+        let mut fab = RealFabric::connect_peer(256, FMT, 47, &addr).unwrap();
+        let mut rng = TestRng::new(13);
+        let p = 3;
+        let (a, tri) = random_spd_tri(&mut rng, p);
+        let g: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+        let expect = a.solve_spd(&g).unwrap();
+
+        // Aggregation is relayed to S2; blinding leaves S2's halves there.
+        let tri_half: Vec<f64> = tri.iter().map(|v| v / 2.0).collect();
+        let e1 = fab.node_encrypt_vec(0, &tri_half);
+        let e2 = fab.node_encrypt_vec(1, &tri_half);
+        let eh = fab.aggregate(vec![e1, e2]).unwrap();
+        let hs = fab.to_shares(&eh).unwrap();
+        match &hs {
+            SecVec::Shares(sv) => {
+                assert!(
+                    matches!(sv.b, S2Custody::Remote { .. }),
+                    "peer-link shares must leave S2 custody at center-b"
+                );
+            }
+            SecVec::Model(_) => panic!("real fabric produced modeled shares"),
+        }
+        let eg = fab.node_encrypt_vec(0, &g);
+        let gs = fab.to_shares(&eg).unwrap();
+
+        // Revealing program over remote-held evaluator inputs.
+        let delta = fab.newton_step(&hs, &gs, p);
+        assert_all_close(&delta, &expect, 1e-3, "peer newton step");
+
+        // Share-output program: S2 stores its L halves under a handle.
+        let ls = fab.cholesky_shares(&hs, p);
+        let x = fab.solve_reveal(&ls, &gs, p);
+        assert_all_close(&x, &expect, 2e-3, "peer cholesky+solve");
+
+        // Masked inverse: S2 assembles + encrypts its own wide outputs.
+        let hinv = fab.inverse_to_enc(&hs, p);
+        let applied = fab.node_apply_hinv(0, &hinv, &g);
+        let got = fab.decrypt_reveal(&applied);
+        let inv_expect = a.inverse_spd().unwrap().matvec(&g);
+        assert_all_close(&got, &inv_expect, 2e-3, "peer Enc(H̃⁻¹)⊗g");
+
+        // Convergence bit over two remote-held scalars.
+        let e_old = fab.node_encrypt_vec(0, &[-0.5]);
+        let e_new = fab.node_encrypt_vec(0, &[-0.5000000004]);
+        let so = fab.to_shares(&e_old).unwrap();
+        let sn = fab.to_shares(&e_new).unwrap();
+        assert!(fab.converged(&sn, &so, 1e-6));
+
+        // Custody census: the only frame that can carry S2 share values
+        // is ShareInput, and it never appeared; S2-side work really ran.
+        let census = fab.peer_census().expect("peer link");
+        assert!(
+            census.sent.get(&wire::TAG_SHARE_INPUT).is_none(),
+            "share material crossed to center-b: {census:?}"
+        );
+        assert!(census.sent.get(&wire::TAG_AGGREGATE).copied().unwrap_or(0) >= 1);
+        assert!(census.sent.get(&wire::TAG_BLIND).copied().unwrap_or(0) >= 4);
+        assert!(census.recv.get(&wire::TAG_GC_OUT).copied().unwrap_or(0) >= 3);
+
+        drop(fab); // sends Shutdown; center-b exits its session
+        server_thread.join().unwrap();
+    }
+
     #[test]
     fn real_fabric_converged() {
         let mut fab = RealFabric::new(256, FMT, 45);
         let e_old = fab.node_encrypt_vec(0, &[-0.5]);
         let e_new = fab.node_encrypt_vec(0, &[-0.5000000004]);
-        let so = fab.to_shares(&e_old);
-        let sn = fab.to_shares(&e_new);
+        let so = fab.to_shares(&e_old).unwrap();
+        let sn = fab.to_shares(&e_new).unwrap();
         assert!(fab.converged(&sn, &so, 1e-6));
         let e_far = fab.node_encrypt_vec(0, &[-0.4]);
-        let sf = fab.to_shares(&e_far);
+        let sf = fab.to_shares(&e_far).unwrap();
         assert!(!fab.converged(&sf, &so, 1e-6));
     }
 
@@ -1307,9 +1723,9 @@ mod tests {
         let g: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
         let expect = a.solve_spd(&g).unwrap();
         let eh = fab.node_encrypt_vec(0, &tri);
-        let hs = fab.to_shares(&eh);
+        let hs = fab.to_shares(&eh).unwrap();
         let eg = fab.node_encrypt_vec(0, &g);
-        let gs = fab.to_shares(&eg);
+        let gs = fab.to_shares(&eg).unwrap();
         let delta = fab.newton_step(&hs, &gs, p);
         assert_all_close(&delta, &expect, 1e-4, "modeled newton step");
         let l = fab.ledger();
@@ -1331,9 +1747,9 @@ mod tests {
         };
         let g = vec![0.1; p];
         let eh = fab.node_encrypt_vec(0, &tri);
-        let hs = fab.to_shares(&eh);
+        let hs = fab.to_shares(&eh).unwrap();
         let eg = fab.node_encrypt_vec(0, &g);
-        let gs = fab.to_shares(&eg);
+        let gs = fab.to_shares(&eg).unwrap();
 
         let c0 = fab.ledger().center_secs;
         fab.newton_step(&hs, &gs, p);

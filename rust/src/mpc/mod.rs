@@ -11,8 +11,11 @@
 //!   ([`fabric::RealFabric`]) and a calibrated cost-model backend
 //!   ([`fabric::ModelFabric`]) for paper-scale sweeps ([`costmodel`]);
 //! * the two Center servers as separate OS processes ([`peer`]): a
-//!   serializable program spec plus garbler-client / evaluator-server
-//!   halves behind `privlogit center-a` / `center-b`.
+//!   serializable program spec plus the S1 client / S2 server halves
+//!   behind `privlogit center-a` / `center-b` — center-b aggregates
+//!   relayed node ciphertexts, draws its own blinds and keeps its own
+//!   additive shares ([`fabric::S2Custody`]); share material never
+//!   crosses the peer wire.
 
 pub mod circuits;
 pub mod costmodel;
@@ -22,6 +25,7 @@ pub mod peer;
 pub use circuits::{tri_idx, tri_len};
 pub use costmodel::{CostLedger, CostModel};
 pub use fabric::{
-    EncData, EncMat, EncVec, ModelFabric, PreparedHinv, RealFabric, SecVec, SecureFabric, Shared,
+    EncData, EncMat, EncVec, ModelFabric, PreparedHinv, RealFabric, S2Custody, SecVec,
+    SecureFabric, ShareLink, ShareVec, Shared,
 };
-pub use peer::{PeerGcClient, PeerGcServer, ProgSpec};
+pub use peer::{PeerCensus, PeerGcClient, PeerGcServer, ProgSpec};

@@ -4,52 +4,80 @@
 //! servers*: S1 garbles and holds the Paillier key, S2 evaluates and
 //! aggregates. In-process they are the two halves of
 //! [`GcSession::execute`](crate::gc::exec::GcSession) running on scoped
-//! threads; this module puts the evaluator half behind a real TCP
+//! threads; this module puts the **whole S2 role** behind a real TCP
 //! endpoint so `privlogit center-a` (garbler + protocol driver) and
-//! `privlogit center-b` (evaluator) run as genuinely separate processes:
+//! `privlogit center-b` (evaluator + aggregator + share custodian) run
+//! as genuinely separate processes:
 //!
 //! * [`ProgSpec`] — a serializable description of the five garbled
 //!   programs ([`crate::mpc::circuits`]), so center-b can reconstruct
 //!   the exact circuit center-a is about to garble (garbling is
 //!   streamed; both sides must walk the same deterministic program).
-//! * [`PeerGcClient`] — center-a's end: sends a
-//!   [`WireMsg::GcExec`] control frame, runs
-//!   [`run_garbler`](crate::gc::exec::run_garbler) over the same
-//!   channel, then reads the [`WireMsg::GcOut`] output bits.
-//! * [`PeerGcServer`] — center-b's end: answers each `GcExec` by running
-//!   [`run_evaluator`](crate::gc::exec::run_evaluator) and returning the
-//!   decoded output bits.
+//! * [`PeerGcClient`] — center-a's (S1's) end: installs the Paillier
+//!   public key ([`WireMsg::SetKey`]), relays node ciphertexts for S2 to
+//!   aggregate ([`WireMsg::Aggregate`]), requests blind conversions
+//!   ([`WireMsg::Blind`]), and drives garbled executions
+//!   ([`WireMsg::GcExec`]) that reference S2's *stored share handles*
+//!   instead of shipping evaluator bits.
+//! * [`PeerGcServer`] — center-b's end: a real S2. It `⊕`-aggregates
+//!   relayed ciphertext vectors, draws its own blinds ρ for the
+//!   blind-decryption conversion and **keeps its own additive shares**
+//!   in a per-session store, feeds those shares into
+//!   [`run_evaluator`](crate::gc::exec::run_evaluator) itself, stores
+//!   masked Cholesky outputs as fresh shares, and encrypts its own
+//!   masked wide outputs for the `Enc(H̃⁻¹)` materialization.
 //!
 //! Everything — control frames, garbled tables, OT extension, decode
-//! bits — crosses one framed, CRC-checked TCP connection (handshake role
+//! bits — crosses one framed TCP connection (handshake role
 //! [`wire::ROLE_PEER`]). Control frames travel as length-prefixed
-//! [`Channel`] blobs, and the two phases strictly alternate, so the byte
+//! [`Channel`] blobs, and the phases strictly alternate, so the byte
 //! stream never desynchronizes.
 //!
-//! Honest scope note (see `docs/ARCHITECTURE.md`): this splits the GC
-//! *transport and execution* across processes. The protocol driver in
-//! center-a still computes both servers' additive shares and ships
-//! center-b its evaluator inputs, exactly as the in-process simulation
-//! does — custody of the shares is not yet split.
+//! **Custody note** (see `docs/ARCHITECTURE.md`): S2's share halves and
+//! blinds never cross this wire. The only frame that *can* carry share
+//! values toward center-b is [`WireMsg::ShareInput`], which exists for
+//! test drivers that legitimately hold both halves; a protocol run never
+//! sends it, and the census test in `rust/tests/net_three_process.rs`
+//! asserts exactly that. What center-a still sees is the relayed
+//! per-node *ciphertexts* (it holds the decryption key, so the relay —
+//! unlike direct node→S2 connections — leaves the "S1 does not decrypt
+//! node ciphertexts" property procedural rather than structural).
 
+use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::net::{SocketAddr, TcpListener};
 use std::time::{Duration, Instant};
 
 use super::circuits::{
-    CholeskyShareProg, ConvergedProg, InverseMaskedProg, NewtonStepProg, SolveProg,
+    CholeskyShareProg, ConvergedProg, InverseMaskedProg, NewtonStepProg, SolveProg, SIGMA,
 };
+use super::fabric::{blind_b_half, words_of_bits};
+use crate::bigint::{BigUint, RandomSource};
+use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
 use crate::crypto::rng::ChaChaRng;
 use crate::gc::channel::Channel;
-use crate::gc::exec::{run_evaluator, run_garbler, ExecStats, GcSession};
+use crate::gc::exec::{run_evaluator, run_garbler, ExecStats, GcProgram, GcSession};
 use crate::gc::ot::{OtReceiver, OtSender};
 use crate::gc::word::FixedFmt;
 use crate::net::tcp::{tcp_channel, TcpTransport};
 use crate::net::wire::{self, WireMsg};
+use crate::runtime::pool;
 
 /// How long [`PeerGcClient::connect`] retries the center-b address
 /// (covers start-up ordering between the two center processes).
 pub const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// [`WireMsg::GcExec`] output mode: reveal the output bits to S1
+/// (by-design-public values: Newton step, solve, convergence bit).
+pub const OUT_REVEAL: u8 = 0;
+/// Output mode: center-b stores the output bits as its own fresh share
+/// halves under `out_handle` (Cholesky-with-reshare) and replies `Ack`.
+pub const OUT_SHARE: u8 = 1;
+/// Output mode: center-b assembles the masked wide outputs, encrypts
+/// them itself, subtracts S1's randomized `Enc(C + r)` corrections and
+/// replies with the finished ciphertexts (masked-inverse
+/// materialization).
+pub const OUT_ENCRYPT: u8 = 2;
 
 /// A wire-serializable description of one garbled program — everything
 /// center-b needs to reconstruct the circuit (`fmt` travels separately
@@ -127,6 +155,19 @@ impl ProgSpec {
     }
 }
 
+/// Evaluator input arity of `spec` — both sides derive it from the
+/// program description, so S2 can validate its assembled share bits
+/// before the streamed evaluation starts.
+fn eval_arity(spec: &ProgSpec, fmt: FixedFmt) -> usize {
+    match *spec {
+        ProgSpec::Newton { p } => NewtonStepProg { p, fmt }.inputs_evaluator(),
+        ProgSpec::CholeskyShare { p } => CholeskyShareProg { p, fmt }.inputs_evaluator(),
+        ProgSpec::Solve { p } => SolveProg { p, fmt }.inputs_evaluator(),
+        ProgSpec::InverseMasked { p } => InverseMaskedProg { p, fmt }.inputs_evaluator(),
+        ProgSpec::Converged { tol } => ConvergedProg { fmt, tol }.inputs_evaluator(),
+    }
+}
+
 /// Run the garbler half for `spec` (monomorphized dispatch over the five
 /// concrete programs).
 fn garble_spec(
@@ -186,8 +227,8 @@ fn evaluate_spec(
 }
 
 /// Execute `spec` on an in-process [`GcSession`] (both halves on scoped
-/// threads) — the [`ProgSpec`]-dispatch twin of [`PeerGcClient::execute`]
-/// used by the single-process and loopback center links.
+/// threads) — the [`ProgSpec`]-dispatch twin of the peer client's
+/// executors, used by the single-process and loopback center links.
 pub fn execute_local(
     session: &mut GcSession,
     spec: &ProgSpec,
@@ -214,15 +255,30 @@ pub fn execute_local(
     }
 }
 
-/// Center-a's connection to a remote center-b evaluator: the garbler's
-/// persistent state (base OTs done once at connect) plus the shared
-/// AND-gate counter both processes advance in lockstep.
+/// Control-frame census of one peer connection: tag byte → frame count,
+/// per direction. The custody tests build their proof on this — the only
+/// frame that can carry S2 share values is [`WireMsg::ShareInput`], so
+/// `sent` containing no `TAG_SHARE_INPUT` entry (and [`WireMsg::GcExec`]
+/// carrying handles by construction) means no share material crossed.
+#[derive(Clone, Debug, Default)]
+pub struct PeerCensus {
+    /// Frames center-a sent to center-b (tag byte → count).
+    pub sent: BTreeMap<u8, u64>,
+    /// Frames center-a received from center-b (tag byte → count).
+    pub recv: BTreeMap<u8, u64>,
+}
+
+/// Center-a's connection to a remote center-b: the garbler's persistent
+/// state (base OTs done once at connect), the shared AND-gate counter
+/// both processes advance in lockstep, and the control-frame census.
 pub struct PeerGcClient {
     chan: Channel,
     ot_send: OtSender,
     gate_ctr: u64,
     rng_seed: u64,
     execs: u64,
+    sent_tags: BTreeMap<u8, u64>,
+    recv_tags: BTreeMap<u8, u64>,
 }
 
 impl PeerGcClient {
@@ -234,36 +290,113 @@ impl PeerGcClient {
         let mut chan = tcp_channel(transport);
         let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x5e55_1011);
         let ot_send = OtSender::setup(&mut chan, &mut rng);
-        Ok(PeerGcClient { chan, ot_send, gate_ctr: 0, rng_seed: seed, execs: 0 })
+        Ok(PeerGcClient {
+            chan,
+            ot_send,
+            gate_ctr: 0,
+            rng_seed: seed,
+            execs: 0,
+            sent_tags: BTreeMap::new(),
+            recv_tags: BTreeMap::new(),
+        })
     }
 
-    /// Execute one garbled program against the remote evaluator; returns
-    /// the output bits (decoded on center-b, returned in the
-    /// [`WireMsg::GcOut`] control frame) and execution stats.
-    ///
-    /// Panics if center-b vanishes mid-program — the same loud-failure
-    /// contract as every [`Channel`] user; `privlogit center-a` converts
-    /// it into a clean CLI error at the top level.
-    pub fn execute(
+    fn send_ctrl(&mut self, msg: &WireMsg) {
+        *self.sent_tags.entry(msg.tag()).or_insert(0) += 1;
+        self.chan.send_blob(&msg.encode());
+    }
+
+    fn recv_ctrl(&mut self) -> io::Result<WireMsg> {
+        let blob = self.chan.try_recv_blob()?;
+        let msg = WireMsg::decode(&blob).map_err(io::Error::from)?;
+        *self.recv_tags.entry(msg.tag()).or_insert(0) += 1;
+        Ok(msg)
+    }
+
+    /// Receive a control frame, panicking on a vanished peer — the same
+    /// loud-failure contract as every [`Channel`] user mid-protocol;
+    /// the center CLIs convert the unwind into a clean error exit.
+    fn recv_ctrl_loud(&mut self, expect: &str) -> WireMsg {
+        match self.recv_ctrl() {
+            Ok(m) => m,
+            Err(e) => panic!("center-b peer failed while {expect} was expected: {e}"),
+        }
+    }
+
+    /// Install the Paillier public material at center-b (session start):
+    /// S2 needs the modulus to aggregate, blind and re-encrypt, and the
+    /// fixed-point format to size its share words.
+    pub fn install_key(&mut self, n: &BigUint, fmt: FixedFmt) -> io::Result<()> {
+        self.send_ctrl(&WireMsg::SetKey { n: n.clone(), w: fmt.w as u32, f: fmt.f });
+        match self.recv_ctrl()? {
+            WireMsg::Ack => Ok(()),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("center-b answered SetKey with {other:?}"),
+            )),
+        }
+    }
+
+    /// Relay per-node ciphertext vectors for S2 to `⊕`-aggregate;
+    /// returns the aggregated vector.
+    pub fn aggregate(&mut self, scale: u32, parts: &[&[Ciphertext]]) -> Vec<Ciphertext> {
+        let wire_parts: Vec<Vec<BigUint>> = parts
+            .iter()
+            .map(|cts| cts.iter().map(|c| c.0.clone()).collect())
+            .collect();
+        self.send_ctrl(&WireMsg::Aggregate { scale, parts: wire_parts });
+        match self.recv_ctrl_loud("the aggregated ciphertexts") {
+            WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
+            other => panic!("center-b answered Aggregate with {other:?}"),
+        }
+    }
+
+    /// Blind-convert `cts` to additive shares: S2 draws its blinds,
+    /// stores its own halves under `handle`, and returns the blinded
+    /// ciphertexts for S1 to decrypt into its halves.
+    pub fn blind(&mut self, handle: u64, cts: &[Ciphertext]) -> Vec<Ciphertext> {
+        let wire_cts: Vec<BigUint> = cts.iter().map(|c| c.0.clone()).collect();
+        self.send_ctrl(&WireMsg::Blind { handle, cts: wire_cts });
+        match self.recv_ctrl_loud("the blinded ciphertexts") {
+            WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
+            other => panic!("center-b answered Blind with {other:?}"),
+        }
+    }
+
+    /// Install explicit S2 share values under `handle`. **Test drivers
+    /// only** — this ships share material across the wire, which a
+    /// protocol run never does (the custody census asserts it).
+    pub fn share_input(&mut self, handle: u64, vals: &[u128]) {
+        self.send_ctrl(&WireMsg::ShareInput { handle, vals: vals.to_vec() });
+        match self.recv_ctrl_loud("the share-input acknowledgement") {
+            WireMsg::Ack => {}
+            other => panic!("center-b answered ShareInput with {other:?}"),
+        }
+    }
+
+    /// Send the `GcExec` control frame and stream the garbled program.
+    fn garble(
         &mut self,
         spec: &ProgSpec,
         fmt: FixedFmt,
         garbler_bits: &[bool],
-        evaluator_bits: &[bool],
-    ) -> (Vec<bool>, ExecStats) {
-        let t0 = Instant::now();
+        handles: &[u64],
+        out_mode: u8,
+        out_handle: u64,
+    ) -> u64 {
         self.execs += 1;
         let exec_seed = self.rng_seed ^ self.execs.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let exec = WireMsg::GcExec {
+        self.send_ctrl(&WireMsg::GcExec {
             prog: spec.kind(),
             p: spec.p() as u32,
             w: fmt.w as u32,
             f: fmt.f,
             tol: spec.tol(),
             gate_ctr: self.gate_ctr,
-            eval_bits: evaluator_bits.to_vec(),
-        };
-        self.chan.send_blob(&exec.encode());
+            handles: handles.to_vec(),
+            out_mode,
+            out_handle,
+        });
         let (new_ctr, ands) = garble_spec(
             spec,
             fmt,
@@ -274,18 +407,89 @@ impl PeerGcClient {
             self.gate_ctr,
         );
         self.gate_ctr = new_ctr;
-        let reply = self.chan.try_recv_blob().expect("center-b peer hung up mid-program");
-        let bits = match WireMsg::decode(&reply) {
-            Ok(WireMsg::GcOut { bits }) => bits,
-            Ok(other) => panic!("center-b sent {other:?} where GcOut was expected"),
-            Err(e) => panic!("center-b sent an undecodable control frame: {e}"),
+        ands
+    }
+
+    /// Execute one garbled program whose output is revealed; center-b's
+    /// evaluator inputs come from its stored share `handles`.
+    pub fn execute_reveal(
+        &mut self,
+        spec: &ProgSpec,
+        fmt: FixedFmt,
+        garbler_bits: &[bool],
+        handles: &[u64],
+    ) -> (Vec<bool>, ExecStats) {
+        let t0 = Instant::now();
+        let ands = self.garble(spec, fmt, garbler_bits, handles, OUT_REVEAL, 0);
+        let bits = match self.recv_ctrl_loud("the revealed output bits") {
+            WireMsg::GcOut { bits } => bits,
+            other => panic!("center-b sent {other:?} where GcOut was expected"),
         };
         let stats = ExecStats {
             ands,
-            ot_bits: evaluator_bits.len() as u64,
+            ot_bits: eval_arity(spec, fmt) as u64,
             wall: t0.elapsed().as_secs_f64(),
         };
         (bits, stats)
+    }
+
+    /// Execute one garbled program whose output center-b keeps as its
+    /// own fresh share halves under `out_handle` (Cholesky re-share);
+    /// nothing but an acknowledgement comes back.
+    pub fn execute_to_share(
+        &mut self,
+        spec: &ProgSpec,
+        fmt: FixedFmt,
+        garbler_bits: &[bool],
+        handles: &[u64],
+        out_handle: u64,
+    ) -> ExecStats {
+        let t0 = Instant::now();
+        let ands = self.garble(spec, fmt, garbler_bits, handles, OUT_SHARE, out_handle);
+        match self.recv_ctrl_loud("the share-output acknowledgement") {
+            WireMsg::Ack => {}
+            other => panic!("center-b sent {other:?} where Ack was expected"),
+        }
+        ExecStats {
+            ands,
+            ot_bits: eval_arity(spec, fmt) as u64,
+            wall: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Execute the masked-inverse program: center-b assembles and
+    /// encrypts its wide outputs itself, subtracts S1's *randomized*
+    /// `Enc(C + r)` `corrections`, and returns the finished ciphertexts.
+    pub fn execute_encrypt(
+        &mut self,
+        spec: &ProgSpec,
+        fmt: FixedFmt,
+        garbler_bits: &[bool],
+        handles: &[u64],
+        corrections: &[Ciphertext],
+    ) -> (Vec<Ciphertext>, ExecStats) {
+        let t0 = Instant::now();
+        let ands = self.garble(spec, fmt, garbler_bits, handles, OUT_ENCRYPT, 0);
+        self.send_ctrl(&WireMsg::Ciphertexts {
+            scale: fmt.f,
+            secs: 0.0,
+            cts: corrections.iter().map(|c| c.0.clone()).collect(),
+        });
+        let cts = match self.recv_ctrl_loud("the corrected ciphertexts") {
+            WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
+            other => panic!("center-b sent {other:?} where ciphertexts were expected"),
+        };
+        let stats = ExecStats {
+            ands,
+            ot_bits: eval_arity(spec, fmt) as u64,
+            wall: t0.elapsed().as_secs_f64(),
+        };
+        (cts, stats)
+    }
+
+    /// The control-frame census of this connection so far.
+    pub fn census(&self) -> PeerCensus {
+        PeerCensus { sent: self.sent_tags.clone(), recv: self.recv_tags.clone() }
     }
 
     /// Bytes sent to center-b so far (control + labels + tables + OT).
@@ -311,19 +515,27 @@ impl Drop for PeerGcClient {
     }
 }
 
-/// The center-b process: a listening GC evaluator server. Each accepted
-/// center-a connection gets a fresh OT session and is served to
-/// completion (`Shutdown` or disconnect).
+/// The center-b process: a listening S2 server. Each accepted center-a
+/// connection gets a fresh OT session, its own share store and its own
+/// randomness stream, and is served to completion (`Shutdown` or
+/// disconnect).
 pub struct PeerGcServer {
     listener: TcpListener,
     seed: u64,
 }
 
 impl PeerGcServer {
-    /// Bind to `addr` (port 0 for an ephemeral port). `seed` drives this
-    /// server's own randomness (base-OT messages).
+    /// Bind to `addr` (port 0 for an ephemeral port). `seed` is mixed
+    /// with per-process entropy: S2's blinds ρ must not be predictable
+    /// to S1 (a predictable blind lets the key holder unblind the share
+    /// conversion), so even identically-configured center-b deployments
+    /// get distinct randomness streams. GC evaluation and OT reception
+    /// are randomness-insensitive, so replies stay correct either way.
     pub fn bind(addr: &str, seed: u64) -> io::Result<PeerGcServer> {
-        Ok(PeerGcServer { listener: TcpListener::bind(addr)?, seed })
+        Ok(PeerGcServer {
+            listener: TcpListener::bind(addr)?,
+            seed: seed ^ crate::net::server::entropy_seed(),
+        })
     }
 
     /// The bound address (useful with ephemeral ports).
@@ -357,11 +569,26 @@ impl PeerGcServer {
     }
 }
 
-/// Answer [`WireMsg::GcExec`] frames on one established center-a
-/// connection until `Shutdown` or disconnect.
+/// Per-session Paillier material at S2, installed by [`WireMsg::SetKey`].
+struct S2Crypto {
+    pk: PublicKey,
+    fmt: FixedFmt,
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Serve one established center-a connection as a full S2 until
+/// `Shutdown` or disconnect: aggregate relayed ciphertexts, blind and
+/// keep shares, evaluate garbled programs over the stored shares.
 fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
     let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x0e1e_2021);
     let mut ot_recv = OtReceiver::setup(&mut chan, &mut rng);
+    let mut crypto: Option<S2Crypto> = None;
+    // S2's share custody: handle → share words. Lives exactly as long
+    // as the session; center-a only ever holds the opaque handles.
+    let mut store: HashMap<u64, Vec<u128>> = HashMap::new();
     loop {
         let blob = match chan.try_recv_blob() {
             Ok(b) => b,
@@ -380,23 +607,195 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
         };
         match WireMsg::decode(&blob).map_err(io::Error::from)? {
             WireMsg::Shutdown => return Ok(()),
-            WireMsg::GcExec { prog, p, w, f, tol, gate_ctr, eval_bits } => {
-                let fmt = FixedFmt { w: w as usize, f };
+            WireMsg::SetKey { n, w, f } => {
+                // Mirror the node-side re-key rule: a second SetKey on
+                // one session would splice key material mid-protocol.
+                if crypto.is_some() {
+                    return Err(invalid(
+                        "center-a sent a second SetKey in one session; \
+                         re-keying requires a fresh connection"
+                            .into(),
+                    ));
+                }
+                let fmt = crate::net::server::validate_set_key(&n, w, f)?;
+                let n2 = n.mul(&n);
+                crypto = Some(S2Crypto { pk: PublicKey::from_modulus(n, n2), fmt });
+                chan.send_blob(&WireMsg::Ack.encode());
+            }
+            WireMsg::ShareInput { handle, vals } => {
+                store.insert(handle, vals);
+                chan.send_blob(&WireMsg::Ack.encode());
+            }
+            WireMsg::Aggregate { scale, parts } => {
+                let c = crypto
+                    .as_ref()
+                    .ok_or_else(|| invalid("Aggregate before SetKey".into()))?;
+                if parts.is_empty() {
+                    return Err(invalid("Aggregate carries no parts".into()));
+                }
+                let len = parts[0].len();
+                if parts.iter().any(|p| p.len() != len) {
+                    return Err(invalid("Aggregate parts have mismatched lengths".into()));
+                }
+                let t0 = Instant::now();
+                let cols: Vec<Vec<Ciphertext>> = parts
+                    .into_iter()
+                    .map(|p| p.into_iter().map(Ciphertext).collect())
+                    .collect();
+                let pk = &c.pk;
+                let acc: Vec<BigUint> = pool::par_map_indexed(len, pool::threads(), |i| {
+                    let column: Vec<&Ciphertext> = cols.iter().map(|cts| &cts[i]).collect();
+                    pk.add_many(&column).0
+                });
+                chan.send_blob(
+                    &WireMsg::Ciphertexts {
+                        scale,
+                        secs: t0.elapsed().as_secs_f64(),
+                        cts: acc,
+                    }
+                    .encode(),
+                );
+            }
+            WireMsg::Blind { handle, cts } => {
+                let c =
+                    crypto.as_ref().ok_or_else(|| invalid("Blind before SetKey".into()))?;
+                let w = c.fmt.w;
+                let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
+                let bound = BigUint::one().shl(w + SIGMA);
+                let t0 = Instant::now();
+                // Blinds ρ come serially from OUR stream and the b
+                // halves below never leave this process. The blind must
+                // be a *randomized* encryption: a trivial one is a
+                // deterministic factor, and S1 (who sent `cts` and holds
+                // the key) could strip it as bl·ct⁻¹ and read ρ — the
+                // same leak class as the inverse corrections going the
+                // other way. `encrypt_batch` draws randomness serially
+                // and fans the modpows out, like the Aggregate arm.
+                let blinds: Vec<BigUint> =
+                    cts.iter().map(|_| lift.add(&rng.below(&bound))).collect();
+                let enc_blinds =
+                    c.pk.encrypt_batch(&blinds, &mut ChaChaSource(&mut rng), pool::threads());
+                let bvals: Vec<u128> =
+                    blinds.iter().map(|blind| blind_b_half(blind, w)).collect();
+                let pk = &c.pk;
+                let blinded: Vec<BigUint> =
+                    pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                        pk.add(&Ciphertext(cts[i].clone()), &enc_blinds[i]).0
+                    });
+                store.insert(handle, bvals);
+                chan.send_blob(
+                    &WireMsg::Ciphertexts {
+                        scale: 0,
+                        secs: t0.elapsed().as_secs_f64(),
+                        cts: blinded,
+                    }
+                    .encode(),
+                );
+            }
+            WireMsg::GcExec { prog, p, w, f, tol, gate_ctr, handles, out_mode, out_handle } => {
+                let fmt = FixedFmt::try_new(w as usize, f)
+                    .map_err(|e| invalid(format!("GcExec carries a bad format: {e}")))?;
+                if let Some(c) = &crypto {
+                    if c.fmt != fmt {
+                        return Err(invalid(format!(
+                            "GcExec format {fmt:?} diverges from the session format {:?}",
+                            c.fmt
+                        )));
+                    }
+                }
                 let spec = ProgSpec::from_parts(prog, p as usize, tol).ok_or_else(|| {
-                    io::Error::new(
-                        io::ErrorKind::InvalidData,
-                        format!("unknown garbled-program kind {prog:#04x}"),
-                    )
+                    invalid(format!("unknown garbled-program kind {prog:#04x}"))
                 })?;
+                // Evaluator inputs come from OUR share custody.
+                let mut eval_bits = Vec::new();
+                for h in &handles {
+                    let vals = store
+                        .get(h)
+                        .ok_or_else(|| invalid(format!("unknown share handle {h}")))?;
+                    for &v in vals {
+                        eval_bits.extend((0..fmt.w).map(|i| (v >> i) & 1 == 1));
+                    }
+                }
+                let expect = eval_arity(&spec, fmt);
+                if eval_bits.len() != expect {
+                    return Err(invalid(format!(
+                        "handles supply {} evaluator bits, program {prog} needs {expect}",
+                        eval_bits.len()
+                    )));
+                }
                 let (bits, _ands) =
                     evaluate_spec(&spec, fmt, &mut chan, &mut ot_recv, &eval_bits, gate_ctr);
-                chan.send_blob(&WireMsg::GcOut { bits }.encode());
+                match out_mode {
+                    OUT_REVEAL => chan.send_blob(&WireMsg::GcOut { bits }.encode()),
+                    OUT_SHARE => {
+                        // The masked outputs ARE our fresh share halves.
+                        store.insert(out_handle, words_of_bits(&bits, fmt.w));
+                        chan.send_blob(&WireMsg::Ack.encode());
+                    }
+                    OUT_ENCRYPT => {
+                        let c = crypto
+                            .as_ref()
+                            .ok_or_else(|| invalid("OUT_ENCRYPT before SetKey".into()))?;
+                        let t0 = Instant::now();
+                        let wide = InverseMaskedProg { p: p as usize, fmt }.wide();
+                        let ys: Vec<BigUint> = words_of_bits(&bits, wide)
+                            .into_iter()
+                            .map(BigUint::from_u128)
+                            .collect();
+                        // Encrypt with OUR randomness, then subtract the
+                        // corrections S1 sends next.
+                        let enc_ys = c.pk.encrypt_batch(
+                            &ys,
+                            &mut ChaChaSource(&mut rng),
+                            pool::threads(),
+                        );
+                        let corr = match WireMsg::decode(&chan.try_recv_blob()?)
+                            .map_err(io::Error::from)?
+                        {
+                            WireMsg::Ciphertexts { cts, .. } => cts,
+                            other => {
+                                return Err(invalid(format!(
+                                    "center-a sent {other:?} where corrections were expected"
+                                )))
+                            }
+                        };
+                        if corr.len() != enc_ys.len() {
+                            return Err(invalid(format!(
+                                "{} corrections for {} wide outputs",
+                                corr.len(),
+                                enc_ys.len()
+                            )));
+                        }
+                        // ⊖ inverts the correction mod n²: a non-unit is
+                        // a session error here, not a worker panic there.
+                        if let Some(bad) =
+                            corr.iter().position(|ct| !ct.gcd(&c.pk.n2).is_one())
+                        {
+                            return Err(invalid(format!(
+                                "correction ciphertext {bad} is not invertible mod n²"
+                            )));
+                        }
+                        let pk = &c.pk;
+                        let out: Vec<BigUint> =
+                            pool::par_map_indexed(enc_ys.len(), pool::threads(), |i| {
+                                pk.sub(&enc_ys[i], &Ciphertext(corr[i].clone())).0
+                            });
+                        chan.send_blob(
+                            &WireMsg::Ciphertexts {
+                                scale: fmt.f,
+                                secs: t0.elapsed().as_secs_f64(),
+                                cts: out,
+                            }
+                            .encode(),
+                        );
+                    }
+                    m => return Err(invalid(format!("unknown GcExec output mode {m:#04x}"))),
+                }
             }
             other => {
-                return Err(io::Error::new(
-                    io::ErrorKind::InvalidData,
-                    format!("center-a sent {other:?}, which center-b does not serve"),
-                ))
+                return Err(invalid(format!(
+                    "center-a sent {other:?}, which center-b does not serve"
+                )))
             }
         }
     }
@@ -405,16 +804,18 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crypto::paillier::Keypair;
     use crate::gc::backend::PlainBackend;
-    use crate::gc::exec::GcProgram;
     use crate::mpc::circuits::tri_len;
-    use crate::mpc::fabric::share_vec;
+    use crate::mpc::fabric::{share_vec, u128_of};
 
     const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
 
     /// Split-process GC (client garbler ↔ server evaluator over real
     /// loopback TCP) must produce bit-identical outputs to the plain
-    /// backend oracle, across repeated executions on one session.
+    /// backend oracle, across repeated executions on one session — with
+    /// the evaluator inputs installed as S2-held shares, never as bits
+    /// in the `GcExec` frame.
     #[test]
     fn peer_client_server_matches_plain_backend() {
         let mut server = PeerGcServer::bind("127.0.0.1:0", 7).unwrap();
@@ -425,7 +826,7 @@ mod tests {
         let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(9);
         let p = 3;
 
-        for trial in 0..2 {
+        for trial in 0..2u64 {
             // A well-conditioned SPD matrix and gradient, as shares.
             let mut tri = Vec::new();
             for i in 0..p {
@@ -444,9 +845,15 @@ mod tests {
                     ea.push((s.b >> i) & 1 == 1);
                 }
             }
+            // This is a both-halves-in-one-hand test driver: install
+            // S2's halves explicitly, then execute over the handles.
+            let (hh, gh) = (10 * trial + 1, 10 * trial + 2);
+            client.share_input(hh, &h_shares.iter().map(|s| s.b).collect::<Vec<_>>());
+            client.share_input(gh, &g_shares.iter().map(|s| s.b).collect::<Vec<_>>());
             let spec = ProgSpec::Newton { p };
-            let (bits, stats) = client.execute(&spec, FMT, &ga, &ea);
+            let (bits, stats) = client.execute_reveal(&spec, FMT, &ga, &[hh, gh]);
             assert!(stats.ands > 0, "trial {trial}: gates streamed");
+            assert_eq!(stats.ot_bits as usize, ea.len());
 
             // Plain-backend oracle over the same inputs.
             let prog = NewtonStepProg { p, fmt: FMT };
@@ -457,8 +864,98 @@ mod tests {
             assert_eq!(tri.len(), tri_len(p));
         }
 
+        let census = client.census();
+        assert_eq!(census.sent.get(&wire::TAG_SHARE_INPUT), Some(&4));
+        assert_eq!(census.sent.get(&wire::TAG_GC_EXEC), Some(&2));
         assert!(client.bytes_sent() > 0 && client.bytes_received() > 0);
         drop(client); // sends Shutdown; server exits cleanly
         server_thread.join().unwrap();
+    }
+
+    /// S2's aggregate + blind custody path: center-b folds relayed
+    /// ciphertexts and blinds with its own ρ; the decrypted blinded
+    /// value recombines with the share it kept (recovered here through a
+    /// revealing GC execution, since the b halves never cross the wire).
+    #[test]
+    fn peer_aggregate_and_blind_share_custody() {
+        let mut server = PeerGcServer::bind("127.0.0.1:0", 8).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve_once().unwrap());
+
+        let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(11);
+        let kp = Keypair::generate(256, &mut rng);
+        let mut client = PeerGcClient::connect(&addr, 42).unwrap();
+        client.install_key(&kp.pk.n, FMT).unwrap();
+
+        // Two "nodes" encrypt halves of [1.5, -0.25]; S2 aggregates.
+        let codec = crate::crypto::fixed::FixedCodec::new(kp.pk.n.clone(), FMT.f);
+        let vals = [1.5f64, -0.25];
+        let enc = |v: f64, rng: &mut crate::crypto::rng::ChaChaRng| {
+            kp.pk.encrypt(&codec.encode(v / 2.0), &mut ChaChaSource(rng))
+        };
+        let part_a: Vec<Ciphertext> = vals.iter().map(|&v| enc(v, &mut rng)).collect();
+        let part_b: Vec<Ciphertext> = vals.iter().map(|&v| enc(v, &mut rng)).collect();
+        let agg = client.aggregate(FMT.f, &[&part_a[..], &part_b[..]]);
+        assert_eq!(agg.len(), vals.len());
+        for (ct, &v) in agg.iter().zip(&vals) {
+            assert_eq!(codec.decode(&kp.sk.decrypt(ct)), v, "aggregate decrypts to the sum");
+        }
+
+        // Blind conversion of the first aggregate (a 1-element vector,
+        // so it can feed the 1-element Converged inputs below): S1's
+        // half comes from the blinded decryption, S2's half stays at the
+        // server under handle 5.
+        let blinded = client.blind(5, &agg[..1]);
+        let mask_w = (1u128 << FMT.w) - 1;
+        let a_half = u128_of(&kp.sk.decrypt(&blinded[0])) & mask_w;
+        assert_ne!(blinded[0], agg[0], "blinding must change the ciphertext");
+
+        // Recombination proof through a revealing program: Converged
+        // compares the value behind handle 5 (a_half + S2's hidden b ≡
+        // 1.5) against a freshly-shared scalar. Equal values converge,
+        // a far value must not — which can only hold if the S2-held
+        // half recombines to exactly the aggregated plaintext.
+        let bits_of = |v: u128| (0..FMT.w).map(move |i| (v >> i) & 1 == 1);
+        for (other, expect) in [(vals[0], true), (3.0, false)] {
+            let sh = share_vec(FMT, &[other], &mut rng);
+            let handle = if expect { 7 } else { 8 };
+            client.share_input(handle, &[sh[0].b]);
+            let mut ga: Vec<bool> = bits_of(a_half).collect();
+            ga.extend(bits_of(sh[0].a));
+            let (bits, _) = client.execute_reveal(
+                &ProgSpec::Converged { tol: 1e-6 },
+                FMT,
+                &ga,
+                &[5, handle],
+            );
+            assert_eq!(
+                bits[0], expect,
+                "recombined 1.5 vs {other}: converged bit must be {expect}"
+            );
+        }
+
+        drop(client);
+        server_thread.join().unwrap();
+    }
+
+    /// A `GcExec` naming an unknown share handle is a clean session
+    /// error on center-b (the server thread returns `Err`, it does not
+    /// panic); center-a's stream panic is caught by its CLI layer.
+    #[test]
+    fn unknown_handle_is_session_error_not_panic() {
+        let mut server = PeerGcServer::bind("127.0.0.1:0", 9).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve_once());
+
+        let mut client = PeerGcClient::connect(&addr, 43).unwrap();
+        let ga = vec![false; 2 * FMT.w];
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            client.execute_reveal(&ProgSpec::Converged { tol: 1e-6 }, FMT, &ga, &[99])
+        }));
+        assert!(run.is_err(), "client side aborts loudly mid-program");
+        let session = server_thread.join().expect("center-b thread must not panic");
+        let err = session.expect_err("unknown handle must fail the session");
+        assert!(err.to_string().contains("unknown share handle"), "got: {err}");
+        std::mem::forget(client); // its channel is already poisoned
     }
 }

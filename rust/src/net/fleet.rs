@@ -166,7 +166,20 @@ impl RemoteFleet {
             };
             match conn.exchange(&WireMsg::MetaReq)? {
                 WireMsg::Meta { n, p: node_p, name: node_name } => {
+                    // Node metadata is wire-controlled: bound it before
+                    // it drives allocations or arithmetic.
                     let node_p = node_p as usize;
+                    anyhow::ensure!(
+                        node_p >= 1,
+                        "node {addr} reports a degenerate dimensionality p={node_p}"
+                    );
+                    let node_n = usize::try_from(n).map_err(|_| {
+                        anyhow::anyhow!("node {addr} reports n={n}, beyond this platform")
+                    })?;
+                    anyhow::ensure!(
+                        node_n >= 1,
+                        "node {addr} reports an empty shard (n=0)"
+                    );
                     if j == 0 {
                         p = node_p;
                         name = node_name;
@@ -176,7 +189,9 @@ impl RemoteFleet {
                             "node {addr} serves p={node_p}, fleet expects p={p}"
                         );
                     }
-                    n_total += n as usize;
+                    n_total = n_total.checked_add(node_n).ok_or_else(|| {
+                        anyhow::anyhow!("fleet sample total overflows adding node {addr}")
+                    })?;
                 }
                 other => anyhow::bail!("node {addr} answered MetaReq with {other:?}"),
             }

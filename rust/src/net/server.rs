@@ -126,7 +126,7 @@ impl NodeServer {
 /// any wire observer (`c_A·c_B⁻¹ = 1+(m_A−m_B)·n`). Mixes OS entropy
 /// (when readable) with the clock and pid; [`NodeServer::with_seed`]
 /// overrides it for deterministic tests.
-fn entropy_seed() -> u64 {
+pub(crate) fn entropy_seed() -> u64 {
     use std::io::Read as _;
     let mut seed = 0x9A11u64;
     let mut buf = [0u8; 8];
@@ -140,6 +140,31 @@ fn entropy_seed() -> u64 {
         .map(|d| d.as_nanos() as u64)
         .unwrap_or(0);
     seed ^ clock.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((std::process::id() as u64) << 32)
+}
+
+/// Validate wire-controlled [`WireMsg::SetKey`] material at a trust
+/// boundary: the fixed-point format must pass [`FixedFmt::try_new`]
+/// (w ≤ 64 so the `u128` share masks cannot overflow) and the modulus
+/// must look like a Paillier `n`. Shared by the node server and the
+/// center-b peer server so the two boundaries cannot drift apart.
+pub(crate) fn validate_set_key(
+    n: &crate::bigint::BigUint,
+    w: u32,
+    f: u32,
+) -> io::Result<FixedFmt> {
+    let fmt = FixedFmt::try_new(w as usize, f).map_err(|e| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("SetKey carries a bad fixed-point format: {e}"),
+        )
+    })?;
+    if n.bit_len() < 16 || n.is_even() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("SetKey modulus is not a plausible Paillier n ({} bits)", n.bit_len()),
+        ));
+    }
+    Ok(fmt)
 }
 
 /// Per-session Paillier state, established by [`WireMsg::SetKey`].
@@ -190,15 +215,37 @@ fn serve_session(
         let reply = match msg {
             WireMsg::MetaReq => WireMsg::Meta {
                 n: data.n() as u64,
-                p: data.p() as u32,
+                p: u32::try_from(data.p()).map_err(|_| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("shard dimensionality {} exceeds the wire's u32 range", data.p()),
+                    )
+                })?,
                 name: data.name.split('#').next().unwrap_or("?").to_string(),
             },
             WireMsg::SetKey { n, w, f } => {
+                // A second SetKey on one session would rebuild
+                // SessionCrypto with the same per-session seed and
+                // replay the identical DJN exponent stream — with
+                // `c = (1+mn)·hˢ`, two ciphertexts on one exponent
+                // reveal the plaintext difference to any wire observer.
+                // Re-keying requires a fresh connection (fresh seed).
+                if crypto.is_some() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "center sent a second SetKey in one session; re-keying mid-session \
+                         would replay this node's encryption-randomness stream",
+                    ));
+                }
+                // Wire-controlled format and modulus: validate at the
+                // trust boundary so a bad value is a session error, not
+                // an overflow inside the share arithmetic.
+                let fmt = validate_set_key(&n, w, f)?;
                 let n2 = n.mul(&n);
                 crypto = Some(SessionCrypto {
                     pk: PublicKey::from_modulus(n.clone(), n2),
                     codec: FixedCodec::new(n, f),
-                    fmt: FixedFmt { w: w as usize, f },
+                    fmt,
                     rng: ChaChaRng::from_u64_seed(seed),
                     hinv: None,
                     threads,
@@ -410,6 +457,55 @@ mod tests {
         assert_eq!(tags.get(&wire::TAG_NODE_REPLY), Some(&9));
         assert_eq!(tags.get(&wire::TAG_CIPHERTEXTS), None);
         drop(remote); // sends Shutdown; server threads exit
+    }
+
+    /// A second `SetKey` on one session is rejected: rebuilding the
+    /// session crypto from the same per-session seed would replay the
+    /// node's DJN exponent stream (Paillier randomness reuse).
+    #[test]
+    fn repeated_set_key_is_session_error() {
+        use crate::coordinator::fleet::FleetKey;
+        let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(21);
+        let kp = crate::crypto::paillier::Keypair::generate(256, &mut rng);
+        let d = synthesize("rekey", 60, 3, 2);
+        let mut server = NodeServer::bind("127.0.0.1:0", d).unwrap().with_seed(5);
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve_once());
+        let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+        let key = FleetKey { n: kp.pk.n.clone(), w: 40, f: 24 };
+        fleet.install_key(&key).unwrap();
+        let second = fleet.install_key(&key);
+        assert!(second.is_err(), "second SetKey must fail the round");
+        drop(fleet);
+        let session = handle.join().expect("node thread must not panic");
+        let err = session.expect_err("session must surface the re-key error");
+        assert!(err.to_string().contains("second SetKey"), "got: {err}");
+    }
+
+    /// A `SetKey` carrying an out-of-range fixed-point format (w = 128
+    /// would overflow the u128 share masks) or an implausible modulus is
+    /// rejected at the trust boundary.
+    #[test]
+    fn set_key_validates_format_and_modulus() {
+        use crate::bigint::BigUint;
+        use crate::coordinator::fleet::FleetKey;
+        let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(22);
+        let kp = crate::crypto::paillier::Keypair::generate(256, &mut rng);
+        for (key, what) in [
+            (FleetKey { n: kp.pk.n.clone(), w: 128, f: 24 }, "width 128"),
+            (FleetKey { n: kp.pk.n.clone(), w: 40, f: 40 }, "f = w"),
+            (FleetKey { n: BigUint::from_u64(77), w: 40, f: 24 }, "tiny modulus"),
+        ] {
+            let d = synthesize("badkey", 60, 3, 3);
+            let mut server = NodeServer::bind("127.0.0.1:0", d).unwrap().with_seed(6);
+            let addr = server.local_addr().unwrap().to_string();
+            let handle = std::thread::spawn(move || server.serve_once());
+            let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+            assert!(fleet.install_key(&key).is_err(), "{what} must be rejected");
+            drop(fleet);
+            let session = handle.join().expect("node thread must not panic");
+            assert!(session.is_err(), "{what}: session must end with the error");
+        }
     }
 
     /// A node answers metadata for a workload-named shard without the

@@ -34,7 +34,12 @@ pub const MAGIC: [u8; 4] = *b"PLGT";
 /// [`WireMsg::StepReq`], [`WireMsg::Ack`]), node compute seconds on
 /// [`WireMsg::Ciphertexts`], and the center-peer GC control messages
 /// ([`WireMsg::GcExec`], [`WireMsg::GcOut`]).
-pub const VERSION: u16 = 2;
+///
+/// v3: split share custody — center-b (S2) aggregates and blinds itself
+/// ([`WireMsg::Aggregate`], [`WireMsg::Blind`], [`WireMsg::ShareInput`])
+/// and [`WireMsg::GcExec`] now references S2-held share *handles* plus
+/// an output mode instead of shipping evaluator input bits.
+pub const VERSION: u16 = 3;
 
 /// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
 /// length prefix must not drive allocation.
@@ -251,6 +256,11 @@ impl WireWriter {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `u128` (LE) — share words cross the peer wire whole.
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     /// Append an `f64` as its IEEE-754 bit pattern.
     pub fn put_f64(&mut self, v: f64) {
         self.put_u64(v.to_bits());
@@ -339,6 +349,14 @@ impl<'a> WireReader<'a> {
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
+    /// Read a `u128` (LE).
+    pub fn get_u128(&mut self) -> Result<u128, WireError> {
+        let b = self.take(16)?;
+        let mut buf = [0u8; 16];
+        buf.copy_from_slice(b);
+        Ok(u128::from_le_bytes(buf))
+    }
+
     /// Read an `f64` from its bit pattern.
     pub fn get_f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_bits(self.get_u64()?))
@@ -415,6 +433,12 @@ pub const TAG_OT: u8 = 0x24;
 pub const TAG_GC_EXEC: u8 = 0x31;
 /// Tag byte: [`WireMsg::GcOut`].
 pub const TAG_GC_OUT: u8 = 0x32;
+/// Tag byte: [`WireMsg::Aggregate`].
+pub const TAG_AGGREGATE: u8 = 0x35;
+/// Tag byte: [`WireMsg::Blind`].
+pub const TAG_BLIND: u8 = 0x36;
+/// Tag byte: [`WireMsg::ShareInput`].
+pub const TAG_SHARE_INPUT: u8 = 0x37;
 
 /// Pack bools LSB-first into bytes (zero-padded tail).
 fn pack_bools(bits: &[bool]) -> Vec<u8> {
@@ -532,7 +556,16 @@ pub enum WireMsg {
     OtMsg(Vec<u8>),
     /// Center-a → center-b: execute one garbled program. Center-a then
     /// plays the garbler on the same channel while center-b plays the
-    /// evaluator; center-b answers with [`WireMsg::GcOut`].
+    /// evaluator. The evaluator's inputs are **not** in this frame:
+    /// center-b assembles them from its own stored share vectors, named
+    /// by `handles` in input order — S2's share halves never cross the
+    /// peer wire. The reply depends on `out_mode` (see
+    /// `mpc::peer::{OUT_REVEAL, OUT_SHARE, OUT_ENCRYPT}`): revealed
+    /// output bits ([`WireMsg::GcOut`]), a bare [`WireMsg::Ack`] after
+    /// storing the output as S2's new shares under `out_handle`, or a
+    /// [`WireMsg::Ciphertexts`] frame after masked-wide encryption
+    /// (center-a first sends its `Enc(C + r)` corrections as a
+    /// [`WireMsg::Ciphertexts`] frame of its own).
     GcExec {
         /// Program kind byte (see `mpc::peer::ProgSpec`).
         prog: u8,
@@ -547,13 +580,49 @@ pub enum WireMsg {
         /// Garbler/evaluator AND-gate counter at program start (hash
         /// tweak uniqueness across executions — both sides must agree).
         gate_ctr: u64,
-        /// The evaluator's input bits for this execution.
-        eval_bits: Vec<bool>,
+        /// S2-held share vectors feeding the evaluator, in input order.
+        handles: Vec<u64>,
+        /// What center-b does with the program output.
+        out_mode: u8,
+        /// Handle the output shares are stored under (`OUT_SHARE` only).
+        out_handle: u64,
     },
     /// Center-b → center-a: the output bits the evaluator learned.
     GcOut {
         /// Output bits in program order.
         bits: Vec<bool>,
+    },
+    /// Center-a → center-b: per-node ciphertext vectors relayed without
+    /// decryption for S2 to `⊕`-aggregate (paper Alg. 1 step 8 — S2 is
+    /// the aggregator). Center-b replies with the aggregated
+    /// [`WireMsg::Ciphertexts`].
+    Aggregate {
+        /// Fixed-point scale (bits) shared by every part.
+        scale: u32,
+        /// One ciphertext vector per node, all the same length.
+        parts: Vec<Vec<BigUint>>,
+    },
+    /// Center-a → center-b: blind-convert these ciphertexts to additive
+    /// shares. Center-b draws its own blinds ρ, replies with the blinded
+    /// ciphertexts ([`WireMsg::Ciphertexts`]) for S1 to decrypt into its
+    /// halves, and **keeps** its own halves under `handle` — they never
+    /// cross the wire.
+    Blind {
+        /// Handle the S2 halves are stored under.
+        handle: u64,
+        /// Scale-f ciphertexts to convert.
+        cts: Vec<BigUint>,
+    },
+    /// Install explicit S2 share values under a handle. This frame DOES
+    /// carry share material across the wire — it exists for test drivers
+    /// that legitimately hold both halves (plaintext-splitting harnesses)
+    /// and must never appear in a protocol run; the custody census in
+    /// `rust/tests/net_three_process.rs` asserts exactly that.
+    ShareInput {
+        /// Handle to store the values under.
+        handle: u64,
+        /// S2's share words.
+        vals: Vec<u128>,
     },
 }
 
@@ -578,6 +647,9 @@ impl WireMsg {
             WireMsg::OtMsg(_) => TAG_OT,
             WireMsg::GcExec { .. } => TAG_GC_EXEC,
             WireMsg::GcOut { .. } => TAG_GC_OUT,
+            WireMsg::Aggregate { .. } => TAG_AGGREGATE,
+            WireMsg::Blind { .. } => TAG_BLIND,
+            WireMsg::ShareInput { .. } => TAG_SHARE_INPUT,
         }
     }
 
@@ -654,7 +726,17 @@ impl WireMsg {
                 w.put_u8(TAG_OT);
                 w.put_bytes(b);
             }
-            WireMsg::GcExec { prog, p, w: width, f, tol, gate_ctr, eval_bits } => {
+            WireMsg::GcExec {
+                prog,
+                p,
+                w: width,
+                f,
+                tol,
+                gate_ctr,
+                handles,
+                out_mode,
+                out_handle,
+            } => {
                 w.put_u8(TAG_GC_EXEC);
                 w.put_u8(*prog);
                 w.put_u32(*p);
@@ -662,13 +744,44 @@ impl WireMsg {
                 w.put_u32(*f);
                 w.put_f64(*tol);
                 w.put_u64(*gate_ctr);
-                w.put_u32(eval_bits.len() as u32);
-                w.put_bytes(&pack_bools(eval_bits));
+                w.put_u32(handles.len() as u32);
+                for h in handles {
+                    w.put_u64(*h);
+                }
+                w.put_u8(*out_mode);
+                w.put_u64(*out_handle);
             }
             WireMsg::GcOut { bits } => {
                 w.put_u8(TAG_GC_OUT);
                 w.put_u32(bits.len() as u32);
                 w.put_bytes(&pack_bools(bits));
+            }
+            WireMsg::Aggregate { scale, parts } => {
+                w.put_u8(TAG_AGGREGATE);
+                w.put_u32(*scale);
+                w.put_u32(parts.len() as u32);
+                for part in parts {
+                    w.put_u32(part.len() as u32);
+                    for c in part {
+                        w.put_biguint(c);
+                    }
+                }
+            }
+            WireMsg::Blind { handle, cts } => {
+                w.put_u8(TAG_BLIND);
+                w.put_u64(*handle);
+                w.put_u32(cts.len() as u32);
+                for c in cts {
+                    w.put_biguint(c);
+                }
+            }
+            WireMsg::ShareInput { handle, vals } => {
+                w.put_u8(TAG_SHARE_INPUT);
+                w.put_u64(*handle);
+                w.put_u32(vals.len() as u32);
+                for v in vals {
+                    w.put_u128(*v);
+                }
             }
         }
         w.finish()
@@ -747,12 +860,72 @@ impl WireMsg {
                 let tol = r.get_f64()?;
                 let gate_ctr = r.get_u64()?;
                 let count = r.get_u32()? as usize;
-                let eval_bits = unpack_bools(r.get_bytes()?, count)?;
-                WireMsg::GcExec { prog, p, w, f, tol, gate_ctr, eval_bits }
+                if r.remaining() < count.saturating_mul(8) {
+                    return Err(WireError::Truncated { needed: count * 8, have: r.remaining() });
+                }
+                let mut handles = Vec::with_capacity(count);
+                for _ in 0..count {
+                    handles.push(r.get_u64()?);
+                }
+                let out_mode = r.get_u8()?;
+                let out_handle = r.get_u64()?;
+                WireMsg::GcExec { prog, p, w, f, tol, gate_ctr, handles, out_mode, out_handle }
             }
             TAG_GC_OUT => {
                 let count = r.get_u32()? as usize;
                 WireMsg::GcOut { bits: unpack_bools(r.get_bytes()?, count)? }
+            }
+            TAG_AGGREGATE => {
+                let scale = r.get_u32()?;
+                let part_count = r.get_u32()? as usize;
+                // Each part needs at least its own count field; bound the
+                // pre-allocation by what the body can actually hold.
+                if r.remaining() < part_count.saturating_mul(4) {
+                    return Err(WireError::Truncated {
+                        needed: part_count * 4,
+                        have: r.remaining(),
+                    });
+                }
+                let mut parts = Vec::with_capacity(part_count);
+                for _ in 0..part_count {
+                    let count = r.get_u32()? as usize;
+                    if r.remaining() < count.saturating_mul(4) {
+                        return Err(WireError::Truncated {
+                            needed: count * 4,
+                            have: r.remaining(),
+                        });
+                    }
+                    let mut cts = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        cts.push(r.get_biguint()?);
+                    }
+                    parts.push(cts);
+                }
+                WireMsg::Aggregate { scale, parts }
+            }
+            TAG_BLIND => {
+                let handle = r.get_u64()?;
+                let count = r.get_u32()? as usize;
+                if r.remaining() < count.saturating_mul(4) {
+                    return Err(WireError::Truncated { needed: count * 4, have: r.remaining() });
+                }
+                let mut cts = Vec::with_capacity(count);
+                for _ in 0..count {
+                    cts.push(r.get_biguint()?);
+                }
+                WireMsg::Blind { handle, cts }
+            }
+            TAG_SHARE_INPUT => {
+                let handle = r.get_u64()?;
+                let count = r.get_u32()? as usize;
+                if r.remaining() < count.saturating_mul(16) {
+                    return Err(WireError::Truncated { needed: count * 16, have: r.remaining() });
+                }
+                let mut vals = Vec::with_capacity(count);
+                for _ in 0..count {
+                    vals.push(r.get_u128()?);
+                }
+                WireMsg::ShareInput { handle, vals }
             }
             t => return Err(WireError::UnknownTag(t)),
         };
@@ -820,7 +993,20 @@ mod tests {
                 f: 24,
                 tol: 1e-6,
                 gate_ctr: rng.next_u64(),
-                eval_bits: (0..131).map(|_| rng.bernoulli(0.5)).collect(),
+                handles: vec![rng.next_u64(), rng.next_u64()],
+                out_mode: 0,
+                out_handle: 0,
+            },
+            WireMsg::GcExec {
+                prog: 2,
+                p: 4,
+                w: 40,
+                f: 24,
+                tol: 0.0,
+                gate_ctr: 0,
+                handles: vec![7],
+                out_mode: 1,
+                out_handle: 8,
             },
             WireMsg::GcExec {
                 prog: 5,
@@ -829,9 +1015,27 @@ mod tests {
                 f: 24,
                 tol: 0.0,
                 gate_ctr: 0,
-                eval_bits: vec![],
+                handles: vec![],
+                out_mode: 0,
+                out_handle: 0,
             },
             WireMsg::GcOut { bits: (0..40).map(|_| rng.bernoulli(0.5)).collect() },
+            WireMsg::Aggregate {
+                scale: 24,
+                parts: (0..3).map(|_| (0..4).map(|_| rand_big(rng)).collect()).collect(),
+            },
+            WireMsg::Aggregate { scale: 0, parts: vec![] },
+            WireMsg::Blind {
+                handle: rng.next_u64(),
+                cts: (0..5).map(|_| rand_big(rng)).collect(),
+            },
+            WireMsg::ShareInput {
+                handle: rng.next_u64(),
+                vals: (0..7)
+                    .map(|_| (rng.next_u64() as u128) << 64 | rng.next_u64() as u128)
+                    .collect(),
+            },
+            WireMsg::ShareInput { handle: 0, vals: vec![] },
         ]
     }
 
@@ -860,7 +1064,9 @@ mod tests {
             for cut in 0..enc.len() {
                 match WireMsg::decode(&enc[..cut]) {
                     Err(_) => {}
-                    Ok(other) => panic!("prefix {cut}/{} of {msg:?} decoded as {other:?}", enc.len()),
+                    Ok(other) => {
+                        panic!("prefix {cut}/{} of {msg:?} decoded as {other:?}", enc.len())
+                    }
                 }
             }
         }

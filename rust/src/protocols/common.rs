@@ -118,12 +118,19 @@ pub fn enc_stat_of(v: &EncVec) -> anyhow::Result<EncStat> {
 /// One node round: every organization computes + encrypts its local
 /// gradient and log-likelihood shares at `beta` (Alg. 1 steps 3–7).
 /// Returns (per-node Enc(g_j), per-node Enc(l_sj)).
+///
+/// Node-encrypted replies are wire-controlled data: their shape (p + 1
+/// ciphertexts — gradient then log-likelihood) and scale are validated
+/// here, at the ingestion boundary, with errors naming the node — one
+/// malformed reply must never panic the center.
 pub fn node_stats_round<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
     beta: &[f64],
     scale: f64,
 ) -> anyhow::Result<(Vec<EncVec>, Vec<EncVec>)> {
+    let p = fleet.p();
+    let f = fab.fmt().f;
     let replies = fleet.stats(beta, scale)?;
     let mut enc_g = Vec::with_capacity(replies.len());
     let mut enc_l = Vec::with_capacity(replies.len());
@@ -137,9 +144,15 @@ pub fn node_stats_round<F: SecureFabric>(
             NodePayload::Enc(stat) => {
                 // The node encrypted grad ‖ loglik itself; split them.
                 anyhow::ensure!(
-                    stat.cts.len() >= 2,
-                    "node {j} stats reply too short: {} ciphertexts",
-                    stat.cts.len()
+                    stat.cts.len() == p + 1,
+                    "node {j} stats reply has {} ciphertexts, expected p+1 = {}",
+                    stat.cts.len(),
+                    p + 1
+                );
+                anyhow::ensure!(
+                    stat.scale == f,
+                    "node {j} stats reply carries scale {}, session scale is {f}",
+                    stat.scale
                 );
                 fab.ledger_mut().paillier_encs += stat.cts.len() as u64;
                 let EncStat { scale, mut cts } = stat;
@@ -155,16 +168,31 @@ pub fn node_stats_round<F: SecureFabric>(
 
 /// One node matrix round (Gram or exact Hessian): each node's packed
 /// triangle as ciphertexts (fabric-encrypted or node-encrypted).
+/// `expect_len` is the packed-triangle length; node-encrypted replies
+/// that do not match it (or the session scale) are session errors
+/// naming the node.
 pub fn node_matrix_round<F: SecureFabric>(
     fab: &mut F,
     replies: Vec<NodeReply>,
+    expect_len: usize,
 ) -> anyhow::Result<Vec<EncVec>> {
+    let f = fab.fmt().f;
     let mut enc = Vec::with_capacity(replies.len());
     for (j, r) in replies.into_iter().enumerate() {
         fab.ledger_mut().add_node(j, r.secs);
         match r.payload {
             NodePayload::Plain { values, .. } => enc.push(fab.node_encrypt_vec(j, &values)),
             NodePayload::Enc(stat) => {
+                anyhow::ensure!(
+                    stat.cts.len() == expect_len,
+                    "node {j} matrix reply has {} ciphertexts, expected {expect_len}",
+                    stat.cts.len()
+                );
+                anyhow::ensure!(
+                    stat.scale == f,
+                    "node {j} matrix reply carries scale {}, session scale is {f}",
+                    stat.scale
+                );
                 fab.ledger_mut().paillier_encs += stat.cts.len() as u64;
                 enc.push(enc_vec_from(stat.scale, stat.cts));
             }
@@ -182,10 +210,10 @@ pub fn aggregate_loglik<F: SecureFabric>(
     beta: &[f64],
     lambda: f64,
     scale: f64,
-) -> EncVec {
-    let l = fab.aggregate(enc_l);
+) -> anyhow::Result<EncVec> {
+    let l = fab.aggregate(enc_l)?;
     let b2: f64 = beta.iter().map(|b| b * b).sum();
-    fab.add_plain(&l, &[-0.5 * lambda * b2 * scale])
+    Ok(fab.add_plain(&l, &[-0.5 * lambda * b2 * scale]))
 }
 
 /// Aggregate per-node gradients and apply the public `−λβ·scale` term
@@ -196,10 +224,10 @@ pub fn aggregate_gradient<F: SecureFabric>(
     beta: &[f64],
     lambda: f64,
     scale: f64,
-) -> EncVec {
-    let g = fab.aggregate(enc_g);
+) -> anyhow::Result<EncVec> {
+    let g = fab.aggregate(enc_g)?;
     let reg: Vec<f64> = beta.iter().map(|b| -lambda * b * scale).collect();
-    fab.add_plain(&g, &reg)
+    Ok(fab.add_plain(&g, &reg))
 }
 
 /// Total time (compute + modeled network) from a fabric's ledger.

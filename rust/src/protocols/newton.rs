@@ -33,18 +33,18 @@ pub fn run_newton<F: SecureFabric>(
         // --- node round: exact Hessian + gradient + log-likelihood ---
         let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale)?;
         let h_replies = fleet.hessian(&beta, scale)?;
-        let enc_h = node_matrix_round(fab, h_replies)?;
+        let enc_h = node_matrix_round(fab, h_replies, crate::mpc::tri_len(p))?;
 
         // --- center: aggregate + regularize ---
-        let g = aggregate_gradient(fab, enc_g, &beta, cfg.lambda, scale);
-        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale);
+        let g = aggregate_gradient(fab, enc_g, &beta, cfg.lambda, scale)?;
+        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale)?;
         let h = {
-            let agg = fab.aggregate(enc_h);
+            let agg = fab.aggregate(enc_h)?;
             fab.add_plain(&agg, &reg_diag_tri(p, cfg.lambda * scale))
         };
 
         // --- secure convergence check ---
-        let l_shares = fab.to_shares(&l);
+        let l_shares = fab.to_shares(&l)?;
         if let Some(prev) = &prev_l {
             if fab.converged(&l_shares, prev, cfg.tol) {
                 converged = true;
@@ -54,8 +54,8 @@ pub fn run_newton<F: SecureFabric>(
         prev_l = Some(l_shares);
 
         // --- secure Newton step: garbled Cholesky + solve (every iter) ---
-        let h_shares = fab.to_shares(&h);
-        let g_shares = fab.to_shares(&g);
+        let h_shares = fab.to_shares(&h)?;
+        let g_shares = fab.to_shares(&g)?;
         let delta = fab.newton_step(&h_shares, &g_shares, p);
         for (b, d) in beta.iter_mut().zip(&delta) {
             *b += d;

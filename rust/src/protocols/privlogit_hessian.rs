@@ -21,10 +21,10 @@ pub fn setup_once<F: SecureFabric>(
 ) -> anyhow::Result<SecVec> {
     let p = fleet.p();
     let replies = fleet.gram(scale)?;
-    let enc_h = node_matrix_round(fab, replies)?;
-    let agg = fab.aggregate(enc_h);
+    let enc_h = node_matrix_round(fab, replies, crate::mpc::tri_len(p))?;
+    let agg = fab.aggregate(enc_h)?;
     let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale));
-    let h_shares = fab.to_shares(&h);
+    let h_shares = fab.to_shares(&h)?;
     Ok(fab.cholesky_shares(&h_shares, p))
 }
 
@@ -52,10 +52,10 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
         // Steps 3–7: node gradient + log-likelihood round.
         let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale)?;
         // Steps 8, 11: aggregation + public regularization terms.
-        let g = aggregate_gradient(fab, enc_g, &beta, cfg.lambda, scale);
-        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale);
+        let g = aggregate_gradient(fab, enc_g, &beta, cfg.lambda, scale)?;
+        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale)?;
         // Step 12: secure convergence check.
-        let l_sh = fab.to_shares(&l);
+        let l_sh = fab.to_shares(&l)?;
         if let Some(prev) = &prev_l {
             if fab.converged(&l_sh, prev, cfg.tol) {
                 converged = true;
@@ -65,7 +65,7 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
         prev_l = Some(l_sh);
         // Steps 9–10: O(p²) garbled back-substitution; β update (public
         // per §5.3 — coefficients are disseminated every iteration).
-        let g_shares = fab.to_shares(&g);
+        let g_shares = fab.to_shares(&g)?;
         let delta = fab.solve_reveal(&l_shares, &g_shares, p);
         for (b, d) in beta.iter_mut().zip(&delta) {
             *b += d;

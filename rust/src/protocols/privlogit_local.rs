@@ -22,10 +22,10 @@ pub fn setup_inverse<F: SecureFabric>(
 ) -> anyhow::Result<EncMat> {
     let p = fleet.p();
     let replies = fleet.gram(scale)?;
-    let enc_h = node_matrix_round(fab, replies)?;
-    let agg = fab.aggregate(enc_h);
+    let enc_h = node_matrix_round(fab, replies, crate::mpc::tri_len(p))?;
+    let agg = fab.aggregate(enc_h)?;
     let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale));
-    let h_shares = fab.to_shares(&h);
+    let h_shares = fab.to_shares(&h)?;
     // One garbled program: Cholesky + triangular inverse + TᵀT + masked
     // wide reveal, re-encrypted so nodes receive Enc(H̃⁻¹) (scale f).
     Ok(fab.inverse_to_enc(&h_shares, p))
@@ -46,11 +46,32 @@ fn node_step_round<F: SecureFabric>(
     scale: f64,
 ) -> anyhow::Result<(Vec<EncVec>, Vec<EncVec>)> {
     let p = hinv.p;
+    let f = fab.fmt().f;
     let mut enc_parts = Vec::new();
     let mut enc_l = Vec::new();
     if fleet.nodes_encrypt() {
         for (j, r) in fleet.step(beta, scale)?.into_iter().enumerate() {
             fab.ledger_mut().add_node(j, r.secs);
+            // Step replies are wire-controlled: validate shape and
+            // scales here, with errors naming the node.
+            anyhow::ensure!(
+                r.part.cts.len() == p,
+                "node {j} step reply has {} partial-step ciphertexts, expected p = {p}",
+                r.part.cts.len()
+            );
+            anyhow::ensure!(
+                r.part.scale == 2 * f,
+                "node {j} step reply carries scale {}, expected 2f = {}",
+                r.part.scale,
+                2 * f
+            );
+            anyhow::ensure!(
+                r.loglik.cts.len() == 1 && r.loglik.scale == f,
+                "node {j} log-likelihood reply is malformed \
+                 ({} ciphertexts at scale {}, expected 1 at {f})",
+                r.loglik.cts.len(),
+                r.loglik.scale
+            );
             enc_parts.push(enc_vec_from(r.part.scale, r.part.cts));
             enc_l.push(enc_vec_from(r.loglik.scale, r.loglik.cts));
             // Node-performed crypto: the exact scalar/add tally is the
@@ -116,14 +137,14 @@ pub fn run_privlogit_local<F: SecureFabric>(
 
         // Step 10: compose the global step; regularization term
         // Enc(λ·H̃⁻¹β) from the public β (computed center-side).
-        let agg = fab.aggregate(enc_parts);
+        let agg = fab.aggregate(enc_parts)?;
         let reg: Vec<f64> = beta.iter().map(|b| -cfg.lambda * b * scale).collect();
         let reg_part = fab.center_apply_hinv(&hinv, &reg);
-        let step_enc = fab.aggregate(vec![agg, reg_part]);
+        let step_enc = fab.aggregate(vec![agg, reg_part])?;
 
         // Steps 12–13: aggregate log-likelihood + secure convergence.
-        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale);
-        let l_sh = fab.to_shares(&l);
+        let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale)?;
+        let l_sh = fab.to_shares(&l)?;
         if let Some(prev) = &prev_l {
             if fab.converged(&l_sh, prev, cfg.tol) {
                 converged = true;

@@ -68,7 +68,7 @@ pub fn run_ridge<F: SecureFabric>(
     // Node round: both moment sets. (Fleet's gram hook returns ¼XᵀX for
     // PrivLogit — undo the ¼ homomorphically-free at the node by scaling.)
     let gram_replies = fleet.gram(4.0 * scale)?; // ¼·4 = 1
-    let enc_gram = node_matrix_round(fab, gram_replies)?;
+    let enc_gram = node_matrix_round(fab, gram_replies, crate::mpc::tri_len(p))?;
     // Xᵀy is not a Fleet hook (logistic never needs it): compute via the
     // stats hook at β=0 — g(0) = Xᵀ(y − ½) = Xᵀy − ½Xᵀ1, and for
     // standardized columns Xᵀ1 = 0, so g(0) = Xᵀy exactly.
@@ -76,13 +76,13 @@ pub fn run_ridge<F: SecureFabric>(
     let (enc_xty, _enc_l) = node_stats_round(fab, fleet, &zero_beta, scale)?;
 
     let a = {
-        let agg = fab.aggregate(enc_gram);
+        let agg = fab.aggregate(enc_gram)?;
         fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale))
     };
-    let b = fab.aggregate(enc_xty);
+    let b = fab.aggregate(enc_xty)?;
 
-    let a_shares = fab.to_shares(&a);
-    let b_shares = fab.to_shares(&b);
+    let a_shares = fab.to_shares(&a)?;
+    let b_shares = fab.to_shares(&b)?;
     let beta = fab.newton_step(&a_shares, &b_shares, p); // Cholesky + solve
 
     Ok(RunReport {

@@ -8,12 +8,13 @@ use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
 
+use privlogit::bigint::BigUint;
 use privlogit::coordinator::fleet::Fleet;
 use privlogit::coordinator::{run_protocol, Backend, CenterLink};
 use privlogit::data::{synthesize, Dataset};
 use privlogit::gc::word::FixedFmt;
 use privlogit::linalg::r_squared;
-use privlogit::mpc::PeerGcServer;
+use privlogit::mpc::{PeerGcServer, RealFabric};
 use privlogit::net::wire::{self, WireMsg};
 use privlogit::net::{NodeServer, RemoteFleet, TcpTransport};
 use privlogit::optim::{fit, Method, OptimConfig};
@@ -38,9 +39,16 @@ fn spawn_node_servers(parts: Vec<Dataset>) -> Vec<String> {
 }
 
 /// The tentpole topology: center-a + center-b + 3 node servers, all
-/// separate TCP endpoints; real crypto; R² > 0.9999 vs plaintext; and —
-/// via the per-connection wire-tag census — *only* ciphertext payloads
-/// ever crossed the fleet wire as statistic replies.
+/// separate TCP endpoints; real crypto; R² > 0.9999 vs plaintext.
+/// Two custody proofs ride on the wire censuses:
+///
+/// * **fleet wire** — statistic replies were exclusively ciphertexts
+///   (no plaintext statistic ever crossed), and
+/// * **peer wire** — center-b held real S2 custody: it aggregated the
+///   relayed node ciphertexts and kept its own blinds/shares, and no
+///   frame carrying S2 share material (`ShareInput` is the only one
+///   that can; `GcExec` references stored handles by construction)
+///   ever crossed to or from center-a.
 #[test]
 fn three_center_split_ciphertext_only_fleet_wire() {
     let d = synthesize("split", 1200, 4, 90);
@@ -52,25 +60,20 @@ fn three_center_split_ciphertext_only_fleet_wire() {
         OptimConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters },
     );
 
-    // Three node-server endpoints + the center-b evaluator endpoint.
+    // Three node-server endpoints + the center-b S2 endpoint.
     let node_addrs = spawn_node_servers(parts);
     let mut peer = PeerGcServer::bind("127.0.0.1:0", 0xB0B).unwrap();
     let peer_addr = peer.local_addr().unwrap().to_string();
     let peer_thread = std::thread::spawn(move || peer.serve_once().unwrap());
 
-    // Center-a: connects to everything and drives the protocol.
+    // Center-a: connects to everything and drives the protocol. Built
+    // by hand (the same steps `run_protocol` takes for the real
+    // backend) so the fabric — and with it the peer-wire census —
+    // stays inspectable after the run.
     let mut fleet = RemoteFleet::connect(&node_addrs).unwrap();
-    let report = run_protocol(
-        Protocol::PrivLogitLocal,
-        Backend::Real,
-        256,
-        FMT,
-        &cfg,
-        0xA11CE,
-        &CenterLink::Peer(peer_addr),
-        &mut fleet,
-    )
-    .unwrap();
+    let mut fab = RealFabric::connect_peer(256, FMT, 0xA11CE, &peer_addr).unwrap();
+    fleet.install_key(&fab.fleet_key()).unwrap();
+    let report = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg).unwrap();
 
     assert!(report.converged, "converged across three processes");
     assert_eq!(report.orgs, 3);
@@ -79,10 +82,10 @@ fn three_center_split_ciphertext_only_fleet_wire() {
     let r2 = r_squared(&report.beta, &truth.beta);
     assert!(r2 > 0.9999, "R² = {r2} vs plaintext optimum");
 
-    // Wire-tag census: statistic replies were exclusively ciphertexts.
-    // Metadata (Meta) and control acknowledgements (Ack) are the only
-    // other reply tags; TAG_NODE_REPLY (plaintext statistics) must
-    // never appear.
+    // Fleet-wire census: statistic replies were exclusively
+    // ciphertexts. Metadata (Meta) and control acknowledgements (Ack)
+    // are the only other reply tags; TAG_NODE_REPLY (plaintext
+    // statistics) must never appear.
     let tags = fleet.reply_tag_counts();
     assert!(tags.get(&wire::TAG_NODE_REPLY).is_none(), "plaintext stats crossed: {tags:?}");
     assert!(tags.get(&wire::TAG_CIPHERTEXTS).copied().unwrap_or(0) > 0, "{tags:?}");
@@ -93,10 +96,92 @@ fn three_center_split_ciphertext_only_fleet_wire() {
         );
     }
 
+    // Peer-wire census: no S2 share material crossed to/from center-a.
+    // Outbound, center-a sent only the public-key install, ciphertext
+    // relays (Aggregate / Blind / inverse corrections as Ciphertexts)
+    // and handle-referencing GcExec control frames — never a
+    // ShareInput. Inbound, center-b answered with acks, ciphertexts
+    // and revealed-by-design output bits — shares and blinds stayed
+    // home. S2 really did the aggregation and blinding (frame counts
+    // are positive).
+    let census = fab.peer_census().expect("peer link must expose its census");
+    assert!(
+        census.sent.get(&wire::TAG_SHARE_INPUT).is_none(),
+        "S2 share material crossed toward center-b: {census:?}"
+    );
+    let allowed_sent = [
+        wire::TAG_SET_KEY,
+        wire::TAG_AGGREGATE,
+        wire::TAG_BLIND,
+        wire::TAG_GC_EXEC,
+        wire::TAG_CIPHERTEXTS,
+    ];
+    for tag in census.sent.keys() {
+        assert!(
+            allowed_sent.contains(tag),
+            "unexpected frame {tag:#04x} center-a → center-b: {census:?}"
+        );
+    }
+    for tag in census.recv.keys() {
+        assert!(
+            [wire::TAG_ACK, wire::TAG_CIPHERTEXTS, wire::TAG_GC_OUT].contains(tag),
+            "unexpected frame {tag:#04x} center-b → center-a: {census:?}"
+        );
+    }
+    assert!(census.sent.get(&wire::TAG_AGGREGATE).copied().unwrap_or(0) > 0, "{census:?}");
+    assert!(census.sent.get(&wire::TAG_BLIND).copied().unwrap_or(0) > 0, "{census:?}");
+
     let net = fleet.net_stats();
     assert!(net.bytes_sent > 0 && net.bytes_recv > 0, "both directions: {net:?}");
     drop(fleet); // Shutdown to the nodes
-    peer_thread.join().unwrap(); // PeerGcClient drop sent Shutdown
+    drop(fab); // PeerGcClient drop sends Shutdown to center-b
+    peer_thread.join().unwrap();
+}
+
+/// A node that acks the key install but then replies with the wrong
+/// number of ciphertexts must fail the run as a clean session error
+/// naming the node — not a center panic (the old `assert_eq!` path in
+/// the fabric's aggregation).
+#[test]
+fn malformed_node_reply_is_clean_error_not_panic() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut t = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap();
+        assert_eq!(t.recv_wire().unwrap(), WireMsg::MetaReq);
+        t.send_wire(&WireMsg::Meta { n: 300, p: 3, name: "rogue".into() }).unwrap();
+        match t.recv_wire().unwrap() {
+            WireMsg::SetKey { .. } => t.send_wire(&WireMsg::Ack).unwrap(),
+            other => panic!("expected SetKey, got {other:?}"),
+        }
+        // Answer the Gram request with two ciphertexts where
+        // tri_len(3) = 6 are expected.
+        let _ = t.recv_wire().unwrap();
+        t.send_wire(&WireMsg::Ciphertexts {
+            scale: FMT.f,
+            secs: 0.0,
+            cts: vec![BigUint::one(), BigUint::one()],
+        })
+        .unwrap();
+        let _ = t.recv_wire(); // hold the socket until the center gives up
+    });
+
+    let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+    let cfg = ProtocolConfig::default();
+    let run = run_protocol(
+        Protocol::PrivLogitHessian,
+        Backend::Real,
+        256,
+        FMT,
+        &cfg,
+        7,
+        &CenterLink::Mem,
+        &mut fleet,
+    );
+    let err = run.expect_err("malformed reply must abort the run").to_string();
+    assert!(err.contains("ciphertexts"), "error names the shape: {err}");
+    assert!(err.contains("node 0"), "error names the node: {err}");
 }
 
 /// A fake node that answers the metadata handshake, then drops the

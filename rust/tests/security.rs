@@ -9,7 +9,7 @@ use privlogit::crypto::paillier::{ChaChaSource, Keypair};
 use privlogit::crypto::rng::ChaChaRng;
 use privlogit::data::synthesize;
 use privlogit::gc::word::FixedFmt;
-use privlogit::mpc::{EncData, RealFabric, SecVec, SecureFabric};
+use privlogit::mpc::{EncData, RealFabric, S2Custody, SecVec, SecureFabric};
 use privlogit::protocols::{Protocol, ProtocolConfig};
 use privlogit::runtime::CpuCompute;
 
@@ -44,13 +44,15 @@ fn to_shares_individual_shares_look_uniform() {
     for (k, v) in [0.0f64, 1000.0].iter().enumerate() {
         for _ in 0..reps {
             let e = fab.node_encrypt_vec(0, &[*v]);
-            let s = fab.to_shares(&e);
+            let s = fab.to_shares(&e).unwrap();
             let SecVec::Shares(sh) = s else { panic!() };
+            // In-process fabric: S2's halves are local custody.
+            let S2Custody::Local(bv) = &sh.b else { panic!("in-process custody is local") };
             // test the top bit of each share word
-            if (sh[0].a >> (FMT.w - 1)) & 1 == 1 {
+            if (sh.a[0] >> (FMT.w - 1)) & 1 == 1 {
                 high_bits_a[k] += 1;
             }
-            if (sh[0].b >> (FMT.w - 1)) & 1 == 1 {
+            if (bv[0] >> (FMT.w - 1)) & 1 == 1 {
                 high_bits_b[k] += 1;
             }
         }
