@@ -41,6 +41,9 @@ pub struct Config {
     /// `privlogit center-b`: serve exactly one center-a session, then
     /// exit (default: serve forever).
     pub once: bool,
+    /// Emit the run report as JSON (schema `privlogit-report/v1`)
+    /// instead of the human-readable table.
+    pub json: bool,
     /// RNG seed.
     pub seed: u64,
 }
@@ -63,6 +66,7 @@ impl Default for Config {
             nodes: String::new(),
             peer: String::new(),
             once: false,
+            json: false,
             seed: 42,
         }
     }
@@ -88,6 +92,7 @@ impl Config {
             "nodes" => self.nodes = value.to_string(),
             "peer" => self.peer = value.to_string(),
             "once" => self.once = value.parse()?,
+            "json" => self.json = value.parse()?,
             "seed" => self.seed = value.parse()?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
@@ -112,7 +117,7 @@ impl Config {
 
     /// Boolean keys that may appear as bare `--flag` (no value) on the
     /// command line.
-    const BOOL_FLAGS: [&'static str; 3] = ["threaded", "center_tcp", "once"];
+    const BOOL_FLAGS: [&'static str; 4] = ["threaded", "center_tcp", "once", "json"];
 
     /// Parse CLI arguments (`--key value` pairs, plus `--config FILE`;
     /// boolean flags may omit the value).
@@ -201,14 +206,16 @@ mod tests {
     #[test]
     fn center_split_keys() {
         let mut c = Config::default();
-        let args: Vec<String> = ["--peer", "127.0.0.1:9700", "--once"]
+        let args: Vec<String> = ["--peer", "127.0.0.1:9700", "--once", "--json"]
             .iter()
             .map(|s| s.to_string())
             .collect();
         c.parse_args(&args).unwrap();
         assert_eq!(c.peer, "127.0.0.1:9700");
         assert!(c.once);
+        assert!(c.json);
         assert!(!Config::default().once);
+        assert!(!Config::default().json);
         assert!(Config::default().peer.is_empty());
     }
 

@@ -164,6 +164,11 @@ pub trait Fleet {
     fn net_stats(&self) -> FleetNet {
         FleetNet::default()
     }
+    /// Fleet-wire traffic broken down per wire tag (both directions);
+    /// empty unless the fleet actually crosses a process boundary.
+    fn tag_flows(&self) -> std::collections::BTreeMap<u8, crate::obs::TagFlow> {
+        std::collections::BTreeMap::new()
+    }
     /// Install the Center's Paillier key material at the nodes. Returns
     /// `true` iff nodes will encrypt their replies from now on. The
     /// in-process default declines (plaintext replies, fabric-side

@@ -209,7 +209,7 @@ pub fn run_protocol(
     link: &CenterLink,
     fleet: &mut dyn Fleet,
 ) -> anyhow::Result<RunReport> {
-    match resolve_backend(backend, fleet.p()) {
+    let report = match resolve_backend(backend, fleet.p()) {
         Backend::Real => {
             let mut fab = match link {
                 CenterLink::Mem => RealFabric::new(modulus_bits, fmt, seed),
@@ -231,7 +231,11 @@ pub fn run_protocol(
             let mut fab = ModelFabric::new(2048, fmt);
             protocol.run(&mut fab, fleet, cfg)
         }
-    }
+    };
+    // Protocol end is a trace boundary: buffered span events hit the
+    // JSONL file now, whatever happens to this process afterwards.
+    crate::obs::flush();
+    report
 }
 
 #[cfg(test)]

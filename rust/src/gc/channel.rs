@@ -9,10 +9,12 @@
 //! communication-cost accounting (reported in EXPERIMENTS.md and used by
 //! the network term of the cost model).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::net::{mem_transport_pair, Transport};
+use crate::obs::TagFlow;
 
 /// Shared send/recv statistics for one duplex endpoint.
 #[derive(Default)]
@@ -25,6 +27,11 @@ pub struct ChannelStats {
     pub bytes_recv: AtomicU64,
     /// Messages received at this endpoint.
     pub msgs_recv: AtomicU64,
+    /// Per-wire-tag accounting of the *control frames* that crossed this
+    /// endpoint. Only the framed [`crate::net::wire::WireMsg`] control
+    /// layer is tagged — the garbled-table / OT byte streams between the
+    /// control frames stay in the aggregate counters above.
+    tags: Mutex<BTreeMap<u8, TagFlow>>,
 }
 
 impl ChannelStats {
@@ -36,6 +43,27 @@ impl ChannelStats {
     /// Received-side snapshot (bytes, messages).
     pub fn snapshot_recv(&self) -> (u64, u64) {
         (self.bytes_recv.load(Ordering::Relaxed), self.msgs_recv.load(Ordering::Relaxed))
+    }
+
+    /// Record one sent control frame of `bytes` framed bytes under `tag`.
+    pub fn note_sent(&self, tag: u8, bytes: u64) {
+        let mut tags = self.tags.lock().expect("channel tag stats poisoned");
+        let flow = tags.entry(tag).or_default();
+        flow.sent_frames += 1;
+        flow.sent_bytes += bytes;
+    }
+
+    /// Record one received control frame of `bytes` framed bytes.
+    pub fn note_recv(&self, tag: u8, bytes: u64) {
+        let mut tags = self.tags.lock().expect("channel tag stats poisoned");
+        let flow = tags.entry(tag).or_default();
+        flow.recv_frames += 1;
+        flow.recv_bytes += bytes;
+    }
+
+    /// Snapshot of the per-tag control-frame accounting.
+    pub fn tag_flows(&self) -> BTreeMap<u8, TagFlow> {
+        self.tags.lock().expect("channel tag stats poisoned").clone()
     }
 }
 
@@ -218,6 +246,20 @@ mod tests {
         assert_eq!(rbytes, bytes);
         assert_eq!(rmsgs, msgs);
         assert_eq!(b.stats().snapshot().0, 0, "b sent nothing");
+    }
+
+    #[test]
+    fn tagged_control_accounting() {
+        let stats = ChannelStats::default();
+        stats.note_sent(0x35, 100);
+        stats.note_sent(0x35, 50);
+        stats.note_recv(0x22, 9);
+        let flows = stats.tag_flows();
+        assert_eq!(flows[&0x35].sent_frames, 2);
+        assert_eq!(flows[&0x35].sent_bytes, 150);
+        assert_eq!(flows[&0x22].recv_frames, 1);
+        assert_eq!(flows[&0x22].recv_bytes, 9);
+        assert!(!flows.contains_key(&0x01));
     }
 
     #[test]

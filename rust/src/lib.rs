@@ -42,6 +42,7 @@
 //! | [`protocols`] | the three secure protocols of the paper |
 //! | [`coordinator`] | node/center topology, scheduler, convergence loop |
 //! | [`net`] | wire format, TCP transport, remote fleets, node servers (node-side encryption) |
+//! | [`obs`] | observability: leveled logging, trace spans, JSONL exporter, per-tag wire accounting |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts; scoped-thread worker pool |
 //! | [`linalg`] | dense matrix/vector algebra, Cholesky, solvers |
 //! | [`data`] | dataset synthesis, real-study stand-ins, partitioning |
@@ -68,6 +69,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod mpc;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod protocols;
 pub mod runtime;

@@ -31,25 +31,87 @@ use privlogit::config::Config;
 use privlogit::coordinator::{run_protocol, Backend, CenterLink, Experiment};
 use privlogit::data::{dataset_by_name, WORKLOADS};
 use privlogit::gc::word::FixedFmt;
-use privlogit::metrics::{beta_preview, render_report};
+use privlogit::metrics::{beta_preview, render_report, render_report_json};
 use privlogit::mpc::PeerGcServer;
 use privlogit::net::{NodeServer, RemoteFleet};
+use privlogit::obs;
+use privlogit::obs::timeline::{parse_trace, Timeline};
 use privlogit::protocols::{Protocol, ProtocolConfig, RunReport};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: privlogit <run|compare|list|node|center|center-a|center-b> [--dataset NAME] \
-         [--protocol P] [--backend real|model|auto] [--orgs N] [--lambda L] [--tol T] \
-         [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--seed S] \
-         [--config FILE]\n\
+        "usage: privlogit <run|compare|list|trace|node|center|center-a|center-b> \
+         [--dataset NAME] [--protocol P] [--backend real|model|auto] [--orgs N] [--lambda L] \
+         [--tol T] [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--json] \
+         [--seed S] [--config FILE]\n\
          \n\
          distributed mode (docs/DEPLOY.md):\n\
          privlogit node     --listen ADDR --dataset NAME --orgs N --org J\n\
          privlogit center-b --listen ADDR [--once]\n\
          privlogit center-a --peer ADDR --nodes ADDR1,ADDR2,... [run flags]\n\
-         privlogit center   --nodes ADDR1,ADDR2,... [run flags]"
+         privlogit center   --nodes ADDR1,ADDR2,... [run flags]\n\
+         \n\
+         observability (docs/ARCHITECTURE.md §Observability):\n\
+         PRIVLOGIT_LOG=warn|info|debug   stderr log level (any subcommand)\n\
+         PRIVLOGIT_TRACE=PATH            write a JSONL span trace per process\n\
+         privlogit trace [--validate] [--json] FILE...   merge per-process traces"
     );
     std::process::exit(2)
+}
+
+/// Print the run report in the format `--json` selects.
+fn print_report(cfg: &Config, report: &RunReport) {
+    if cfg.json {
+        println!("{}", render_report_json(report));
+    } else {
+        print!("{}", render_report(report));
+        println!("  beta: {}", beta_preview(&report.beta));
+    }
+}
+
+/// `privlogit trace`: merge per-process JSONL trace files into one
+/// cross-process timeline (`--validate` checks files and stops;
+/// `--json` emits the `privlogit-timeline/v1` document).
+fn trace_main(args: &[String]) -> anyhow::Result<()> {
+    let mut validate = false;
+    let mut json_out = false;
+    let mut paths = Vec::new();
+    for arg in args {
+        match arg.as_str() {
+            "--validate" => validate = true,
+            "--json" => json_out = true,
+            flag if flag.starts_with("--") => {
+                anyhow::bail!("unknown trace flag {flag:?} (valid: --validate --json)")
+            }
+            path => paths.push(path.to_string()),
+        }
+    }
+    anyhow::ensure!(!paths.is_empty(), "privlogit trace needs at least one trace file");
+    let mut files = Vec::new();
+    for path in &paths {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace file {path:?}: {e}"))?;
+        let file = parse_trace(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        if validate {
+            println!(
+                "{path}: ok ({} events, proc {}, pid {})",
+                file.events.len(),
+                file.proc,
+                file.pid
+            );
+        }
+        files.push(file);
+    }
+    if validate {
+        return Ok(());
+    }
+    let timeline = Timeline::merge(files);
+    if json_out {
+        println!("{}", timeline.render_json());
+    } else {
+        print!("{}", timeline.render());
+    }
+    Ok(())
 }
 
 /// `privlogit node`: serve shard `--org` of `--dataset` (split into
@@ -147,8 +209,7 @@ fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
 /// `center-b` at `--peer`).
 fn center_main(cfg: &Config, link: CenterLink) -> anyhow::Result<()> {
     let report = run_over_nodes(cfg, link)?;
-    print!("{}", render_report(&report));
-    println!("  beta: {}", beta_preview(&report.beta));
+    print_report(cfg, &report);
     Ok(())
 }
 
@@ -170,14 +231,15 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         "run" => {
+            obs::set_proc("run");
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
             let exp = Experiment::from_config(&cfg)?;
             let report = exp.run()?;
-            print!("{}", render_report(&report));
-            println!("  beta: {}", beta_preview(&report.beta));
+            print_report(&cfg, &report);
             Ok(())
         }
+        "trace" => trace_main(&args[1..]),
         "compare" => {
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
@@ -193,9 +255,11 @@ fn main() -> anyhow::Result<()> {
         "node" => {
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
+            obs::set_proc(&format!("node:{}", cfg.org));
             node_main(&cfg)
         }
         "center" => {
+            obs::set_proc("center");
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
             let link = if cfg.center_tcp {
@@ -206,6 +270,7 @@ fn main() -> anyhow::Result<()> {
             center_main(&cfg, link)
         }
         "center-a" => {
+            obs::set_proc("center-a");
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
             anyhow::ensure!(
@@ -217,6 +282,7 @@ fn main() -> anyhow::Result<()> {
             center_main(&cfg, link)
         }
         "center-b" => {
+            obs::set_proc("center-b");
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;
             center_b_main(&cfg)

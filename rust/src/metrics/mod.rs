@@ -1,7 +1,57 @@
 //! Report formatting: turn [`RunReport`]s and cost ledgers into the
-//! tables the CLI, examples and benches print.
+//! tables the CLI, examples and benches print, plus the machine-readable
+//! `--json` rendering (schema `privlogit-report/v1`).
 
+use std::collections::BTreeMap;
+
+use crate::net::wire::tag_name;
+use crate::obs::json::{JsonObj, JsonValue};
+use crate::obs::TagFlow;
 use crate::protocols::RunReport;
+
+/// Schema identifier of the `--json` report document.
+pub const REPORT_SCHEMA: &str = "privlogit-report/v1";
+
+/// Iteration-phase seconds: `total - setup`, clamped at zero. The two
+/// numbers come from different clocks (the ledger's virtual total vs.
+/// wall-measured setup), so tiny runs can put setup a hair above total —
+/// a negative phase time is a rendering bug, not information. Returns
+/// the clamped value and whether clamping fired.
+fn iter_phase_secs(r: &RunReport) -> (f64, bool) {
+    let raw = r.total_secs - r.setup_secs;
+    if raw < 0.0 {
+        (0.0, true)
+    } else {
+        (raw, false)
+    }
+}
+
+fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// One per-tag breakdown table (skipped entirely for an empty map).
+fn tag_table(s: &mut String, title: &str, flows: &BTreeMap<u8, TagFlow>) {
+    if flows.is_empty() {
+        return;
+    }
+    s.push_str(&format!("  {title} by tag:\n"));
+    s.push_str(&format!(
+        "    {:<6}{:<12}{:>10}{:>12}{:>10}{:>12}\n",
+        "tag", "name", "sent fr", "sent MiB", "recv fr", "recv MiB"
+    ));
+    for (tag, f) in flows {
+        s.push_str(&format!(
+            "    {:#04x}  {:<12}{:>10}{:>12.3}{:>10}{:>12.3}\n",
+            tag,
+            tag_name(*tag),
+            f.sent_frames,
+            mib(f.sent_bytes),
+            f.recv_frames,
+            mib(f.recv_bytes)
+        ));
+    }
+}
 
 /// Render a detailed single-run report.
 pub fn render_report(r: &RunReport) -> String {
@@ -16,11 +66,13 @@ pub fn render_report(r: &RunReport) -> String {
         "  iterations: {} (converged: {})\n",
         r.iterations, r.converged
     ));
+    let (iter_secs, clamped) = iter_phase_secs(r);
     s.push_str(&format!(
-        "  time: total {:.2}s  setup {:.2}s  iter-phase {:.2}s\n",
+        "  time: total {:.2}s  setup {:.2}s  iter-phase {:.2}s{}\n",
         r.total_secs,
         r.setup_secs,
-        r.total_secs - r.setup_secs
+        iter_secs,
+        if clamped { " (clamped)" } else { "" }
     ));
     s.push_str(&format!(
         "  breakdown: center {:.2}s  nodes(max/round) {:.2}s\n",
@@ -33,18 +85,84 @@ pub fn render_report(r: &RunReport) -> String {
     ));
     s.push_str(&format!(
         "  network: {:.2} MiB sent / {:.2} MiB recv in {} rounds\n",
-        l.bytes as f64 / (1024.0 * 1024.0),
-        l.bytes_recv as f64 / (1024.0 * 1024.0),
+        mib(l.bytes),
+        mib(l.bytes_recv),
         l.rounds
     ));
     if l.fleet_bytes_sent > 0 || l.fleet_bytes_recv > 0 {
         s.push_str(&format!(
             "  fleet wire (measured): {:.2} MiB sent / {:.2} MiB recv\n",
-            l.fleet_bytes_sent as f64 / (1024.0 * 1024.0),
-            l.fleet_bytes_recv as f64 / (1024.0 * 1024.0),
+            mib(l.fleet_bytes_sent),
+            mib(l.fleet_bytes_recv),
         ));
     }
+    tag_table(&mut s, "fleet wire", &l.fleet_tag_flows);
+    tag_table(&mut s, "center peer control frames", &l.peer_tag_flows);
     s
+}
+
+fn flows_json(flows: &BTreeMap<u8, TagFlow>) -> JsonValue {
+    JsonValue::Arr(
+        flows
+            .iter()
+            .map(|(tag, f)| {
+                JsonObj::new()
+                    .u64("tag", *tag as u64)
+                    .str("tag_name", tag_name(*tag))
+                    .u64("sent_frames", f.sent_frames)
+                    .u64("sent_bytes", f.sent_bytes)
+                    .u64("recv_frames", f.recv_frames)
+                    .u64("recv_bytes", f.recv_bytes)
+                    .build()
+            })
+            .collect(),
+    )
+}
+
+/// Render the machine-readable report (schema [`REPORT_SCHEMA`]): the
+/// full [`RunReport`] plus the ledger, one compact JSON document. The
+/// human table ([`render_report`]) is unchanged by `--json`-capable
+/// callers — they pick one or the other.
+pub fn render_report_json(r: &RunReport) -> String {
+    let l = &r.ledger;
+    let (iter_secs, clamped) = iter_phase_secs(r);
+    let ledger = JsonObj::new()
+        .f64("center_secs", l.center_secs)
+        .f64("node_secs", l.node_secs)
+        .f64("setup_secs", l.setup_secs)
+        .u64("bytes", l.bytes)
+        .u64("bytes_recv", l.bytes_recv)
+        .u64("fleet_bytes_sent", l.fleet_bytes_sent)
+        .u64("fleet_bytes_recv", l.fleet_bytes_recv)
+        .push("fleet_tag_flows", flows_json(&l.fleet_tag_flows))
+        .push("peer_tag_flows", flows_json(&l.peer_tag_flows))
+        .u64("rounds", l.rounds)
+        .u64("paillier_encs", l.paillier_encs)
+        .u64("paillier_adds", l.paillier_adds)
+        .u64("paillier_scalar", l.paillier_scalar)
+        .u64("paillier_decrypts", l.paillier_decrypts)
+        .u64("gc_ands", l.gc_ands)
+        .u64("ot_bits", l.ot_bits)
+        .build();
+    JsonObj::new()
+        .str("schema", REPORT_SCHEMA)
+        .str("protocol", r.protocol)
+        .str("backend", &r.backend)
+        .str("engine", &r.engine)
+        .str("dataset", &r.dataset)
+        .u64("p", r.p as u64)
+        .u64("n", r.n as u64)
+        .u64("orgs", r.orgs as u64)
+        .u64("iterations", r.iterations as u64)
+        .bool("converged", r.converged)
+        .push("beta", JsonValue::Arr(r.beta.iter().map(|&b| JsonValue::Num(b)).collect()))
+        .f64("setup_secs", r.setup_secs)
+        .f64("total_secs", r.total_secs)
+        .f64("iter_phase_secs", iter_secs)
+        .bool("iter_phase_clamped", clamped)
+        .push("ledger", ledger)
+        .build()
+        .render()
 }
 
 /// Render a Table-2-style comparison row.
@@ -106,6 +224,68 @@ mod tests {
         assert!(s.contains("setup 1.50s"));
         assert!(s.contains("sent"), "network line reports both directions");
         assert!(s.contains("recv"), "network line reports both directions");
+    }
+
+    /// Satellite (c): setup clocked above total must never print a
+    /// negative iteration-phase time — clamp to zero and say so.
+    #[test]
+    fn iter_phase_clamps_when_setup_exceeds_total() {
+        let mut r = dummy_report();
+        r.setup_secs = 5.0; // > total_secs = 4.0
+        let s = render_report(&r);
+        assert!(s.contains("iter-phase 0.00s (clamped)"), "{s}");
+        assert!(!s.contains("-1.00"), "{s}");
+        // The healthy path stays unflagged.
+        let s = render_report(&dummy_report());
+        assert!(s.contains("iter-phase 2.50s\n"), "{s}");
+        assert!(!s.contains("clamped"), "{s}");
+    }
+
+    #[test]
+    fn tag_tables_render_when_flows_present() {
+        let mut r = dummy_report();
+        // Empty maps: no tables at all.
+        let s = render_report(&r);
+        assert!(!s.contains("by tag"), "{s}");
+        let flow = TagFlow {
+            sent_frames: 3,
+            sent_bytes: 2 * 1024 * 1024,
+            recv_frames: 3,
+            recv_bytes: 1024,
+        };
+        r.ledger.fleet_tag_flows.insert(crate::net::wire::TAG_STEP_REQ, flow);
+        r.ledger.peer_tag_flows.insert(crate::net::wire::TAG_GC_EXEC, flow);
+        let s = render_report(&r);
+        assert!(s.contains("fleet wire by tag"), "{s}");
+        assert!(s.contains("center peer control frames by tag"), "{s}");
+        assert!(s.contains("StepReq"), "{s}");
+        assert!(s.contains("GcExec"), "{s}");
+        assert!(s.contains("2.000"), "sent MiB column: {s}");
+    }
+
+    /// The `--json` document must parse back with our own parser and
+    /// carry the ledger and per-tag flows faithfully.
+    #[test]
+    fn report_json_round_trips() {
+        let mut r = dummy_report();
+        r.ledger.paillier_encs = 42;
+        r.ledger.fleet_bytes_sent = 1000;
+        let flow = TagFlow { sent_frames: 7, sent_bytes: 700, ..TagFlow::default() };
+        r.ledger.fleet_tag_flows.insert(crate::net::wire::TAG_STATS_REQ, flow);
+        let doc = crate::obs::json::parse(&render_report_json(&r)).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(REPORT_SCHEMA));
+        assert_eq!(doc.get("protocol").unwrap().as_str(), Some("privlogit-local"));
+        assert_eq!(doc.get("iterations").unwrap().as_u64(), Some(13));
+        assert_eq!(doc.get("beta").unwrap().as_arr().unwrap().len(), 3);
+        let ledger = doc.get("ledger").unwrap();
+        assert_eq!(ledger.get("paillier_encs").unwrap().as_u64(), Some(42));
+        assert_eq!(ledger.get("fleet_bytes_sent").unwrap().as_u64(), Some(1000));
+        let flows = ledger.get("fleet_tag_flows").unwrap().as_arr().unwrap();
+        assert_eq!(flows.len(), 1);
+        assert_eq!(flows[0].get("tag").unwrap().as_u64(), Some(0x01));
+        assert_eq!(flows[0].get("tag_name").unwrap().as_str(), Some("StatsReq"));
+        assert_eq!(flows[0].get("sent_frames").unwrap().as_u64(), Some(7));
+        assert_eq!(flows[0].get("sent_bytes").unwrap().as_u64(), Some(700));
     }
 
     #[test]

@@ -128,6 +128,13 @@ pub struct CostLedger {
     pub fleet_bytes_sent: u64,
     /// Real wire bytes a networked fleet measured, nodes → center.
     pub fleet_bytes_recv: u64,
+    /// Fleet-wire traffic broken down per wire tag (both directions,
+    /// from the center's perspective). Empty for in-process fleets.
+    pub fleet_tag_flows: std::collections::BTreeMap<u8, crate::obs::TagFlow>,
+    /// Center-peer control-frame traffic per wire tag (center-a's view;
+    /// the raw garbling/OT byte stream is *not* tagged — it stays in
+    /// `bytes`/`bytes_recv`). Empty for in-process center links.
+    pub peer_tag_flows: std::collections::BTreeMap<u8, crate::obs::TagFlow>,
     /// Protocol rounds (for the latency term).
     pub rounds: u64,
     /// Paillier operation counts.

@@ -34,6 +34,8 @@ use crate::gc::backend::CountBackend;
 use crate::gc::exec::{ExecStats, GcProgram, GcSession};
 use crate::gc::word::FixedFmt;
 use crate::linalg::Matrix;
+use crate::net::wire;
+use crate::obs;
 use crate::runtime::pool;
 
 /// Both additive halves of one value mod 2^w in a single hand. This is a
@@ -223,6 +225,23 @@ pub trait SecureFabric {
     fn cost_model(&self) -> &CostModel;
     /// Human-readable backend label for reports.
     fn backend_label(&self) -> &'static str;
+
+    // ---- observability ----
+
+    /// 64-bit trace session id. The real backend hashes the Paillier
+    /// modulus ([`crate::obs::session_id`]) — every process holding the
+    /// key material derives the *same* id with no extra wire traffic, so
+    /// per-process traces join on it. The modeled backend has no key and
+    /// stays at 0 (rendered as `-`).
+    fn session_id(&self) -> u64 {
+        0
+    }
+
+    /// Per-wire-tag control-frame accounting of the center peer link
+    /// (empty in-process and on the modeled backend).
+    fn peer_tag_flows(&self) -> std::collections::BTreeMap<u8, crate::obs::TagFlow> {
+        std::collections::BTreeMap::new()
+    }
 }
 
 // ======================================================================
@@ -304,6 +323,14 @@ pub struct RealFabric {
     label: &'static str,
     /// Next S2 share handle (peer link only; the driver allocates ids).
     next_handle: u64,
+    /// Trace session id (hash of the Paillier modulus; see
+    /// [`SecureFabric::session_id`]).
+    session: u64,
+    /// Per-span-name occurrence counters: the trace round join keys.
+    /// Each tagged span name maps 1:1 to a peer control tag, and every
+    /// such span sends exactly one frame of that tag, so these counters
+    /// advance in lockstep with center-b's per-tag counters.
+    span_rounds: std::collections::BTreeMap<&'static str, u64>,
     /// Straus-prepared `Enc(H̃⁻¹)`, keyed by the triangle it was built
     /// from — PrivLogit-Local applies the same broadcast triangle every
     /// iteration, so the window tables are built once, not per round.
@@ -350,7 +377,11 @@ impl RealFabric {
     ) -> std::io::Result<Self> {
         let mut rng = ChaChaRng::from_u64_seed(seed);
         let t0 = Instant::now();
+        let mut setup_span =
+            obs::span("fabric.setup").u64("modulus_bits", modulus_bits as u64);
         let kp = Keypair::generate(modulus_bits, &mut rng);
+        let session = obs::session_id(&kp.pk.n.to_bytes_le());
+        setup_span.record_session(session);
         let codec = FixedCodec::new(kp.pk.n.clone(), fmt.f);
         let (link, label) = match link {
             LinkSpec::Mem => (
@@ -377,6 +408,7 @@ impl RealFabric {
         };
         let mut ledger = CostLedger::default();
         ledger.setup_secs += t0.elapsed().as_secs_f64();
+        setup_span.done();
         Ok(RealFabric {
             fmt,
             kp,
@@ -387,6 +419,8 @@ impl RealFabric {
             net: CostModel::load(CostModel::CALIBRATION_PATH),
             label,
             next_handle: 1,
+            session,
+            span_rounds: std::collections::BTreeMap::new(),
             prepared_hinv: None,
         })
     }
@@ -485,6 +519,17 @@ impl RealFabric {
         ea
     }
 
+    /// Open a trace span for one center-link phase. `tag` is the peer
+    /// control tag the phase sends (exactly one frame per call), so the
+    /// per-name round counter here and center-b's per-tag counter agree
+    /// — the cross-process join key of the merged timeline.
+    fn link_span(&mut self, name: &'static str, tag: u8) -> obs::Span {
+        let ctr = self.span_rounds.entry(name).or_insert(0);
+        let round = *ctr;
+        *ctr += 1;
+        obs::span(name).session(self.session).tag(tag).round(round)
+    }
+
     /// Charge one link round-trip's stats and bytes to the ledger.
     fn charge_link(&mut self, stats: ExecStats, bytes0: u64, recv0: u64) {
         self.ledger.center_secs += stats.wall;
@@ -511,6 +556,8 @@ impl RealFabric {
     /// own custody of `eval_parts` — bits fed directly in-process,
     /// handle references over the peer wire.
     fn run_gc(&mut self, spec: ProgSpec, ga: Vec<bool>, eval_parts: &[&ShareVec]) -> Vec<bool> {
+        let mut sp =
+            self.link_span("fabric.gc_exec", wire::TAG_GC_EXEC).u64("kind", spec.kind() as u64);
         let bytes0 = self.link.bytes_transferred();
         let recv0 = self.link.bytes_received();
         let fmt = self.fmt;
@@ -524,6 +571,11 @@ impl RealFabric {
             }
             _ => unreachable!("eval_input always matches the link kind"),
         };
+        if sp.active() {
+            sp.record_u64("bytes", self.link.bytes_transferred() - bytes0);
+            sp.record_u64("gc_ands", stats.ands);
+            sp.record_u64("ot_bits", stats.ot_bits);
+        }
         self.charge_link(stats, bytes0, recv0);
         out
     }
@@ -580,6 +632,9 @@ impl SecureFabric for RealFabric {
 
     fn aggregate(&mut self, parts: Vec<EncVec>) -> anyhow::Result<EncVec> {
         anyhow::ensure!(!parts.is_empty(), "aggregation needs at least one part");
+        let mut sp = self
+            .link_span("fabric.aggregate", wire::TAG_AGGREGATE)
+            .u64("parts", parts.len() as u64);
         let t0 = Instant::now();
         let scale = parts[0].scale;
         let len = parts[0].len();
@@ -632,6 +687,10 @@ impl SecureFabric for RealFabric {
         self.ledger.bytes_recv += self.link.bytes_received() - recv0;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
         self.ledger.rounds += 1;
+        if sp.active() {
+            sp.record_u64("len", len as u64);
+            sp.record_u64("bytes", self.link.bytes_transferred() - bytes0);
+        }
         Ok(EncVec { scale, data: EncData::Real(acc) })
     }
 
@@ -659,11 +718,14 @@ impl SecureFabric for RealFabric {
             self.fmt.f,
             v.scale
         );
+        let mut sp =
+            self.link_span("fabric.to_shares", wire::TAG_BLIND).u64("len", v.len() as u64);
         let t0 = Instant::now();
         let w = self.fmt.w;
         let mask_w = (1u128 << w) - 1;
         let cts = self.real_cts(v)?.to_vec();
         let handle = self.next_handle;
+        let link_bytes0 = self.link.bytes_transferred();
         let shares = match &mut self.link {
             ShareLink::Local(_) => {
                 let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
@@ -722,10 +784,20 @@ impl SecureFabric for RealFabric {
         self.ledger.paillier_decrypts += cts.len() as u64;
         self.ledger.rounds += 2;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
+        if sp.active() {
+            sp.record_u64("bytes", self.link.bytes_transferred() - link_bytes0);
+        }
         Ok(SecVec::Shares(shares))
     }
 
     fn decrypt_reveal(&mut self, v: &EncVec) -> Vec<f64> {
+        let ctr = self.span_rounds.entry("fabric.reveal").or_insert(0);
+        let round = *ctr;
+        *ctr += 1;
+        let _sp = obs::span("fabric.reveal")
+            .session(self.session)
+            .round(round)
+            .u64("len", v.len() as u64);
         let t0 = Instant::now();
         let cts = self.expect_real(v);
         let sk = &self.kp.sk;
@@ -769,6 +841,9 @@ impl SecureFabric for RealFabric {
         let a_out: Vec<u128> =
             masks.iter().map(|&m| (1u128 << w).wrapping_sub(m) & mask_w).collect();
         let out_handle = self.next_handle;
+        let mut sp = self
+            .link_span("fabric.gc_exec", wire::TAG_GC_EXEC)
+            .u64("kind", ProgSpec::CholeskyShare { p }.kind() as u64);
         let bytes0 = self.link.bytes_transferred();
         let recv0 = self.link.bytes_received();
         let input = self.eval_input(&[h]);
@@ -791,6 +866,10 @@ impl SecureFabric for RealFabric {
             }
             _ => unreachable!("eval_input always matches the link kind"),
         };
+        if sp.active() {
+            sp.record_u64("bytes", self.link.bytes_transferred() - bytes0);
+            sp.record_u64("gc_ands", stats.ands);
+        }
         self.charge_link(stats, bytes0, recv0);
         let b = match bvals {
             Some(b) => S2Custody::Local(b),
@@ -825,6 +904,9 @@ impl SecureFabric for RealFabric {
             ga.extend((0..w + SIGMA).map(|i| (m >> i) & 1 == 1));
         }
         let lift = BigUint::one().shl(w - 1);
+        let mut sp = self
+            .link_span("fabric.gc_exec", wire::TAG_GC_EXEC)
+            .u64("kind", ProgSpec::InverseMasked { p }.kind() as u64);
         let bytes0 = self.link.bytes_transferred();
         let recv0 = self.link.bytes_received();
         let input = self.eval_input(&[h]);
@@ -857,6 +939,11 @@ impl SecureFabric for RealFabric {
             }
             _ => unreachable!("eval_input always matches the link kind"),
         };
+        if sp.active() {
+            sp.record_u64("bytes", self.link.bytes_transferred() - bytes0);
+            sp.record_u64("gc_ands", stats.ands);
+        }
+        sp.done();
         self.charge_link(stats, bytes0, recv0);
         let t0 = Instant::now();
         let cts: Vec<Ciphertext> = match outcome {
@@ -928,6 +1015,15 @@ impl SecureFabric for RealFabric {
     }
     fn backend_label(&self) -> &'static str {
         self.label
+    }
+    fn session_id(&self) -> u64 {
+        self.session
+    }
+    fn peer_tag_flows(&self) -> std::collections::BTreeMap<u8, crate::obs::TagFlow> {
+        match &self.link {
+            ShareLink::Peer(client) => client.tag_flows(),
+            ShareLink::Local(_) => std::collections::BTreeMap::new(),
+        }
     }
 }
 

@@ -61,6 +61,7 @@ use crate::gc::ot::{OtReceiver, OtSender};
 use crate::gc::word::FixedFmt;
 use crate::net::tcp::{tcp_channel, TcpTransport};
 use crate::net::wire::{self, WireMsg};
+use crate::obs;
 use crate::runtime::pool;
 
 /// How long [`PeerGcClient::connect`] retries the center-b address
@@ -302,14 +303,18 @@ impl PeerGcClient {
     }
 
     fn send_ctrl(&mut self, msg: &WireMsg) {
+        let body = msg.encode();
         *self.sent_tags.entry(msg.tag()).or_insert(0) += 1;
-        self.chan.send_blob(&msg.encode());
+        // +8 for the u64 length prefix `send_blob` frames with.
+        self.chan.stats().note_sent(msg.tag(), body.len() as u64 + 8);
+        self.chan.send_blob(&body);
     }
 
     fn recv_ctrl(&mut self) -> io::Result<WireMsg> {
         let blob = self.chan.try_recv_blob()?;
         let msg = WireMsg::decode(&blob).map_err(io::Error::from)?;
         *self.recv_tags.entry(msg.tag()).or_insert(0) += 1;
+        self.chan.stats().note_recv(msg.tag(), blob.len() as u64 + 8);
         Ok(msg)
     }
 
@@ -492,6 +497,14 @@ impl PeerGcClient {
         PeerCensus { sent: self.sent_tags.clone(), recv: self.recv_tags.clone() }
     }
 
+    /// Per-tag control-frame byte/frame accounting (the GC/OT byte
+    /// streams between control frames are untagged and stay in the
+    /// aggregate [`bytes_sent`](Self::bytes_sent) /
+    /// [`bytes_received`](Self::bytes_received) counters).
+    pub fn tag_flows(&self) -> BTreeMap<u8, crate::obs::TagFlow> {
+        self.chan.stats().tag_flows()
+    }
+
     /// Bytes sent to center-b so far (control + labels + tables + OT).
     pub fn bytes_sent(&self) -> u64 {
         self.chan.stats().snapshot().0
@@ -548,7 +561,9 @@ impl PeerGcServer {
         let (stream, _) = self.listener.accept()?;
         let transport = TcpTransport::accept(stream, wire::ROLE_PEER)?;
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        serve_session(tcp_channel(transport), self.seed)
+        let session = serve_session(tcp_channel(transport), self.seed);
+        obs::flush();
+        session
     }
 
     /// Serve center-a connections forever (one at a time). A failed
@@ -562,9 +577,13 @@ impl PeerGcServer {
             let session = TcpTransport::accept(stream, wire::ROLE_PEER)
                 .map(tcp_channel)
                 .and_then(|chan| serve_session(chan, seed));
-            if let Err(e) = session {
-                eprintln!("center-b session ended with error: {e}");
+            match session {
+                Ok(()) => obs::info(format_args!("center-b session complete")),
+                Err(e) => {
+                    obs::warn(format_args!("center-b session ended with error: {e}"))
+                }
             }
+            obs::flush();
         }
     }
 }
@@ -589,6 +608,12 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
     // S2's share custody: handle → share words. Lives exactly as long
     // as the session; center-a only ever holds the opaque handles.
     let mut store: HashMap<u64, Vec<u128>> = HashMap::new();
+    // Trace join keys: the session adopts center-a's id at SetKey (both
+    // ends hash the same modulus) and counts per-tag occurrences — the
+    // same counters the client side advances, so (session, tag, round)
+    // lines up across the two processes with no wire change.
+    let mut session_id = 0u64;
+    let mut rounds: BTreeMap<u8, u64> = BTreeMap::new();
     loop {
         let blob = match chan.try_recv_blob() {
             Ok(b) => b,
@@ -605,7 +630,24 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
             }
             Err(e) => return Err(e),
         };
-        match WireMsg::decode(&blob).map_err(io::Error::from)? {
+        let msg = WireMsg::decode(&blob).map_err(io::Error::from)?;
+        let tag = msg.tag();
+        let round = {
+            let ctr = rounds.entry(tag).or_insert(0);
+            let r = *ctr;
+            *ctr += 1;
+            r
+        };
+        let mut sp = obs::span("peer.req").tag(tag).round(round);
+        if tag != wire::TAG_SET_KEY {
+            sp.record_session(session_id);
+        }
+        let stats = chan.stats();
+        let before = sp.active().then(|| {
+            sp.record_u64("req_bytes", blob.len() as u64 + 8);
+            (stats.snapshot().0, stats.snapshot_recv().0)
+        });
+        match msg {
             WireMsg::Shutdown => return Ok(()),
             WireMsg::SetKey { n, w, f } => {
                 // Mirror the node-side re-key rule: a second SetKey on
@@ -618,6 +660,8 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
                     ));
                 }
                 let fmt = crate::net::server::validate_set_key(&n, w, f)?;
+                session_id = obs::session_id(&n.to_bytes_le());
+                sp.record_session(session_id);
                 let n2 = n.mul(&n);
                 crypto = Some(S2Crypto { pk: PublicKey::from_modulus(n, n2), fmt });
                 chan.send_blob(&WireMsg::Ack.encode());
@@ -798,6 +842,11 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
                 )))
             }
         }
+        if let Some((s0, r0)) = before {
+            sp.record_u64("bytes_sent", stats.snapshot().0 - s0);
+            sp.record_u64("bytes_recv", stats.snapshot_recv().0 - r0);
+        }
+        sp.done();
     }
 }
 
@@ -867,6 +916,15 @@ mod tests {
         let census = client.census();
         assert_eq!(census.sent.get(&wire::TAG_SHARE_INPUT), Some(&4));
         assert_eq!(census.sent.get(&wire::TAG_GC_EXEC), Some(&2));
+        // Per-tag byte accounting agrees with the frame census, and the
+        // tagged control bytes are a strict subset of the stream total
+        // (garbled tables / OT columns stay untagged).
+        let flows = client.tag_flows();
+        assert_eq!(flows[&wire::TAG_SHARE_INPUT].sent_frames, 4);
+        assert_eq!(flows[&wire::TAG_GC_EXEC].sent_frames, 2);
+        assert_eq!(flows[&wire::TAG_GC_OUT].recv_frames, 2);
+        let ctrl_sent: u64 = flows.values().map(|f| f.sent_bytes).sum();
+        assert!(ctrl_sent > 0 && ctrl_sent < client.bytes_sent());
         assert!(client.bytes_sent() > 0 && client.bytes_received() > 0);
         drop(client); // sends Shutdown; server exits cleanly
         server_thread.join().unwrap();

@@ -31,6 +31,7 @@ use super::Transport;
 use crate::coordinator::fleet::{
     EncStat, Fleet, FleetKey, FleetNet, NodePayload, NodeReply, StepReply,
 };
+use crate::obs::{self, TagFlow};
 
 /// One persistent connection to a node server, with wire counters and a
 /// census of reply tag bytes (used to assert the ciphertext-only wire).
@@ -42,6 +43,8 @@ struct NodeConn {
     msgs_sent: u64,
     msgs_recv: u64,
     reply_tags: BTreeMap<u8, u64>,
+    /// Per-tag byte/frame accounting, both directions.
+    tag_flows: BTreeMap<u8, TagFlow>,
     /// Set once the key is installed: from then on a plaintext
     /// statistic reply is a protocol violation, not a fallback.
     require_enc: bool,
@@ -53,17 +56,25 @@ const FRAME_OVERHEAD: u64 = 8;
 impl NodeConn {
     fn send(&mut self, req: &WireMsg) -> io::Result<()> {
         let body = req.encode();
-        self.bytes_sent += body.len() as u64 + FRAME_OVERHEAD;
+        let framed = body.len() as u64 + FRAME_OVERHEAD;
+        self.bytes_sent += framed;
         self.msgs_sent += 1;
+        let flow = self.tag_flows.entry(req.tag()).or_default();
+        flow.sent_frames += 1;
+        flow.sent_bytes += framed;
         self.transport.send_msg(body)
     }
 
     fn recv(&mut self) -> io::Result<WireMsg> {
         let reply = self.transport.recv_msg()?;
-        self.bytes_recv += reply.len() as u64 + FRAME_OVERHEAD;
+        let framed = reply.len() as u64 + FRAME_OVERHEAD;
+        self.bytes_recv += framed;
         self.msgs_recv += 1;
         if let Some(&tag) = reply.first() {
             *self.reply_tags.entry(tag).or_insert(0) += 1;
+            let flow = self.tag_flows.entry(tag).or_default();
+            flow.recv_frames += 1;
+            flow.recv_bytes += framed;
         }
         Ok(WireMsg::decode(&reply)?)
     }
@@ -135,6 +146,13 @@ pub struct RemoteFleet {
     p: usize,
     name: String,
     encrypted: bool,
+    /// Session id (hash of the installed Paillier modulus; 0 pre-key).
+    session: u64,
+    /// Per-tag round counters: the Nth broadcast of a tag is round N
+    /// within this session. Node servers number the same occurrences
+    /// independently, so cross-process traces join on (session, round,
+    /// tag) without any wire change.
+    round_ctr: BTreeMap<u8, u64>,
 }
 
 /// How long `connect` keeps retrying each node address before giving up
@@ -147,6 +165,11 @@ impl RemoteFleet {
     /// agree on dimensionality.
     pub fn connect(addrs: &[String]) -> anyhow::Result<RemoteFleet> {
         anyhow::ensure!(!addrs.is_empty(), "remote fleet needs at least one node address");
+        let mut sp = obs::span("fleet.round")
+            .session(0)
+            .tag(wire::TAG_META_REQ)
+            .round(0)
+            .u64("nodes", addrs.len() as u64);
         let mut conns = Vec::with_capacity(addrs.len());
         let mut n_total = 0usize;
         let mut p = 0usize;
@@ -162,6 +185,7 @@ impl RemoteFleet {
                 msgs_sent: 0,
                 msgs_recv: 0,
                 reply_tags: BTreeMap::new(),
+                tag_flows: BTreeMap::new(),
                 require_enc: false,
             };
             match conn.exchange(&WireMsg::MetaReq)? {
@@ -197,7 +221,69 @@ impl RemoteFleet {
             }
             conns.push(conn);
         }
-        Ok(RemoteFleet { conns, n_total, p, name, encrypted: false })
+        if sp.active() {
+            sp.record_u64("bytes_sent", conns.iter().map(|c| c.bytes_sent).sum());
+            sp.record_u64("bytes_recv", conns.iter().map(|c| c.bytes_recv).sum());
+        }
+        sp.done();
+        Ok(RemoteFleet {
+            conns,
+            n_total,
+            p,
+            name,
+            encrypted: false,
+            session: 0,
+            round_ctr: BTreeMap::new(),
+        })
+    }
+
+    /// Next round index for `tag` within this session (counted on both
+    /// wire ends independently; see the field doc on `round_ctr`). The
+    /// connect-time `MetaReq` exchange is round 0 by construction.
+    fn next_round(&mut self, tag: u8) -> u64 {
+        let ctr = self.round_ctr.entry(tag).or_insert(0);
+        let round = if tag == wire::TAG_META_REQ { *ctr + 1 } else { *ctr };
+        *ctr += 1;
+        round
+    }
+
+    /// Run one broadcast round under a `fleet.round` span carrying the
+    /// (session, round, tag) join key and framed byte deltas, with one
+    /// `fleet.rpc` child span per node measuring request→reply latency.
+    fn traced_round<T: Send>(
+        &mut self,
+        tag: u8,
+        per_node: impl Fn(&mut NodeConn) -> io::Result<T> + Sync,
+    ) -> anyhow::Result<Vec<T>> {
+        let session = self.session;
+        let round = self.next_round(tag);
+        let mut sp = obs::span("fleet.round")
+            .session(session)
+            .tag(tag)
+            .round(round)
+            .u64("nodes", self.conns.len() as u64);
+        let before = sp.active().then(|| self.net_stats());
+        let out = self.round_with(|c| {
+            let mut rpc = obs::span("fleet.rpc")
+                .session(session)
+                .tag(tag)
+                .round(round)
+                .str("node", &c.addr);
+            let b0 = (c.bytes_sent, c.bytes_recv);
+            let r = per_node(c);
+            if rpc.active() {
+                rpc.record_u64("bytes_sent", c.bytes_sent - b0.0);
+                rpc.record_u64("bytes_recv", c.bytes_recv - b0.1);
+                rpc.record_u64("ok", r.is_ok() as u64);
+            }
+            r
+        });
+        if let Some(b) = before {
+            let after = self.net_stats();
+            sp.record_u64("bytes_sent", after.bytes_sent - b.bytes_sent);
+            sp.record_u64("bytes_recv", after.bytes_recv - b.bytes_recv);
+        }
+        out
     }
 
     /// Broadcast one request to every node concurrently and collect the
@@ -264,17 +350,17 @@ impl Fleet for RemoteFleet {
 
     fn stats(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
         let req = WireMsg::StatsReq { beta: beta.to_vec(), scale };
-        self.round_with(|c| c.expect_stat_reply(&req))
+        self.traced_round(wire::TAG_STATS_REQ, |c| c.expect_stat_reply(&req))
     }
 
     fn gram(&mut self, scale: f64) -> anyhow::Result<Vec<NodeReply>> {
         let req = WireMsg::GramReq { scale };
-        self.round_with(|c| c.expect_stat_reply(&req))
+        self.traced_round(wire::TAG_GRAM_REQ, |c| c.expect_stat_reply(&req))
     }
 
     fn hessian(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<NodeReply>> {
         let req = WireMsg::HessReq { beta: beta.to_vec(), scale };
-        self.round_with(|c| c.expect_stat_reply(&req))
+        self.traced_round(wire::TAG_HESS_REQ, |c| c.expect_stat_reply(&req))
     }
 
     fn label(&self) -> String {
@@ -298,8 +384,12 @@ impl Fleet for RemoteFleet {
     }
 
     fn install_key(&mut self, key: &FleetKey) -> anyhow::Result<bool> {
+        // The installed modulus defines the session: adopt the id
+        // before the round so the SetKey span already carries it (node
+        // servers derive the same id when they process the install).
+        self.session = obs::session_id(&key.n.to_bytes_le());
         let req = WireMsg::SetKey { n: key.n.clone(), w: key.w, f: key.f };
-        self.round_with(|c| {
+        self.traced_round(wire::TAG_SET_KEY, |c| {
             c.expect_ack(&req)?;
             c.require_enc = true;
             Ok(())
@@ -315,14 +405,24 @@ impl Fleet for RemoteFleet {
     fn install_hinv(&mut self, hinv: &EncStat) -> anyhow::Result<()> {
         anyhow::ensure!(self.encrypted, "install the Paillier key before Enc(H̃⁻¹)");
         let req = WireMsg::SetHinv { scale: hinv.scale, cts: hinv.cts.clone() };
-        self.round_with(|c| c.expect_ack(&req))?;
+        self.traced_round(wire::TAG_SET_HINV, |c| c.expect_ack(&req))?;
         Ok(())
     }
 
     fn step(&mut self, beta: &[f64], scale: f64) -> anyhow::Result<Vec<StepReply>> {
         anyhow::ensure!(self.encrypted, "step rounds need node-side encryption installed");
         let req = WireMsg::StepReq { beta: beta.to_vec(), scale };
-        self.round_with(|c| c.expect_step_reply(&req))
+        self.traced_round(wire::TAG_STEP_REQ, |c| c.expect_step_reply(&req))
+    }
+
+    fn tag_flows(&self) -> BTreeMap<u8, TagFlow> {
+        let mut out: BTreeMap<u8, TagFlow> = BTreeMap::new();
+        for c in &self.conns {
+            for (&tag, flow) in &c.tag_flows {
+                out.entry(tag).or_default().merge(flow);
+            }
+        }
+        out
     }
 }
 

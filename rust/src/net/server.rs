@@ -27,6 +27,7 @@ use std::time::Instant;
 use super::tcp::TcpTransport;
 use super::wire::{self, WireMsg};
 use crate::crypto::fixed::FixedCodec;
+use crate::obs;
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
 use crate::crypto::rng::ChaChaRng;
 use crate::data::Dataset;
@@ -96,7 +97,12 @@ impl NodeServer {
         let (stream, _) = self.listener.accept()?;
         let mut t = TcpTransport::accept(stream, wire::ROLE_NODE)?;
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        serve_session(&mut t, &self.data, self.engine.as_mut(), self.seed, self.threads)
+        let session =
+            serve_session(&mut t, &self.data, self.engine.as_mut(), self.seed, self.threads);
+        // Session boundary: persist buffered trace lines even if this
+        // process is killed rather than exiting cleanly afterwards.
+        obs::flush();
+        session
     }
 
     /// Serve center connections forever (one at a time). A failed
@@ -112,8 +118,10 @@ impl NodeServer {
             let session = TcpTransport::accept(stream, wire::ROLE_NODE).and_then(|mut t| {
                 serve_session(&mut t, &self.data, self.engine.as_mut(), seed, threads)
             });
-            if let Err(e) = session {
-                eprintln!("node session ended with error: {e}");
+            obs::flush();
+            match session {
+                Ok(()) => obs::info(format_args!("node session complete")),
+                Err(e) => obs::warn(format_args!("node session ended with error: {e}")),
             }
         }
     }
@@ -205,6 +213,11 @@ fn serve_session(
     threads: usize,
 ) -> io::Result<()> {
     let mut crypto: Option<SessionCrypto> = None;
+    // Trace join keys: the session id adopted at SetKey and this node's
+    // own per-tag round numbering (the center numbers the same
+    // occurrences independently, so the indices agree).
+    let mut session_id = 0u64;
+    let mut rounds: std::collections::BTreeMap<u8, u64> = std::collections::BTreeMap::new();
     loop {
         let msg = match t.recv_wire() {
             Ok(m) => m,
@@ -212,6 +225,17 @@ fn serve_session(
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
             Err(e) => return Err(e),
         };
+        let tag = msg.tag();
+        let round = {
+            let c = rounds.entry(tag).or_insert(0);
+            let r = *c;
+            *c += 1;
+            r
+        };
+        let mut sp = obs::span("node.req").tag(tag).round(round);
+        if tag != wire::TAG_SET_KEY {
+            sp.record_session(session_id);
+        }
         let reply = match msg {
             WireMsg::MetaReq => WireMsg::Meta {
                 n: data.n() as u64,
@@ -241,6 +265,8 @@ fn serve_session(
                 // trust boundary so a bad value is a session error, not
                 // an overflow inside the share arithmetic.
                 let fmt = validate_set_key(&n, w, f)?;
+                session_id = obs::session_id(&n.to_bytes_le());
+                sp.record_session(session_id);
                 let n2 = n.mul(&n);
                 crypto = Some(SessionCrypto {
                     pk: PublicKey::from_modulus(n.clone(), n2),
@@ -372,6 +398,7 @@ fn serve_session(
             }
         };
         t.send_wire(&reply)?;
+        sp.done();
     }
 }
 

@@ -440,6 +440,35 @@ pub const TAG_BLIND: u8 = 0x36;
 /// Tag byte: [`WireMsg::ShareInput`].
 pub const TAG_SHARE_INPUT: u8 = 0x37;
 
+/// Symbolic name of a wire tag, for reports and trace events (an
+/// unknown byte renders as `"tag:0xNN"`-free `"unknown"` — decode
+/// already rejected it, this is display-only).
+pub fn tag_name(tag: u8) -> &'static str {
+    match tag {
+        TAG_STATS_REQ => "StatsReq",
+        TAG_GRAM_REQ => "GramReq",
+        TAG_HESS_REQ => "HessReq",
+        TAG_META_REQ => "MetaReq",
+        TAG_SHUTDOWN => "Shutdown",
+        TAG_SET_KEY => "SetKey",
+        TAG_SET_HINV => "SetHinv",
+        TAG_STEP_REQ => "StepReq",
+        TAG_NODE_REPLY => "NodeReply",
+        TAG_META => "Meta",
+        TAG_ACK => "Ack",
+        TAG_BIGINT => "Bigint",
+        TAG_CIPHERTEXTS => "Ciphertexts",
+        TAG_GARBLED => "GarbledTables",
+        TAG_OT => "OtMsg",
+        TAG_GC_EXEC => "GcExec",
+        TAG_GC_OUT => "GcOut",
+        TAG_AGGREGATE => "Aggregate",
+        TAG_BLIND => "Blind",
+        TAG_SHARE_INPUT => "ShareInput",
+        _ => "unknown",
+    }
+}
+
 /// Pack bools LSB-first into bytes (zero-padded tail).
 fn pack_bools(bits: &[bool]) -> Vec<u8> {
     let mut out = vec![0u8; bits.len().div_ceil(8)];

@@ -1,0 +1,460 @@
+//! Dependency-free observability: a leveled stderr logger, scoped trace
+//! spans, and a per-process JSONL trace exporter.
+//!
+//! The paper's whole argument is a *time breakdown* — PrivLogit wins by
+//! moving cost out of the per-iteration critical path — so the repo
+//! needs per-phase, per-process measurement, not just one end-of-run
+//! [`crate::mpc::CostLedger`]. This module is the cross-cutting layer
+//! every subsystem (fabric, fleet, node servers, center-b, thread pool,
+//! protocols) threads its spans through.
+//!
+//! * **Logging** — `PRIVLOGIT_LOG=warn|info|debug` (default `warn`)
+//!   gates [`warn`]/[`info`]/[`debug`] lines on stderr, each prefixed
+//!   with the process label ([`set_proc`]).
+//! * **Tracing** — `PRIVLOGIT_TRACE=<path>` turns on a buffered JSONL
+//!   writer (schema `privlogit-trace/v1`): one header line, then one
+//!   object per finished [`Span`]. When tracing is off a span costs a
+//!   single relaxed atomic load — no clock reads, no allocation.
+//!   Buffered lines are flushed at a size threshold and at session
+//!   boundaries ([`flush`]) so traces survive a killed process.
+//! * **Session identity** — [`session_id`] hashes the Paillier modulus
+//!   bytes, which every process in a deployment already holds (center-a
+//!   generates the key, nodes receive it via `SetKey`, center-b via the
+//!   peer `SetKey`), into a stable 64-bit id. Per-process trace files
+//!   therefore join on (session, round, tag) with **no wire change**.
+//! * **Rounds** — each instrumented endpoint numbers the occurrences of
+//!   a wire tag within a session itself; both ends of a wire count the
+//!   same occurrences in the same order, so the indices agree and the
+//!   `privlogit trace` subcommand can merge per-process files into one
+//!   cross-process timeline.
+//!
+//! Tracing *reads* — it never draws randomness, takes locks on the hot
+//! path while disabled, or reorders work — so the byte-identical
+//! parallelism guarantee of `runtime::pool` is preserved (proved in
+//! `rust/tests/perf_parity.rs` with tracing force-enabled).
+
+pub mod json;
+pub mod timeline;
+
+use std::fs::File;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use json::{JsonObj, JsonValue};
+
+/// Trace schema identifier written in every file's header line.
+pub const TRACE_SCHEMA: &str = "privlogit-trace/v1";
+
+// ---------------------------------------------------------------------
+// process label
+// ---------------------------------------------------------------------
+
+static PROC: OnceLock<String> = OnceLock::new();
+
+/// Set this process's role label (`center-a`, `center-b`, `node:2`, …)
+/// for log lines and the trace header. First caller wins; call once,
+/// early, from the CLI subcommand dispatch.
+pub fn set_proc(label: &str) {
+    let _ = PROC.set(label.to_string());
+}
+
+/// The process label (default `privlogit`).
+pub fn proc_label() -> &'static str {
+    PROC.get_or_init(|| "privlogit".to_string())
+}
+
+// ---------------------------------------------------------------------
+// leveled stderr logger
+// ---------------------------------------------------------------------
+
+/// Log verbosity, selected by `PRIVLOGIT_LOG`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unexpected-but-handled conditions (default).
+    Warn = 1,
+    /// Session lifecycle events.
+    Info = 2,
+    /// Per-round detail.
+    Debug = 3,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(0); // 0 = not yet parsed
+
+fn log_level() -> u8 {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let lv = match std::env::var("PRIVLOGIT_LOG").ok().as_deref() {
+                Some("debug") => 3,
+                Some("info") => 2,
+                _ => 1,
+            };
+            LOG_LEVEL.store(lv, Ordering::Relaxed);
+            lv
+        }
+        lv => lv,
+    }
+}
+
+/// Whether `level` lines are currently emitted.
+pub fn log_enabled(level: Level) -> bool {
+    log_level() >= level as u8
+}
+
+fn log_line(level: Level, name: &str, args: std::fmt::Arguments<'_>) {
+    if log_enabled(level) {
+        eprintln!("[{} {}] {}", proc_label(), name, args);
+    }
+}
+
+/// Log at warn level: `obs::warn(format_args!("…"))`.
+pub fn warn(args: std::fmt::Arguments<'_>) {
+    log_line(Level::Warn, "warn", args);
+}
+
+/// Log at info level.
+pub fn info(args: std::fmt::Arguments<'_>) {
+    log_line(Level::Info, "info", args);
+}
+
+/// Log at debug level.
+pub fn debug(args: std::fmt::Arguments<'_>) {
+    log_line(Level::Debug, "debug", args);
+}
+
+// ---------------------------------------------------------------------
+// session ids and per-tag wire accounting
+// ---------------------------------------------------------------------
+
+/// Hash key material (the Paillier modulus bytes) into the stable
+/// 64-bit session id all processes of one deployment agree on. FNV-1a:
+/// deterministic, dependency-free, and collision-safe at the scale of
+/// "a handful of concurrent experiment sessions".
+pub fn session_id(modulus_bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in modulus_bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Render a session id the way traces carry it (hex, or `"-"` for the
+/// pre-key phase).
+pub fn session_str(session: u64) -> String {
+    if session == 0 {
+        "-".to_string()
+    } else {
+        format!("{session:016x}")
+    }
+}
+
+/// Byte/frame counters for one wire tag in both directions — the
+/// per-tag refinement of the aggregate sent/recv counters kept by
+/// `ChannelStats` and `RemoteFleet`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TagFlow {
+    /// Frames sent carrying this tag.
+    pub sent_frames: u64,
+    /// Bytes sent (payload + frame overhead) under this tag.
+    pub sent_bytes: u64,
+    /// Frames received carrying this tag.
+    pub recv_frames: u64,
+    /// Bytes received under this tag.
+    pub recv_bytes: u64,
+}
+
+impl TagFlow {
+    /// Fold another flow into this one (merging per-connection maps).
+    pub fn merge(&mut self, other: &TagFlow) {
+        self.sent_frames += other.sent_frames;
+        self.sent_bytes += other.sent_bytes;
+        self.recv_frames += other.recv_frames;
+        self.recv_bytes += other.recv_bytes;
+    }
+}
+
+// ---------------------------------------------------------------------
+// trace sink
+// ---------------------------------------------------------------------
+
+const FLUSH_LINES: usize = 64;
+
+struct Sink {
+    file: File,
+    buf: Vec<String>,
+}
+
+impl Sink {
+    fn push(&mut self, line: String) {
+        self.buf.push(line);
+        if self.buf.len() >= FLUSH_LINES {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let mut chunk = String::new();
+        for line in self.buf.drain(..) {
+            chunk.push_str(&line);
+            chunk.push('\n');
+        }
+        let _ = self.file.write_all(chunk.as_bytes());
+        let _ = self.file.flush();
+    }
+}
+
+impl Drop for Sink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// 0 = not yet initialized, 1 = disabled, 2 = enabled
+static TRACE_STATE: AtomicU8 = AtomicU8::new(0);
+static SINK: OnceLock<Mutex<Sink>> = OnceLock::new();
+
+/// Whether tracing is on. The steady-state cost of instrumentation when
+/// tracing is disabled is exactly this one relaxed atomic load.
+pub fn trace_enabled() -> bool {
+    match TRACE_STATE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => init_trace_from_env(),
+    }
+}
+
+fn init_trace_from_env() -> bool {
+    match std::env::var("PRIVLOGIT_TRACE") {
+        Ok(path) if !path.is_empty() => install_trace(&path),
+        _ => {
+            TRACE_STATE.store(1, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+/// Open (create/truncate) `path` as this process's trace file and turn
+/// tracing on. Normally driven by `PRIVLOGIT_TRACE`; tests call it
+/// directly to force-enable tracing in-process (environment-variable
+/// initialization races across parallel tests in one binary).
+pub fn install_trace(path: &str) -> bool {
+    let Ok(file) = File::create(path) else {
+        warn(format_args!("cannot open trace file {path:?}; tracing disabled"));
+        TRACE_STATE.store(1, Ordering::Relaxed);
+        return false;
+    };
+    let header = JsonObj::new()
+        .str("schema", TRACE_SCHEMA)
+        .str("proc", proc_label())
+        .u64("pid", std::process::id() as u64)
+        .build()
+        .render();
+    let mut sink = Sink { file, buf: Vec::new() };
+    sink.push(header);
+    if SINK.set(Mutex::new(sink)).is_ok() {
+        TRACE_STATE.store(2, Ordering::Relaxed);
+        true
+    } else {
+        // a second install keeps the first sink
+        TRACE_STATE.load(Ordering::Relaxed) == 2
+    }
+}
+
+/// Flush buffered trace lines to disk. Called at session boundaries
+/// (end of a node/center-b session, end of a protocol run) so traces
+/// survive a process that is later killed rather than exiting cleanly.
+pub fn flush() {
+    if TRACE_STATE.load(Ordering::Relaxed) == 2 {
+        if let Some(sink) = SINK.get() {
+            if let Ok(mut s) = sink.lock() {
+                s.flush();
+            }
+        }
+    }
+}
+
+fn emit_line(line: String) {
+    if let Some(sink) = SINK.get() {
+        if let Ok(mut s) = sink.lock() {
+            s.push(line);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------
+
+/// A scoped trace timer. Create with [`span`], attach structured fields
+/// with the builder methods, and the event is emitted when the span is
+/// dropped (or explicitly [`Span::done`]). When tracing is disabled the
+/// span is inert: no clock is read and no field is recorded.
+pub struct Span {
+    state: Option<SpanState>,
+}
+
+struct SpanState {
+    name: &'static str,
+    wall_start: SystemTime,
+    t0: Instant,
+    fields: Vec<(&'static str, JsonValue)>,
+}
+
+/// Open a span named per the taxonomy in docs/ARCHITECTURE.md
+/// §Observability (`fabric.*`, `fleet.*`, `node.req`, `peer.req`,
+/// `proto.iter`, `pool.par_map`).
+pub fn span(name: &'static str) -> Span {
+    if !trace_enabled() {
+        return Span { state: None };
+    }
+    Span {
+        state: Some(SpanState {
+            name,
+            wall_start: SystemTime::now(),
+            t0: Instant::now(),
+            fields: Vec::new(),
+        }),
+    }
+}
+
+impl Span {
+    /// Whether this span will emit an event (tracing on).
+    pub fn active(&self) -> bool {
+        self.state.is_some()
+    }
+
+    fn put(&mut self, key: &'static str, v: JsonValue) {
+        if let Some(s) = self.state.as_mut() {
+            s.fields.push((key, v));
+        }
+    }
+
+    /// Attach the session id (hex in the event; 0 renders as `"-"`).
+    pub fn session(mut self, session: u64) -> Span {
+        if self.active() {
+            self.put("session", JsonValue::Str(session_str(session)));
+        }
+        self
+    }
+
+    /// Attach the per-session round index for the joined wire tag.
+    pub fn round(mut self, round: u64) -> Span {
+        self.put("round", JsonValue::Num(round as f64));
+        self
+    }
+
+    /// Attach a wire tag (numeric, plus its symbolic name).
+    pub fn tag(mut self, tag: u8) -> Span {
+        if self.active() {
+            self.put("tag", JsonValue::Num(tag as f64));
+            self.put("tag_name", JsonValue::Str(crate::net::wire::tag_name(tag).to_string()));
+        }
+        self
+    }
+
+    /// Attach an arbitrary integer field.
+    pub fn u64(mut self, key: &'static str, v: u64) -> Span {
+        self.put(key, JsonValue::Num(v as f64));
+        self
+    }
+
+    /// Attach an arbitrary string field.
+    pub fn str(mut self, key: &'static str, v: &str) -> Span {
+        if self.active() {
+            self.put(key, JsonValue::Str(v.to_string()));
+        }
+        self
+    }
+
+    /// Record an integer field after the span was opened (byte deltas,
+    /// op counts known only at the end of the section).
+    pub fn record_u64(&mut self, key: &'static str, v: u64) {
+        self.put(key, JsonValue::Num(v as f64));
+    }
+
+    /// Record the session id after the span was opened (a `SetKey`
+    /// handler learns the session mid-request).
+    pub fn record_session(&mut self, session: u64) {
+        if self.active() {
+            self.put("session", JsonValue::Str(session_str(session)));
+        }
+    }
+
+    /// Record a float field after the span was opened.
+    pub fn record_f64(&mut self, key: &'static str, v: f64) {
+        self.put(key, JsonValue::Num(v));
+    }
+
+    /// Finish the span now (equivalent to dropping it).
+    pub fn done(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(s) = self.state.take() else { return };
+        let secs = s.t0.elapsed().as_secs_f64();
+        let ts_us = s
+            .wall_start
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let mut obj = JsonObj::new().u64("ts_us", ts_us).str("span", s.name);
+        for (k, v) in s.fields {
+            obj = obj.push(k, v);
+        }
+        emit_line(obj.f64("secs", secs).build().render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_ids_are_stable_and_distinct() {
+        let a = session_id(&[1, 2, 3]);
+        assert_eq!(a, session_id(&[1, 2, 3]));
+        assert_ne!(a, session_id(&[1, 2, 4]));
+        assert_ne!(a, 0);
+        assert_eq!(session_str(0), "-");
+        assert_eq!(session_str(a).len(), 16);
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // Tests run without PRIVLOGIT_TRACE (and before any test-hook
+        // install in this process): spans must be no-ops, not errors.
+        if trace_enabled() {
+            return; // another test in this binary force-enabled tracing
+        }
+        let mut sp = span("test.noop").session(7).round(1).u64("x", 2);
+        assert!(!sp.active());
+        sp.record_u64("bytes", 10);
+        sp.done();
+    }
+
+    #[test]
+    fn tag_flow_merges() {
+        let mut a =
+            TagFlow { sent_frames: 1, sent_bytes: 10, recv_frames: 2, recv_bytes: 20 };
+        a.merge(&TagFlow { sent_frames: 3, sent_bytes: 30, recv_frames: 4, recv_bytes: 40 });
+        assert_eq!(
+            a,
+            TagFlow { sent_frames: 4, sent_bytes: 40, recv_frames: 6, recv_bytes: 60 }
+        );
+    }
+
+    #[test]
+    fn log_levels_order() {
+        assert!(Level::Warn < Level::Info && Level::Info < Level::Debug);
+        // default level is warn: warn enabled, debug not (unless the
+        // environment overrides — accept either but exercise the path)
+        let _ = log_enabled(Level::Debug);
+        assert!(log_enabled(Level::Warn) || std::env::var("PRIVLOGIT_LOG").is_ok());
+    }
+}

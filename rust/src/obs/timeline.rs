@@ -1,0 +1,391 @@
+//! Cross-process trace merging: the library behind `privlogit trace`.
+//!
+//! Each process in a deployment writes its own JSONL trace file (schema
+//! [`TRACE_SCHEMA`]). This module parses and validates those files,
+//! merges their events into one time-ordered timeline, and joins the
+//! two ends of every wire on **(session, tag, round)** — the identity
+//! that both endpoints derive independently (session from the Paillier
+//! modulus hash, round from per-tag occurrence counting), so no clock
+//! synchronization or wire change is needed.
+
+use std::collections::BTreeMap;
+
+use super::json::{self, JsonObj, JsonValue};
+use super::TRACE_SCHEMA;
+use crate::net::wire::tag_name;
+
+/// Schema identifier of the merged-timeline JSON document.
+pub const TIMELINE_SCHEMA: &str = "privlogit-timeline/v1";
+
+/// One finished span, as read back from a per-process trace file.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Role label of the emitting process (from the file header).
+    pub proc: String,
+    /// Wall-clock span start, microseconds since the epoch.
+    pub ts_us: u64,
+    /// Span name (`fabric.gc_exec`, `fleet.round`, `node.req`, …).
+    pub span: String,
+    /// Session id (16 hex chars), or `"-"` before key establishment.
+    pub session: String,
+    /// Per-session occurrence index of this span's wire tag.
+    pub round: Option<u64>,
+    /// Wire tag, for spans that correspond to one wire exchange.
+    pub tag: Option<u8>,
+    /// Span duration in seconds.
+    pub secs: f64,
+    /// Bytes sent within the span (0 when the span records none).
+    pub bytes_sent: u64,
+    /// Bytes received within the span.
+    pub bytes_recv: u64,
+}
+
+/// A parsed per-process trace file.
+#[derive(Clone, Debug)]
+pub struct TraceFile {
+    /// Role label from the header (`center-a`, `node:0`, …).
+    pub proc: String,
+    /// Emitting process id.
+    pub pid: u64,
+    /// Events in emission order.
+    pub events: Vec<TraceEvent>,
+}
+
+fn req_str(v: &JsonValue, key: &str, at: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| format!("{at}: missing string field {key:?}"))
+}
+
+fn req_u64(v: &JsonValue, key: &str, at: &str) -> Result<u64, String> {
+    v.get(key).and_then(|x| x.as_u64()).ok_or_else(|| format!("{at}: missing integer {key:?}"))
+}
+
+/// Parse and validate one trace file's text. Rejects a missing or
+/// mismatched header schema and any event lacking the required
+/// `ts_us` / `span` / `secs` fields, naming the offending line.
+pub fn parse_trace(text: &str) -> Result<TraceFile, String> {
+    let mut lines =
+        text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty()).map(|(i, l)| (i + 1, l));
+    let (_, header) = lines.next().ok_or("empty trace file")?;
+    let h = json::parse(header).map_err(|e| format!("header: {e}"))?;
+    let schema = req_str(&h, "schema", "header")?;
+    if schema != TRACE_SCHEMA {
+        return Err(format!("unsupported trace schema {schema:?} (expected {TRACE_SCHEMA:?})"));
+    }
+    let proc = req_str(&h, "proc", "header")?;
+    let pid = req_u64(&h, "pid", "header")?;
+    let mut events = Vec::new();
+    for (lineno, line) in lines {
+        let at = format!("line {lineno}");
+        let v = json::parse(line).map_err(|e| format!("{at}: {e}"))?;
+        events.push(TraceEvent {
+            proc: proc.clone(),
+            ts_us: req_u64(&v, "ts_us", &at)?,
+            span: req_str(&v, "span", &at)?,
+            secs: v
+                .get("secs")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("{at}: missing number \"secs\""))?,
+            session: v.get("session").and_then(|x| x.as_str()).unwrap_or("-").to_string(),
+            round: v.get("round").and_then(|x| x.as_u64()),
+            tag: v.get("tag").and_then(|x| x.as_u64()).map(|t| t as u8),
+            bytes_sent: v.get("bytes_sent").and_then(|x| x.as_u64()).unwrap_or(0),
+            bytes_recv: v.get("bytes_recv").and_then(|x| x.as_u64()).unwrap_or(0),
+        });
+    }
+    Ok(TraceFile { proc, pid, events })
+}
+
+/// Aggregate view of one (process, span-name) phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanRollup {
+    /// Number of spans.
+    pub count: u64,
+    /// Summed span durations.
+    pub secs: f64,
+    /// Summed bytes sent.
+    pub bytes_sent: u64,
+    /// Summed bytes received.
+    pub bytes_recv: u64,
+}
+
+impl SpanRollup {
+    fn add(&mut self, e: &TraceEvent) {
+        self.count += 1;
+        self.secs += e.secs;
+        self.bytes_sent += e.bytes_sent;
+        self.bytes_recv += e.bytes_recv;
+    }
+}
+
+/// The merged cross-process timeline.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// All events from all processes, ordered by wall-clock start
+    /// (ties keep per-process emission order).
+    pub events: Vec<TraceEvent>,
+    /// Distinct process labels, in first-file order.
+    pub procs: Vec<String>,
+}
+
+impl Timeline {
+    /// Merge parsed trace files into one time-ordered event stream.
+    pub fn merge(files: Vec<TraceFile>) -> Timeline {
+        let mut procs = Vec::new();
+        let mut events = Vec::new();
+        for f in files {
+            if !procs.contains(&f.proc) {
+                procs.push(f.proc.clone());
+            }
+            events.extend(f.events);
+        }
+        events.sort_by_key(|e| e.ts_us); // stable: ties keep file order
+        Timeline { events, procs }
+    }
+
+    /// Per-phase rollup, keyed by (process, span name).
+    pub fn per_phase(&self) -> BTreeMap<(String, String), SpanRollup> {
+        let mut out: BTreeMap<(String, String), SpanRollup> = BTreeMap::new();
+        for e in &self.events {
+            out.entry((e.proc.clone(), e.span.clone())).or_default().add(e);
+        }
+        out
+    }
+
+    /// The cross-process join: events grouped by (session, tag, round).
+    /// Each group holds one event per end of one wire exchange — e.g. a
+    /// `fleet.rpc` on center-a and the matching `node.req` on the node.
+    pub fn per_round(&self) -> BTreeMap<(String, u8, u64), Vec<&TraceEvent>> {
+        let mut out: BTreeMap<(String, u8, u64), Vec<&TraceEvent>> = BTreeMap::new();
+        for e in &self.events {
+            if let (Some(tag), Some(round)) = (e.tag, e.round) {
+                out.entry((e.session.clone(), tag, round)).or_default().push(e);
+            }
+        }
+        out
+    }
+
+    /// Render the human-readable merged timeline: per-phase rollups,
+    /// then the per-tag cross-process wire summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "── merged timeline: {} processes, {} events ──\n  procs: {}\n",
+            self.procs.len(),
+            self.events.len(),
+            self.procs.join(" ")
+        ));
+        s.push_str("  per-phase rollup:\n");
+        s.push_str(&format!(
+            "    {:<12}{:<18}{:>8}{:>10}{:>12}{:>12}\n",
+            "proc", "span", "count", "secs", "sent MiB", "recv MiB"
+        ));
+        for ((proc, span), r) in self.per_phase() {
+            s.push_str(&format!(
+                "    {:<12}{:<18}{:>8}{:>10.3}{:>12.3}{:>12.3}\n",
+                proc,
+                span,
+                r.count,
+                r.secs,
+                r.bytes_sent as f64 / (1024.0 * 1024.0),
+                r.bytes_recv as f64 / (1024.0 * 1024.0),
+            ));
+        }
+        // Per (session, tag): how many rounds, which processes saw them,
+        // and the summed span time per process.
+        let mut wire: BTreeMap<(String, u8), (u64, BTreeMap<String, SpanRollup>)> =
+            BTreeMap::new();
+        for ((session, tag, _round), events) in self.per_round() {
+            let entry = wire.entry((session, tag)).or_default();
+            entry.0 += 1;
+            for e in events {
+                entry.1.entry(e.proc.clone()).or_default().add(e);
+            }
+        }
+        if !wire.is_empty() {
+            s.push_str("  cross-process wire rounds:\n");
+            s.push_str(&format!(
+                "    {:<18}{:<6}{:<14}{:>7}  per-proc secs\n",
+                "session", "tag", "name", "rounds"
+            ));
+            for ((session, tag), (rounds, procs)) in wire {
+                let per_proc: Vec<String> = procs
+                    .iter()
+                    .map(|(p, r)| format!("{p} {:.3}s/{} ev", r.secs, r.count))
+                    .collect();
+                s.push_str(&format!(
+                    "    {:<18}{:#04x}  {:<14}{:>7}  {}\n",
+                    session,
+                    tag,
+                    tag_name(tag),
+                    rounds,
+                    per_proc.join("  ")
+                ));
+            }
+        }
+        s
+    }
+
+    /// Render the merged timeline as JSON (schema [`TIMELINE_SCHEMA`]):
+    /// the full event stream plus both rollups.
+    pub fn render_json(&self) -> String {
+        let events = JsonValue::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    let mut o = JsonObj::new()
+                        .str("proc", &e.proc)
+                        .u64("ts_us", e.ts_us)
+                        .str("span", &e.span)
+                        .str("session", &e.session);
+                    if let Some(round) = e.round {
+                        o = o.u64("round", round);
+                    }
+                    if let Some(tag) = e.tag {
+                        o = o.u64("tag", tag as u64).str("tag_name", tag_name(tag));
+                    }
+                    o.f64("secs", e.secs)
+                        .u64("bytes_sent", e.bytes_sent)
+                        .u64("bytes_recv", e.bytes_recv)
+                        .build()
+                })
+                .collect(),
+        );
+        let phases = JsonValue::Arr(
+            self.per_phase()
+                .into_iter()
+                .map(|((proc, span), r)| {
+                    JsonObj::new()
+                        .str("proc", &proc)
+                        .str("span", &span)
+                        .u64("count", r.count)
+                        .f64("secs", r.secs)
+                        .u64("bytes_sent", r.bytes_sent)
+                        .u64("bytes_recv", r.bytes_recv)
+                        .build()
+                })
+                .collect(),
+        );
+        let rounds = JsonValue::Arr(
+            self.per_round()
+                .into_iter()
+                .map(|((session, tag, round), events)| {
+                    let ends = JsonValue::Arr(
+                        events
+                            .iter()
+                            .map(|e| {
+                                JsonObj::new()
+                                    .str("proc", &e.proc)
+                                    .str("span", &e.span)
+                                    .f64("secs", e.secs)
+                                    .build()
+                            })
+                            .collect(),
+                    );
+                    JsonObj::new()
+                        .str("session", &session)
+                        .u64("tag", tag as u64)
+                        .str("tag_name", tag_name(tag))
+                        .u64("round", round)
+                        .push("ends", ends)
+                        .build()
+                })
+                .collect(),
+        );
+        let procs =
+            JsonValue::Arr(self.procs.iter().map(|p| JsonValue::Str(p.clone())).collect());
+        JsonObj::new()
+            .str("schema", TIMELINE_SCHEMA)
+            .push("procs", procs)
+            .push("events", events)
+            .push("phases", phases)
+            .push("rounds", rounds)
+            .build()
+            .render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file_a() -> String {
+        [
+            r#"{"schema":"privlogit-trace/v1","proc":"center-a","pid":10}"#,
+            r#"{"ts_us":100,"span":"fabric.setup","session":"00000000000000aa","secs":1.5}"#,
+            concat!(
+                r#"{"ts_us":300,"span":"fleet.round","session":"00000000000000aa","#,
+                r#""round":0,"tag":8,"tag_name":"StepReq","bytes_sent":64,"#,
+                r#""bytes_recv":128,"secs":0.2}"#
+            ),
+        ]
+        .join("\n")
+    }
+
+    fn file_b() -> String {
+        [
+            r#"{"schema":"privlogit-trace/v1","proc":"node:0","pid":11}"#,
+            concat!(
+                r#"{"ts_us":200,"span":"node.req","session":"00000000000000aa","#,
+                r#""round":0,"tag":8,"tag_name":"StepReq","secs":0.1}"#
+            ),
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn parses_and_merges_two_processes() {
+        let a = parse_trace(&file_a()).unwrap();
+        let b = parse_trace(&file_b()).unwrap();
+        assert_eq!((a.proc.as_str(), a.pid, a.events.len()), ("center-a", 10, 2));
+        assert_eq!(b.events.len(), 1);
+        let t = Timeline::merge(vec![a, b]);
+        assert_eq!(t.procs, vec!["center-a", "node:0"]);
+        // time-ordered across processes
+        let ts: Vec<u64> = t.events.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![100, 200, 300]);
+        let phases = t.per_phase();
+        let round = &phases[&("center-a".into(), "fleet.round".into())];
+        assert_eq!((round.count, round.bytes_sent, round.bytes_recv), (1, 64, 128));
+        // the wire join pairs both ends of round 0 of StepReq
+        let rounds = t.per_round();
+        let ends = &rounds[&("00000000000000aa".into(), 8u8, 0u64)];
+        assert_eq!(ends.len(), 2);
+        assert!(ends.iter().any(|e| e.proc == "center-a"));
+        assert!(ends.iter().any(|e| e.proc == "node:0"));
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace(r#"{"schema":"other/v9","proc":"x","pid":1}"#).is_err());
+        let missing_secs = [
+            r#"{"schema":"privlogit-trace/v1","proc":"x","pid":1}"#,
+            r#"{"ts_us":1,"span":"a"}"#,
+        ]
+        .join("\n");
+        let err = parse_trace(&missing_secs).unwrap_err();
+        assert!(err.contains("secs"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn timeline_json_round_trips() {
+        let t = Timeline::merge(vec![
+            parse_trace(&file_a()).unwrap(),
+            parse_trace(&file_b()).unwrap(),
+        ]);
+        let doc = json::parse(&t.render_json()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(TIMELINE_SCHEMA));
+        assert_eq!(doc.get("events").unwrap().as_arr().unwrap().len(), 3);
+        let rounds = doc.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        assert_eq!(rounds[0].get("tag_name").unwrap().as_str(), Some("StepReq"));
+        assert_eq!(rounds[0].get("ends").unwrap().as_arr().unwrap().len(), 2);
+        let human = t.render();
+        assert!(human.contains("merged timeline"), "{human}");
+        assert!(human.contains("StepReq"), "{human}");
+    }
+}

@@ -246,5 +246,11 @@ pub fn final_ledger<F: SecureFabric>(fab: &F, fleet: &dyn Fleet) -> CostLedger {
     let net = fleet.net_stats();
     ledger.fleet_bytes_sent += net.bytes_sent;
     ledger.fleet_bytes_recv += net.bytes_recv;
+    for (tag, flow) in fleet.tag_flows() {
+        ledger.fleet_tag_flows.entry(tag).or_default().merge(&flow);
+    }
+    for (tag, flow) in fab.peer_tag_flows() {
+        ledger.peer_tag_flows.entry(tag).or_default().merge(&flow);
+    }
     ledger
 }

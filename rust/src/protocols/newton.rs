@@ -12,6 +12,7 @@
 use super::common::*;
 use crate::coordinator::fleet::Fleet;
 use crate::mpc::SecureFabric;
+use crate::obs;
 
 /// Run the secure Newton baseline over a node fleet. A node that dies
 /// mid-protocol surfaces as `Err`.
@@ -29,7 +30,13 @@ pub fn run_newton<F: SecureFabric>(
     let mut converged = false;
     let setup_secs = total_secs(fab); // keygen + base OT only
 
-    for _ in 0..cfg.max_iters {
+    for iter in 0..cfg.max_iters {
+        // One span per model-update round; the final (convergence-only)
+        // pass emits one too, so span count = iterations + converged.
+        let _sp = obs::span("proto.iter")
+            .session(fab.session_id())
+            .round(iter as u64)
+            .str("protocol", "newton");
         // --- node round: exact Hessian + gradient + log-likelihood ---
         let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale)?;
         let h_replies = fleet.hessian(&beta, scale)?;

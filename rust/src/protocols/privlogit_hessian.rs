@@ -10,6 +10,7 @@
 use super::common::*;
 use crate::coordinator::fleet::Fleet;
 use crate::mpc::{SecVec, SecureFabric};
+use crate::obs;
 
 /// `SetupOnce` (Algorithm 2): secure approximate-Hessian aggregation and
 /// Cholesky factorization. Returns the shared triangular factor `L`.
@@ -40,7 +41,12 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
     let scale = 1.0 / n as f64;
 
     // Step 1: SetupOnce (the one-time O(p³) phase).
-    let l_shares = setup_once(fab, fleet, cfg.lambda, scale)?;
+    let l_shares = {
+        let _sp = obs::span("proto.setup")
+            .session(fab.session_id())
+            .str("protocol", "privlogit-hessian");
+        setup_once(fab, fleet, cfg.lambda, scale)?
+    };
     let setup_secs = total_secs(fab);
 
     let mut beta = vec![0.0; p];
@@ -48,7 +54,13 @@ pub fn run_privlogit_hessian<F: SecureFabric>(
     let mut iterations = 0;
     let mut converged = false;
 
-    for _ in 0..cfg.max_iters {
+    for iter in 0..cfg.max_iters {
+        // One span per model-update round; the final (convergence-only)
+        // pass emits one too, so span count = iterations + converged.
+        let _sp = obs::span("proto.iter")
+            .session(fab.session_id())
+            .round(iter as u64)
+            .str("protocol", "privlogit-hessian");
         // Steps 3–7: node gradient + log-likelihood round.
         let (enc_g, enc_l) = node_stats_round(fab, fleet, &beta, scale)?;
         // Steps 8, 11: aggregation + public regularization terms.

@@ -12,6 +12,7 @@
 use super::common::*;
 use crate::coordinator::fleet::{Fleet, NodePayload};
 use crate::mpc::{EncMat, EncVec, SecureFabric};
+use crate::obs;
 
 /// Setup: `SetupOnce` + Algorithm 3 step 2 (materialize `Enc(H̃⁻¹)`).
 pub fn setup_inverse<F: SecureFabric>(
@@ -114,7 +115,12 @@ pub fn run_privlogit_local<F: SecureFabric>(
 
     // Steps 1–2: setup; Enc(H̃⁻¹) is then broadcast to all nodes — for
     // real over the wire when the fleet's nodes hold the key.
-    let hinv = setup_inverse(fab, fleet, cfg.lambda, scale)?;
+    let hinv = {
+        let _sp = obs::span("proto.setup")
+            .session(fab.session_id())
+            .str("protocol", "privlogit-local");
+        setup_inverse(fab, fleet, cfg.lambda, scale)?
+    };
     if fleet.nodes_encrypt() {
         fleet.install_hinv(&enc_stat_of(&hinv.tri)?)?;
     }
@@ -130,7 +136,13 @@ pub fn run_privlogit_local<F: SecureFabric>(
     let mut iterations = 0;
     let mut converged = false;
 
-    for _ in 0..cfg.max_iters {
+    for iter in 0..cfg.max_iters {
+        // One span per model-update round; the final (convergence-only)
+        // pass emits one too, so span count = iterations + converged.
+        let _sp = obs::span("proto.iter")
+            .session(fab.session_id())
+            .round(iter as u64)
+            .str("protocol", "privlogit-local");
         // Steps 4–9: nodes compute l_sj (encrypted) and the *local*
         // partial Newton step Enc(H̃⁻¹ g_j) via multiply-by-constant.
         let (enc_parts, enc_l) = node_step_round(fab, fleet, &hinv, &beta, scale)?;

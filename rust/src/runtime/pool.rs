@@ -45,6 +45,12 @@ where
     if workers == 1 {
         return (0..n).map(f).collect();
     }
+    // Trace only genuinely fanned-out sections (the single-worker early
+    // return above stays span-free): with tracing disabled this is one
+    // relaxed atomic load, and tracing never reorders the work — slots
+    // are filled in index order regardless.
+    let _sp =
+        crate::obs::span("pool.par_map").u64("n", n as u64).u64("workers", workers as u64);
     let chunk = n.div_ceil(workers);
     let mut out: Vec<Option<U>> = Vec::new();
     out.resize_with(n, || None);

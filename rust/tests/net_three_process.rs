@@ -4,9 +4,12 @@
 //! paths: a node dying mid-protocol must surface as a clean `Err`, and
 //! the `privlogit center` CLI must exit non-zero without panicking.
 
+use std::collections::BTreeSet;
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::time::Duration;
 
 use privlogit::bigint::BigUint;
 use privlogit::coordinator::fleet::Fleet;
@@ -17,6 +20,8 @@ use privlogit::linalg::r_squared;
 use privlogit::mpc::{PeerGcServer, RealFabric};
 use privlogit::net::wire::{self, WireMsg};
 use privlogit::net::{NodeServer, RemoteFleet, TcpTransport};
+use privlogit::obs::json::{self as pjson, JsonValue};
+use privlogit::obs::timeline::{parse_trace, Timeline, TraceEvent, TraceFile};
 use privlogit::optim::{fit, Method, OptimConfig};
 use privlogit::protocols::{Protocol, ProtocolConfig};
 
@@ -130,6 +135,27 @@ fn three_center_split_ciphertext_only_fleet_wire() {
     }
     assert!(census.sent.get(&wire::TAG_AGGREGATE).copied().unwrap_or(0) > 0, "{census:?}");
     assert!(census.sent.get(&wire::TAG_BLIND).copied().unwrap_or(0) > 0, "{census:?}");
+
+    // Per-tag ledger accounting: every fleet frame is tagged (sent by
+    // request tag, received by reply tag), so the per-tag byte sums
+    // must equal the aggregate wire counters exactly. The peer-wire
+    // flows cover control frames only (GC/OT streams stay untagged).
+    let l = &report.ledger;
+    assert_eq!(
+        l.fleet_bytes_sent,
+        l.fleet_tag_flows.values().map(|f| f.sent_bytes).sum::<u64>(),
+        "fleet tag flows must partition sent bytes: {:?}",
+        l.fleet_tag_flows
+    );
+    assert_eq!(
+        l.fleet_bytes_recv,
+        l.fleet_tag_flows.values().map(|f| f.recv_bytes).sum::<u64>(),
+        "fleet tag flows must partition received bytes: {:?}",
+        l.fleet_tag_flows
+    );
+    assert!(l.fleet_tag_flows[&wire::TAG_STEP_REQ].sent_frames > 0, "{:?}", l.fleet_tag_flows);
+    assert!(l.peer_tag_flows[&wire::TAG_AGGREGATE].sent_frames > 0, "{:?}", l.peer_tag_flows);
+    assert!(l.peer_tag_flows[&wire::TAG_GC_EXEC].sent_frames > 0, "{:?}", l.peer_tag_flows);
 
     let net = fleet.net_stats();
     assert!(net.bytes_sent > 0 && net.bytes_recv > 0, "both directions: {net:?}");
@@ -265,18 +291,52 @@ impl Drop for KillOnDrop {
     }
 }
 
-/// The full CLI topology as five real OS processes: three `privlogit
-/// node`, one `privlogit center-b --once`, one `privlogit center-a`.
-/// The center-a report must show convergence and measured fleet wire
-/// traffic; center-b must exit cleanly after its single session.
-#[test]
-fn five_process_cli_topology_end_to_end() {
-    let Some(bin) = option_env!("CARGO_BIN_EXE_privlogit") else {
-        eprintln!("skipping: privlogit binary not built for this test harness");
-        return;
-    };
+/// Where this test's per-process trace files land: `PRIVLOGIT_TRACE_DIR`
+/// when set (CI points it at a directory it uploads as an artifact),
+/// otherwise a scratch directory.
+fn trace_dir() -> PathBuf {
+    match std::env::var("PRIVLOGIT_TRACE_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir().join("privlogit_trace_test"),
+    }
+}
+
+/// Poll `path` until it parses as a trace containing the node's final
+/// `Shutdown` span — the node flushes its buffer at the session
+/// boundary, which races with center-a's exit.
+fn wait_for_shutdown_span(path: &Path) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(f) = parse_trace(&text) {
+                if f.events.iter().any(|e| e.tag == Some(wire::TAG_SHUTDOWN)) {
+                    return;
+                }
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "no Shutdown span appeared in {path:?} within 10s"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+struct TracedRun {
+    /// Parsed `--json` report from center-a (`privlogit-report/v1`).
+    report: JsonValue,
+    /// Trace files: node0, node1, node2, center-b, center-a.
+    traces: Vec<PathBuf>,
+}
+
+/// Run the full five-process CLI topology (three `privlogit node`, one
+/// `center-b --once`, one `center-a`) with `PRIVLOGIT_TRACE` set for
+/// every process and `--json` report output.
+fn run_traced_topology(bin: &str, dir: &Path, run_id: &str, seed: u64) -> TracedRun {
     let ports = free_ports(4);
     let dataset = "synth:n=900,p=3,seed=17";
+    let node_traces: Vec<PathBuf> =
+        (0..3).map(|j| dir.join(format!("{run_id}-node{j}.jsonl"))).collect();
     let mut nodes: Vec<KillOnDrop> = Vec::new();
     for org in 0..3 {
         let child = Command::new(bin)
@@ -291,6 +351,7 @@ fn five_process_cli_topology_end_to_end() {
                 "--org",
                 &org.to_string(),
             ])
+            .env("PRIVLOGIT_TRACE", &node_traces[org])
             .stdout(Stdio::null())
             .stderr(Stdio::null())
             .spawn()
@@ -298,8 +359,10 @@ fn five_process_cli_topology_end_to_end() {
         nodes.push(KillOnDrop(child));
     }
     let peer_addr = format!("127.0.0.1:{}", ports[3]);
+    let b_trace = dir.join(format!("{run_id}-center-b.jsonl"));
     let center_b = Command::new(bin)
         .args(["center-b", "--listen", &peer_addr, "--once"])
+        .env("PRIVLOGIT_TRACE", &b_trace)
         .stdout(Stdio::null())
         .stderr(Stdio::null())
         .spawn()
@@ -310,6 +373,7 @@ fn five_process_cli_topology_end_to_end() {
         "127.0.0.1:{},127.0.0.1:{},127.0.0.1:{}",
         ports[0], ports[1], ports[2]
     );
+    let a_trace = dir.join(format!("{run_id}-center-a.jsonl"));
     let out = Command::new(bin)
         .args([
             "center-a",
@@ -323,18 +387,202 @@ fn five_process_cli_topology_end_to_end() {
             "real",
             "--modulus-bits",
             "256",
+            "--seed",
+            &seed.to_string(),
+            "--json",
         ])
+        .env("PRIVLOGIT_TRACE", &a_trace)
         .output()
         .expect("run center-a");
     let stdout = String::from_utf8_lossy(&out.stdout);
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(out.status.success(), "center-a failed.\nstdout: {stdout}\nstderr: {stderr}");
-    assert!(stdout.contains("converged: true"), "stdout: {stdout}");
-    assert!(stdout.contains("fleet wire (measured)"), "stdout: {stdout}");
+    let report = pjson::parse(stdout.trim()).expect("center-a --json output must parse");
+    assert_eq!(report.get("schema").and_then(|v| v.as_str()), Some("privlogit-report/v1"));
+    assert_eq!(report.get("converged").and_then(|v| v.as_bool()), Some(true), "{stdout}");
 
     // center-b was started with --once: it must exit on its own.
     let status = center_b.0.wait().expect("center-b wait");
     assert!(status.success(), "center-b --once must exit cleanly: {status:?}");
+    // Nodes flush their traces when the fleet's Shutdown ends the
+    // session; wait for that before killing them.
+    for path in &node_traces {
+        wait_for_shutdown_span(path);
+    }
+    drop(nodes);
+
+    let mut traces = node_traces;
+    traces.push(b_trace);
+    traces.push(a_trace);
+    TracedRun { report, traces }
+}
+
+/// The full CLI topology as five real OS processes, traced end to end,
+/// run twice with different seeds. Checks the `--json` report schema,
+/// that every process wrote a valid `privlogit-trace/v1` file, that the
+/// merged timeline joins both ends of every wire on (session, tag,
+/// round) with no cross-session bleed, that span counts match the
+/// reported iteration count, and that the `privlogit trace` subcommand
+/// merges the files into a timeline whose center-a rollup reproduces
+/// the `CostLedger` wire totals exactly.
+#[test]
+fn five_process_cli_topology_end_to_end() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_privlogit") else {
+        eprintln!("skipping: privlogit binary not built for this test harness");
+        return;
+    };
+    let dir = trace_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let run_a = run_traced_topology(bin, &dir, "a", 42);
+    let run_b = run_traced_topology(bin, &dir, "b", 43);
+
+    let ledger = run_a.report.get("ledger").expect("report carries the ledger");
+    let fleet_sent = ledger.get("fleet_bytes_sent").unwrap().as_u64().unwrap();
+    let fleet_recv = ledger.get("fleet_bytes_recv").unwrap().as_u64().unwrap();
+    assert!(fleet_sent > 0 && fleet_recv > 0);
+    let iterations = run_a.report.get("iterations").unwrap().as_u64().unwrap();
+    // The final convergence-only pass runs a node round and emits a
+    // proto.iter span before breaking: rounds = iterations + 1.
+    let expected_rounds = iterations + 1;
+
+    let parse = |p: &PathBuf| -> TraceFile {
+        let text = std::fs::read_to_string(p).unwrap_or_else(|e| panic!("read {p:?}: {e}"));
+        parse_trace(&text).unwrap_or_else(|e| panic!("{p:?}: {e}"))
+    };
+    let files_a: Vec<TraceFile> = run_a.traces.iter().map(parse).collect();
+    let files_b: Vec<TraceFile> = run_b.traces.iter().map(parse).collect();
+    for (j, f) in files_a.iter().enumerate().take(3) {
+        assert_eq!(f.proc, format!("node:{j}"));
+    }
+    assert_eq!(files_a[3].proc, "center-b");
+    assert_eq!(files_a[4].proc, "center-a");
+
+    // center-a's fleet.round spans partition the fleet wire: their byte
+    // rollup must reproduce the ledger totals exactly (the Shutdown on
+    // drop is deliberately outside both).
+    let ca = &files_a[4];
+    let rollup = |key: fn(&TraceEvent) -> u64| -> u64 {
+        ca.events.iter().filter(|e| e.span == "fleet.round").map(key).sum()
+    };
+    assert_eq!(rollup(|e| e.bytes_sent), fleet_sent, "fleet.round sent-bytes rollup");
+    assert_eq!(rollup(|e| e.bytes_recv), fleet_recv, "fleet.round recv-bytes rollup");
+
+    // Per-tag frame counts: one fleet.rpc span per frame sent under a
+    // request tag (the connect-time MetaReq predates the rpc spans).
+    let flows = ledger.get("fleet_tag_flows").unwrap().as_arr().unwrap();
+    assert!(!flows.is_empty());
+    for flow in flows {
+        let tag = flow.get("tag").unwrap().as_u64().unwrap() as u8;
+        if tag == wire::TAG_META_REQ {
+            continue;
+        }
+        let sent_frames = flow.get("sent_frames").unwrap().as_u64().unwrap();
+        let rpcs = ca
+            .events
+            .iter()
+            .filter(|e| e.span == "fleet.rpc" && e.tag == Some(tag))
+            .count() as u64;
+        assert_eq!(rpcs, sent_frames, "rpc span count vs ledger frames for tag {tag:#04x}");
+    }
+
+    // Span counts track the iteration count on both sides of the wire.
+    let proto_iters = ca.events.iter().filter(|e| e.span == "proto.iter").count() as u64;
+    assert_eq!(proto_iters, expected_rounds, "proto.iter spans");
+    for nf in &files_a[0..3] {
+        let steps = nf
+            .events
+            .iter()
+            .filter(|e| e.span == "node.req" && e.tag == Some(wire::TAG_STEP_REQ))
+            .count() as u64;
+        assert_eq!(steps, expected_rounds, "StepReq spans on {}", nf.proc);
+    }
+
+    // Merged timeline across BOTH runs: the two seeds must produce two
+    // distinct session ids, and within a session every (tag, round)
+    // joins at most one span per (process, span name) — no duplicate
+    // rounds, no cross-session bleed. fleet.rpc is the per-node fan-out
+    // detail (three per round by design) and is skipped.
+    let all: Vec<TraceFile> = files_a.iter().chain(files_b.iter()).cloned().collect();
+    let timeline = Timeline::merge(all);
+    let sessions: BTreeSet<&str> = timeline
+        .events
+        .iter()
+        .map(|e| e.session.as_str())
+        .filter(|s| *s != "-")
+        .collect();
+    assert_eq!(sessions.len(), 2, "two seeds → two session ids: {sessions:?}");
+    let fleet_tags = [
+        wire::TAG_SET_KEY,
+        wire::TAG_GRAM_REQ,
+        wire::TAG_SET_HINV,
+        wire::TAG_STEP_REQ,
+    ];
+    for ((session, tag, round), ends) in timeline.per_round() {
+        if session == "-" {
+            continue;
+        }
+        let mut seen = BTreeSet::new();
+        for e in ends.iter().filter(|e| e.span != "fleet.rpc") {
+            assert!(
+                seen.insert((e.proc.clone(), e.span.clone())),
+                "duplicate {}:{} in round ({session}, {tag:#04x}, {round})",
+                e.proc,
+                e.span
+            );
+        }
+        if fleet_tags.contains(&tag) {
+            let node_ends = ends.iter().filter(|e| e.span == "node.req").count();
+            assert_eq!(node_ends, 3, "all nodes served ({session}, {tag:#04x}, {round})");
+            assert!(ends.iter().any(|e| e.span == "fleet.round"), "center end present");
+        }
+        if [wire::TAG_AGGREGATE, wire::TAG_BLIND, wire::TAG_GC_EXEC].contains(&tag) {
+            assert!(ends.iter().any(|e| e.proc == "center-a"), "garbler end present");
+            assert!(
+                ends.iter().any(|e| e.proc == "center-b" && e.span == "peer.req"),
+                "evaluator end present for ({session}, {tag:#04x}, {round})"
+            );
+        }
+    }
+
+    // The `privlogit trace` subcommand over all ten files.
+    let paths: Vec<String> = run_a
+        .traces
+        .iter()
+        .chain(run_b.traces.iter())
+        .map(|p| p.to_str().unwrap().to_string())
+        .collect();
+    let out = Command::new(bin).arg("trace").arg("--validate").args(&paths).output().unwrap();
+    assert!(out.status.success(), "trace --validate: {:?}", out);
+    let validated = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(validated.lines().filter(|l| l.contains(": ok (")).count(), 10, "{validated}");
+
+    let out = Command::new(bin).arg("trace").args(&paths).output().unwrap();
+    assert!(out.status.success());
+    let human = String::from_utf8_lossy(&out.stdout);
+    assert!(human.contains("merged timeline"), "{human}");
+    assert!(human.contains("StepReq"), "{human}");
+
+    // --json over run A only: schema + the same ledger cross-check the
+    // library rollup passed, now through the CLI end to end.
+    let run_a_paths: Vec<String> =
+        run_a.traces.iter().map(|p| p.to_str().unwrap().to_string()).collect();
+    let out = Command::new(bin).arg("trace").arg("--json").args(&run_a_paths).output().unwrap();
+    assert!(out.status.success());
+    let doc = pjson::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("privlogit-timeline/v1"));
+    let phase = doc
+        .get("phases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|p| {
+            p.get("proc").and_then(|v| v.as_str()) == Some("center-a")
+                && p.get("span").and_then(|v| v.as_str()) == Some("fleet.round")
+        })
+        .expect("center-a fleet.round phase in timeline JSON");
+    assert_eq!(phase.get("bytes_sent").unwrap().as_u64(), Some(fleet_sent));
+    assert_eq!(phase.get("bytes_recv").unwrap().as_u64(), Some(fleet_recv));
 }
 
 /// A rogue client speaking a different wire version is rejected before

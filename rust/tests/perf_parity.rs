@@ -181,3 +181,80 @@ fn node_server_parallel_replies_byte_identical() {
     assert_eq!(part_1, part_n, "step partials must be byte-identical");
     assert_eq!(loglik_1, loglik_n, "loglik ciphertexts must be byte-identical");
 }
+
+/// Tracing is observational only: with the JSONL span exporter
+/// force-enabled, a parallel node session still produces replies
+/// byte-identical to the single-threaded session (tracing never draws
+/// randomness or reorders work), and the emitted trace file validates
+/// against the `privlogit-trace/v1` schema.
+#[test]
+fn tracing_preserves_byte_identical_parallelism() {
+    let path = std::env::temp_dir()
+        .join(format!("privlogit_parity_trace_{}.jsonl", std::process::id()));
+    assert!(
+        privlogit::obs::install_trace(path.to_str().unwrap()),
+        "tracing must be on for this test"
+    );
+
+    let (kp, mut rng) = keypair(46);
+    let p = 4;
+    let data = synthesize("traced", 150, p, 78);
+    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f };
+    let hinv_cts: Vec<BigUint> = (0..tri_len(p))
+        .map(|i| {
+            kp.pk
+                .encrypt(&BigUint::from_u64(200 + i as u64), &mut ChaChaSource(&mut rng))
+                .0
+        })
+        .collect();
+    let beta = vec![0.05, -0.1, 0.2, 0.0];
+    let scale = 1.0 / 150.0;
+
+    let run = |threads: usize| -> (Vec<Vec<BigUint>>, Vec<BigUint>, Vec<BigUint>) {
+        let mut server = NodeServer::bind("127.0.0.1:0", data.clone())
+            .unwrap()
+            .with_seed(101)
+            .with_threads(threads);
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve_once().unwrap());
+        let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+        fleet.install_key(&key).unwrap();
+        let stats: Vec<Vec<BigUint>> = fleet
+            .stats(&beta, scale)
+            .unwrap()
+            .into_iter()
+            .map(|r| match r.payload {
+                NodePayload::Enc(e) => e.cts,
+                NodePayload::Plain { .. } => panic!("expected ciphertexts"),
+            })
+            .collect();
+        fleet
+            .install_hinv(&privlogit::coordinator::fleet::EncStat {
+                scale: FMT.f,
+                cts: hinv_cts.clone(),
+            })
+            .unwrap();
+        let step = fleet.step(&beta, scale).unwrap().remove(0);
+        drop(fleet);
+        handle.join().unwrap();
+        (stats, step.part.cts, step.loglik.cts)
+    };
+
+    let (stats_1, part_1, loglik_1) = run(1);
+    let (stats_n, part_n, loglik_n) = run(4);
+    assert_eq!(stats_1, stats_n, "statistic replies must be byte-identical under tracing");
+    assert_eq!(part_1, part_n, "step partials must be byte-identical under tracing");
+    assert_eq!(loglik_1, loglik_n, "loglik ciphertexts must be byte-identical under tracing");
+
+    // The trace this run emitted is valid `privlogit-trace/v1` and
+    // carries both wire ends (center fleet.round, node node.req) plus
+    // the multi-worker pool span from the threads=4 session.
+    privlogit::obs::flush();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let trace = privlogit::obs::timeline::parse_trace(&text)
+        .unwrap_or_else(|e| panic!("trace must validate: {e}"));
+    assert!(trace.events.iter().any(|e| e.span == "fleet.round"), "center spans present");
+    assert!(trace.events.iter().any(|e| e.span == "node.req"), "node spans present");
+    assert!(trace.events.iter().any(|e| e.span == "pool.par_map"), "parallel section traced");
+    let _ = std::fs::remove_file(&path);
+}
