@@ -46,6 +46,16 @@ pub struct Config {
     pub json: bool,
     /// RNG seed.
     pub seed: u64,
+    /// `privlogit center`: per-round fleet socket deadline in seconds.
+    /// Unset means "use `PRIVLOGIT_ROUND_TIMEOUT` or the 120 s default";
+    /// a non-positive value disables deadlines entirely.
+    pub round_timeout: Option<f64>,
+    /// `privlogit center`: minimum node replies for a fleet round to
+    /// proceed (failed nodes are excluded for the session). `0` = every
+    /// live node must reply (strict all-or-abort).
+    pub quorum: usize,
+    /// `privlogit center`: per-address connect retry budget in seconds.
+    pub connect_timeout: f64,
 }
 
 impl Default for Config {
@@ -68,6 +78,9 @@ impl Default for Config {
             once: false,
             json: false,
             seed: 42,
+            round_timeout: None,
+            quorum: 0,
+            connect_timeout: 10.0,
         }
     }
 }
@@ -94,6 +107,9 @@ impl Config {
             "once" => self.once = value.parse()?,
             "json" => self.json = value.parse()?,
             "seed" => self.seed = value.parse()?,
+            "round_timeout" => self.round_timeout = Some(value.parse()?),
+            "quorum" => self.quorum = value.parse()?,
+            "connect_timeout" => self.connect_timeout = value.parse()?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -217,6 +233,26 @@ mod tests {
         assert!(!Config::default().once);
         assert!(!Config::default().json);
         assert!(Config::default().peer.is_empty());
+    }
+
+    #[test]
+    fn fault_tolerance_keys() {
+        let mut c = Config::default();
+        assert_eq!(c.round_timeout, None);
+        assert_eq!(c.quorum, 0);
+        assert_eq!(c.connect_timeout, 10.0);
+        let args: Vec<String> =
+            ["--round-timeout", "2.5", "--quorum", "13", "--connect-timeout", "4"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        c.parse_args(&args).unwrap();
+        assert_eq!(c.round_timeout, Some(2.5));
+        assert_eq!(c.quorum, 13);
+        assert_eq!(c.connect_timeout, 4.0);
+        // A non-positive round_timeout is accepted (it disables deadlines).
+        c.set("round_timeout", "0").unwrap();
+        assert_eq!(c.round_timeout, Some(0.0));
     }
 
     #[test]

@@ -88,12 +88,26 @@ pub struct NodeReply {
     pub payload: NodePayload,
     /// Node compute seconds (ledger attribution).
     pub secs: f64,
+    /// 0-based index of the organization that produced this reply.
+    /// Replies can no longer be attributed by *position* once a fleet
+    /// supports quorum rounds: after an exclusion the reply vector is a
+    /// subset of the original membership, so ledger and error
+    /// attribution go through this field.
+    pub org: usize,
 }
 
 impl NodeReply {
-    /// Construct a plaintext reply (the in-process fleets' form).
+    /// Construct a plaintext reply (the in-process fleets' form),
+    /// attributed to org 0 — fleets re-attribute with
+    /// [`NodeReply::with_org`].
     pub fn plain(values: Vec<f64>, loglik: f64, secs: f64) -> NodeReply {
-        NodeReply { payload: NodePayload::Plain { values, loglik }, secs }
+        NodeReply { payload: NodePayload::Plain { values, loglik }, secs, org: 0 }
+    }
+
+    /// Attribute this reply to organization `org`.
+    pub fn with_org(mut self, org: usize) -> NodeReply {
+        self.org = org;
+        self
     }
 
     /// Plaintext values. Panics on an encrypted payload — for tests and
@@ -125,6 +139,9 @@ pub struct StepReply {
     pub loglik: EncStat,
     /// Node compute seconds (stats + apply + encryption).
     pub secs: f64,
+    /// 0-based index of the organization that produced this reply (see
+    /// [`NodeReply::org`]).
+    pub org: usize,
 }
 
 /// Network traffic measured by a fleet, from the Center's perspective.
@@ -192,6 +209,11 @@ pub trait Fleet {
     fn step(&mut self, _beta: &[f64], _scale: f64) -> anyhow::Result<Vec<StepReply>> {
         anyhow::bail!("this fleet does not support node-side step rounds")
     }
+    /// Number of nodes this fleet has excluded after missed rounds
+    /// (quorum mode); zero for fleets without fault tolerance.
+    fn excluded_count(&self) -> u64 {
+        0
+    }
 }
 
 /// Sequential fleet over one shared engine.
@@ -226,10 +248,11 @@ impl Fleet for LocalFleet {
         Ok(self
             .parts
             .iter()
-            .map(|d| {
+            .enumerate()
+            .map(|(j, d)| {
                 let t0 = Instant::now();
                 let (g, l) = self.engine.stats(d, beta, scale);
-                NodeReply::plain(g, l, t0.elapsed().as_secs_f64())
+                NodeReply::plain(g, l, t0.elapsed().as_secs_f64()).with_org(j)
             })
             .collect())
     }
@@ -238,10 +261,11 @@ impl Fleet for LocalFleet {
         Ok(self
             .parts
             .iter()
-            .map(|d| {
+            .enumerate()
+            .map(|(j, d)| {
                 let t0 = Instant::now();
                 let h = self.engine.gram_quarter(d, scale);
-                NodeReply::plain(pack_tri(&h), 0.0, t0.elapsed().as_secs_f64())
+                NodeReply::plain(pack_tri(&h), 0.0, t0.elapsed().as_secs_f64()).with_org(j)
             })
             .collect())
     }
@@ -250,10 +274,11 @@ impl Fleet for LocalFleet {
         Ok(self
             .parts
             .iter()
-            .map(|d| {
+            .enumerate()
+            .map(|(j, d)| {
                 let t0 = Instant::now();
                 let h = self.engine.hessian(d, beta, scale);
-                NodeReply::plain(pack_tri(&h), 0.0, t0.elapsed().as_secs_f64())
+                NodeReply::plain(pack_tri(&h), 0.0, t0.elapsed().as_secs_f64()).with_org(j)
             })
             .collect())
     }
@@ -317,6 +342,7 @@ impl ThreadedFleet {
             .map(|(j, w)| {
                 w.reply
                     .recv()
+                    .map(|r| r.with_org(j))
                     .map_err(|_| anyhow::anyhow!("node worker {j} died mid-round"))
             })
             .collect()

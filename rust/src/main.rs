@@ -33,7 +33,7 @@ use privlogit::data::{dataset_by_name, WORKLOADS};
 use privlogit::gc::word::FixedFmt;
 use privlogit::metrics::{beta_preview, render_report, render_report_json};
 use privlogit::mpc::PeerGcServer;
-use privlogit::net::{NodeServer, RemoteFleet};
+use privlogit::net::{FleetOptions, NodeServer, RemoteFleet};
 use privlogit::obs;
 use privlogit::obs::timeline::{parse_trace, Timeline};
 use privlogit::protocols::{Protocol, ProtocolConfig, RunReport};
@@ -50,6 +50,7 @@ fn usage() -> ! {
          privlogit center-b --listen ADDR [--once]\n\
          privlogit center-a --peer ADDR --nodes ADDR1,ADDR2,... [run flags]\n\
          privlogit center   --nodes ADDR1,ADDR2,... [run flags]\n\
+         fault tolerance: [--round-timeout SECS] [--quorum Q] [--connect-timeout SECS]\n\
          \n\
          observability (docs/ARCHITECTURE.md §Observability):\n\
          PRIVLOGIT_LOG=warn|info|debug   stderr log level (any subcommand)\n\
@@ -178,7 +179,17 @@ fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
     let protocol: Protocol = cfg.protocol.parse()?;
     let backend: Backend = cfg.backend.parse()?;
     let pcfg = ProtocolConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters };
-    let mut fleet = RemoteFleet::connect(&addrs)?;
+    // Fault-tolerance knobs: environment first, explicit config on top.
+    let mut opts = FleetOptions::from_env();
+    if let Some(secs) = cfg.round_timeout {
+        opts.round_timeout = (secs > 0.0 && secs.is_finite())
+            .then(|| std::time::Duration::from_secs_f64(secs));
+    }
+    opts.quorum = cfg.quorum;
+    if cfg.connect_timeout > 0.0 && cfg.connect_timeout.is_finite() {
+        opts.connect_timeout = std::time::Duration::from_secs_f64(cfg.connect_timeout);
+    }
+    let mut fleet = RemoteFleet::connect_with(&addrs, opts)?;
     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         run_protocol(
             protocol,

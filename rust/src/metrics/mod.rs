@@ -96,6 +96,12 @@ pub fn render_report(r: &RunReport) -> String {
             mib(l.fleet_bytes_recv),
         ));
     }
+    if l.excluded_nodes > 0 {
+        s.push_str(&format!(
+            "  exclusions: {} node(s) dropped after missed rounds (quorum mode)\n",
+            l.excluded_nodes
+        ));
+    }
     tag_table(&mut s, "fleet wire", &l.fleet_tag_flows);
     tag_table(&mut s, "center peer control frames", &l.peer_tag_flows);
     s
@@ -136,6 +142,7 @@ pub fn render_report_json(r: &RunReport) -> String {
         .u64("fleet_bytes_recv", l.fleet_bytes_recv)
         .push("fleet_tag_flows", flows_json(&l.fleet_tag_flows))
         .push("peer_tag_flows", flows_json(&l.peer_tag_flows))
+        .u64("excluded_nodes", l.excluded_nodes)
         .u64("rounds", l.rounds)
         .u64("paillier_encs", l.paillier_encs)
         .u64("paillier_adds", l.paillier_adds)

@@ -285,9 +285,17 @@ pub struct PeerGcClient {
 impl PeerGcClient {
     /// Connect to a `privlogit center-b` at `addr` (retrying for up to
     /// [`PEER_CONNECT_TIMEOUT`]) and run the IKNP base-OT phase.
+    ///
+    /// The GC link has *no default deadline* — long silent gaps while
+    /// the garbler streams gate material are legitimate — but an
+    /// explicit `PRIVLOGIT_ROUND_TIMEOUT` applies here too, so an
+    /// operator can bound a wedged peer.
     pub fn connect(addr: &str, seed: u64) -> io::Result<PeerGcClient> {
-        let transport =
+        let mut transport =
             TcpTransport::connect_retry(addr, wire::ROLE_PEER, PEER_CONNECT_TIMEOUT)?;
+        if let Some(deadline) = crate::net::tcp::env_deadline() {
+            transport.set_deadline(Some(deadline))?;
+        }
         let mut chan = tcp_channel(transport);
         let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x5e55_1011);
         let ot_send = OtSender::setup(&mut chan, &mut rng);
@@ -559,7 +567,10 @@ impl PeerGcServer {
     /// Accept one center-a connection and serve it to completion.
     pub fn serve_once(&mut self) -> io::Result<()> {
         let (stream, _) = self.listener.accept()?;
-        let transport = TcpTransport::accept(stream, wire::ROLE_PEER)?;
+        let mut transport = TcpTransport::accept(stream, wire::ROLE_PEER)?;
+        if let Some(deadline) = crate::net::tcp::env_deadline() {
+            transport.set_deadline(Some(deadline))?;
+        }
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let session = serve_session(tcp_channel(transport), self.seed);
         obs::flush();
@@ -575,6 +586,12 @@ impl PeerGcServer {
             self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
             let seed = self.seed;
             let session = TcpTransport::accept(stream, wire::ROLE_PEER)
+                .and_then(|mut t| {
+                    if let Some(deadline) = crate::net::tcp::env_deadline() {
+                        t.set_deadline(Some(deadline))?;
+                    }
+                    Ok(t)
+                })
                 .map(tcp_channel)
                 .and_then(|chan| serve_session(chan, seed));
             match session {

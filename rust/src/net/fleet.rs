@@ -16,16 +16,26 @@
 //! per-connection wire-tag census ([`RemoteFleet::reply_tag_counts`])
 //! lets tests *prove* that no plaintext statistic reply ever crossed.
 //!
-//! A node that fails mid-protocol surfaces as a clean `Err` from the
-//! round — the [`Fleet`] contract threads `Result` all the way to the
-//! CLI, so `privlogit center` exits with a message naming the node
-//! instead of panicking.
+//! **Fault tolerance.** Fleet rounds survive slow, dead and
+//! byzantine-slow nodes ([`FleetOptions`]): every connection carries a
+//! per-round socket deadline, connect attempts retry with capped
+//! exponential backoff, and — when a `quorum` below the fleet size is
+//! configured — a round succeeds once at least that many nodes reply.
+//! A node that misses a round is *excluded for the rest of the session*
+//! ([`ExcludedNode`]; its frame stream may be desynchronized and its
+//! per-session encryption state cannot be replayed — re-admission means
+//! a fresh session) and `n_total` is recomputed from the live
+//! membership. Below quorum the round fails with an error naming every
+//! dead node. The `fleet.round` span records `replied`/`quorum`/
+//! `excluded` and each per-node `fleet.rpc` span records
+//! `outcome=ok|timeout|error`, so the merged timeline shows exactly
+//! which org straggled in which round.
 
 use std::collections::BTreeMap;
 use std::io;
 use std::time::Duration;
 
-use super::tcp::TcpTransport;
+use super::tcp::{self, TcpTransport};
 use super::wire::{self, WireMsg};
 use super::Transport;
 use crate::coordinator::fleet::{
@@ -36,7 +46,13 @@ use crate::obs::{self, TagFlow};
 /// One persistent connection to a node server, with wire counters and a
 /// census of reply tag bytes (used to assert the ciphertext-only wire).
 struct NodeConn {
+    /// 0-based org index at connect time (stable across exclusions, so
+    /// ledger attribution keeps naming the same organization).
+    index: usize,
     addr: String,
+    /// Samples this node's shard holds (from its `Meta` reply) — what
+    /// `n_total` is recomputed from when membership shrinks.
+    node_n: usize,
     transport: TcpTransport,
     bytes_sent: u64,
     bytes_recv: u64,
@@ -54,6 +70,22 @@ struct NodeConn {
 const FRAME_OVERHEAD: u64 = 8;
 
 impl NodeConn {
+    fn new(index: usize, addr: String, transport: TcpTransport) -> NodeConn {
+        NodeConn {
+            index,
+            addr,
+            node_n: 0,
+            transport,
+            bytes_sent: 0,
+            bytes_recv: 0,
+            msgs_sent: 0,
+            msgs_recv: 0,
+            reply_tags: BTreeMap::new(),
+            tag_flows: BTreeMap::new(),
+            require_enc: false,
+        }
+    }
+
     fn send(&mut self, req: &WireMsg) -> io::Result<()> {
         let body = req.encode();
         let framed = body.len() as u64 + FRAME_OVERHEAD;
@@ -95,12 +127,16 @@ impl NodeConn {
                 io::ErrorKind::InvalidData,
                 "node downgraded to a plaintext statistic after the key install",
             )),
-            WireMsg::NodeReply { values, loglik, secs } => {
-                Ok(NodeReply { payload: NodePayload::Plain { values, loglik }, secs })
-            }
-            WireMsg::Ciphertexts { scale, secs, cts } => {
-                Ok(NodeReply { payload: NodePayload::Enc(EncStat { scale, cts }), secs })
-            }
+            WireMsg::NodeReply { values, loglik, secs } => Ok(NodeReply {
+                payload: NodePayload::Plain { values, loglik },
+                secs,
+                org: self.index,
+            }),
+            WireMsg::Ciphertexts { scale, secs, cts } => Ok(NodeReply {
+                payload: NodePayload::Enc(EncStat { scale, cts }),
+                secs,
+                org: self.index,
+            }),
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("node sent {other:?} where a statistic reply was expected"),
@@ -134,7 +170,94 @@ impl NodeConn {
         self.send(req)?;
         let (part, secs) = self.expect_ciphertexts()?;
         let (loglik, _) = self.expect_ciphertexts()?;
-        Ok(StepReply { part, loglik, secs })
+        Ok(StepReply { part, loglik, secs, org: self.index })
+    }
+}
+
+/// How long `connect` keeps retrying each node address before giving up
+/// (covers start-up ordering between node and center processes).
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default per-round socket deadline: generous enough for a
+/// 2048-bit-modulus encryption round on slow hardware, small enough
+/// that a hung org cannot stall a deployment forever.
+pub const DEFAULT_ROUND_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Fault-tolerance knobs for a [`RemoteFleet`] (config keys
+/// `round_timeout` / `quorum` / `connect_timeout`, environment
+/// `PRIVLOGIT_ROUND_TIMEOUT`; see docs/DEPLOY.md §Failure behavior).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetOptions {
+    /// Per-round socket deadline applied to every fleet connection: a
+    /// read or write stalled this long fails the node's round instead
+    /// of blocking the center forever. `None` disables deadlines (the
+    /// pre-v4 behavior).
+    pub round_timeout: Option<Duration>,
+    /// Minimum number of node replies for a round to succeed. `0`
+    /// (default) means *every* live node must reply — the strict
+    /// all-or-abort behavior. A value `q ≥ 1` lets rounds proceed with
+    /// any `q` of the live nodes, excluding the others.
+    pub quorum: usize,
+    /// How long connect-time retries keep trying each address.
+    pub connect_timeout: Duration,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            round_timeout: Some(DEFAULT_ROUND_TIMEOUT),
+            quorum: 0,
+            connect_timeout: CONNECT_TIMEOUT,
+        }
+    }
+}
+
+impl FleetOptions {
+    /// Defaults with `PRIVLOGIT_ROUND_TIMEOUT` applied (seconds, `f64`;
+    /// a non-positive value disables deadlines). Explicit config keys
+    /// take precedence over the environment — the CLI builds its
+    /// options from config on top of this.
+    pub fn from_env() -> FleetOptions {
+        let mut opts = FleetOptions::default();
+        if std::env::var("PRIVLOGIT_ROUND_TIMEOUT").is_ok() {
+            opts.round_timeout = tcp::env_deadline();
+        }
+        opts
+    }
+}
+
+/// Record of a node excluded from the fleet after missing a round while
+/// the remaining nodes met quorum. Exclusion lasts for the rest of the
+/// session: the connection's frame stream may be desynchronized
+/// mid-frame, and the node's per-session encryption state cannot be
+/// rebuilt without replaying its randomness stream — re-admission
+/// requires a fresh session (the [`WireMsg::Ping`] probe lets an
+/// operator confirm the node is healthy again before starting one).
+#[derive(Clone, Debug)]
+pub struct ExcludedNode {
+    /// The node server's address.
+    pub addr: String,
+    /// 0-based org index at connect time.
+    pub org: usize,
+    /// Wire tag of the round the node missed.
+    pub tag: u8,
+    /// Per-tag round index it missed.
+    pub round: u64,
+    /// Failure class: `"timeout"` (deadline fired) or `"error"`
+    /// (disconnect, protocol violation) — same classification the
+    /// `fleet.rpc` trace span carries as `outcome`.
+    pub outcome: &'static str,
+    /// The underlying error text.
+    pub error: String,
+}
+
+/// Classify a node failure for traces and exclusion records: deadline
+/// expiries are `"timeout"`, everything else (EOF, CRC, protocol
+/// violations) is `"error"`.
+fn outcome_of(e: &io::Error) -> &'static str {
+    match e.kind() {
+        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => "timeout",
+        _ => "error",
     }
 }
 
@@ -153,58 +276,61 @@ pub struct RemoteFleet {
     /// independently, so cross-process traces join on (session, round,
     /// tag) without any wire change.
     round_ctr: BTreeMap<u8, u64>,
+    opts: FleetOptions,
+    excluded: Vec<ExcludedNode>,
 }
 
-/// How long `connect` keeps retrying each node address before giving up
-/// (covers start-up ordering between node and center processes).
-pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
-
 impl RemoteFleet {
-    /// Connect to every node server, retrying each address for up to
-    /// [`CONNECT_TIMEOUT`], and fetch shard metadata. All shards must
-    /// agree on dimensionality.
+    /// Connect to every node server with default fault-tolerance
+    /// options (plus `PRIVLOGIT_ROUND_TIMEOUT` from the environment);
+    /// see [`RemoteFleet::connect_with`].
     pub fn connect(addrs: &[String]) -> anyhow::Result<RemoteFleet> {
+        RemoteFleet::connect_with(addrs, FleetOptions::from_env())
+    }
+
+    /// Connect to every node server concurrently, retrying each address
+    /// with capped exponential backoff for up to
+    /// [`FleetOptions::connect_timeout`], and fetch shard metadata. All
+    /// shards must agree on dimensionality. Connect is strict — quorum
+    /// applies to *rounds*, so a fleet never starts without every
+    /// configured node — and when addresses stay unreachable the error
+    /// names all of them, not just the first.
+    pub fn connect_with(addrs: &[String], opts: FleetOptions) -> anyhow::Result<RemoteFleet> {
         anyhow::ensure!(!addrs.is_empty(), "remote fleet needs at least one node address");
+        anyhow::ensure!(
+            opts.quorum <= addrs.len(),
+            "quorum {} exceeds the fleet size {}",
+            opts.quorum,
+            addrs.len()
+        );
         let mut sp = obs::span("fleet.round")
             .session(0)
             .tag(wire::TAG_META_REQ)
             .round(0)
             .u64("nodes", addrs.len() as u64);
+        let opts_ref = &opts;
+        let results: Vec<anyhow::Result<(NodeConn, usize, String)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = addrs
+                .iter()
+                .enumerate()
+                .map(|(j, addr)| s.spawn(move || connect_node(j, addr, opts_ref)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("fleet connect worker panicked")))
+                })
+                .collect()
+        });
         let mut conns = Vec::with_capacity(addrs.len());
-        let mut n_total = 0usize;
         let mut p = 0usize;
         let mut name = String::new();
-        for (j, addr) in addrs.iter().enumerate() {
-            let transport =
-                TcpTransport::connect_retry(addr, wire::ROLE_CENTER, CONNECT_TIMEOUT)?;
-            let mut conn = NodeConn {
-                addr: addr.clone(),
-                transport,
-                bytes_sent: 0,
-                bytes_recv: 0,
-                msgs_sent: 0,
-                msgs_recv: 0,
-                reply_tags: BTreeMap::new(),
-                tag_flows: BTreeMap::new(),
-                require_enc: false,
-            };
-            match conn.exchange(&WireMsg::MetaReq)? {
-                WireMsg::Meta { n, p: node_p, name: node_name } => {
-                    // Node metadata is wire-controlled: bound it before
-                    // it drives allocations or arithmetic.
-                    let node_p = node_p as usize;
-                    anyhow::ensure!(
-                        node_p >= 1,
-                        "node {addr} reports a degenerate dimensionality p={node_p}"
-                    );
-                    let node_n = usize::try_from(n).map_err(|_| {
-                        anyhow::anyhow!("node {addr} reports n={n}, beyond this platform")
-                    })?;
-                    anyhow::ensure!(
-                        node_n >= 1,
-                        "node {addr} reports an empty shard (n=0)"
-                    );
-                    if j == 0 {
+        let mut failures: Vec<String> = Vec::new();
+        for (addr, result) in addrs.iter().zip(results) {
+            match result {
+                Ok((conn, node_p, node_name)) => {
+                    if conns.is_empty() {
                         p = node_p;
                         name = node_name;
                     } else {
@@ -213,13 +339,24 @@ impl RemoteFleet {
                             "node {addr} serves p={node_p}, fleet expects p={p}"
                         );
                     }
-                    n_total = n_total.checked_add(node_n).ok_or_else(|| {
-                        anyhow::anyhow!("fleet sample total overflows adding node {addr}")
-                    })?;
+                    conns.push(conn);
                 }
-                other => anyhow::bail!("node {addr} answered MetaReq with {other:?}"),
+                Err(e) => failures.push(e.to_string()),
             }
-            conns.push(conn);
+        }
+        if !failures.is_empty() {
+            anyhow::bail!(
+                "cannot connect the node fleet — {} of {} addresses failed: {}",
+                failures.len(),
+                addrs.len(),
+                failures.join("; ")
+            );
+        }
+        let mut n_total = 0usize;
+        for c in &conns {
+            n_total = n_total.checked_add(c.node_n).ok_or_else(|| {
+                anyhow::anyhow!("fleet sample total overflows adding node {}", c.addr)
+            })?;
         }
         if sp.active() {
             sp.record_u64("bytes_sent", conns.iter().map(|c| c.bytes_sent).sum());
@@ -234,7 +371,34 @@ impl RemoteFleet {
             encrypted: false,
             session: 0,
             round_ctr: BTreeMap::new(),
+            opts,
+            excluded: Vec::new(),
         })
+    }
+
+    /// Nodes excluded from rounds so far this session, in exclusion
+    /// order.
+    pub fn excluded(&self) -> &[ExcludedNode] {
+        &self.excluded
+    }
+
+    /// Probe every live node with a [`WireMsg::Ping`] as one traced
+    /// round. Nodes that fail to `Ack` within the deadline are excluded
+    /// under the same quorum rules as a statistic round; returns the
+    /// live connection count after the probe.
+    pub fn ping(&mut self) -> anyhow::Result<usize> {
+        self.traced_round(wire::TAG_PING, |c| c.expect_ack(&WireMsg::Ping))?;
+        Ok(self.conns.len())
+    }
+
+    /// The round quorum currently in force: the configured `quorum`, or
+    /// the full live membership when unset (strict mode).
+    fn effective_quorum(&self) -> usize {
+        if self.opts.quorum == 0 {
+            self.conns.len()
+        } else {
+            self.opts.quorum
+        }
     }
 
     /// Next round index for `tag` within this session (counted on both
@@ -248,8 +412,17 @@ impl RemoteFleet {
     }
 
     /// Run one broadcast round under a `fleet.round` span carrying the
-    /// (session, round, tag) join key and framed byte deltas, with one
-    /// `fleet.rpc` child span per node measuring request→reply latency.
+    /// (session, round, tag) join key, quorum bookkeeping
+    /// (`replied`/`quorum`/`excluded`) and framed byte deltas, with one
+    /// `fleet.rpc` child span per node measuring request→reply latency
+    /// and recording `outcome=ok|timeout|error`.
+    ///
+    /// Quorum semantics: with every live node replying the round is the
+    /// plain barrier it always was. When some fail, the round still
+    /// succeeds if at least [`Self::effective_quorum`] replied — the
+    /// failed nodes are excluded from the session and `n_total` shrinks
+    /// to the live membership — otherwise it fails with an error naming
+    /// every failed node.
     fn traced_round<T: Send>(
         &mut self,
         tag: u8,
@@ -257,13 +430,16 @@ impl RemoteFleet {
     ) -> anyhow::Result<Vec<T>> {
         let session = self.session;
         let round = self.next_round(tag);
+        let quorum = self.effective_quorum();
+        let total = self.conns.len();
         let mut sp = obs::span("fleet.round")
             .session(session)
             .tag(tag)
             .round(round)
-            .u64("nodes", self.conns.len() as u64);
+            .u64("nodes", total as u64)
+            .u64("quorum", quorum as u64);
         let before = sp.active().then(|| self.net_stats());
-        let out = self.round_with(|c| {
+        let results = self.round_with(|c| {
             let mut rpc = obs::span("fleet.rpc")
                 .session(session)
                 .tag(tag)
@@ -274,49 +450,91 @@ impl RemoteFleet {
             if rpc.active() {
                 rpc.record_u64("bytes_sent", c.bytes_sent - b0.0);
                 rpc.record_u64("bytes_recv", c.bytes_recv - b0.1);
-                rpc.record_u64("ok", r.is_ok() as u64);
+                rpc.record_str(
+                    "outcome",
+                    match &r {
+                        Ok(_) => "ok",
+                        Err(e) => outcome_of(e),
+                    },
+                );
             }
             r
         });
+        let mut ok = Vec::with_capacity(total);
+        let mut failed: Vec<(usize, io::Error)> = Vec::new();
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(v) => ok.push(v),
+                Err(e) => failed.push((i, e)),
+            }
+        }
         if let Some(b) = before {
             let after = self.net_stats();
             sp.record_u64("bytes_sent", after.bytes_sent - b.bytes_sent);
             sp.record_u64("bytes_recv", after.bytes_recv - b.bytes_recv);
+            sp.record_u64("replied", ok.len() as u64);
+            sp.record_u64("excluded", failed.len() as u64);
         }
-        out
+        sp.done();
+        if failed.is_empty() {
+            return Ok(ok);
+        }
+        if ok.len() < quorum {
+            let names: Vec<String> = failed
+                .iter()
+                .map(|(i, e)| format!("{} ({e})", self.conns[*i].addr))
+                .collect();
+            anyhow::bail!(
+                "node server(s) {} failed mid-protocol; {} of {total} nodes replied, \
+                 quorum {quorum} not met",
+                names.join(", "),
+                ok.len(),
+            );
+        }
+        // Quorum met: exclude the failed nodes for the rest of the
+        // session (highest index removed first so the others stay put).
+        for &(i, ref e) in &failed {
+            let conn = &self.conns[i];
+            obs::warn(format_args!(
+                "excluding node server {} after {} round {round}: {e}",
+                conn.addr,
+                wire::tag_name(tag)
+            ));
+            self.excluded.push(ExcludedNode {
+                addr: conn.addr.clone(),
+                org: conn.index,
+                tag,
+                round,
+                outcome: outcome_of(e),
+                error: e.to_string(),
+            });
+        }
+        for &(i, _) in failed.iter().rev() {
+            drop(self.conns.remove(i));
+        }
+        self.n_total = self.conns.iter().map(|c| c.node_n).sum();
+        Ok(ok)
     }
 
-    /// Broadcast one request to every node concurrently and collect the
-    /// per-node results in node order; any node's failure aborts the
-    /// round with an error naming that node.
+    /// Fan one request out to every live node concurrently; per-node
+    /// results come back in connection order (quorum policy is applied
+    /// by the caller, [`Self::traced_round`]).
     fn round_with<T: Send>(
         &mut self,
         per_node: impl Fn(&mut NodeConn) -> io::Result<T> + Sync,
-    ) -> anyhow::Result<Vec<T>> {
+    ) -> Vec<io::Result<T>> {
         let per_node = &per_node;
-        let results: Vec<(String, io::Result<T>)> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .conns
-                .iter_mut()
-                .map(|c| s.spawn(move || (c.addr.clone(), per_node(c))))
-                .collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> =
+                self.conns.iter_mut().map(|c| s.spawn(move || per_node(c))).collect();
             handles
                 .into_iter()
-                .map(|h| match h.join() {
-                    Ok(pair) => pair,
-                    Err(_) => (
-                        "?".to_string(),
-                        Err(io::Error::new(io::ErrorKind::Other, "node round worker panicked")),
-                    ),
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(io::Error::other("node round worker panicked")))
                 })
                 .collect()
-        });
-        results
-            .into_iter()
-            .map(|(addr, r)| {
-                r.map_err(|e| anyhow::anyhow!("node server {addr} failed mid-protocol: {e}"))
-            })
-            .collect()
+        })
     }
 
     /// Census of reply tag bytes received from the nodes, merged across
@@ -331,6 +549,37 @@ impl RemoteFleet {
             }
         }
         out
+    }
+}
+
+/// Connect one node: retry the address, apply the round deadline, and
+/// validate the shard metadata (wire-controlled — bound it before it
+/// drives allocations or arithmetic). Returns the connection plus the
+/// node's dimensionality and dataset name for cross-node agreement
+/// checks.
+fn connect_node(
+    index: usize,
+    addr: &str,
+    opts: &FleetOptions,
+) -> anyhow::Result<(NodeConn, usize, String)> {
+    let mut transport = TcpTransport::connect_retry(addr, wire::ROLE_CENTER, opts.connect_timeout)?;
+    transport.set_deadline(opts.round_timeout)?;
+    let mut conn = NodeConn::new(index, addr.to_string(), transport);
+    let meta = conn.exchange(&WireMsg::MetaReq).map_err(|e| anyhow::anyhow!("node {addr}: {e}"))?;
+    match meta {
+        WireMsg::Meta { n, p: node_p, name: node_name } => {
+            let node_p = node_p as usize;
+            anyhow::ensure!(
+                node_p >= 1,
+                "node {addr} reports a degenerate dimensionality p={node_p}"
+            );
+            let node_n = usize::try_from(n)
+                .map_err(|_| anyhow::anyhow!("node {addr} reports n={n}, beyond this platform"))?;
+            anyhow::ensure!(node_n >= 1, "node {addr} reports an empty shard (n=0)");
+            conn.node_n = node_n;
+            Ok((conn, node_p, node_name))
+        }
+        other => anyhow::bail!("node {addr} answered MetaReq with {other:?}"),
     }
 }
 
@@ -424,11 +673,16 @@ impl Fleet for RemoteFleet {
         }
         out
     }
+
+    fn excluded_count(&self) -> u64 {
+        self.excluded.len() as u64
+    }
 }
 
 impl Drop for RemoteFleet {
     fn drop(&mut self) {
-        // Best-effort: let node servers exit their session loops cleanly.
+        // Best-effort: let node servers exit their session loops cleanly
+        // (excluded connections were already dropped, which closed them).
         for c in &mut self.conns {
             let _ = c.transport.send_wire(&WireMsg::Shutdown);
         }

@@ -55,7 +55,7 @@ pub mod wire;
 use std::io;
 use std::sync::mpsc::{Receiver, SyncSender};
 
-pub use fleet::RemoteFleet;
+pub use fleet::{ExcludedNode, FleetOptions, RemoteFleet};
 pub use server::NodeServer;
 pub use tcp::TcpTransport;
 
@@ -72,6 +72,15 @@ pub trait Transport: Send {
     fn recv_msg(&mut self) -> io::Result<Vec<u8>>;
     /// Human-readable medium label ("mem", "tcp") for reports.
     fn label(&self) -> &'static str;
+    /// Write raw bytes to the medium without any framing, bypassing the
+    /// one-`send_msg`-per-`recv_msg` message discipline. Only
+    /// stream-oriented transports can honor this; the default refuses
+    /// with [`io::ErrorKind::Unsupported`]. Exists for the
+    /// fault-injection harness (`testutil::faults`), which needs to cut
+    /// a frame off mid-payload to simulate a node dying mid-write.
+    fn send_raw(&mut self, _bytes: &[u8]) -> io::Result<()> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "transport is not stream-oriented"))
+    }
 }
 
 /// The original in-process transport: a bounded `mpsc` pair between two

@@ -21,11 +21,12 @@
 //! encrypted log-likelihood share, all computed here at the node.
 
 use std::io;
-use std::net::{SocketAddr, TcpListener};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Instant;
 
 use super::tcp::TcpTransport;
 use super::wire::{self, WireMsg};
+use super::Transport;
 use crate::crypto::fixed::FixedCodec;
 use crate::obs;
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
@@ -35,6 +36,12 @@ use crate::gc::word::FixedFmt;
 use crate::mpc::fabric::PreparedHinv;
 use crate::protocols::common::pack_tri;
 use crate::runtime::{pool, CpuCompute, NodeCompute};
+
+/// Hook producing the transport a session is served over, given the
+/// freshly-handshaken TCP one — the fault-injection harness
+/// ([`crate::testutil::faults`]) wraps it so the node misbehaves
+/// deterministically without the server knowing.
+pub type TransportWrapper = Box<dyn FnMut(Box<dyn Transport>) -> Box<dyn Transport> + Send>;
 
 /// A listening node server bound to one data partition and one compute
 /// engine (the same [`NodeCompute`] seam the in-process fleets use, so
@@ -48,6 +55,10 @@ pub struct NodeServer {
     /// (default: `PRIVLOGIT_THREADS` / available parallelism). Replies
     /// are bit-identical for any value — randomness is drawn serially.
     threads: usize,
+    // Test hooks (None in production): pre-handshake accept gate and
+    // per-session transport wrapper.
+    accept_gate: Option<Box<dyn FnMut() -> bool + Send>>,
+    wrapper: Option<TransportWrapper>,
 }
 
 impl NodeServer {
@@ -70,6 +81,8 @@ impl NodeServer {
             engine,
             seed: entropy_seed(),
             threads: pool::threads(),
+            accept_gate: None,
+            wrapper: None,
         })
     }
 
@@ -87,18 +100,58 @@ impl NodeServer {
         self
     }
 
+    /// Install an accept gate, called once per accepted connection
+    /// *before* the handshake: returning `false` drops the socket
+    /// unanswered, so the connecting center sees an EOF during its hello
+    /// (a retryable failure) and the server awaits the next connection.
+    /// Test hook for "node refuses its first k connects".
+    pub fn with_accept_gate(mut self, gate: Box<dyn FnMut() -> bool + Send>) -> NodeServer {
+        self.accept_gate = Some(gate);
+        self
+    }
+
+    /// Install a per-session transport wrapper, applied to every
+    /// handshaken connection before serving it. Test hook: the
+    /// fault-injection harness ([`crate::testutil::faults`]) uses it to
+    /// delay, hang or cut replies deterministically.
+    pub fn with_transport_wrapper(mut self, wrapper: TransportWrapper) -> NodeServer {
+        self.wrapper = Some(wrapper);
+        self
+    }
+
     /// The bound address (useful with ephemeral ports).
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
         self.listener.local_addr()
     }
 
+    /// Accept connections until the gate admits one (every connection is
+    /// admitted when no gate is installed). Listener errors propagate.
+    fn accept_gated(&mut self) -> io::Result<TcpStream> {
+        loop {
+            let (stream, _) = self.listener.accept()?;
+            match self.accept_gate.as_mut() {
+                Some(gate) if !gate() => continue, // dropped pre-handshake
+                _ => return Ok(stream),
+            }
+        }
+    }
+
+    /// Handshake an admitted stream and apply the transport wrapper.
+    fn session_transport(&mut self, stream: TcpStream) -> io::Result<Box<dyn Transport>> {
+        let t: Box<dyn Transport> = Box::new(TcpTransport::accept(stream, wire::ROLE_NODE)?);
+        Ok(match self.wrapper.as_mut() {
+            Some(wrap) => wrap(t),
+            None => t,
+        })
+    }
+
     /// Accept one center connection and serve it to completion.
     pub fn serve_once(&mut self) -> io::Result<()> {
-        let (stream, _) = self.listener.accept()?;
-        let mut t = TcpTransport::accept(stream, wire::ROLE_NODE)?;
+        let stream = self.accept_gated()?;
+        let mut t = self.session_transport(stream)?;
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let session =
-            serve_session(&mut t, &self.data, self.engine.as_mut(), self.seed, self.threads);
+            serve_session(t.as_mut(), &self.data, self.engine.as_mut(), self.seed, self.threads);
         // Session boundary: persist buffered trace lines even if this
         // process is killed rather than exiting cleanly afterwards.
         obs::flush();
@@ -111,13 +164,16 @@ impl NodeServer {
     /// itself is broken and is propagated.
     pub fn serve_forever(&mut self) -> io::Result<()> {
         loop {
-            let (stream, _) = self.listener.accept()?;
+            let stream = self.accept_gated()?;
             self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
             let seed = self.seed;
             let threads = self.threads;
-            let session = TcpTransport::accept(stream, wire::ROLE_NODE).and_then(|mut t| {
-                serve_session(&mut t, &self.data, self.engine.as_mut(), seed, threads)
-            });
+            let session = match self.session_transport(stream) {
+                Ok(mut t) => {
+                    serve_session(t.as_mut(), &self.data, self.engine.as_mut(), seed, threads)
+                }
+                Err(e) => Err(e),
+            };
             obs::flush();
             match session {
                 Ok(()) => obs::info(format_args!("node session complete")),
@@ -203,10 +259,20 @@ impl SessionCrypto {
     }
 }
 
+/// Receive one framed [`WireMsg`] over any message transport.
+fn recv_wire(t: &mut dyn Transport) -> io::Result<WireMsg> {
+    Ok(WireMsg::decode(&t.recv_msg()?)?)
+}
+
+/// Send one framed [`WireMsg`] over any message transport.
+fn send_wire(t: &mut dyn Transport, msg: &WireMsg) -> io::Result<()> {
+    t.send_msg(msg.encode())
+}
+
 /// Answer requests on one established center connection until `Shutdown`
 /// or disconnect.
 fn serve_session(
-    t: &mut TcpTransport,
+    t: &mut dyn Transport,
     data: &Dataset,
     engine: &mut dyn NodeCompute,
     seed: u64,
@@ -219,7 +285,7 @@ fn serve_session(
     let mut session_id = 0u64;
     let mut rounds: std::collections::BTreeMap<u8, u64> = std::collections::BTreeMap::new();
     loop {
-        let msg = match t.recv_wire() {
+        let msg = match recv_wire(t) {
             Ok(m) => m,
             // EOF without Shutdown: center process exited; treat as done.
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
@@ -377,18 +443,22 @@ fn serve_session(
                 // Two frames: the partial step (the broadcast's scale
                 // plus f from the multiply-by-constant), then the
                 // encrypted log-likelihood share (scale f).
-                t.send_wire(&WireMsg::Ciphertexts {
-                    scale: hinv_scale + c.fmt.f,
-                    secs,
-                    cts: part.into_iter().map(|ct| ct.0).collect(),
-                })?;
-                t.send_wire(&WireMsg::Ciphertexts {
-                    scale: c.fmt.f,
-                    secs: 0.0,
-                    cts: loglik_cts,
-                })?;
+                send_wire(
+                    t,
+                    &WireMsg::Ciphertexts {
+                        scale: hinv_scale + c.fmt.f,
+                        secs,
+                        cts: part.into_iter().map(|ct| ct.0).collect(),
+                    },
+                )?;
+                send_wire(
+                    t,
+                    &WireMsg::Ciphertexts { scale: c.fmt.f, secs: 0.0, cts: loglik_cts },
+                )?;
                 continue;
             }
+            // Liveness probe: acknowledge without touching session state.
+            WireMsg::Ping => WireMsg::Ack,
             WireMsg::Shutdown => return Ok(()),
             other => {
                 return Err(io::Error::new(
@@ -397,7 +467,7 @@ fn serve_session(
                 ))
             }
         };
-        t.send_wire(&reply)?;
+        send_wire(t, &reply)?;
         sp.done();
     }
 }

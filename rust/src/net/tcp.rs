@@ -16,6 +16,27 @@ use super::wire;
 use super::Transport;
 use crate::gc::channel::Channel;
 
+/// Read/write timeout applied for the duration of the 8-byte hello
+/// exchange: a peer that accepts the connection but never completes the
+/// handshake must not hang the connecting side.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The fleet round deadline configured by `PRIVLOGIT_ROUND_TIMEOUT`
+/// (seconds, `f64`): `None` when the variable is unset, unparsable, or
+/// non-positive (non-positive explicitly disables deadlines). Config
+/// files take precedence over this variable where both are given; the
+/// peer (GC) link honors only the environment, because its legitimate
+/// silent gaps while garbling make a default deadline unsafe.
+pub fn env_deadline() -> Option<Duration> {
+    let raw = std::env::var("PRIVLOGIT_ROUND_TIMEOUT").ok()?;
+    let secs: f64 = raw.trim().parse().ok()?;
+    if secs > 0.0 && secs.is_finite() {
+        Some(Duration::from_secs_f64(secs))
+    } else {
+        None
+    }
+}
+
 /// One end of a framed TCP connection (handshake already verified).
 pub struct TcpTransport {
     reader: BufReader<TcpStream>,
@@ -27,9 +48,14 @@ pub struct TcpTransport {
 impl TcpTransport {
     /// Complete the handshake on a connected stream: send our hello,
     /// validate the peer's. Both sides write first, so there is no
-    /// ordering deadlock.
+    /// ordering deadlock. The handshake itself runs under a bounded
+    /// read timeout so an accepted-but-silent peer cannot hang us; the
+    /// timeout is cleared afterwards (callers opt back in with
+    /// [`TcpTransport::set_deadline`]).
     fn handshake(stream: TcpStream, role: u8) -> io::Result<TcpTransport> {
         stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
         let mut writer = BufWriter::new(stream.try_clone()?);
         let mut reader = BufReader::new(stream);
         writer.write_all(&wire::hello(role))?;
@@ -37,7 +63,9 @@ impl TcpTransport {
         let mut peer = [0u8; 8];
         reader.read_exact(&mut peer)?;
         let peer_role = wire::check_hello(&peer)?;
-        Ok(TcpTransport { reader, writer, peer_role })
+        let mut t = TcpTransport { reader, writer, peer_role };
+        t.set_deadline(None)?;
+        Ok(t)
     }
 
     /// Connect to `addr` and handshake, announcing `role`.
@@ -45,12 +73,27 @@ impl TcpTransport {
         TcpTransport::handshake(TcpStream::connect(addr)?, role)
     }
 
+    /// Set (or clear, with `None`) the per-operation socket deadline:
+    /// any single read or write that makes no progress for this long
+    /// fails with [`io::ErrorKind::TimedOut`] / `WouldBlock` instead of
+    /// blocking forever. This is what turns a hung peer into a
+    /// classifiable round failure for the quorum layer.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(deadline)?;
+        self.writer.get_ref().set_write_timeout(deadline)?;
+        Ok(())
+    }
+
     /// Connect with retries until `deadline_in` elapses — servers started
     /// "at the same time" (scripts, tests, compose files) may not be
-    /// listening yet. Permanent failures (handshake rejection: wrong
-    /// magic or version skew) fail fast instead of burning the deadline.
+    /// listening yet. Waits between attempts grow exponentially (25 ms
+    /// doubling to a 800 ms cap) so a long deadline does not hammer an
+    /// unreachable address. Permanent failures (handshake rejection:
+    /// wrong magic or version skew) fail fast instead of burning the
+    /// deadline.
     pub fn connect_retry(addr: &str, role: u8, deadline_in: Duration) -> io::Result<TcpTransport> {
         let deadline = Instant::now() + deadline_in;
+        let mut backoff = Duration::from_millis(25);
         loop {
             match TcpTransport::connect(addr, role) {
                 Ok(t) => return Ok(t),
@@ -61,6 +104,7 @@ impl TcpTransport {
                             | io::ErrorKind::ConnectionReset
                             | io::ErrorKind::ConnectionAborted
                             | io::ErrorKind::TimedOut
+                            | io::ErrorKind::WouldBlock
                             | io::ErrorKind::AddrNotAvailable
                             | io::ErrorKind::Interrupted
                             | io::ErrorKind::UnexpectedEof
@@ -71,7 +115,10 @@ impl TcpTransport {
                             format!("connecting to {addr}: {e}"),
                         ));
                     }
-                    std::thread::sleep(Duration::from_millis(50));
+                    std::thread::sleep(backoff.min(deadline.saturating_duration_since(
+                        Instant::now(),
+                    )));
+                    backoff = (backoff * 2).min(Duration::from_millis(800));
                 }
             }
         }
@@ -105,6 +152,11 @@ impl Transport for TcpTransport {
 
     fn label(&self) -> &'static str {
         "tcp"
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.writer.write_all(bytes)?;
+        self.writer.flush()
     }
 }
 
@@ -221,6 +273,31 @@ mod tests {
         let (recv_bytes, recv_msgs) = a.stats().snapshot_recv();
         assert_eq!(recv_bytes, 8);
         assert_eq!(recv_msgs, 1);
+    }
+
+    /// A peer that handshakes but then never replies must fail the read
+    /// with a timeout-class error once a deadline is set — not block.
+    #[test]
+    fn deadline_turns_silent_peer_into_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let silent = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap();
+            // Hold the connection open, never send a frame.
+            std::thread::sleep(Duration::from_millis(400));
+            drop(t);
+        });
+        let mut t = TcpTransport::connect(addr, wire::ROLE_CENTER).unwrap();
+        t.set_deadline(Some(Duration::from_millis(50))).unwrap();
+        let start = Instant::now();
+        let err = t.recv_wire().unwrap_err();
+        assert!(
+            matches!(err.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock),
+            "expected a timeout-class error, got {err:?}"
+        );
+        assert!(start.elapsed() < Duration::from_millis(350), "deadline not enforced");
+        silent.join().unwrap();
     }
 
     #[test]

@@ -39,7 +39,11 @@ pub const MAGIC: [u8; 4] = *b"PLGT";
 /// ([`WireMsg::Aggregate`], [`WireMsg::Blind`], [`WireMsg::ShareInput`])
 /// and [`WireMsg::GcExec`] now references S2-held share *handles* plus
 /// an output mode instead of shipping evaluator input bits.
-pub const VERSION: u16 = 3;
+///
+/// v4: fleet fault tolerance — the [`WireMsg::Ping`] liveness probe
+/// (answered by a bare [`WireMsg::Ack`]), used by the center to check a
+/// node's health without advancing any protocol state.
+pub const VERSION: u16 = 4;
 
 /// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
 /// length prefix must not drive allocation.
@@ -414,6 +418,8 @@ pub const TAG_SET_KEY: u8 = 0x06;
 pub const TAG_SET_HINV: u8 = 0x07;
 /// Tag byte: [`WireMsg::StepReq`].
 pub const TAG_STEP_REQ: u8 = 0x08;
+/// Tag byte: [`WireMsg::Ping`].
+pub const TAG_PING: u8 = 0x09;
 /// Tag byte: [`WireMsg::NodeReply`] (plaintext statistics — only sent
 /// when no [`WireMsg::SetKey`] arrived this session).
 pub const TAG_NODE_REPLY: u8 = 0x11;
@@ -453,6 +459,7 @@ pub fn tag_name(tag: u8) -> &'static str {
         TAG_SET_KEY => "SetKey",
         TAG_SET_HINV => "SetHinv",
         TAG_STEP_REQ => "StepReq",
+        TAG_PING => "Ping",
         TAG_NODE_REPLY => "NodeReply",
         TAG_META => "Meta",
         TAG_ACK => "Ack",
@@ -544,8 +551,13 @@ pub enum WireMsg {
         /// `1/n_total` scaling.
         scale: f64,
     },
-    /// Node → center: bare acknowledgement (replies to [`WireMsg::SetKey`]
-    /// and [`WireMsg::SetHinv`]).
+    /// Center → node: liveness probe. The node answers with a bare
+    /// [`WireMsg::Ack`] and no protocol state changes on either side —
+    /// the center's quorum layer uses this to check the health of a
+    /// connection outside a statistic round.
+    Ping,
+    /// Node → center: bare acknowledgement (replies to [`WireMsg::SetKey`],
+    /// [`WireMsg::SetHinv`] and [`WireMsg::Ping`]).
     Ack,
     /// Node → center: one statistic reply with node-measured seconds.
     NodeReply {
@@ -667,6 +679,7 @@ impl WireMsg {
             WireMsg::SetKey { .. } => TAG_SET_KEY,
             WireMsg::SetHinv { .. } => TAG_SET_HINV,
             WireMsg::StepReq { .. } => TAG_STEP_REQ,
+            WireMsg::Ping => TAG_PING,
             WireMsg::NodeReply { .. } => TAG_NODE_REPLY,
             WireMsg::Meta { .. } => TAG_META,
             WireMsg::Ack => TAG_ACK,
@@ -721,6 +734,7 @@ impl WireMsg {
                 w.put_f64s(beta);
                 w.put_f64(*scale);
             }
+            WireMsg::Ping => w.put_u8(TAG_PING),
             WireMsg::Ack => w.put_u8(TAG_ACK),
             WireMsg::NodeReply { values, loglik, secs } => {
                 w.put_u8(TAG_NODE_REPLY);
@@ -855,6 +869,7 @@ impl WireMsg {
                 let scale = r.get_f64()?;
                 WireMsg::StepReq { beta, scale }
             }
+            TAG_PING => WireMsg::Ping,
             TAG_ACK => WireMsg::Ack,
             TAG_NODE_REPLY => {
                 let values = r.get_f64s()?;
@@ -1014,6 +1029,7 @@ mod tests {
                 cts: (0..6).map(|_| rand_big(rng)).collect(),
             },
             WireMsg::StepReq { beta: rand_vec(rng, 5), scale: rng.f64() },
+            WireMsg::Ping,
             WireMsg::Ack,
             WireMsg::GcExec {
                 prog: 3,

@@ -390,6 +390,14 @@ impl Span {
         self.put(key, JsonValue::Num(v));
     }
 
+    /// Record a string field after the span was opened (a round's
+    /// outcome classification is known only once it resolves).
+    pub fn record_str(&mut self, key: &'static str, v: &str) {
+        if self.active() {
+            self.put(key, JsonValue::Str(v.to_string()));
+        }
+    }
+
     /// Finish the span now (equivalent to dropping it).
     pub fn done(self) {}
 }

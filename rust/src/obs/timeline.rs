@@ -38,6 +38,11 @@ pub struct TraceEvent {
     pub bytes_sent: u64,
     /// Bytes received within the span.
     pub bytes_recv: u64,
+    /// RPC outcome classification (`fleet.rpc` spans: `ok` / `timeout`
+    /// / `error`); absent on spans that record none.
+    pub outcome: Option<String>,
+    /// Peer node address (`fleet.rpc` spans); absent elsewhere.
+    pub node: Option<String>,
 }
 
 /// A parsed per-process trace file.
@@ -93,6 +98,8 @@ pub fn parse_trace(text: &str) -> Result<TraceFile, String> {
             tag: v.get("tag").and_then(|x| x.as_u64()).map(|t| t as u8),
             bytes_sent: v.get("bytes_sent").and_then(|x| x.as_u64()).unwrap_or(0),
             bytes_recv: v.get("bytes_recv").and_then(|x| x.as_u64()).unwrap_or(0),
+            outcome: v.get("outcome").and_then(|x| x.as_str()).map(str::to_string),
+            node: v.get("node").and_then(|x| x.as_str()).map(str::to_string),
         });
     }
     Ok(TraceFile { proc, pid, events })
@@ -246,6 +253,12 @@ impl Timeline {
                     if let Some(tag) = e.tag {
                         o = o.u64("tag", tag as u64).str("tag_name", tag_name(tag));
                     }
+                    if let Some(outcome) = &e.outcome {
+                        o = o.str("outcome", outcome);
+                    }
+                    if let Some(node) = &e.node {
+                        o = o.str("node", node);
+                    }
                     o.f64("secs", e.secs)
                         .u64("bytes_sent", e.bytes_sent)
                         .u64("bytes_recv", e.bytes_recv)
@@ -355,6 +368,32 @@ mod tests {
         assert_eq!(ends.len(), 2);
         assert!(ends.iter().any(|e| e.proc == "center-a"));
         assert!(ends.iter().any(|e| e.proc == "node:0"));
+    }
+
+    #[test]
+    fn parses_outcome_and_node_fields() {
+        let text = [
+            r#"{"schema":"privlogit-trace/v1","proc":"center-a","pid":10}"#,
+            concat!(
+                r#"{"ts_us":1,"span":"fleet.rpc","session":"-","round":0,"tag":3,"#,
+                r#""node":"127.0.0.1:9401","outcome":"timeout","secs":2.0}"#
+            ),
+        ]
+        .join("\n");
+        let f = parse_trace(&text).unwrap();
+        assert_eq!(f.events[0].outcome.as_deref(), Some("timeout"));
+        assert_eq!(f.events[0].node.as_deref(), Some("127.0.0.1:9401"));
+        let t = Timeline::merge(vec![f]);
+        let doc = json::parse(&t.render_json()).unwrap();
+        let ev = &doc.get("events").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ev.get("outcome").unwrap().as_str(), Some("timeout"));
+        assert_eq!(ev.get("node").unwrap().as_str(), Some("127.0.0.1:9401"));
+        // Events without the optional fields omit them entirely.
+        let doc2 = json::parse(
+            &Timeline::merge(vec![parse_trace(&file_a()).unwrap()]).render_json(),
+        )
+        .unwrap();
+        assert!(doc2.get("events").unwrap().as_arr().unwrap()[0].get("outcome").is_none());
     }
 
     #[test]

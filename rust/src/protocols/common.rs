@@ -123,6 +123,11 @@ pub fn enc_stat_of(v: &EncVec) -> anyhow::Result<EncStat> {
 /// ciphertexts — gradient then log-likelihood) and scale are validated
 /// here, at the ingestion boundary, with errors naming the node — one
 /// malformed reply must never panic the center.
+///
+/// Attribution uses each reply's own [`NodeReply::org`], not its
+/// position: under a quorum fleet the reply vector may be a strict
+/// subset of the original membership (aggregation is subset-aware — the
+/// sums below simply run over whoever replied).
 pub fn node_stats_round<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
@@ -134,7 +139,8 @@ pub fn node_stats_round<F: SecureFabric>(
     let replies = fleet.stats(beta, scale)?;
     let mut enc_g = Vec::with_capacity(replies.len());
     let mut enc_l = Vec::with_capacity(replies.len());
-    for (j, r) in replies.into_iter().enumerate() {
+    for r in replies {
+        let j = r.org;
         fab.ledger_mut().add_node(j, r.secs);
         match r.payload {
             NodePayload::Plain { values, loglik } => {
@@ -170,7 +176,8 @@ pub fn node_stats_round<F: SecureFabric>(
 /// triangle as ciphertexts (fabric-encrypted or node-encrypted).
 /// `expect_len` is the packed-triangle length; node-encrypted replies
 /// that do not match it (or the session scale) are session errors
-/// naming the node.
+/// naming the node. Attribution uses [`NodeReply::org`] — under a
+/// quorum fleet the reply vector may be a subset of the membership.
 pub fn node_matrix_round<F: SecureFabric>(
     fab: &mut F,
     replies: Vec<NodeReply>,
@@ -178,7 +185,8 @@ pub fn node_matrix_round<F: SecureFabric>(
 ) -> anyhow::Result<Vec<EncVec>> {
     let f = fab.fmt().f;
     let mut enc = Vec::with_capacity(replies.len());
-    for (j, r) in replies.into_iter().enumerate() {
+    for r in replies {
+        let j = r.org;
         fab.ledger_mut().add_node(j, r.secs);
         match r.payload {
             NodePayload::Plain { values, .. } => enc.push(fab.node_encrypt_vec(j, &values)),
@@ -246,6 +254,7 @@ pub fn final_ledger<F: SecureFabric>(fab: &F, fleet: &dyn Fleet) -> CostLedger {
     let net = fleet.net_stats();
     ledger.fleet_bytes_sent += net.bytes_sent;
     ledger.fleet_bytes_recv += net.bytes_recv;
+    ledger.excluded_nodes += fleet.excluded_count();
     for (tag, flow) in fleet.tag_flows() {
         ledger.fleet_tag_flows.entry(tag).or_default().merge(&flow);
     }

@@ -39,6 +39,11 @@ pub fn setup_inverse<F: SecureFabric>(
 /// themselves and only ciphertexts cross the wire; otherwise the nodes
 /// return plaintext statistics and the fabric performs the encryption
 /// and the multiply-by-constant, attributing the cost to the node.
+///
+/// Attribution uses each reply's [`crate::coordinator::fleet::StepReply::org`]
+/// — under a quorum fleet the replies may come from a strict subset of
+/// the original membership, and the aggregation below simply sums over
+/// whoever replied.
 fn node_step_round<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,
@@ -51,7 +56,8 @@ fn node_step_round<F: SecureFabric>(
     let mut enc_parts = Vec::new();
     let mut enc_l = Vec::new();
     if fleet.nodes_encrypt() {
-        for (j, r) in fleet.step(beta, scale)?.into_iter().enumerate() {
+        for r in fleet.step(beta, scale)? {
+            let j = r.org;
             fab.ledger_mut().add_node(j, r.secs);
             // Step replies are wire-controlled: validate shape and
             // scales here, with errors naming the node.
@@ -85,7 +91,8 @@ fn node_step_round<F: SecureFabric>(
             fab.ledger_mut().paillier_encs += 1;
         }
     } else {
-        for (j, r) in fleet.stats(beta, scale)?.into_iter().enumerate() {
+        for r in fleet.stats(beta, scale)? {
+            let j = r.org;
             fab.ledger_mut().add_node(j, r.secs);
             match r.payload {
                 NodePayload::Plain { values, loglik } => {
@@ -103,7 +110,17 @@ fn node_step_round<F: SecureFabric>(
 }
 
 /// Run PrivLogit-Local (Algorithm 3). A node or center peer that dies
-/// mid-protocol surfaces as `Err`.
+/// mid-protocol surfaces as `Err` — unless the fleet runs in quorum
+/// mode, in which case the round proceeds over the surviving subset.
+///
+/// **Quorum semantics.** `scale = 1/n` is fixed at protocol start and
+/// deliberately *not* rescaled when nodes drop out: the stationarity
+/// condition `Σ_live g_j − λβ = 0` is scale-invariant, so the fixed
+/// point is exactly the regularized MLE of the surviving subset, and
+/// the full-fleet `H̃` remains a valid PSD majorizer of the subset's
+/// Hessian whether the exclusion happened during the Gram round or
+/// mid-iteration. Only the *preconditioning* reflects the original
+/// membership — convergence slows slightly, correctness is unaffected.
 pub fn run_privlogit_local<F: SecureFabric>(
     fab: &mut F,
     fleet: &mut dyn Fleet,

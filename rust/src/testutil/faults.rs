@@ -1,0 +1,279 @@
+//! Deterministic fault injection for fleet transports.
+//!
+//! The quorum layer (`net::fleet`) claims to survive slow, dead and
+//! byzantine-slow nodes. This module makes those failure modes
+//! *reproducible*: a [`FaultPlan`] describes exactly which reply of
+//! which request kind misbehaves and how, and [`FaultyTransport`] — a
+//! [`Transport`] wrapper — executes the plan on the node side of the
+//! connection. Plans install onto a [`NodeServer`] via its public test
+//! hooks ([`FaultPlan::install`]) for TCP tests, or wrap any transport
+//! directly ([`FaultyTransport::wrap`]) for in-process tests.
+//!
+//! Faults are keyed by `(request tag, occurrence)`: occurrence `r` of
+//! tag `t` is the `r`-th request of that kind this transport has seen,
+//! which matches both the node server's and the center's per-tag round
+//! numbering — so "kill the reply to `StepReq` round 2" means the same
+//! thing on every layer and in the merged trace.
+//!
+//! How each [`FaultAction`] looks from the center:
+//!
+//! * [`Delay`](FaultAction::Delay) — a slow straggler; past the round
+//!   deadline it becomes a read timeout (`outcome=timeout`).
+//! * [`Hang`](FaultAction::Hang) — a hung node: the socket stays open,
+//!   nothing arrives, the center's read times out (`outcome=timeout`).
+//! * [`DropAfterBytes`](FaultAction::DropAfterBytes) — a node hanging
+//!   mid-frame: the reply starts and stops; the center's read times out
+//!   partway through the frame (`outcome=timeout`).
+//! * [`TruncateFrame`](FaultAction::TruncateFrame) — a node dying
+//!   mid-write: the frame is cut and the socket closes; the center sees
+//!   an unexpected EOF (`outcome=error`).
+//! * [`FaultPlan::fail_connects`] — a node not yet up: the first `k`
+//!   connections are dropped before the handshake, exercising the
+//!   center's connect retry.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::net::server::NodeServer;
+use crate::net::wire;
+use crate::net::Transport;
+
+/// What happens to the reply the plan selected.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultAction {
+    /// Sleep this long, then send the reply normally (slow straggler —
+    /// a delay past the round deadline becomes a timeout).
+    Delay(Duration),
+    /// Never send the reply and keep the connection open (hung node).
+    Hang,
+    /// Send only the first `k` bytes of the framed reply
+    /// (`len ‖ payload ‖ crc`), then keep the connection open: the
+    /// center's read stalls mid-frame.
+    DropAfterBytes(usize),
+    /// Send the frame's length prefix plus the first `k` payload bytes,
+    /// then fail the session so the socket closes: the center reads an
+    /// unexpected EOF mid-frame (node died mid-write).
+    TruncateFrame(usize),
+}
+
+/// A deterministic schedule of transport faults: which occurrence of
+/// which request tag gets which [`FaultAction`], plus how many initial
+/// connection attempts to drop pre-handshake.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<(u8, u64, FaultAction)>,
+    fail_connects: u64,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Apply `action` to the reply of occurrence `round` of request
+    /// `tag` (a `wire::TAG_*` constant). Occurrences count per tag from
+    /// 0, matching the fleet's per-tag round numbering. For requests
+    /// with multi-frame replies (`StepReq`), the action fires on the
+    /// first reply frame.
+    pub fn on(mut self, tag: u8, round: u64, action: FaultAction) -> FaultPlan {
+        self.faults.push((tag, round, action));
+        self
+    }
+
+    /// Drop the first `k` accepted connections before the handshake —
+    /// the connecting center sees an EOF during its hello and retries.
+    pub fn fail_connects(mut self, k: u64) -> FaultPlan {
+        self.fail_connects = k;
+        self
+    }
+
+    /// Install this plan onto a [`NodeServer`] via its accept-gate and
+    /// transport-wrapper hooks. Every served session gets a fresh
+    /// [`FaultyTransport`] over the same plan (occurrence counters are
+    /// per session, like the wire's round numbering).
+    pub fn install(self, server: NodeServer) -> NodeServer {
+        let FaultPlan { faults, fail_connects } = self;
+        let mut server = server;
+        if fail_connects > 0 {
+            let mut remaining = fail_connects;
+            server = server.with_accept_gate(Box::new(move || {
+                if remaining > 0 {
+                    remaining -= 1;
+                    false
+                } else {
+                    true
+                }
+            }));
+        }
+        if !faults.is_empty() {
+            let faults: Arc<[(u8, u64, FaultAction)]> = faults.into();
+            server = server.with_transport_wrapper(Box::new(move |inner| {
+                Box::new(FaultyTransport {
+                    inner,
+                    faults: Arc::clone(&faults),
+                    rounds: BTreeMap::new(),
+                    armed: None,
+                })
+            }));
+        }
+        server
+    }
+}
+
+/// A [`Transport`] that executes a [`FaultPlan`] from the node side:
+/// received requests arm matching actions, the next reply fires them.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    faults: Arc<[(u8, u64, FaultAction)]>,
+    /// Per-tag occurrence counters over received requests.
+    rounds: BTreeMap<u8, u64>,
+    /// Action armed by the last received request, consumed by the next
+    /// send.
+    armed: Option<FaultAction>,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner`, applying `plan`'s per-round faults (the
+    /// connect-gate part of a plan only takes effect via
+    /// [`FaultPlan::install`]). For in-process tests over
+    /// [`mem_transport_pair`](crate::net::mem_transport_pair), wrap the
+    /// node end.
+    pub fn wrap(inner: Box<dyn Transport>, plan: &FaultPlan) -> FaultyTransport {
+        FaultyTransport {
+            inner,
+            faults: plan.faults.clone().into(),
+            rounds: BTreeMap::new(),
+            armed: None,
+        }
+    }
+}
+
+/// Block this thread forever (spurious unparks included) — the fault
+/// harness's "node stops responding but its socket stays open".
+fn park_forever() -> ! {
+    loop {
+        std::thread::park();
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn send_msg(&mut self, msg: Vec<u8>) -> io::Result<()> {
+        let Some(action) = self.armed.take() else {
+            return self.inner.send_msg(msg);
+        };
+        match action {
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.send_msg(msg)
+            }
+            FaultAction::Hang => park_forever(),
+            FaultAction::DropAfterBytes(k) => {
+                // Reconstruct the frame exactly as the TCP layer would
+                // (`len ‖ payload ‖ crc`) and stop k bytes in.
+                let mut frame = Vec::with_capacity(msg.len() + 8);
+                frame.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                frame.extend_from_slice(&msg);
+                frame.extend_from_slice(&wire::crc32(&msg).to_le_bytes());
+                let cut = k.min(frame.len());
+                match self.inner.send_raw(&frame[..cut]) {
+                    Ok(()) => {}
+                    // Message-oriented inner (mem): best effort — a
+                    // truncated body stands in for the partial frame.
+                    Err(e) if e.kind() == io::ErrorKind::Unsupported => {
+                        self.inner.send_msg(msg[..k.min(msg.len())].to_vec())?;
+                    }
+                    Err(e) => return Err(e),
+                }
+                park_forever()
+            }
+            FaultAction::TruncateFrame(k) => {
+                let cut = k.min(msg.len());
+                let mut partial = Vec::with_capacity(4 + cut);
+                partial.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                partial.extend_from_slice(&msg[..cut]);
+                match self.inner.send_raw(&partial) {
+                    Ok(()) | Err(_) => {}
+                }
+                // Fail the session: the server tears the connection
+                // down, so the center reads EOF mid-frame.
+                Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "fault injection: node died mid-frame",
+                ))
+            }
+        }
+    }
+
+    fn recv_msg(&mut self) -> io::Result<Vec<u8>> {
+        let msg = self.inner.recv_msg()?;
+        if let Some(&tag) = msg.first() {
+            let c = self.rounds.entry(tag).or_insert(0);
+            let round = *c;
+            *c += 1;
+            if let Some(&(_, _, action)) =
+                self.faults.iter().find(|&&(t, r, _)| t == tag && r == round)
+            {
+                self.armed = Some(action);
+            }
+        }
+        Ok(msg)
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.inner.send_raw(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mem_transport_pair;
+
+    #[test]
+    fn faults_fire_on_the_selected_occurrence_only() {
+        let (mut center, node) = mem_transport_pair();
+        let plan = FaultPlan::new().on(0x01, 1, FaultAction::TruncateFrame(3));
+        let mut node = FaultyTransport::wrap(Box::new(node), &plan);
+
+        // Occurrence 0 of tag 0x01: reply passes through untouched.
+        center.send_msg(vec![0x01, 9, 9]).unwrap();
+        node.recv_msg().unwrap();
+        node.send_msg(b"world".to_vec()).unwrap();
+        assert_eq!(center.recv_msg().unwrap(), b"world");
+
+        // A different tag between occurrences must not advance 0x01's
+        // counter.
+        center.send_msg(vec![0x02]).unwrap();
+        node.recv_msg().unwrap();
+        node.send_msg(b"gram".to_vec()).unwrap();
+        assert_eq!(center.recv_msg().unwrap(), b"gram");
+
+        // Occurrence 1 of tag 0x01: mem fallback truncates the body and
+        // the send fails (the "session" dies).
+        center.send_msg(vec![0x01]).unwrap();
+        node.recv_msg().unwrap();
+        let err = node.send_msg(b"abcdef".to_vec()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(center.recv_msg().unwrap(), b"abc");
+    }
+
+    #[test]
+    fn delay_forwards_the_reply_after_sleeping() {
+        let (mut center, node) = mem_transport_pair();
+        let plan = FaultPlan::new().on(0x08, 0, FaultAction::Delay(Duration::from_millis(30)));
+        let mut node = FaultyTransport::wrap(Box::new(node), &plan);
+        center.send_msg(vec![0x08]).unwrap();
+        node.recv_msg().unwrap();
+        let t0 = std::time::Instant::now();
+        node.send_msg(b"late".to_vec()).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30), "delay not applied");
+        assert_eq!(center.recv_msg().unwrap(), b"late");
+    }
+}

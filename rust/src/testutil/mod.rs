@@ -1,5 +1,9 @@
-//! Deterministic test utilities: a seeded RNG and a tiny property-testing
-//! harness (the image has no `proptest`/`quickcheck`).
+//! Deterministic test utilities: a seeded RNG, a tiny property-testing
+//! harness (the image has no `proptest`/`quickcheck`), and the
+//! fault-injecting transport wrapper ([`faults`]) behind the fleet
+//! fault-tolerance tests.
+
+pub mod faults;
 
 use crate::bigint::RandomSource;
 

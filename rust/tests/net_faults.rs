@@ -1,0 +1,365 @@
+//! Fault-injection integration tests: fleet rounds must survive slow,
+//! dead and byzantine-slow nodes (per-round deadlines + quorum), retry
+//! flaky connects, and attribute every exclusion to the right node and
+//! round in the trace — all deterministically, via the
+//! `testutil::faults` harness installed on real TCP node servers.
+
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, OnceLock};
+use std::time::Duration;
+
+use privlogit::coordinator::fleet::Fleet;
+use privlogit::coordinator::{run_protocol, Backend, CenterLink};
+use privlogit::data::{synthesize, Dataset};
+use privlogit::gc::word::FixedFmt;
+use privlogit::linalg::r_squared;
+use privlogit::net::wire;
+use privlogit::net::{FleetOptions, NodeServer, RemoteFleet};
+use privlogit::obs;
+use privlogit::obs::timeline::parse_trace;
+use privlogit::optim::{fit, Method, OptimConfig};
+use privlogit::protocols::{Protocol, ProtocolConfig};
+use privlogit::testutil::faults::{FaultAction, FaultPlan};
+
+const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+static TRACE: OnceLock<PathBuf> = OnceLock::new();
+
+/// Install (once per process) and return this binary's trace file. Every
+/// test calls this before touching the network so the span sink exists
+/// before the first span fires; all tests share one file and filter by
+/// their own node addresses.
+fn trace_path() -> &'static Path {
+    TRACE.get_or_init(|| {
+        let dir = match std::env::var("PRIVLOGIT_TRACE_DIR") {
+            Ok(d) if !d.is_empty() => PathBuf::from(d),
+            _ => std::env::temp_dir().join("privlogit_faults_test"),
+        };
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("net_faults_{}.jsonl", std::process::id()));
+        assert!(obs::install_trace(path.to_str().unwrap()), "trace install failed");
+        path
+    })
+}
+
+/// Run `f` on its own thread and panic if it takes longer than
+/// `timeout` — a hung quorum path must fail the test run, never wedge it.
+fn watchdog<T: Send + 'static>(timeout: Duration, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(timeout).expect("watchdog: fleet operation hung or died")
+}
+
+/// One node server per partition, each with its own fault plan; returns
+/// the listen addresses. Server threads are detached — faulted sessions
+/// may park forever by design.
+fn spawn_fault_fleet(parts: Vec<Dataset>, plan_for: impl Fn(usize) -> FaultPlan) -> Vec<String> {
+    parts
+        .into_iter()
+        .enumerate()
+        .map(|(j, shard)| {
+            let server = NodeServer::bind("127.0.0.1:0", shard).unwrap();
+            let addr = server.local_addr().unwrap().to_string();
+            let mut server = plan_for(j).install(server);
+            std::thread::spawn(move || {
+                let _ = server.serve_once();
+            });
+            addr
+        })
+        .collect()
+}
+
+/// A plan faulting the reply of the first `GramReq` — the setup round
+/// both 16-node scenarios target.
+fn gram_fault(action: FaultAction) -> FaultPlan {
+    FaultPlan::new().on(wire::TAG_GRAM_REQ, 0, action)
+}
+
+/// The acceptance topology: 16 node servers, three of them faulted on
+/// the Gram round (one hangs, one dies mid-frame, one straggles past the
+/// deadline). At quorum 13 the PrivLogit-Local run must complete in
+/// bounded time, match the plaintext optimum of the *surviving* subset,
+/// and the trace must attribute each exclusion to the right node, round
+/// and outcome.
+#[test]
+fn sixteen_nodes_three_faulted_quorum_thirteen_converges() {
+    let trace = trace_path();
+    let d = synthesize("faults16", 1600, 3, 91);
+    let parts = d.partition(16);
+    let cfg = ProtocolConfig::default();
+    let survivors: Vec<Dataset> = parts
+        .iter()
+        .enumerate()
+        .filter(|(j, _)| ![3, 7, 11].contains(j))
+        .map(|(_, p)| p.clone())
+        .collect();
+    let truth = fit(
+        &survivors,
+        Method::Newton,
+        OptimConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters },
+    );
+
+    let addrs = spawn_fault_fleet(parts, |j| match j {
+        3 => gram_fault(FaultAction::Hang),
+        7 => gram_fault(FaultAction::TruncateFrame(5)),
+        11 => gram_fault(FaultAction::Delay(Duration::from_secs(5))),
+        _ => FaultPlan::new(),
+    });
+    let opts = FleetOptions {
+        round_timeout: Some(Duration::from_secs(2)),
+        quorum: 13,
+        ..FleetOptions::default()
+    };
+
+    let run_addrs = addrs.clone();
+    let (report, excluded, orgs_after, n_after) = watchdog(Duration::from_secs(240), move || {
+        let mut fleet = RemoteFleet::connect_with(&run_addrs, opts).unwrap();
+        let report = run_protocol(
+            Protocol::PrivLogitLocal,
+            Backend::Real,
+            256,
+            FMT,
+            &cfg,
+            0xFA1,
+            &CenterLink::Mem,
+            &mut fleet,
+        )
+        .unwrap();
+        (report, fleet.excluded().to_vec(), fleet.orgs(), fleet.n_total())
+    });
+
+    assert!(report.converged, "quorum run converged");
+    assert_eq!(orgs_after, 13, "three nodes excluded");
+    assert_eq!(n_after, 1300, "n_total recomputed from live membership");
+    let r2 = r_squared(&report.beta, &truth.beta);
+    assert!(r2 > 0.9999, "R² = {r2} vs plaintext optimum of the surviving subset");
+    assert_eq!(report.ledger.excluded_nodes, 3, "ledger counts the exclusions");
+
+    // Exclusion records: right node, right round, right classification.
+    assert_eq!(excluded.len(), 3, "{excluded:?}");
+    for (idx, want) in [(3usize, "timeout"), (7, "error"), (11, "timeout")] {
+        let e = excluded
+            .iter()
+            .find(|e| e.addr == addrs[idx])
+            .unwrap_or_else(|| panic!("no exclusion record for node {idx}: {excluded:?}"));
+        assert_eq!(e.outcome, want, "{e:?}");
+        assert_eq!((e.tag, e.round, e.org), (wire::TAG_GRAM_REQ, 0, idx), "{e:?}");
+    }
+
+    // The trace tells the same story: one fleet.rpc span per faulted
+    // node on GramReq round 0, with the matching outcome.
+    obs::flush();
+    let file = parse_trace(&std::fs::read_to_string(trace).unwrap()).unwrap();
+    for (idx, want) in [(3usize, "timeout"), (7, "error"), (11, "timeout")] {
+        let ev = file
+            .events
+            .iter()
+            .find(|e| {
+                e.span == "fleet.rpc"
+                    && e.node.as_deref() == Some(addrs[idx].as_str())
+                    && e.tag == Some(wire::TAG_GRAM_REQ)
+            })
+            .unwrap_or_else(|| panic!("no GramReq fleet.rpc span for node {idx}"));
+        assert_eq!(ev.outcome.as_deref(), Some(want), "node {idx}: {ev:?}");
+        assert_eq!(ev.round, Some(0), "node {idx}: {ev:?}");
+    }
+}
+
+/// The same three-fault topology at strict (default) quorum: the session
+/// must fail fast with an error naming all three dead nodes — bounded by
+/// the round deadline, no panic, no hang.
+#[test]
+fn sixteen_nodes_three_faulted_strict_quorum_fails_naming_all() {
+    trace_path();
+    let d = synthesize("faults16s", 1600, 3, 92);
+    let parts = d.partition(16);
+    let addrs = spawn_fault_fleet(parts, |j| match j {
+        3 => gram_fault(FaultAction::Hang),
+        7 => gram_fault(FaultAction::TruncateFrame(5)),
+        11 => gram_fault(FaultAction::Delay(Duration::from_secs(5))),
+        _ => FaultPlan::new(),
+    });
+    // quorum 0 (the default) = every live node must reply.
+    let opts = FleetOptions {
+        round_timeout: Some(Duration::from_secs(2)),
+        ..FleetOptions::default()
+    };
+
+    let cfg = ProtocolConfig::default();
+    let run_addrs = addrs.clone();
+    let err = watchdog(Duration::from_secs(240), move || {
+        let mut fleet = RemoteFleet::connect_with(&run_addrs, opts).unwrap();
+        run_protocol(
+            Protocol::PrivLogitLocal,
+            Backend::Real,
+            256,
+            FMT,
+            &cfg,
+            0xFA2,
+            &CenterLink::Mem,
+            &mut fleet,
+        )
+        .expect_err("strict quorum must abort on the first missed round")
+    });
+    let msg = format!("{err:#}");
+    assert!(msg.contains("failed mid-protocol"), "error: {msg}");
+    assert!(msg.contains("quorum"), "error states the quorum shortfall: {msg}");
+    for idx in [3, 7, 11] {
+        assert!(msg.contains(&addrs[idx]), "error names node {idx} ({}): {msg}", addrs[idx]);
+    }
+}
+
+/// A node whose listener drops the first k connection attempts
+/// pre-handshake: the center's bounded connect retry (exponential
+/// backoff) must get through without manual intervention, and the
+/// health probe answers on the live fleet.
+#[test]
+fn refused_first_connects_are_retried() {
+    trace_path();
+    let d = synthesize("faultsc", 200, 3, 93);
+    let parts = d.partition(2);
+    let addrs = spawn_fault_fleet(parts, |j| {
+        if j == 0 {
+            FaultPlan::new().fail_connects(2)
+        } else {
+            FaultPlan::new()
+        }
+    });
+    let (live, orgs, excluded) = watchdog(Duration::from_secs(60), move || {
+        let mut fleet = RemoteFleet::connect(&addrs).unwrap();
+        let live = fleet.ping().unwrap();
+        (live, fleet.orgs(), fleet.excluded().len())
+    });
+    assert_eq!(live, 2, "both nodes reachable after retries");
+    assert_eq!(orgs, 2);
+    assert_eq!(excluded, 0);
+}
+
+/// Every fault action, against a 4-node fleet on the stats round: at
+/// quorum 3 the faulty node is excluded with the right outcome
+/// classification and surviving replies keep their org attribution; at
+/// strict quorum the same fault fails the round naming the node.
+#[test]
+fn each_fault_action_excludes_at_quorum_and_fails_strict() {
+    trace_path();
+    let actions: [(FaultAction, &str); 4] = [
+        (FaultAction::Hang, "timeout"),
+        (FaultAction::DropAfterBytes(6), "timeout"),
+        (FaultAction::TruncateFrame(4), "error"),
+        (FaultAction::Delay(Duration::from_secs(3)), "timeout"),
+    ];
+    for (i, (action, want)) in actions.into_iter().enumerate() {
+        let d = synthesize("faultsa", 240, 3, 94 + i as u64);
+        let parts = d.partition(4);
+
+        // Quorum 3 of 4: the round proceeds over the survivors.
+        let addrs = spawn_fault_fleet(parts.clone(), |j| {
+            if j == 1 {
+                FaultPlan::new().on(wire::TAG_STATS_REQ, 0, action)
+            } else {
+                FaultPlan::new()
+            }
+        });
+        let opts = FleetOptions {
+            round_timeout: Some(Duration::from_secs(1)),
+            quorum: 3,
+            ..FleetOptions::default()
+        };
+        let faulty = addrs[1].clone();
+        let (orgs_replied, n_after, excluded) = watchdog(Duration::from_secs(60), move || {
+            let mut fleet = RemoteFleet::connect_with(&addrs, opts).unwrap();
+            let replies = fleet.stats(&[0.0, 0.0, 0.0], 1.0 / 240.0).unwrap();
+            let orgs: Vec<usize> = replies.iter().map(|r| r.org).collect();
+            (orgs, fleet.n_total(), fleet.excluded().to_vec())
+        });
+        assert_eq!(orgs_replied, vec![0, 2, 3], "org attribution survives the exclusion");
+        assert_eq!(n_after, 180, "n_total shrinks to the survivors");
+        assert_eq!(excluded.len(), 1, "{excluded:?}");
+        assert_eq!(excluded[0].addr, faulty, "{excluded:?}");
+        assert_eq!(excluded[0].outcome, want, "{action:?} classified: {excluded:?}");
+        assert_eq!((excluded[0].tag, excluded[0].round), (wire::TAG_STATS_REQ, 0));
+
+        // Strict quorum: the same fault is a session error naming the node.
+        let addrs = spawn_fault_fleet(parts, |j| {
+            if j == 1 {
+                FaultPlan::new().on(wire::TAG_STATS_REQ, 0, action)
+            } else {
+                FaultPlan::new()
+            }
+        });
+        let opts = FleetOptions {
+            round_timeout: Some(Duration::from_secs(1)),
+            ..FleetOptions::default()
+        };
+        let faulty = addrs[1].clone();
+        let err = watchdog(Duration::from_secs(60), move || {
+            let mut fleet = RemoteFleet::connect_with(&addrs, opts).unwrap();
+            fleet.stats(&[0.0, 0.0, 0.0], 1.0 / 240.0).unwrap_err()
+        });
+        let msg = err.to_string();
+        assert!(msg.contains("failed mid-protocol"), "{action:?}: {msg}");
+        assert!(msg.contains(&faulty), "{action:?} error names the node: {msg}");
+    }
+}
+
+/// Scaling sweep: 64 node servers, one quorum stats round with 8 nodes
+/// killed mid-round. The per-tag wire ledger must still partition the
+/// byte totals exactly under partial replies, and the center's per-live-
+/// node reply traffic must be identical to a 16-node fleet's — the
+/// center's per-node footprint is flat in fleet size.
+#[test]
+fn scaling_sweep_64_nodes_8_killed_mid_round() {
+    trace_path();
+    // Shard size is fixed (8 samples, p=3) so reply frames are
+    // byte-identical across fleet sizes.
+    let run = |orgs: usize, kill: usize, seed: u64| -> u64 {
+        let d = synthesize("faultsw", 8 * orgs, 3, seed);
+        let parts = d.partition(orgs);
+        let step = orgs / kill;
+        let addrs = spawn_fault_fleet(parts, |j| {
+            if j % step == 0 {
+                FaultPlan::new().on(wire::TAG_STATS_REQ, 0, FaultAction::TruncateFrame(4))
+            } else {
+                FaultPlan::new()
+            }
+        });
+        let opts = FleetOptions {
+            round_timeout: Some(Duration::from_secs(2)),
+            quorum: orgs - kill,
+            ..FleetOptions::default()
+        };
+        watchdog(Duration::from_secs(120), move || {
+            let mut fleet = RemoteFleet::connect_with(&addrs, opts).unwrap();
+            let replies = fleet.stats(&[0.0, 0.0, 0.0], 1.0).unwrap();
+            assert_eq!(replies.len(), orgs - kill);
+            assert_eq!(fleet.excluded().len(), kill);
+            assert_eq!(fleet.orgs(), orgs - kill);
+            assert_eq!(fleet.n_total(), (orgs - kill) * 8);
+
+            // The per-tag flows still partition the fleet byte totals
+            // exactly under partial replies (the tracing PR's ledger
+            // invariant).
+            let net = fleet.net_stats();
+            let flows = fleet.tag_flows();
+            let sent: u64 = flows.values().map(|f| f.sent_bytes).sum();
+            let recv: u64 = flows.values().map(|f| f.recv_bytes).sum();
+            assert_eq!(net.bytes_sent, sent, "sent bytes partition by tag");
+            assert_eq!(net.bytes_recv, recv, "recv bytes partition by tag");
+
+            // Flat-footprint proxy: stats-reply bytes per live node.
+            let stats = &flows[&wire::TAG_STATS_REQ];
+            let live = (orgs - kill) as u64;
+            assert_eq!(stats.recv_frames, live, "one stats reply per survivor");
+            assert_eq!(stats.recv_bytes % live, 0);
+            stats.recv_bytes / live
+        })
+    };
+    let per_node_16 = run(16, 2, 95);
+    let per_node_64 = run(64, 8, 96);
+    assert_eq!(
+        per_node_16, per_node_64,
+        "per-live-node stats reply bytes must not grow with fleet size"
+    );
+}
