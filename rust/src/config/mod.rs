@@ -55,7 +55,17 @@ pub struct Config {
     /// live node must reply (strict all-or-abort).
     pub quorum: usize,
     /// `privlogit center`: per-address connect retry budget in seconds.
+    /// Also bounds the center-a → center-b peer connect (one knob for
+    /// both link kinds).
     pub connect_timeout: f64,
+    /// `privlogit center`: directory to persist round-boundary session
+    /// checkpoints under (empty = no checkpointing). See
+    /// docs/DEPLOY.md §Crash recovery.
+    pub state_dir: String,
+    /// `privlogit center`: resume from the latest checkpoint in this
+    /// directory instead of starting at round 0 (implies checkpointing
+    /// into the same directory unless `--state-dir` overrides it).
+    pub resume: String,
 }
 
 impl Default for Config {
@@ -81,8 +91,22 @@ impl Default for Config {
             round_timeout: None,
             quorum: 0,
             connect_timeout: 10.0,
+            state_dir: String::new(),
+            resume: String::new(),
         }
     }
+}
+
+/// Parse `value` for config key `key`, naming the offending flag in the
+/// error — `--quorum banana` must say which knob was wrong, not just
+/// "invalid digit found in string".
+fn parse_keyed<T: std::str::FromStr>(key: &str, value: &str) -> anyhow::Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    value.parse().map_err(|e| {
+        anyhow::anyhow!("invalid value {value:?} for --{}: {e}", key.replace('_', "-"))
+    })
 }
 
 impl Config {
@@ -93,23 +117,25 @@ impl Config {
             "dataset" => self.dataset = value.to_string(),
             "protocol" => self.protocol = value.to_string(),
             "backend" => self.backend = value.to_string(),
-            "orgs" => self.orgs = value.parse()?,
-            "lambda" => self.lambda = value.parse()?,
-            "tol" => self.tol = value.parse()?,
-            "max_iters" => self.max_iters = value.parse()?,
-            "modulus_bits" | "modulus" => self.modulus_bits = value.parse()?,
-            "threaded" => self.threaded = value.parse()?,
-            "center_tcp" => self.center_tcp = value.parse()?,
+            "orgs" => self.orgs = parse_keyed(&key, value)?,
+            "lambda" => self.lambda = parse_keyed(&key, value)?,
+            "tol" => self.tol = parse_keyed(&key, value)?,
+            "max_iters" => self.max_iters = parse_keyed(&key, value)?,
+            "modulus_bits" | "modulus" => self.modulus_bits = parse_keyed(&key, value)?,
+            "threaded" => self.threaded = parse_keyed(&key, value)?,
+            "center_tcp" => self.center_tcp = parse_keyed(&key, value)?,
             "listen" => self.listen = value.to_string(),
-            "org" => self.org = value.parse()?,
+            "org" => self.org = parse_keyed(&key, value)?,
             "nodes" => self.nodes = value.to_string(),
             "peer" => self.peer = value.to_string(),
-            "once" => self.once = value.parse()?,
-            "json" => self.json = value.parse()?,
-            "seed" => self.seed = value.parse()?,
-            "round_timeout" => self.round_timeout = Some(value.parse()?),
-            "quorum" => self.quorum = value.parse()?,
-            "connect_timeout" => self.connect_timeout = value.parse()?,
+            "once" => self.once = parse_keyed(&key, value)?,
+            "json" => self.json = parse_keyed(&key, value)?,
+            "seed" => self.seed = parse_keyed(&key, value)?,
+            "round_timeout" => self.round_timeout = Some(parse_keyed(&key, value)?),
+            "quorum" => self.quorum = parse_keyed(&key, value)?,
+            "connect_timeout" => self.connect_timeout = parse_keyed(&key, value)?,
+            "state_dir" => self.state_dir = value.to_string(),
+            "resume" => self.resume = value.to_string(),
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -253,6 +279,38 @@ mod tests {
         // A non-positive round_timeout is accepted (it disables deadlines).
         c.set("round_timeout", "0").unwrap();
         assert_eq!(c.round_timeout, Some(0.0));
+    }
+
+    #[test]
+    fn invalid_values_name_the_offending_key() {
+        let mut c = Config::default();
+        let err = c.set("round-timeout", "soon").unwrap_err().to_string();
+        assert!(err.contains("--round-timeout"), "error should name the flag: {err}");
+        assert!(err.contains("soon"), "error should quote the value: {err}");
+        let err = c.set("quorum", "-3").unwrap_err().to_string();
+        assert!(err.contains("--quorum"), "error should name the flag: {err}");
+        let err = c.set("connect_timeout", "10s").unwrap_err().to_string();
+        assert!(err.contains("--connect-timeout"), "error should name the flag: {err}");
+        let err = c.set("max_iters", "many").unwrap_err().to_string();
+        assert!(err.contains("--max-iters"), "error should name the flag: {err}");
+        // None of the failed sets may have clobbered the config.
+        assert_eq!(c.round_timeout, None);
+        assert_eq!(c.quorum, 0);
+        assert_eq!(c.connect_timeout, 10.0);
+    }
+
+    #[test]
+    fn durability_keys() {
+        let mut c = Config::default();
+        assert!(c.state_dir.is_empty());
+        assert!(c.resume.is_empty());
+        let args: Vec<String> = ["--state-dir", "/tmp/plgt-state", "--resume", "/tmp/plgt-state"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.parse_args(&args).unwrap();
+        assert_eq!(c.state_dir, "/tmp/plgt-state");
+        assert_eq!(c.resume, "/tmp/plgt-state");
     }
 
     #[test]

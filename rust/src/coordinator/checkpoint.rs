@@ -1,0 +1,368 @@
+//! Round-boundary session checkpoints: the durability layer behind
+//! `privlogit center --state-dir <dir>` / `--resume <dir>`.
+//!
+//! At every round boundary the center persists one
+//! [`SessionCheckpoint`] — protocol, completed-iteration index, the
+//! model iterate β (bit-exact), fixed-point format, session identity
+//! (seed / modulus bits / epoch), live and excluded membership, and a
+//! scalar ledger snapshot — as a single-line JSON document under the
+//! state directory, schema [`CHECKPOINT_SCHEMA`]. Writes are atomic
+//! (tmp file + rename, fsynced) so a crash mid-write can never corrupt
+//! the latest durable state: a reader sees either the previous
+//! checkpoint or the new one, never a torn file.
+//!
+//! β travels twice in each document: as `beta_bits` (the `f64` bit
+//! patterns, lowercase hex — what resume actually loads, so the
+//! restored iterate is *bit-identical* to the crashed process's) and as
+//! `beta` (plain JSON numbers, for operators reading the file). The
+//! approximate copy is never read back.
+//!
+//! File layout inside the state dir: `checkpoint-000007.json` for the
+//! checkpoint at round 7. Round indices are zero-padded to six digits
+//! so lexicographic order is numeric order and
+//! [`load_latest`] can pick the newest without parsing every file.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::mpc::CostLedger;
+use crate::obs::json::{self, JsonObj, JsonValue};
+
+/// Schema tag every checkpoint document carries.
+pub const CHECKPOINT_SCHEMA: &str = "privlogit-checkpoint/v1";
+
+/// Everything a `--resume` needs to continue a PrivLogit-Local session
+/// from the last completed round instead of round 0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCheckpoint {
+    /// Protocol name (resume is scoped to `privlogit-local`).
+    pub protocol: String,
+    /// Completed global iterations when this checkpoint was written
+    /// (the resumed run continues at this iteration index).
+    pub round: u64,
+    /// The model iterate, restored bit-exactly.
+    pub beta: Vec<f64>,
+    /// Fixed-point word width (bits).
+    pub w: u32,
+    /// Fixed-point fractional bits.
+    pub f: u32,
+    /// The RNG seed the session was started with — the resumed center
+    /// must regenerate the *same* Paillier keypair, so the session id
+    /// (a hash of the modulus) stitches both incarnations into one
+    /// logical session in the merged timeline.
+    pub seed: u64,
+    /// Paillier modulus bits the session was started with.
+    pub modulus_bits: u64,
+    /// Session epoch this incarnation ran at; a resume reconnects at
+    /// `epoch + 1` so node replay guards accept the re-key.
+    pub epoch: u64,
+    /// Session id (hash of the Paillier modulus; 0 pre-key or modeled).
+    pub session: u64,
+    /// Dimensionality the fleet served.
+    pub p: u64,
+    /// Sample total over the live membership at checkpoint time.
+    pub n_total: u64,
+    /// Dataset name (shard agreement check on resume is the fleet's).
+    pub dataset: String,
+    /// Live node addresses at checkpoint time (empty for in-process
+    /// fleets, which have no addresses).
+    pub live: Vec<String>,
+    /// Excluded node addresses at checkpoint time.
+    pub excluded: Vec<String>,
+    /// Scalar ledger snapshot (headline counters, for operators and
+    /// tests; a resumed run's report accounts the new incarnation only
+    /// and does *not* re-add these).
+    pub ledger: Vec<(String, f64)>,
+}
+
+/// The headline scalar counters checkpointed from a [`CostLedger`].
+pub fn ledger_snapshot(l: &CostLedger) -> Vec<(String, f64)> {
+    [
+        ("center_secs", l.center_secs),
+        ("node_secs", l.node_secs),
+        ("bytes", l.bytes as f64),
+        ("bytes_recv", l.bytes_recv as f64),
+        ("fleet_bytes_sent", l.fleet_bytes_sent as f64),
+        ("fleet_bytes_recv", l.fleet_bytes_recv as f64),
+        ("rounds", l.rounds as f64),
+        ("paillier_encs", l.paillier_encs as f64),
+        ("paillier_adds", l.paillier_adds as f64),
+        ("paillier_scalar", l.paillier_scalar as f64),
+        ("paillier_decrypts", l.paillier_decrypts as f64),
+        ("gc_ands", l.gc_ands as f64),
+        ("ot_bits", l.ot_bits as f64),
+        ("excluded_nodes", l.excluded_nodes as f64),
+        ("readmitted_nodes", l.readmitted_nodes as f64),
+    ]
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), v))
+    .collect()
+}
+
+impl SessionCheckpoint {
+    /// Serialize to a single-line JSON document (see the module doc for
+    /// the dual β encoding).
+    pub fn to_json(&self) -> JsonValue {
+        let beta_bits: Vec<JsonValue> = self
+            .beta
+            .iter()
+            .map(|b| JsonValue::Str(format!("{:016x}", b.to_bits())))
+            .collect();
+        let beta_approx: Vec<JsonValue> =
+            self.beta.iter().map(|b| JsonValue::Num(*b)).collect();
+        let mut ledger = JsonObj::new();
+        for (k, v) in &self.ledger {
+            ledger = ledger.f64(k, *v);
+        }
+        JsonObj::new()
+            .str("schema", CHECKPOINT_SCHEMA)
+            .str("protocol", &self.protocol)
+            .u64("round", self.round)
+            .u64("session", self.session)
+            .u64("epoch", self.epoch)
+            .u64("seed", self.seed)
+            .u64("modulus_bits", self.modulus_bits)
+            .u64("w", self.w as u64)
+            .u64("f", self.f as u64)
+            .u64("p", self.p)
+            .u64("n_total", self.n_total)
+            .str("dataset", &self.dataset)
+            .push("beta_bits", JsonValue::Arr(beta_bits))
+            .push("beta", JsonValue::Arr(beta_approx))
+            .push(
+                "live",
+                JsonValue::Arr(
+                    self.live.iter().map(|a| JsonValue::Str(a.clone())).collect(),
+                ),
+            )
+            .push(
+                "excluded",
+                JsonValue::Arr(
+                    self.excluded.iter().map(|a| JsonValue::Str(a.clone())).collect(),
+                ),
+            )
+            .push("ledger", ledger.build())
+            .build()
+    }
+
+    /// Parse a checkpoint document, validating the schema tag. β is
+    /// restored from `beta_bits` (bit-exact); the approximate `beta`
+    /// member is ignored.
+    pub fn from_json(doc: &JsonValue) -> anyhow::Result<SessionCheckpoint> {
+        let schema = doc.get("schema").and_then(JsonValue::as_str).unwrap_or("");
+        anyhow::ensure!(
+            schema == CHECKPOINT_SCHEMA,
+            "not a checkpoint document: schema {schema:?}, expected {CHECKPOINT_SCHEMA:?}"
+        );
+        let str_field = |key: &str| -> anyhow::Result<String> {
+            Ok(doc
+                .get(key)
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint is missing {key:?}"))?
+                .to_string())
+        };
+        let u64_field = |key: &str| -> anyhow::Result<u64> {
+            doc.get(key)
+                .and_then(JsonValue::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint is missing {key:?}"))
+        };
+        let bits = doc
+            .get("beta_bits")
+            .and_then(JsonValue::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing \"beta_bits\""))?;
+        let mut beta = Vec::with_capacity(bits.len());
+        for (i, b) in bits.iter().enumerate() {
+            let hex = b
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("beta_bits[{i}] is not a string"))?;
+            let raw = u64::from_str_radix(hex, 16)
+                .map_err(|_| anyhow::anyhow!("beta_bits[{i}] = {hex:?} is not f64 bits"))?;
+            beta.push(f64::from_bits(raw));
+        }
+        let addrs = |key: &str| -> Vec<String> {
+            doc.get(key)
+                .and_then(JsonValue::as_arr)
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        let ledger = match doc.get("ledger") {
+            Some(JsonValue::Obj(pairs)) => pairs
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(SessionCheckpoint {
+            protocol: str_field("protocol")?,
+            round: u64_field("round")?,
+            beta,
+            w: u64_field("w")? as u32,
+            f: u64_field("f")? as u32,
+            seed: u64_field("seed")?,
+            modulus_bits: u64_field("modulus_bits")?,
+            epoch: u64_field("epoch")?,
+            session: u64_field("session")?,
+            p: u64_field("p")?,
+            n_total: u64_field("n_total")?,
+            dataset: str_field("dataset")?,
+            live: addrs("live"),
+            excluded: addrs("excluded"),
+            ledger,
+        })
+    }
+}
+
+/// The file name for a given round's checkpoint.
+fn file_name(round: u64) -> String {
+    format!("checkpoint-{round:06}.json")
+}
+
+/// Persist one checkpoint atomically under `dir` (created if missing):
+/// the document is written to a dot-prefixed tmp file, fsynced, then
+/// renamed over the final name — a crash at any point leaves either no
+/// file or a complete one. Returns the final path.
+pub fn save(dir: &Path, cp: &SessionCheckpoint) -> anyhow::Result<PathBuf> {
+    fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("creating state dir {}: {e}", dir.display()))?;
+    let final_path = dir.join(file_name(cp.round));
+    let tmp_path = dir.join(format!(".{}.tmp", file_name(cp.round)));
+    let mut text = cp.to_json().render();
+    text.push('\n');
+    let write = || -> std::io::Result<()> {
+        let mut f = fs::File::create(&tmp_path)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+        fs::rename(&tmp_path, &final_path)
+    };
+    write().map_err(|e| {
+        anyhow::anyhow!("writing checkpoint {}: {e}", final_path.display())
+    })?;
+    Ok(final_path)
+}
+
+/// Load the newest checkpoint under `dir` (highest round index), or
+/// `None` when the directory holds no checkpoints (or does not exist —
+/// a fresh `--state-dir` is not an error, an unreadable newest
+/// checkpoint is).
+pub fn load_latest(dir: &Path) -> anyhow::Result<Option<SessionCheckpoint>> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => anyhow::bail!("reading state dir {}: {e}", dir.display()),
+    };
+    let mut newest: Option<String> = None;
+    for entry in entries {
+        let name = entry
+            .map_err(|e| anyhow::anyhow!("reading state dir {}: {e}", dir.display()))?
+            .file_name()
+            .to_string_lossy()
+            .into_owned();
+        if name.starts_with("checkpoint-") && name.ends_with(".json") {
+            // Zero-padded round ⇒ lexicographic max is the newest.
+            if newest.as_deref().map_or(true, |n| name.as_str() > n) {
+                newest = Some(name);
+            }
+        }
+    }
+    let Some(name) = newest else { return Ok(None) };
+    let path = dir.join(&name);
+    let text = fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+    let doc = json::parse(text.trim())
+        .map_err(|e| anyhow::anyhow!("parsing checkpoint {}: {e}", path.display()))?;
+    let cp = SessionCheckpoint::from_json(&doc)
+        .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))?;
+    Ok(Some(cp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(round: u64) -> SessionCheckpoint {
+        SessionCheckpoint {
+            protocol: "privlogit-local".into(),
+            round,
+            // Values chosen so any decimal round-trip would drift:
+            // 0.1+0.2, a subnormal, a negative zero and an exact power.
+            beta: vec![0.1 + 0.2, f64::MIN_POSITIVE / 8.0, -0.0, -1048576.0],
+            w: 40,
+            f: 24,
+            seed: 42,
+            modulus_bits: 256,
+            epoch: 1,
+            session: 0xDEAD_BEEF,
+            p: 4,
+            n_total: 1200,
+            dataset: "synth:n=1200,p=4,seed=7".into(),
+            live: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
+            excluded: vec!["127.0.0.1:9003".into()],
+            ledger: vec![("rounds".into(), 9.0), ("paillier_encs".into(), 120.0)],
+        }
+    }
+
+    /// β must survive the JSON round-trip bit-exactly, including the
+    /// sign of negative zero and subnormals.
+    #[test]
+    fn round_trips_bit_exactly() {
+        let cp = sample(7);
+        let back = SessionCheckpoint::from_json(&cp.to_json()).unwrap();
+        assert_eq!(back, cp);
+        for (a, b) in cp.beta.iter().zip(&back.beta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact β");
+        }
+        assert!(back.beta[2].is_sign_negative(), "-0.0 keeps its sign");
+    }
+
+    #[test]
+    fn save_and_load_latest_picks_highest_round() {
+        let dir = std::env::temp_dir().join(format!("plgt-ckpt-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        assert!(load_latest(&dir).unwrap().is_none(), "missing dir is no checkpoint");
+        for round in [0, 3, 12] {
+            let path = save(&dir, &sample(round)).unwrap();
+            assert!(path.ends_with(file_name(round)));
+        }
+        let latest = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.round, 12);
+        assert_eq!(latest.live.len(), 2);
+        assert_eq!(latest.excluded, vec!["127.0.0.1:9003".to_string()]);
+        // No tmp files survive the atomic rename.
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".tmp")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files left behind: {leftovers:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_foreign_and_malformed_documents() {
+        let doc = json::parse(r#"{"schema":"privlogit-trace/v1"}"#).unwrap();
+        let err = SessionCheckpoint::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("privlogit-checkpoint/v1"), "{err}");
+        let mut cp = sample(1).to_json();
+        if let JsonValue::Obj(pairs) = &mut cp {
+            pairs.retain(|(k, _)| k != "beta_bits");
+        }
+        let err = SessionCheckpoint::from_json(&cp).unwrap_err().to_string();
+        assert!(err.contains("beta_bits"), "{err}");
+    }
+
+    /// An unreadable newest checkpoint must surface as an error, not be
+    /// silently skipped in favor of an older (stale) one.
+    #[test]
+    fn corrupt_latest_is_an_error() {
+        let dir =
+            std::env::temp_dir().join(format!("plgt-ckpt-bad-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        save(&dir, &sample(2)).unwrap();
+        fs::write(dir.join(file_name(5)), b"{torn").unwrap();
+        let err = load_latest(&dir).unwrap_err().to_string();
+        assert!(err.contains(&file_name(5)), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -210,9 +210,21 @@ pub trait Fleet {
         anyhow::bail!("this fleet does not support node-side step rounds")
     }
     /// Number of nodes this fleet has excluded after missed rounds
-    /// (quorum mode); zero for fleets without fault tolerance.
+    /// (quorum mode) and not readmitted since; zero for fleets without
+    /// fault tolerance.
     fn excluded_count(&self) -> u64 {
         0
+    }
+    /// Number of readmission events: previously-excluded nodes restored
+    /// to live membership after answering a round-boundary probe; zero
+    /// for fleets without fault tolerance.
+    fn readmitted_count(&self) -> u64 {
+        0
+    }
+    /// `(live, excluded)` node addresses, for session checkpoints;
+    /// empty for in-process fleets (no addresses to record).
+    fn membership(&self) -> (Vec<String>, Vec<String>) {
+        (Vec::new(), Vec::new())
     }
 }
 

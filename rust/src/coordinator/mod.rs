@@ -9,13 +9,14 @@
 //! runner the distributed `privlogit center` mode reuses with a
 //! [`crate::net::RemoteFleet`] over real node servers.
 
+pub mod checkpoint;
 pub mod fleet;
 
 use crate::config::Config;
 use crate::data::{dataset_by_name, Dataset};
 use crate::gc::word::FixedFmt;
 use crate::mpc::{ModelFabric, RealFabric};
-use crate::protocols::{Protocol, ProtocolConfig, RunReport};
+use crate::protocols::{DurableRun, Protocol, ProtocolConfig, RunReport};
 use crate::runtime;
 use fleet::{Fleet, LocalFleet, ThreadedFleet};
 
@@ -209,6 +210,62 @@ pub fn run_protocol(
     link: &CenterLink,
     fleet: &mut dyn Fleet,
 ) -> anyhow::Result<RunReport> {
+    run_protocol_durable(
+        protocol,
+        backend,
+        modulus_bits,
+        fmt,
+        cfg,
+        seed,
+        link,
+        fleet,
+        crate::mpc::peer::PEER_CONNECT_TIMEOUT,
+        &DurableRun::default(),
+    )
+}
+
+/// [`run_protocol`] with session durability (`--state-dir` /
+/// `--resume`) and the connect-retry budget the center-b peer link
+/// shares with the fleet. `durable.epoch` is announced on the peer
+/// handshake and `SetKey` so S2's replay guard matches the node
+/// fleet's; a resuming caller must also have built its fleet at the
+/// same epoch ([`crate::net::fleet::FleetOptions::epoch`]).
+///
+/// A resume re-validates session identity before any crypto runs: the
+/// checkpoint's protocol, seed and modulus bits must match this
+/// invocation, because the same seed is what regenerates the same
+/// Paillier modulus — and with it the session id that stitches both
+/// incarnations into one logical session in the merged timeline.
+#[allow(clippy::too_many_arguments)]
+pub fn run_protocol_durable(
+    protocol: Protocol,
+    backend: Backend,
+    modulus_bits: usize,
+    fmt: FixedFmt,
+    cfg: &ProtocolConfig,
+    seed: u64,
+    link: &CenterLink,
+    fleet: &mut dyn Fleet,
+    connect_timeout: std::time::Duration,
+    durable: &DurableRun,
+) -> anyhow::Result<RunReport> {
+    if let Some(cp) = &durable.resume {
+        anyhow::ensure!(
+            cp.protocol == protocol.name(),
+            "checkpoint was written by {:?}, this run is {:?} — resume cannot \
+             switch protocols",
+            cp.protocol,
+            protocol.name()
+        );
+        anyhow::ensure!(
+            cp.seed == seed && cp.modulus_bits == modulus_bits as u64,
+            "checkpoint session identity mismatch: it ran seed={} modulus_bits={}, \
+             this run has seed={seed} modulus_bits={modulus_bits} — the same seed is \
+             required to regenerate the same Paillier key and session id",
+            cp.seed,
+            cp.modulus_bits
+        );
+    }
     let report = match resolve_backend(backend, fleet.p()) {
         Backend::Real => {
             let mut fab = match link {
@@ -216,12 +273,17 @@ pub fn run_protocol(
                 CenterLink::TcpLoopback => {
                     RealFabric::new_tcp_loopback(modulus_bits, fmt, seed)?
                 }
-                CenterLink::Peer(addr) => {
-                    RealFabric::connect_peer(modulus_bits, fmt, seed, addr)?
-                }
+                CenterLink::Peer(addr) => RealFabric::connect_peer_with(
+                    modulus_bits,
+                    fmt,
+                    seed,
+                    addr,
+                    connect_timeout,
+                    durable.epoch,
+                )?,
             };
             fleet.install_key(&fab.fleet_key())?;
-            protocol.run(&mut fab, fleet, cfg)
+            protocol.run_durable(&mut fab, fleet, cfg, durable)
         }
         Backend::Model | Backend::Auto => {
             anyhow::ensure!(
@@ -229,7 +291,7 @@ pub fn run_protocol(
                 "the remote center-b peer link requires the real backend"
             );
             let mut fab = ModelFabric::new(2048, fmt);
-            protocol.run(&mut fab, fleet, cfg)
+            protocol.run_durable(&mut fab, fleet, cfg, durable)
         }
     };
     // Protocol end is a trace boundary: buffered span events hit the

@@ -28,19 +28,19 @@
 //! Center halves in one process (threads).
 
 use privlogit::config::Config;
-use privlogit::coordinator::{run_protocol, Backend, CenterLink, Experiment};
+use privlogit::coordinator::{checkpoint, run_protocol_durable, Backend, CenterLink, Experiment};
 use privlogit::data::{dataset_by_name, WORKLOADS};
 use privlogit::gc::word::FixedFmt;
 use privlogit::metrics::{beta_preview, render_report, render_report_json};
 use privlogit::mpc::PeerGcServer;
-use privlogit::net::{FleetOptions, NodeServer, RemoteFleet};
+use privlogit::net::{wire, FleetOptions, NodeServer, RemoteFleet, TcpTransport};
 use privlogit::obs;
 use privlogit::obs::timeline::{parse_trace, Timeline};
-use privlogit::protocols::{Protocol, ProtocolConfig, RunReport};
+use privlogit::protocols::{DurableRun, Protocol, ProtocolConfig, RunReport};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: privlogit <run|compare|list|trace|node|center|center-a|center-b> \
+        "usage: privlogit <run|compare|list|trace|ping|node|center|center-a|center-b> \
          [--dataset NAME] [--protocol P] [--backend real|model|auto] [--orgs N] [--lambda L] \
          [--tol T] [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--json] \
          [--seed S] [--config FILE]\n\
@@ -50,7 +50,9 @@ fn usage() -> ! {
          privlogit center-b --listen ADDR [--once]\n\
          privlogit center-a --peer ADDR --nodes ADDR1,ADDR2,... [run flags]\n\
          privlogit center   --nodes ADDR1,ADDR2,... [run flags]\n\
+         privlogit ping ADDR               # one Ping round trip to a node server\n\
          fault tolerance: [--round-timeout SECS] [--quorum Q] [--connect-timeout SECS]\n\
+         durable sessions: [--state-dir DIR] [--resume DIR]   (docs/DEPLOY.md §Crash recovery)\n\
          \n\
          observability (docs/ARCHITECTURE.md §Observability):\n\
          PRIVLOGIT_LOG=warn|info|debug   stderr log level (any subcommand)\n\
@@ -112,6 +114,43 @@ fn trace_main(args: &[String]) -> anyhow::Result<()> {
     } else {
         print!("{}", timeline.render());
     }
+    Ok(())
+}
+
+/// `privlogit ping ADDR`: one wire-level liveness probe — connect,
+/// handshake, `Ping` → `Ack` — printing the round-trip time. Exits
+/// non-zero if the server is unreachable or answers badly, so scripts
+/// and readiness checks can gate on it.
+fn ping_main(args: &[String]) -> anyhow::Result<()> {
+    let mut addr = None;
+    for arg in args {
+        match arg.as_str() {
+            flag if flag.starts_with("--") => anyhow::bail!("unknown ping flag {flag:?}"),
+            a if addr.is_none() => addr = Some(a.to_string()),
+            extra => anyhow::bail!("unexpected extra ping argument {extra:?}"),
+        }
+    }
+    let Some(addr) = addr else { anyhow::bail!("usage: privlogit ping ADDR") };
+    let started = std::time::Instant::now();
+    let mut transport = TcpTransport::connect(&addr, wire::ROLE_CENTER)
+        .map_err(|e| anyhow::anyhow!("{addr}: connect failed: {e}"))?;
+    let connected = started.elapsed();
+    transport.set_deadline(Some(std::time::Duration::from_secs(10)))?;
+    let ping_started = std::time::Instant::now();
+    transport.send_wire(&wire::WireMsg::Ping)?;
+    match transport.recv_wire()? {
+        wire::WireMsg::Ack => {}
+        other => anyhow::bail!("{addr}: sent {other:?} where an acknowledgement was expected"),
+    }
+    let rtt = ping_started.elapsed();
+    // Let the server exit its session loop cleanly rather than logging
+    // a dropped connection.
+    let _ = transport.send_wire(&wire::WireMsg::Shutdown);
+    println!(
+        "{addr}: ok (connect+handshake {:.1} ms, ping {:.1} ms)",
+        connected.as_secs_f64() * 1e3,
+        rtt.as_secs_f64() * 1e3
+    );
     Ok(())
 }
 
@@ -180,7 +219,7 @@ fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
     let backend: Backend = cfg.backend.parse()?;
     let pcfg = ProtocolConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters };
     // Fault-tolerance knobs: environment first, explicit config on top.
-    let mut opts = FleetOptions::from_env();
+    let mut opts = FleetOptions::from_env()?;
     if let Some(secs) = cfg.round_timeout {
         opts.round_timeout = (secs > 0.0 && secs.is_finite())
             .then(|| std::time::Duration::from_secs_f64(secs));
@@ -189,9 +228,44 @@ fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
     if cfg.connect_timeout > 0.0 && cfg.connect_timeout.is_finite() {
         opts.connect_timeout = std::time::Duration::from_secs_f64(cfg.connect_timeout);
     }
+    // Durable-session knobs: `--resume DIR` loads the latest checkpoint
+    // and advances the session epoch so the node-side replay guard
+    // accepts the re-key; `--state-dir DIR` (implied by --resume)
+    // persists a checkpoint at every round boundary.
+    let mut durable = DurableRun {
+        state_dir: (!cfg.state_dir.is_empty()).then(|| cfg.state_dir.clone().into()),
+        resume: None,
+        seed: cfg.seed,
+        modulus_bits: cfg.modulus_bits as u64,
+        epoch: 0,
+    };
+    if !cfg.resume.is_empty() {
+        let dir = std::path::PathBuf::from(&cfg.resume);
+        let cp = checkpoint::load_latest(&dir)?.ok_or_else(|| {
+            anyhow::anyhow!(
+                "--resume {}: no checkpoint-*.json found (was the crashed center run \
+                 with --state-dir pointing here?)",
+                dir.display()
+            )
+        })?;
+        obs::info(format_args!(
+            "resuming session {} from checkpoint round {} (epoch {} -> {})",
+            cp.session,
+            cp.round,
+            cp.epoch,
+            cp.epoch + 1
+        ));
+        durable.epoch = cp.epoch + 1;
+        opts.epoch = durable.epoch;
+        if durable.state_dir.is_none() {
+            durable.state_dir = Some(dir);
+        }
+        durable.resume = Some(cp);
+    }
+    let connect_timeout = opts.connect_timeout;
     let mut fleet = RemoteFleet::connect_with(&addrs, opts)?;
     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_protocol(
+        run_protocol_durable(
             protocol,
             backend,
             cfg.modulus_bits,
@@ -200,6 +274,8 @@ fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
             cfg.seed,
             &link,
             &mut fleet,
+            connect_timeout,
+            &durable,
         )
     }));
     match run {
@@ -251,6 +327,7 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
         "trace" => trace_main(&args[1..]),
+        "ping" => ping_main(&args[1..]),
         "compare" => {
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;

@@ -102,6 +102,12 @@ pub fn render_report(r: &RunReport) -> String {
             l.excluded_nodes
         ));
     }
+    if l.readmitted_nodes > 0 {
+        s.push_str(&format!(
+            "  readmissions: {} node(s) restored after answering a round-boundary probe\n",
+            l.readmitted_nodes
+        ));
+    }
     tag_table(&mut s, "fleet wire", &l.fleet_tag_flows);
     tag_table(&mut s, "center peer control frames", &l.peer_tag_flows);
     s
@@ -143,6 +149,7 @@ pub fn render_report_json(r: &RunReport) -> String {
         .push("fleet_tag_flows", flows_json(&l.fleet_tag_flows))
         .push("peer_tag_flows", flows_json(&l.peer_tag_flows))
         .u64("excluded_nodes", l.excluded_nodes)
+        .u64("readmitted_nodes", l.readmitted_nodes)
         .u64("rounds", l.rounds)
         .u64("paillier_encs", l.paillier_encs)
         .u64("paillier_adds", l.paillier_adds)

@@ -135,9 +135,13 @@ pub struct CostLedger {
     /// the raw garbling/OT byte stream is *not* tagged — it stays in
     /// `bytes`/`bytes_recv`). Empty for in-process center links.
     pub peer_tag_flows: std::collections::BTreeMap<u8, crate::obs::TagFlow>,
-    /// Nodes a quorum fleet excluded after missed rounds (zero for
-    /// in-process fleets and strict all-or-abort runs).
+    /// Nodes a quorum fleet excluded after missed rounds and not
+    /// readmitted since (zero for in-process fleets and strict
+    /// all-or-abort runs).
     pub excluded_nodes: u64,
+    /// Readmission events: previously-excluded nodes restored to live
+    /// membership after answering a round-boundary probe.
+    pub readmitted_nodes: u64,
     /// Protocol rounds (for the latency term).
     pub rounds: u64,
     /// Paillier operation counts.

@@ -290,7 +290,7 @@ impl ShareLink {
 enum LinkSpec<'a> {
     Mem,
     TcpLoopback,
-    Peer(&'a str),
+    Peer { addr: &'a str, connect_timeout: std::time::Duration, epoch: u64 },
 }
 
 /// S2's inputs to one GC execution (see [`RealFabric::eval_input`]).
@@ -366,7 +366,29 @@ impl RealFabric {
         seed: u64,
         addr: &str,
     ) -> std::io::Result<Self> {
-        Self::build(modulus_bits, fmt, seed, LinkSpec::Peer(addr))
+        Self::connect_peer_with(
+            modulus_bits,
+            fmt,
+            seed,
+            addr,
+            super::peer::PEER_CONNECT_TIMEOUT,
+            0,
+        )
+    }
+
+    /// [`RealFabric::connect_peer`] with the configured connect-retry
+    /// budget (the fleet's `--connect-timeout` knob — peer and fleet
+    /// links share it) and the session epoch a resuming center
+    /// announces so S2's re-key guard matches the nodes'.
+    pub fn connect_peer_with(
+        modulus_bits: usize,
+        fmt: FixedFmt,
+        seed: u64,
+        addr: &str,
+        connect_timeout: std::time::Duration,
+        epoch: u64,
+    ) -> std::io::Result<Self> {
+        Self::build(modulus_bits, fmt, seed, LinkSpec::Peer { addr, connect_timeout, epoch })
     }
 
     fn build(
@@ -395,8 +417,9 @@ impl RealFabric {
                     "real (Paillier + garbled circuits; tcp center link)",
                 )
             }
-            LinkSpec::Peer(addr) => {
-                let mut client = PeerGcClient::connect(addr, seed ^ 0xFAB)?;
+            LinkSpec::Peer { addr, connect_timeout, epoch } => {
+                let mut client =
+                    PeerGcClient::connect_with(addr, seed ^ 0xFAB, connect_timeout, epoch)?;
                 // S2 needs the public key to aggregate, blind and
                 // re-encrypt; only the modulus travels (public material).
                 client.install_key(&kp.pk.n, fmt)?;

@@ -66,6 +66,8 @@ use crate::runtime::pool;
 
 /// How long [`PeerGcClient::connect`] retries the center-b address
 /// (covers start-up ordering between the two center processes).
+/// [`PeerGcClient::connect_with`] takes the configured value instead,
+/// so the peer link honors the same `--connect-timeout` as the fleet.
 pub const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// [`WireMsg::GcExec`] output mode: reveal the output bits to S1
@@ -278,21 +280,43 @@ pub struct PeerGcClient {
     gate_ctr: u64,
     rng_seed: u64,
     execs: u64,
+    /// The session epoch claimed in the hello, carried on `SetKey` so
+    /// center-b's re-key guard sees the same epoch as the nodes'.
+    epoch: u64,
     sent_tags: BTreeMap<u8, u64>,
     recv_tags: BTreeMap<u8, u64>,
 }
 
 impl PeerGcClient {
     /// Connect to a `privlogit center-b` at `addr` (retrying for up to
-    /// [`PEER_CONNECT_TIMEOUT`]) and run the IKNP base-OT phase.
+    /// [`PEER_CONNECT_TIMEOUT`]) at session epoch 0 and run the IKNP
+    /// base-OT phase.
     ///
     /// The GC link has *no default deadline* — long silent gaps while
     /// the garbler streams gate material are legitimate — but an
     /// explicit `PRIVLOGIT_ROUND_TIMEOUT` applies here too, so an
     /// operator can bound a wedged peer.
     pub fn connect(addr: &str, seed: u64) -> io::Result<PeerGcClient> {
-        let mut transport =
-            TcpTransport::connect_retry(addr, wire::ROLE_PEER, PEER_CONNECT_TIMEOUT)?;
+        PeerGcClient::connect_with(addr, seed, PEER_CONNECT_TIMEOUT, 0)
+    }
+
+    /// [`connect`](PeerGcClient::connect) with explicit knobs: how long
+    /// connect-time retries keep trying (the configured
+    /// `--connect-timeout`, so the peer link and the fleet share one
+    /// knob instead of a hardcoded constant) and the session epoch
+    /// (non-zero when a center resumes from a checkpoint).
+    pub fn connect_with(
+        addr: &str,
+        seed: u64,
+        connect_timeout: Duration,
+        epoch: u64,
+    ) -> io::Result<PeerGcClient> {
+        let mut transport = TcpTransport::connect_retry_at_epoch(
+            addr,
+            wire::ROLE_PEER,
+            connect_timeout,
+            epoch,
+        )?;
         if let Some(deadline) = crate::net::tcp::env_deadline() {
             transport.set_deadline(Some(deadline))?;
         }
@@ -305,6 +329,7 @@ impl PeerGcClient {
             gate_ctr: 0,
             rng_seed: seed,
             execs: 0,
+            epoch,
             sent_tags: BTreeMap::new(),
             recv_tags: BTreeMap::new(),
         })
@@ -340,7 +365,12 @@ impl PeerGcClient {
     /// S2 needs the modulus to aggregate, blind and re-encrypt, and the
     /// fixed-point format to size its share words.
     pub fn install_key(&mut self, n: &BigUint, fmt: FixedFmt) -> io::Result<()> {
-        self.send_ctrl(&WireMsg::SetKey { n: n.clone(), w: fmt.w as u32, f: fmt.f });
+        self.send_ctrl(&WireMsg::SetKey {
+            n: n.clone(),
+            w: fmt.w as u32,
+            f: fmt.f,
+            epoch: self.epoch,
+        });
         match self.recv_ctrl()? {
             WireMsg::Ack => Ok(()),
             other => Err(io::Error::new(
@@ -571,8 +601,9 @@ impl PeerGcServer {
         if let Some(deadline) = crate::net::tcp::env_deadline() {
             transport.set_deadline(Some(deadline))?;
         }
+        let epoch = transport.peer_epoch;
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let session = serve_session(tcp_channel(transport), self.seed);
+        let session = serve_session(tcp_channel(transport), self.seed, epoch);
         obs::flush();
         session
     }
@@ -592,8 +623,10 @@ impl PeerGcServer {
                     }
                     Ok(t)
                 })
-                .map(tcp_channel)
-                .and_then(|chan| serve_session(chan, seed));
+                .and_then(|t| {
+                    let epoch = t.peer_epoch;
+                    serve_session(tcp_channel(t), seed, epoch)
+                });
             match session {
                 Ok(()) => obs::info(format_args!("center-b session complete")),
                 Err(e) => {
@@ -618,10 +651,13 @@ fn invalid(msg: String) -> io::Error {
 /// Serve one established center-a connection as a full S2 until
 /// `Shutdown` or disconnect: aggregate relayed ciphertexts, blind and
 /// keep shares, evaluate garbled programs over the stored shares.
-fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
+fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Result<()> {
     let mut rng = ChaChaRng::from_u64_seed(seed ^ 0x0e1e_2021);
     let mut ot_recv = OtReceiver::setup(&mut chan, &mut rng);
     let mut crypto: Option<S2Crypto> = None;
+    // Same re-key rule as the node server: starts at the connector's
+    // handshake claim, advances with every accepted SetKey.
+    let mut session_epoch = handshake_epoch;
     // S2's share custody: handle → share words. Lives exactly as long
     // as the session; center-a only ever holds the opaque handles.
     let mut store: HashMap<u64, Vec<u128>> = HashMap::new();
@@ -666,19 +702,26 @@ fn serve_session(mut chan: Channel, seed: u64) -> io::Result<()> {
         });
         match msg {
             WireMsg::Shutdown => return Ok(()),
-            WireMsg::SetKey { n, w, f } => {
+            WireMsg::SetKey { n, w, f, epoch } => {
                 // Mirror the node-side re-key rule: a second SetKey on
-                // one session would splice key material mid-protocol.
-                if crypto.is_some() {
-                    return Err(invalid(
-                        "center-a sent a second SetKey in one session; \
-                         re-keying requires a fresh connection"
-                            .into(),
-                    ));
+                // one session would splice key material mid-protocol,
+                // unless it is a resume re-key under a strictly
+                // advancing session epoch (wire v5). S2's blinds come
+                // from the session randomness stream, which is never
+                // rewound, so accepting the advancing case cannot
+                // replay randomness here.
+                if crypto.is_some() && epoch <= session_epoch {
+                    return Err(invalid(format!(
+                        "center-a sent a second SetKey in one session; re-keying requires \
+                         a fresh connection (epoch {epoch} does not advance past \
+                         {session_epoch})"
+                    )));
                 }
                 let fmt = crate::net::server::validate_set_key(&n, w, f)?;
                 session_id = obs::session_id(&n.to_bytes_le());
                 sp.record_session(session_id);
+                sp.record_u64("epoch", epoch);
+                session_epoch = epoch;
                 let n2 = n.mul(&n);
                 crypto = Some(S2Crypto { pk: PublicKey::from_modulus(n, n2), fmt });
                 chan.send_blob(&WireMsg::Ack.encode());

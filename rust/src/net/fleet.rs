@@ -21,21 +21,32 @@
 //! per-round socket deadline, connect attempts retry with capped
 //! exponential backoff, and — when a `quorum` below the fleet size is
 //! configured — a round succeeds once at least that many nodes reply.
-//! A node that misses a round is *excluded for the rest of the session*
-//! ([`ExcludedNode`]; its frame stream may be desynchronized and its
-//! per-session encryption state cannot be replayed — re-admission means
-//! a fresh session) and `n_total` is recomputed from the live
-//! membership. Below quorum the round fails with an error naming every
-//! dead node. The `fleet.round` span records `replied`/`quorum`/
-//! `excluded` and each per-node `fleet.rpc` span records
-//! `outcome=ok|timeout|error`, so the merged timeline shows exactly
-//! which org straggled in which round.
+//! A node that misses a round is *excluded* ([`ExcludedNode`]) and
+//! `n_total` is recomputed from the live membership. Below quorum the
+//! round fails with an error naming every dead node. The `fleet.round`
+//! span records `replied`/`quorum`/`excluded`/`readmitted` and each
+//! per-node `fleet.rpc` span records `outcome=ok|timeout|error`, so
+//! the merged timeline shows exactly which org straggled in which
+//! round.
+//!
+//! **Readmission.** Exclusion is no longer permanent: at every
+//! statistic round boundary the fleet probes each excluded node over a
+//! *fresh* connection (the old one's frame stream may be
+//! desynchronized mid-frame) within a small [`READMIT_PROBE_TIMEOUT`]
+//! budget. A node that answers `Ping` and still agrees on shard shape
+//! gets its session state rebuilt — epoch-aware `SetKey`, then
+//! `Enc(H̃⁻¹)` if installed — and rejoins the live membership, with
+//! `n_total` restored and a `fleet.readmit` span attributing the
+//! round it came back in ([`ReadmittedNode`]). The fresh connection is
+//! what keeps the node-side replay guard sound: the node's new session
+//! derives a new randomness stream, so nothing from the dead session
+//! is ever replayed.
 
 use std::collections::BTreeMap;
 use std::io;
 use std::time::Duration;
 
-use super::tcp::{self, TcpTransport};
+use super::tcp::TcpTransport;
 use super::wire::{self, WireMsg};
 use super::Transport;
 use crate::coordinator::fleet::{
@@ -183,6 +194,14 @@ pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 /// that a hung org cannot stall a deployment forever.
 pub const DEFAULT_ROUND_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Budget for one readmission probe: TCP connect + hello + `Ping` +
+/// `MetaReq` against a node that may well still be dead. Deliberately
+/// small — probing dead nodes happens every round boundary, and must
+/// not meaningfully stretch the round. A node that *answers* within
+/// this budget then gets the full round deadline for its state
+/// re-install (rebuilding Straus tables from `SetKey` is real work).
+pub const READMIT_PROBE_TIMEOUT: Duration = Duration::from_millis(500);
+
 /// Fault-tolerance knobs for a [`RemoteFleet`] (config keys
 /// `round_timeout` / `quorum` / `connect_timeout`, environment
 /// `PRIVLOGIT_ROUND_TIMEOUT`; see docs/DEPLOY.md §Failure behavior).
@@ -200,6 +219,11 @@ pub struct FleetOptions {
     pub quorum: usize,
     /// How long connect-time retries keep trying each address.
     pub connect_timeout: Duration,
+    /// Session epoch announced in the wire handshake and carried on
+    /// `SetKey`: `0` for a fresh session; a resuming center advances it
+    /// so the node-side replay guard can tell a legitimate resume
+    /// re-key from a DJN exponent-stream replay.
+    pub epoch: u64,
 }
 
 impl Default for FleetOptions {
@@ -208,31 +232,51 @@ impl Default for FleetOptions {
             round_timeout: Some(DEFAULT_ROUND_TIMEOUT),
             quorum: 0,
             connect_timeout: CONNECT_TIMEOUT,
+            epoch: 0,
         }
     }
 }
 
 impl FleetOptions {
     /// Defaults with `PRIVLOGIT_ROUND_TIMEOUT` applied (seconds, `f64`;
-    /// a non-positive value disables deadlines). Explicit config keys
-    /// take precedence over the environment — the CLI builds its
+    /// a non-positive or non-finite value disables deadlines, an
+    /// unparsable one is an error naming the variable). Explicit config
+    /// keys take precedence over the environment — the CLI builds its
     /// options from config on top of this.
-    pub fn from_env() -> FleetOptions {
+    pub fn from_env() -> anyhow::Result<FleetOptions> {
+        FleetOptions::from_round_timeout_var(std::env::var("PRIVLOGIT_ROUND_TIMEOUT").ok())
+    }
+
+    /// [`FleetOptions::from_env`] with the variable's value passed in
+    /// (`None` = unset) — the parse/validation seam, testable without
+    /// mutating process-global environment.
+    fn from_round_timeout_var(raw: Option<String>) -> anyhow::Result<FleetOptions> {
         let mut opts = FleetOptions::default();
-        if std::env::var("PRIVLOGIT_ROUND_TIMEOUT").is_ok() {
-            opts.round_timeout = tcp::env_deadline();
+        if let Some(raw) = raw {
+            let secs: f64 = raw.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "PRIVLOGIT_ROUND_TIMEOUT={raw:?} is not a round deadline in seconds \
+                     (want an f64; non-positive disables deadlines)"
+                )
+            })?;
+            opts.round_timeout = if secs > 0.0 && secs.is_finite() {
+                Some(Duration::from_secs_f64(secs))
+            } else {
+                None
+            };
         }
-        opts
+        Ok(opts)
     }
 }
 
 /// Record of a node excluded from the fleet after missing a round while
-/// the remaining nodes met quorum. Exclusion lasts for the rest of the
-/// session: the connection's frame stream may be desynchronized
-/// mid-frame, and the node's per-session encryption state cannot be
-/// rebuilt without replaying its randomness stream — re-admission
-/// requires a fresh session (the [`WireMsg::Ping`] probe lets an
-/// operator confirm the node is healthy again before starting one).
+/// the remaining nodes met quorum. The dead connection is dropped — its
+/// frame stream may be desynchronized mid-frame, and the node's
+/// per-session encryption state cannot be rebuilt without replaying its
+/// randomness stream — but exclusion is not permanent: every statistic
+/// round boundary probes the node over a fresh connection and readmits
+/// it if it answers (see [`ReadmittedNode`]). A record lives here only
+/// while the node is *currently* out.
 #[derive(Clone, Debug)]
 pub struct ExcludedNode {
     /// The node server's address.
@@ -249,6 +293,22 @@ pub struct ExcludedNode {
     pub outcome: &'static str,
     /// The underlying error text.
     pub error: String,
+}
+
+/// Record of a previously-excluded node restored to live membership
+/// after answering a round-boundary probe (event history — unlike
+/// [`ExcludedNode`] records, these are never removed).
+#[derive(Clone, Debug)]
+pub struct ReadmittedNode {
+    /// The node server's address.
+    pub addr: String,
+    /// 0-based org index at original connect time (restored on
+    /// readmission, so ledger attribution is stable across the outage).
+    pub org: usize,
+    /// Wire tag of the round the node rejoined for.
+    pub tag: u8,
+    /// Per-tag round index it rejoined for.
+    pub round: u64,
 }
 
 /// Classify a node failure for traces and exclusion records: deadline
@@ -277,7 +337,15 @@ pub struct RemoteFleet {
     /// tag) without any wire change.
     round_ctr: BTreeMap<u8, u64>,
     opts: FleetOptions,
+    /// Nodes currently out of the live membership (readmission removes
+    /// a node's record when it comes back).
     excluded: Vec<ExcludedNode>,
+    /// Readmission event history, in readmission order.
+    readmitted: Vec<ReadmittedNode>,
+    /// The installed Paillier key, kept for readmission re-installs.
+    key: Option<FleetKey>,
+    /// The installed `Enc(H̃⁻¹)`, kept for readmission re-installs.
+    hinv: Option<EncStat>,
 }
 
 impl RemoteFleet {
@@ -285,7 +353,7 @@ impl RemoteFleet {
     /// options (plus `PRIVLOGIT_ROUND_TIMEOUT` from the environment);
     /// see [`RemoteFleet::connect_with`].
     pub fn connect(addrs: &[String]) -> anyhow::Result<RemoteFleet> {
-        RemoteFleet::connect_with(addrs, FleetOptions::from_env())
+        RemoteFleet::connect_with(addrs, FleetOptions::from_env()?)
     }
 
     /// Connect to every node server concurrently, retrying each address
@@ -373,13 +441,21 @@ impl RemoteFleet {
             round_ctr: BTreeMap::new(),
             opts,
             excluded: Vec::new(),
+            readmitted: Vec::new(),
+            key: None,
+            hinv: None,
         })
     }
 
-    /// Nodes excluded from rounds so far this session, in exclusion
-    /// order.
+    /// Nodes *currently* excluded from rounds, in exclusion order
+    /// (readmission removes a node's record).
     pub fn excluded(&self) -> &[ExcludedNode] {
         &self.excluded
+    }
+
+    /// Readmission events so far this session, in readmission order.
+    pub fn readmitted(&self) -> &[ReadmittedNode] {
+        &self.readmitted
     }
 
     /// Probe every live node with a [`WireMsg::Ping`] as one traced
@@ -428,6 +504,15 @@ impl RemoteFleet {
         tag: u8,
         per_node: impl Fn(&mut NodeConn) -> io::Result<T> + Sync,
     ) -> anyhow::Result<Vec<T>> {
+        // Probe excluded nodes for readmission at statistic round
+        // boundaries. Setup/install rounds are skipped: a node
+        // readmitted mid-install would receive the same state twice.
+        let readmitted_now =
+            if matches!(tag, wire::TAG_META_REQ | wire::TAG_SET_KEY | wire::TAG_SET_HINV) {
+                0
+            } else {
+                self.try_readmit(tag)
+            };
         let session = self.session;
         let round = self.next_round(tag);
         let quorum = self.effective_quorum();
@@ -437,7 +522,8 @@ impl RemoteFleet {
             .tag(tag)
             .round(round)
             .u64("nodes", total as u64)
-            .u64("quorum", quorum as u64);
+            .u64("quorum", quorum as u64)
+            .u64("readmitted", readmitted_now);
         let before = sp.active().then(|| self.net_stats());
         let results = self.round_with(|c| {
             let mut rpc = obs::span("fleet.rpc")
@@ -516,6 +602,80 @@ impl RemoteFleet {
         Ok(ok)
     }
 
+    /// Probe every currently-excluded node concurrently and readmit the
+    /// ones that answer (see the module doc and [`readmit_node`]).
+    /// Returns how many rejoined. Failures are silent by design — a
+    /// dead node stays excluded and the next round boundary probes it
+    /// again — but every probe emits a `fleet.readmit` span with
+    /// `outcome=ok|timeout|error`, so the timeline shows the retry
+    /// cadence as well as the successful readmission.
+    fn try_readmit(&mut self, tag: u8) -> u64 {
+        if self.excluded.is_empty() {
+            return 0;
+        }
+        // The round index the readmitted node will first participate
+        // in: `next_round` has not run yet for this tag.
+        let round = self.round_ctr.get(&tag).copied().unwrap_or(0);
+        let session = self.session;
+        let opts = self.opts;
+        let key = self.key.clone();
+        let hinv = self.hinv.clone();
+        let p_expect = self.p;
+        let candidates: Vec<(usize, String)> =
+            self.excluded.iter().map(|x| (x.org, x.addr.clone())).collect();
+        let results: Vec<Option<NodeConn>> = std::thread::scope(|s| {
+            let (key, hinv, opts) = (key.as_ref(), hinv.as_ref(), &opts);
+            let handles: Vec<_> = candidates
+                .iter()
+                .map(|(org, addr)| {
+                    s.spawn(move || {
+                        let mut sp = obs::span("fleet.readmit")
+                            .session(session)
+                            .tag(tag)
+                            .round(round)
+                            .str("node", addr)
+                            .u64("org", *org as u64);
+                        let r = readmit_node(*org, addr, opts, key, hinv, p_expect);
+                        if sp.active() {
+                            sp.record_str(
+                                "outcome",
+                                match &r {
+                                    Ok(_) => "ok",
+                                    Err(e) => outcome_of(e),
+                                },
+                            );
+                            if let Ok(c) = &r {
+                                sp.record_u64("bytes_sent", c.bytes_sent);
+                                sp.record_u64("bytes_recv", c.bytes_recv);
+                            }
+                        }
+                        sp.done();
+                        r.ok()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+        });
+        let mut count = 0u64;
+        for ((org, addr), conn) in candidates.into_iter().zip(results) {
+            let Some(conn) = conn else { continue };
+            obs::info(format_args!(
+                "readmitting node server {addr} (org {org}) at {} round {round}",
+                wire::tag_name(tag)
+            ));
+            self.excluded.retain(|x| x.org != org);
+            self.readmitted.push(ReadmittedNode { addr, org, tag, round });
+            // Reinsert in org order so reply attribution stays stable.
+            let at = self.conns.iter().position(|c| c.index > org).unwrap_or(self.conns.len());
+            self.conns.insert(at, conn);
+            count += 1;
+        }
+        if count > 0 {
+            self.n_total = self.conns.iter().map(|c| c.node_n).sum();
+        }
+        count
+    }
+
     /// Fan one request out to every live node concurrently; per-node
     /// results come back in connection order (quorum policy is applied
     /// by the caller, [`Self::traced_round`]).
@@ -562,7 +722,12 @@ fn connect_node(
     addr: &str,
     opts: &FleetOptions,
 ) -> anyhow::Result<(NodeConn, usize, String)> {
-    let mut transport = TcpTransport::connect_retry(addr, wire::ROLE_CENTER, opts.connect_timeout)?;
+    let mut transport = TcpTransport::connect_retry_at_epoch(
+        addr,
+        wire::ROLE_CENTER,
+        opts.connect_timeout,
+        opts.epoch,
+    )?;
     transport.set_deadline(opts.round_timeout)?;
     let mut conn = NodeConn::new(index, addr.to_string(), transport);
     let meta = conn.exchange(&WireMsg::MetaReq).map_err(|e| anyhow::anyhow!("node {addr}: {e}"))?;
@@ -581,6 +746,70 @@ fn connect_node(
         }
         other => anyhow::bail!("node {addr} answered MetaReq with {other:?}"),
     }
+}
+
+/// Probe one excluded node and rebuild its session state over a fresh
+/// connection: connect at the session epoch within
+/// [`READMIT_PROBE_TIMEOUT`], `Ping`, re-fetch `Meta` (the node may
+/// have restarted — the shard must still agree with the fleet), then
+/// re-install the Paillier key and `Enc(H̃⁻¹)` under the round
+/// deadline. Any failure leaves the node excluded; the next round
+/// boundary probes again.
+fn readmit_node(
+    org: usize,
+    addr: &str,
+    opts: &FleetOptions,
+    key: Option<&FleetKey>,
+    hinv: Option<&EncStat>,
+    p_expect: usize,
+) -> io::Result<NodeConn> {
+    let mut transport = TcpTransport::connect_retry_at_epoch(
+        addr,
+        wire::ROLE_CENTER,
+        READMIT_PROBE_TIMEOUT,
+        opts.epoch,
+    )?;
+    transport.set_deadline(Some(READMIT_PROBE_TIMEOUT))?;
+    let mut conn = NodeConn::new(org, addr.to_string(), transport);
+    conn.expect_ack(&WireMsg::Ping)?;
+    match conn.exchange(&WireMsg::MetaReq)? {
+        WireMsg::Meta { n, p, .. } => {
+            let node_p = p as usize;
+            let node_n = usize::try_from(n).unwrap_or(0);
+            if node_p != p_expect || node_n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "node {addr} came back serving p={node_p}, n={n}; \
+                         fleet expects p={p_expect} and a non-empty shard"
+                    ),
+                ));
+            }
+            conn.node_n = node_n;
+        }
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("node {addr} answered MetaReq with {other:?}"),
+            ))
+        }
+    }
+    // The node answered, so it earns the full round deadline for the
+    // state re-install (rebuilding Straus tables is real work).
+    conn.transport.set_deadline(opts.round_timeout)?;
+    if let Some(key) = key {
+        conn.expect_ack(&WireMsg::SetKey {
+            n: key.n.clone(),
+            w: key.w,
+            f: key.f,
+            epoch: opts.epoch,
+        })?;
+        conn.require_enc = true;
+    }
+    if let Some(hinv) = hinv {
+        conn.expect_ack(&WireMsg::SetHinv { scale: hinv.scale, cts: hinv.cts.clone() })?;
+    }
+    Ok(conn)
 }
 
 impl Fleet for RemoteFleet {
@@ -637,13 +866,15 @@ impl Fleet for RemoteFleet {
         // before the round so the SetKey span already carries it (node
         // servers derive the same id when they process the install).
         self.session = obs::session_id(&key.n.to_bytes_le());
-        let req = WireMsg::SetKey { n: key.n.clone(), w: key.w, f: key.f };
+        let req =
+            WireMsg::SetKey { n: key.n.clone(), w: key.w, f: key.f, epoch: self.opts.epoch };
         self.traced_round(wire::TAG_SET_KEY, |c| {
             c.expect_ack(&req)?;
             c.require_enc = true;
             Ok(())
         })?;
         self.encrypted = true;
+        self.key = Some(key.clone());
         Ok(true)
     }
 
@@ -655,6 +886,7 @@ impl Fleet for RemoteFleet {
         anyhow::ensure!(self.encrypted, "install the Paillier key before Enc(H̃⁻¹)");
         let req = WireMsg::SetHinv { scale: hinv.scale, cts: hinv.cts.clone() };
         self.traced_round(wire::TAG_SET_HINV, |c| c.expect_ack(&req))?;
+        self.hinv = Some(hinv.clone());
         Ok(())
     }
 
@@ -677,6 +909,17 @@ impl Fleet for RemoteFleet {
     fn excluded_count(&self) -> u64 {
         self.excluded.len() as u64
     }
+
+    fn readmitted_count(&self) -> u64 {
+        self.readmitted.len() as u64
+    }
+
+    fn membership(&self) -> (Vec<String>, Vec<String>) {
+        (
+            self.conns.iter().map(|c| c.addr.clone()).collect(),
+            self.excluded.iter().map(|x| x.addr.clone()).collect(),
+        )
+    }
 }
 
 impl Drop for RemoteFleet {
@@ -686,5 +929,32 @@ impl Drop for RemoteFleet {
         for c in &mut self.conns {
             let _ = c.transport.send_wire(&WireMsg::Shutdown);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_options_env_parsing() {
+        // Unset: defaults stand.
+        let opts = FleetOptions::from_round_timeout_var(None).unwrap();
+        assert_eq!(opts.round_timeout, Some(DEFAULT_ROUND_TIMEOUT));
+        assert_eq!(opts.epoch, 0);
+        // A positive value becomes the round deadline.
+        let opts = FleetOptions::from_round_timeout_var(Some("2.5".into())).unwrap();
+        assert_eq!(opts.round_timeout, Some(Duration::from_secs_f64(2.5)));
+        // Non-positive and non-finite values disable deadlines.
+        for raw in ["0", "-1", "-inf"] {
+            let opts = FleetOptions::from_round_timeout_var(Some(raw.into())).unwrap();
+            assert_eq!(opts.round_timeout, None, "{raw:?} should disable deadlines");
+        }
+        // Garbage is an error naming the variable and quoting the value.
+        let err = FleetOptions::from_round_timeout_var(Some("2 minutes".into()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("PRIVLOGIT_ROUND_TIMEOUT"), "error should name the variable: {err}");
+        assert!(err.contains("2 minutes"), "error should quote the value: {err}");
     }
 }

@@ -55,7 +55,7 @@ pub mod wire;
 use std::io;
 use std::sync::mpsc::{Receiver, SyncSender};
 
-pub use fleet::{ExcludedNode, FleetOptions, RemoteFleet};
+pub use fleet::{ExcludedNode, FleetOptions, ReadmittedNode, RemoteFleet};
 pub use server::NodeServer;
 pub use tcp::TcpTransport;
 

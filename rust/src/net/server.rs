@@ -137,21 +137,32 @@ impl NodeServer {
     }
 
     /// Handshake an admitted stream and apply the transport wrapper.
-    fn session_transport(&mut self, stream: TcpStream) -> io::Result<Box<dyn Transport>> {
-        let t: Box<dyn Transport> = Box::new(TcpTransport::accept(stream, wire::ROLE_NODE)?);
-        Ok(match self.wrapper.as_mut() {
+    /// Also returns the connecting center's claimed session epoch
+    /// (wire v5 hello), which seeds the session's re-key guard.
+    fn session_transport(&mut self, stream: TcpStream) -> io::Result<(Box<dyn Transport>, u64)> {
+        let tcp = TcpTransport::accept(stream, wire::ROLE_NODE)?;
+        let epoch = tcp.peer_epoch;
+        let t: Box<dyn Transport> = Box::new(tcp);
+        let t = match self.wrapper.as_mut() {
             Some(wrap) => wrap(t),
             None => t,
-        })
+        };
+        Ok((t, epoch))
     }
 
     /// Accept one center connection and serve it to completion.
     pub fn serve_once(&mut self) -> io::Result<()> {
         let stream = self.accept_gated()?;
-        let mut t = self.session_transport(stream)?;
+        let (mut t, epoch) = self.session_transport(stream)?;
         self.seed = self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let session =
-            serve_session(t.as_mut(), &self.data, self.engine.as_mut(), self.seed, self.threads);
+        let session = serve_session(
+            t.as_mut(),
+            &self.data,
+            self.engine.as_mut(),
+            self.seed,
+            self.threads,
+            epoch,
+        );
         // Session boundary: persist buffered trace lines even if this
         // process is killed rather than exiting cleanly afterwards.
         obs::flush();
@@ -169,9 +180,14 @@ impl NodeServer {
             let seed = self.seed;
             let threads = self.threads;
             let session = match self.session_transport(stream) {
-                Ok(mut t) => {
-                    serve_session(t.as_mut(), &self.data, self.engine.as_mut(), seed, threads)
-                }
+                Ok((mut t, epoch)) => serve_session(
+                    t.as_mut(),
+                    &self.data,
+                    self.engine.as_mut(),
+                    seed,
+                    threads,
+                    epoch,
+                ),
                 Err(e) => Err(e),
             };
             obs::flush();
@@ -204,6 +220,16 @@ pub(crate) fn entropy_seed() -> u64 {
         .map(|d| d.as_nanos() as u64)
         .unwrap_or(0);
     seed ^ clock.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((std::process::id() as u64) << 32)
+}
+
+/// Mix a session epoch into a per-connection randomness seed. Epoch 0
+/// (a fresh session) leaves the seed unchanged, so pre-v5 behavior is
+/// byte-identical; every strictly larger epoch yields a distinct DJN
+/// exponent stream, which is what makes an epoch-advancing re-key safe
+/// where a same-seed rebuild would replay randomness. Shared by the
+/// node server and the center-b peer server.
+pub(crate) fn epoch_seed(seed: u64, epoch: u64) -> u64 {
+    seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Validate wire-controlled [`WireMsg::SetKey`] material at a trust
@@ -277,8 +303,13 @@ fn serve_session(
     engine: &mut dyn NodeCompute,
     seed: u64,
     threads: usize,
+    handshake_epoch: u64,
 ) -> io::Result<()> {
     let mut crypto: Option<SessionCrypto> = None;
+    // The session epoch starts at the connector's handshake claim and
+    // advances with every accepted SetKey; a re-key that does not
+    // strictly advance it is rejected as a randomness replay.
+    let mut session_epoch = handshake_epoch;
     // Trace join keys: the session id adopted at SetKey and this node's
     // own per-tag round numbering (the center numbers the same
     // occurrences independently, so the indices agree).
@@ -313,18 +344,24 @@ fn serve_session(
                 })?,
                 name: data.name.split('#').next().unwrap_or("?").to_string(),
             },
-            WireMsg::SetKey { n, w, f } => {
+            WireMsg::SetKey { n, w, f, epoch } => {
                 // A second SetKey on one session would rebuild
                 // SessionCrypto with the same per-session seed and
                 // replay the identical DJN exponent stream — with
                 // `c = (1+mn)·hˢ`, two ciphertexts on one exponent
                 // reveal the plaintext difference to any wire observer.
-                // Re-keying requires a fresh connection (fresh seed).
-                if crypto.is_some() {
+                // The one legitimate re-key is a center resuming from a
+                // checkpoint under a strictly larger session epoch
+                // (wire v5): the epoch is mixed into the randomness
+                // seed, so the new stream never overlaps the old one.
+                if crypto.is_some() && epoch <= session_epoch {
                     return Err(io::Error::new(
                         io::ErrorKind::InvalidData,
-                        "center sent a second SetKey in one session; re-keying mid-session \
-                         would replay this node's encryption-randomness stream",
+                        format!(
+                            "center sent a second SetKey in one session; re-keying mid-session \
+                             would replay this node's encryption-randomness stream \
+                             (epoch {epoch} does not advance past {session_epoch})"
+                        ),
                     ));
                 }
                 // Wire-controlled format and modulus: validate at the
@@ -333,12 +370,14 @@ fn serve_session(
                 let fmt = validate_set_key(&n, w, f)?;
                 session_id = obs::session_id(&n.to_bytes_le());
                 sp.record_session(session_id);
+                sp.record_u64("epoch", epoch);
+                session_epoch = epoch;
                 let n2 = n.mul(&n);
                 crypto = Some(SessionCrypto {
                     pk: PublicKey::from_modulus(n.clone(), n2),
                     codec: FixedCodec::new(n, f),
                     fmt,
-                    rng: ChaChaRng::from_u64_seed(seed),
+                    rng: ChaChaRng::from_u64_seed(epoch_seed(seed, epoch)),
                     hinv: None,
                     threads,
                 });
@@ -577,6 +616,61 @@ mod tests {
         let session = handle.join().expect("node thread must not panic");
         let err = session.expect_err("session must surface the re-key error");
         assert!(err.to_string().contains("second SetKey"), "got: {err}");
+    }
+
+    /// A re-key under a strictly advancing session epoch (wire v5, a
+    /// center resuming from a checkpoint) is accepted and yields a
+    /// fresh encryption-randomness stream; a re-key that does not
+    /// advance the epoch stays a session error (the PR 4 replay guard).
+    #[test]
+    fn rekey_with_advancing_epoch_is_accepted_same_epoch_rejected() {
+        use crate::net::TcpTransport;
+        let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(23);
+        let kp = crate::crypto::paillier::Keypair::generate(256, &mut rng);
+        let d = synthesize("epoch", 60, 3, 4);
+        let mut server = NodeServer::bind("127.0.0.1:0", d).unwrap().with_seed(7);
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve_once());
+
+        let mut t = TcpTransport::connect_at_epoch(&addr, wire::ROLE_CENTER, 1).unwrap();
+        let set_key = |epoch: u64| WireMsg::SetKey {
+            n: kp.pk.n.clone(),
+            w: 40,
+            f: 24,
+            epoch,
+        };
+        let exchange = |t: &mut TcpTransport, msg: &WireMsg| -> io::Result<WireMsg> {
+            t.send_msg(msg.encode())?;
+            Ok(WireMsg::decode(&t.recv_msg()?)?)
+        };
+        // First install at the handshake epoch.
+        assert!(matches!(exchange(&mut t, &set_key(1)).unwrap(), WireMsg::Ack));
+        let stats = WireMsg::StatsReq { beta: vec![0.0; 3], scale: 1.0 / 60.0 };
+        let WireMsg::Ciphertexts { cts: cts_epoch1, .. } = exchange(&mut t, &stats).unwrap()
+        else {
+            panic!("keyed node must reply with ciphertexts");
+        };
+        // Re-key under an advancing epoch: accepted, and the identical
+        // request now encrypts under a different randomness stream.
+        assert!(matches!(exchange(&mut t, &set_key(2)).unwrap(), WireMsg::Ack));
+        let WireMsg::Ciphertexts { cts: cts_epoch2, .. } = exchange(&mut t, &stats).unwrap()
+        else {
+            panic!("re-keyed node must reply with ciphertexts");
+        };
+        assert_ne!(
+            cts_epoch1, cts_epoch2,
+            "epoch re-key must rotate the DJN exponent stream"
+        );
+        // A repeated install at the same epoch is the replay case.
+        let replay = exchange(&mut t, &set_key(2));
+        assert!(replay.is_err(), "non-advancing re-key must fail the session");
+        drop(t);
+        let err = handle
+            .join()
+            .expect("node thread must not panic")
+            .expect_err("session must surface the replay error");
+        assert!(err.to_string().contains("second SetKey"), "got: {err}");
+        assert!(err.to_string().contains("does not advance"), "got: {err}");
     }
 
     /// A `SetKey` carrying an out-of-range fixed-point format (w = 128

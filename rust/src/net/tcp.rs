@@ -16,8 +16,8 @@ use super::wire;
 use super::Transport;
 use crate::gc::channel::Channel;
 
-/// Read/write timeout applied for the duration of the 8-byte hello
-/// exchange: a peer that accepts the connection but never completes the
+/// Read/write timeout applied for the duration of the hello exchange:
+/// a peer that accepts the connection but never completes the
 /// handshake must not hang the connecting side.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
@@ -43,6 +43,9 @@ pub struct TcpTransport {
     writer: BufWriter<TcpStream>,
     /// Peer's handshake role byte.
     pub peer_role: u8,
+    /// Peer's handshake session epoch (0 for a fresh session; a
+    /// resuming center announces the advanced epoch here).
+    pub peer_epoch: u64,
 }
 
 impl TcpTransport {
@@ -52,25 +55,49 @@ impl TcpTransport {
     /// read timeout so an accepted-but-silent peer cannot hang us; the
     /// timeout is cleared afterwards (callers opt back in with
     /// [`TcpTransport::set_deadline`]).
-    fn handshake(stream: TcpStream, role: u8) -> io::Result<TcpTransport> {
+    fn handshake(stream: TcpStream, role: u8, epoch: u64) -> io::Result<TcpTransport> {
+        TcpTransport::handshake_within(stream, role, epoch, HANDSHAKE_TIMEOUT)
+    }
+
+    /// [`handshake`](TcpTransport::handshake) with an explicit bound on
+    /// the hello exchange (probes pass their own small budget).
+    fn handshake_within(
+        stream: TcpStream,
+        role: u8,
+        epoch: u64,
+        within: Duration,
+    ) -> io::Result<TcpTransport> {
+        let within = within.max(Duration::from_millis(1)); // zero would disable the timeout
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-        stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        stream.set_read_timeout(Some(within))?;
+        stream.set_write_timeout(Some(within))?;
         let mut writer = BufWriter::new(stream.try_clone()?);
         let mut reader = BufReader::new(stream);
-        writer.write_all(&wire::hello(role))?;
+        writer.write_all(&wire::hello(role, epoch))?;
         writer.flush()?;
-        let mut peer = [0u8; 8];
+        let mut peer = [0u8; wire::HELLO_LEN];
         reader.read_exact(&mut peer)?;
-        let peer_role = wire::check_hello(&peer)?;
-        let mut t = TcpTransport { reader, writer, peer_role };
+        let (peer_role, peer_epoch) = wire::check_hello(&peer)?;
+        let mut t = TcpTransport { reader, writer, peer_role, peer_epoch };
         t.set_deadline(None)?;
         Ok(t)
     }
 
-    /// Connect to `addr` and handshake, announcing `role`.
+    /// Connect to `addr` and handshake, announcing `role` at session
+    /// epoch 0 (fresh session).
     pub fn connect<A: ToSocketAddrs>(addr: A, role: u8) -> io::Result<TcpTransport> {
-        TcpTransport::handshake(TcpStream::connect(addr)?, role)
+        TcpTransport::handshake(TcpStream::connect(addr)?, role, 0)
+    }
+
+    /// Like [`TcpTransport::connect`], but announcing a specific session
+    /// epoch — how a resuming center tells the accepting side this
+    /// connection belongs to a re-keyed incarnation of the session.
+    pub fn connect_at_epoch<A: ToSocketAddrs>(
+        addr: A,
+        role: u8,
+        epoch: u64,
+    ) -> io::Result<TcpTransport> {
+        TcpTransport::handshake(TcpStream::connect(addr)?, role, epoch)
     }
 
     /// Set (or clear, with `None`) the per-operation socket deadline:
@@ -92,10 +119,46 @@ impl TcpTransport {
     /// wrong magic or version skew) fail fast instead of burning the
     /// deadline.
     pub fn connect_retry(addr: &str, role: u8, deadline_in: Duration) -> io::Result<TcpTransport> {
+        TcpTransport::connect_retry_at_epoch(addr, role, deadline_in, 0)
+    }
+
+    /// Connect and handshake with both the TCP connect *and* the hello
+    /// exchange bounded by `within` — so a short-budget caller (a
+    /// readmission probe, a retry loop's remaining deadline) cannot be
+    /// stalled for the full [`HANDSHAKE_TIMEOUT`] by a peer whose kernel
+    /// accepts the connection but whose process never answers.
+    fn connect_within(
+        addr: &str,
+        role: u8,
+        epoch: u64,
+        within: Duration,
+    ) -> io::Result<TcpTransport> {
+        let within = within.max(Duration::from_millis(1));
+        let sock = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::AddrNotAvailable,
+                format!("{addr}: no usable socket address"),
+            )
+        })?;
+        let stream = TcpStream::connect_timeout(&sock, within)?;
+        TcpTransport::handshake_within(stream, role, epoch, within.min(HANDSHAKE_TIMEOUT))
+    }
+
+    /// [`TcpTransport::connect_retry`] announcing a specific session
+    /// epoch (resume re-key path).
+    pub fn connect_retry_at_epoch(
+        addr: &str,
+        role: u8,
+        deadline_in: Duration,
+        epoch: u64,
+    ) -> io::Result<TcpTransport> {
         let deadline = Instant::now() + deadline_in;
         let mut backoff = Duration::from_millis(25);
         loop {
-            match TcpTransport::connect(addr, role) {
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            match TcpTransport::connect_within(addr, role, epoch, remaining) {
                 Ok(t) => return Ok(t),
                 Err(e) => {
                     let retryable = matches!(
@@ -124,9 +187,11 @@ impl TcpTransport {
         }
     }
 
-    /// Handshake on an accepted stream, announcing `role`.
+    /// Handshake on an accepted stream, announcing `role` (the
+    /// accepting side always answers at epoch 0 — the epoch is the
+    /// *connector's* claim, read back via `peer_epoch`).
     pub fn accept(stream: TcpStream, role: u8) -> io::Result<TcpTransport> {
-        TcpTransport::handshake(stream, role)
+        TcpTransport::handshake(stream, role, 0)
     }
 
     /// Send one framed [`wire::WireMsg`].
@@ -203,7 +268,24 @@ mod tests {
         assert_eq!(t.recv_msg().unwrap(), vec![7; 100_000]);
         t.send_msg(b"pong".to_vec()).unwrap();
         assert_eq!(t.peer_role, wire::ROLE_CENTER);
+        assert_eq!(t.peer_epoch, 0, "plain connect announces epoch 0");
         assert_eq!(client.join().unwrap(), wire::ROLE_NODE);
+    }
+
+    /// The session epoch a resuming center announces in its hello must
+    /// surface on the accepting side's transport.
+    #[test]
+    fn handshake_carries_session_epoch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            TcpTransport::connect_at_epoch(addr, wire::ROLE_CENTER, 3).unwrap()
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let t = TcpTransport::accept(stream, wire::ROLE_NODE).unwrap();
+        assert_eq!(t.peer_epoch, 3, "accept side sees the connector's epoch");
+        let c = client.join().unwrap();
+        assert_eq!(c.peer_epoch, 0, "accept side answers at epoch 0");
     }
 
     /// A peer that opens with the wrong magic must be rejected during the
@@ -214,10 +296,10 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let rogue = std::thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(b"GET / HT").unwrap(); // an HTTP client, say
+            s.write_all(b"GET / HTTP/1.1\r\n").unwrap(); // an HTTP client, say
             s.flush().unwrap();
             // Keep the socket open until the server has judged us.
-            let mut buf = [0u8; 8];
+            let mut buf = [0u8; wire::HELLO_LEN];
             let _ = s.read(&mut buf);
         });
         let (stream, _) = listener.accept().unwrap();
@@ -233,7 +315,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let old_peer = std::thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            let mut h = wire::hello(wire::ROLE_CENTER);
+            let mut h = wire::hello(wire::ROLE_CENTER, 0);
             h[4] = 0xFE; // future version 0x__FE
             h[5] = 0x7F;
             s.write_all(&h).unwrap();

@@ -2,9 +2,10 @@
 //!
 //! Three layers, bottom-up:
 //!
-//! 1. **Handshake** — on connect, both sides exchange an 8-byte hello
-//!    (`MAGIC` + protocol [`VERSION`] + role byte). Anything else on the
-//!    socket is rejected before a single payload byte is parsed.
+//! 1. **Handshake** — on connect, both sides exchange a 16-byte hello
+//!    (`MAGIC` + protocol [`VERSION`] + role byte + session epoch).
+//!    Anything else on the socket is rejected before a single payload
+//!    byte is parsed.
 //! 2. **Frames** — every message travels as
 //!    `[u32 LE payload length][payload][u32 LE CRC-32 of payload]`.
 //!    Length is bounded by [`MAX_FRAME`]; the CRC catches corruption and
@@ -43,7 +44,15 @@ pub const MAGIC: [u8; 4] = *b"PLGT";
 /// v4: fleet fault tolerance — the [`WireMsg::Ping`] liveness probe
 /// (answered by a bare [`WireMsg::Ack`]), used by the center to check a
 /// node's health without advancing any protocol state.
-pub const VERSION: u16 = 4;
+///
+/// v5: durable sessions — the hello widens from 8 to 16 bytes to carry
+/// a `u64` **session epoch**, and [`WireMsg::SetKey`] carries the same
+/// epoch. A fresh session starts at epoch 0; a center resuming from a
+/// checkpoint re-keys under a strictly larger epoch, which is how the
+/// node-side replay guard distinguishes a legitimate resume re-key
+/// (new epoch ⇒ new DJN exponent stream) from a randomness-replaying
+/// repeat of the same `SetKey`.
+pub const VERSION: u16 = 5;
 
 /// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
 /// length prefix must not drive allocation.
@@ -168,14 +177,25 @@ pub fn crc32(data: &[u8]) -> u32 {
 // Handshake
 // ======================================================================
 
-/// Build the 8-byte hello: magic, version, role, reserved zero byte.
-pub fn hello(role: u8) -> [u8; 8] {
+/// Size of the hello exchanged on connect (v5: widened to carry the
+/// session epoch).
+pub const HELLO_LEN: usize = 16;
+
+/// Build the 16-byte hello: magic, version, role, reserved zero byte,
+/// and the sender's session epoch (`u64` LE — 0 for a fresh session,
+/// strictly larger after each crash-resume re-key).
+pub fn hello(role: u8, epoch: u64) -> [u8; HELLO_LEN] {
     let v = VERSION.to_le_bytes();
-    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], v[0], v[1], role, 0]
+    let e = epoch.to_le_bytes();
+    [
+        MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], v[0], v[1], role, 0, e[0], e[1], e[2], e[3],
+        e[4], e[5], e[6], e[7],
+    ]
 }
 
-/// Validate a peer hello; returns the peer's role byte.
-pub fn check_hello(buf: &[u8; 8]) -> Result<u8, WireError> {
+/// Validate a peer hello; returns the peer's role byte and session
+/// epoch.
+pub fn check_hello(buf: &[u8; HELLO_LEN]) -> Result<(u8, u64), WireError> {
     if buf[..4] != MAGIC {
         return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
     }
@@ -183,7 +203,10 @@ pub fn check_hello(buf: &[u8; 8]) -> Result<u8, WireError> {
     if got != VERSION {
         return Err(WireError::VersionMismatch { got, want: VERSION });
     }
-    Ok(buf[6])
+    let epoch = u64::from_le_bytes([
+        buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+    ]);
+    Ok((buf[6], epoch))
 }
 
 // ======================================================================
@@ -531,6 +554,11 @@ pub enum WireMsg {
         w: u32,
         /// Fixed-point fractional bits.
         f: u32,
+        /// Session epoch (0 for a fresh session). A re-key within one
+        /// connection is only legal when this strictly advances — the
+        /// node derives a fresh encryption-randomness stream per epoch,
+        /// so an equal-or-lower epoch is rejected as a replay.
+        epoch: u64,
     },
     /// Center → node: the encrypted inverse Hessian bound `Enc(H̃⁻¹)`
     /// (packed lower triangle), broadcast once after PrivLogit-Local
@@ -715,11 +743,12 @@ impl WireMsg {
             }
             WireMsg::MetaReq => w.put_u8(TAG_META_REQ),
             WireMsg::Shutdown => w.put_u8(TAG_SHUTDOWN),
-            WireMsg::SetKey { n, w: width, f } => {
+            WireMsg::SetKey { n, w: width, f, epoch } => {
                 w.put_u8(TAG_SET_KEY);
                 w.put_biguint(n);
                 w.put_u32(*width);
                 w.put_u32(*f);
+                w.put_u64(*epoch);
             }
             WireMsg::SetHinv { scale, cts } => {
                 w.put_u8(TAG_SET_HINV);
@@ -853,7 +882,8 @@ impl WireMsg {
                 let n = r.get_biguint()?;
                 let w = r.get_u32()?;
                 let f = r.get_u32()?;
-                WireMsg::SetKey { n, w, f }
+                let epoch = r.get_u64()?;
+                WireMsg::SetKey { n, w, f, epoch }
             }
             TAG_SET_HINV => {
                 let scale = r.get_u32()?;
@@ -1023,7 +1053,8 @@ mod tests {
             WireMsg::Ciphertexts { scale: 0, secs: 0.0, cts: vec![] },
             WireMsg::GarbledTables((0..200u8).collect()),
             WireMsg::OtMsg(vec![]),
-            WireMsg::SetKey { n: rand_big(rng), w: 40, f: 24 },
+            WireMsg::SetKey { n: rand_big(rng), w: 40, f: 24, epoch: 0 },
+            WireMsg::SetKey { n: rand_big(rng), w: 40, f: 24, epoch: rng.next_u64() },
             WireMsg::SetHinv {
                 scale: 24,
                 cts: (0..6).map(|_| rand_big(rng)).collect(),
@@ -1143,14 +1174,18 @@ mod tests {
 
     #[test]
     fn hello_roundtrip_and_rejection() {
-        let h = hello(ROLE_NODE);
-        assert_eq!(check_hello(&h), Ok(ROLE_NODE));
+        let h = hello(ROLE_NODE, 0);
+        assert_eq!(check_hello(&h), Ok((ROLE_NODE, 0)));
+
+        // The epoch travels through the hello intact (resume re-key).
+        let h = hello(ROLE_CENTER, u64::MAX - 3);
+        assert_eq!(check_hello(&h), Ok((ROLE_CENTER, u64::MAX - 3)));
 
         let mut bad_magic = h;
         bad_magic[0] = b'X';
         assert!(matches!(check_hello(&bad_magic), Err(WireError::BadMagic(_))));
 
-        let mut bad_version = hello(ROLE_CENTER);
+        let mut bad_version = hello(ROLE_CENTER, 0);
         bad_version[4] = 0xFF;
         bad_version[5] = 0xFF;
         assert_eq!(

@@ -31,6 +31,28 @@ impl Default for ProtocolConfig {
     }
 }
 
+/// Session-durability context for a protocol run: where to checkpoint,
+/// what to resume from, and the session identity the checkpoints must
+/// record so a resumed incarnation can prove continuity (same seed ⇒
+/// same Paillier modulus ⇒ same session id in the merged timeline).
+/// The default is a plain non-durable run.
+#[derive(Clone, Debug, Default)]
+pub struct DurableRun {
+    /// Directory to persist round-boundary checkpoints under; `None`
+    /// disables checkpointing.
+    pub state_dir: Option<std::path::PathBuf>,
+    /// Checkpoint to continue from (β and the completed-iteration
+    /// index) instead of starting at round 0.
+    pub resume: Option<crate::coordinator::checkpoint::SessionCheckpoint>,
+    /// RNG seed of the session, recorded into checkpoints.
+    pub seed: u64,
+    /// Paillier modulus bits of the session, recorded into checkpoints.
+    pub modulus_bits: u64,
+    /// Session epoch this incarnation runs at (0 fresh; a resume runs
+    /// at the checkpointed epoch + 1).
+    pub epoch: u64,
+}
+
 /// Result of one secure protocol run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -255,6 +277,7 @@ pub fn final_ledger<F: SecureFabric>(fab: &F, fleet: &dyn Fleet) -> CostLedger {
     ledger.fleet_bytes_sent += net.bytes_sent;
     ledger.fleet_bytes_recv += net.bytes_recv;
     ledger.excluded_nodes += fleet.excluded_count();
+    ledger.readmitted_nodes += fleet.readmitted_count();
     for (tag, flow) in fleet.tag_flows() {
         ledger.fleet_tag_flows.entry(tag).or_default().merge(&flow);
     }

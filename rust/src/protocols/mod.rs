@@ -42,10 +42,10 @@ pub mod privlogit_hessian;
 pub mod privlogit_local;
 pub mod ridge;
 
-pub use common::{ProtocolConfig, RunReport};
+pub use common::{DurableRun, ProtocolConfig, RunReport};
 pub use newton::run_newton;
 pub use privlogit_hessian::run_privlogit_hessian;
-pub use privlogit_local::run_privlogit_local;
+pub use privlogit_local::{run_privlogit_local, run_privlogit_local_durable};
 
 /// Which protocol to run (CLI/config selection).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,6 +99,45 @@ impl Protocol {
             Protocol::Newton => run_newton(fab, fleet, cfg),
             Protocol::PrivLogitHessian => run_privlogit_hessian(fab, fleet, cfg),
             Protocol::PrivLogitLocal => run_privlogit_local(fab, fleet, cfg),
+        }
+    }
+
+    /// [`Protocol::run`] with session durability. Checkpointing and
+    /// resume are scoped to PrivLogit-Local — its only cross-round
+    /// state is β and the rebroadcastable `Enc(H̃⁻¹)`. Newton and
+    /// PrivLogit-Hessian carry garbled-circuit state (share custody at
+    /// S2) that cannot be reconstructed in a new process, so a resume
+    /// request aborts with a clear error and a `--state-dir` is
+    /// ignored with a warning.
+    pub fn run_durable<F: crate::mpc::SecureFabric>(
+        &self,
+        fab: &mut F,
+        fleet: &mut dyn crate::coordinator::fleet::Fleet,
+        cfg: &ProtocolConfig,
+        durable: &DurableRun,
+    ) -> anyhow::Result<RunReport> {
+        match self {
+            Protocol::PrivLogitLocal => {
+                run_privlogit_local_durable(fab, fleet, cfg, durable)
+            }
+            _ => {
+                anyhow::ensure!(
+                    durable.resume.is_none(),
+                    "--resume is only supported for privlogit-local (its cross-round \
+                     state is just β and the rebroadcastable Enc(H̃⁻¹)); {} holds \
+                     share custody at center-b that a new process cannot rebuild — \
+                     restart the session from round 0 instead",
+                    self.name()
+                );
+                if durable.state_dir.is_some() {
+                    crate::obs::warn(format_args!(
+                        "--state-dir is ignored for {}: only privlogit-local \
+                         checkpoints at round boundaries",
+                        self.name()
+                    ));
+                }
+                self.run(fab, fleet, cfg)
+            }
         }
     }
 }

@@ -10,9 +10,49 @@
 //! in the iteration loop except the single-bit convergence check.
 
 use super::common::*;
+use crate::coordinator::checkpoint::{self, SessionCheckpoint};
 use crate::coordinator::fleet::{Fleet, NodePayload};
 use crate::mpc::{EncMat, EncVec, SecureFabric};
 use crate::obs;
+
+/// Persist one round-boundary checkpoint: β plus the session identity
+/// and membership an operator needs to `--resume` (see
+/// [`crate::coordinator::checkpoint`]). A write failure aborts the run
+/// — the operator asked for durability, so silently training on
+/// without it would be the worse failure mode.
+fn write_checkpoint<F: SecureFabric>(
+    dir: &std::path::Path,
+    durable: &DurableRun,
+    fab: &F,
+    fleet: &dyn Fleet,
+    round: u64,
+    beta: &[f64],
+) -> anyhow::Result<()> {
+    let (live, excluded) = fleet.membership();
+    let cp = SessionCheckpoint {
+        protocol: "privlogit-local".into(),
+        round,
+        beta: beta.to_vec(),
+        w: fab.fmt().w as u32,
+        f: fab.fmt().f,
+        seed: durable.seed,
+        modulus_bits: durable.modulus_bits,
+        epoch: durable.epoch,
+        session: fab.session_id(),
+        p: fleet.p() as u64,
+        n_total: fleet.n_total() as u64,
+        dataset: fleet.dataset_name(),
+        live,
+        excluded,
+        ledger: checkpoint::ledger_snapshot(fab.ledger()),
+    };
+    checkpoint::save(dir, &cp)?;
+    // A round boundary is a durability boundary: flush buffered trace
+    // lines too, so a center killed after this checkpoint leaves a
+    // parseable trace of everything the checkpoint covers.
+    crate::obs::flush();
+    Ok(())
+}
 
 /// Setup: `SetupOnce` + Algorithm 3 step 2 (materialize `Enc(H̃⁻¹)`).
 pub fn setup_inverse<F: SecureFabric>(
@@ -126,9 +166,46 @@ pub fn run_privlogit_local<F: SecureFabric>(
     fleet: &mut dyn Fleet,
     cfg: &ProtocolConfig,
 ) -> anyhow::Result<RunReport> {
+    run_privlogit_local_durable(fab, fleet, cfg, &DurableRun::default())
+}
+
+/// [`run_privlogit_local`] with session durability: checkpoints β and
+/// the session state to `durable.state_dir` at every round boundary
+/// (atomic tmp + rename), and/or continues from `durable.resume`
+/// instead of round 0.
+///
+/// **Resume semantics.** PrivLogit-Local's only cross-round state is β
+/// and the rebroadcastable `Enc(H̃⁻¹)`, which is why resume is scoped
+/// to this protocol. Setup re-runs in the new incarnation (same seed ⇒
+/// same keypair ⇒ same session id, so the merged timeline stitches);
+/// iteration continues at the checkpointed global index — `proto.iter`
+/// spans carry the *global* round, so both incarnations' spans line up
+/// — and the convergence window restarts (the first resumed pass has
+/// no previous log-likelihood to compare against, costing at most one
+/// extra iteration). The resumed report's ledger accounts the new
+/// incarnation only; `iterations` is global.
+pub fn run_privlogit_local_durable<F: SecureFabric>(
+    fab: &mut F,
+    fleet: &mut dyn Fleet,
+    cfg: &ProtocolConfig,
+    durable: &DurableRun,
+) -> anyhow::Result<RunReport> {
     let p = fleet.p();
     let n = fleet.n_total();
     let scale = 1.0 / n as f64;
+
+    let (mut beta, iter_offset) = match &durable.resume {
+        Some(cp) => {
+            anyhow::ensure!(
+                cp.beta.len() == p,
+                "checkpoint β has {} coefficients but the fleet serves p = {p} — \
+                 resume needs the same shards the session started with",
+                cp.beta.len()
+            );
+            (cp.beta.clone(), cp.round)
+        }
+        None => (vec![0.0; p], 0),
+    };
 
     // Steps 1–2: setup; Enc(H̃⁻¹) is then broadcast to all nodes — for
     // real over the wire when the fleet's nodes hold the key.
@@ -148,17 +225,23 @@ pub fn run_privlogit_local<F: SecureFabric>(
     fab.ledger_mut().rounds += 1;
     let setup_secs = total_secs(fab);
 
-    let mut beta = vec![0.0; p];
     let mut prev_l = None;
-    let mut iterations = 0;
+    let mut iterations = iter_offset as usize;
     let mut converged = false;
 
-    for iter in 0..cfg.max_iters {
-        // One span per model-update round; the final (convergence-only)
-        // pass emits one too, so span count = iterations + converged.
+    // Setup survived: a crash before the first round boundary resumes
+    // here rather than re-running a possibly long dead session's work.
+    if let Some(dir) = &durable.state_dir {
+        write_checkpoint(dir, durable, fab, fleet, iterations as u64, &beta)?;
+    }
+
+    while iterations < cfg.max_iters {
+        // One span per model-update round, at the *global* iteration
+        // index; the final (convergence-only) pass emits one too, so
+        // span count = iterations + converged.
         let _sp = obs::span("proto.iter")
             .session(fab.session_id())
-            .round(iter as u64)
+            .round(iterations as u64)
             .str("protocol", "privlogit-local");
         // Steps 4–9: nodes compute l_sj (encrypted) and the *local*
         // partial Newton step Enc(H̃⁻¹ g_j) via multiply-by-constant.
@@ -189,6 +272,12 @@ pub fn run_privlogit_local<F: SecureFabric>(
             *b += d;
         }
         iterations += 1;
+
+        // Round boundary: the new iterate is durable before the next
+        // round starts, so a crash loses at most the round in flight.
+        if let Some(dir) = &durable.state_dir {
+            write_checkpoint(dir, durable, fab, fleet, iterations as u64, &beta)?;
+        }
     }
 
     Ok(RunReport {

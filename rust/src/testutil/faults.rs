@@ -58,12 +58,22 @@ pub enum FaultAction {
     TruncateFrame(usize),
 }
 
+/// One scheduled fault: which occurrence of which request tag, in which
+/// served session (None = every session), gets which action.
+#[derive(Clone, Copy, Debug)]
+struct Fault {
+    session: Option<u64>,
+    tag: u8,
+    round: u64,
+    action: FaultAction,
+}
+
 /// A deterministic schedule of transport faults: which occurrence of
 /// which request tag gets which [`FaultAction`], plus how many initial
 /// connection attempts to drop pre-handshake.
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
-    faults: Vec<(u8, u64, FaultAction)>,
+    faults: Vec<Fault>,
     fail_connects: u64,
 }
 
@@ -79,7 +89,17 @@ impl FaultPlan {
     /// with multi-frame replies (`StepReq`), the action fires on the
     /// first reply frame.
     pub fn on(mut self, tag: u8, round: u64, action: FaultAction) -> FaultPlan {
-        self.faults.push((tag, round, action));
+        self.faults.push(Fault { session: None, tag, round, action });
+        self
+    }
+
+    /// Like [`FaultPlan::on`], but scoped to served session `session`
+    /// (0-based, counted per server across accepted connections). This
+    /// is how a kill-and-restart node is modeled: session 0 dies
+    /// mid-frame, the *next* accepted session — the readmission probe's
+    /// fresh connection — behaves cleanly.
+    pub fn on_session(mut self, session: u64, tag: u8, round: u64, action: FaultAction) -> FaultPlan {
+        self.faults.push(Fault { session: Some(session), tag, round, action });
         self
     }
 
@@ -109,11 +129,14 @@ impl FaultPlan {
             }));
         }
         if !faults.is_empty() {
-            let faults: Arc<[(u8, u64, FaultAction)]> = faults.into();
+            let faults: Arc<[Fault]> = faults.into();
+            let sessions = Arc::new(std::sync::atomic::AtomicU64::new(0));
             server = server.with_transport_wrapper(Box::new(move |inner| {
+                let session = sessions.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
                 Box::new(FaultyTransport {
                     inner,
                     faults: Arc::clone(&faults),
+                    session,
                     rounds: BTreeMap::new(),
                     armed: None,
                 })
@@ -127,7 +150,10 @@ impl FaultPlan {
 /// received requests arm matching actions, the next reply fires them.
 pub struct FaultyTransport {
     inner: Box<dyn Transport>,
-    faults: Arc<[(u8, u64, FaultAction)]>,
+    faults: Arc<[Fault]>,
+    /// 0-based index of the served session this transport carries
+    /// (session-scoped faults match against it).
+    session: u64,
     /// Per-tag occurrence counters over received requests.
     rounds: BTreeMap<u8, u64>,
     /// Action armed by the last received request, consumed by the next
@@ -136,8 +162,8 @@ pub struct FaultyTransport {
 }
 
 impl FaultyTransport {
-    /// Wrap `inner`, applying `plan`'s per-round faults (the
-    /// connect-gate part of a plan only takes effect via
+    /// Wrap `inner`, applying `plan`'s per-round faults as session 0
+    /// (the connect-gate part of a plan only takes effect via
     /// [`FaultPlan::install`]). For in-process tests over
     /// [`mem_transport_pair`](crate::net::mem_transport_pair), wrap the
     /// node end.
@@ -145,6 +171,7 @@ impl FaultyTransport {
         FaultyTransport {
             inner,
             faults: plan.faults.clone().into(),
+            session: 0,
             rounds: BTreeMap::new(),
             armed: None,
         }
@@ -213,10 +240,10 @@ impl Transport for FaultyTransport {
             let c = self.rounds.entry(tag).or_insert(0);
             let round = *c;
             *c += 1;
-            if let Some(&(_, _, action)) =
-                self.faults.iter().find(|&&(t, r, _)| t == tag && r == round)
-            {
-                self.armed = Some(action);
+            if let Some(f) = self.faults.iter().find(|f| {
+                f.tag == tag && f.round == round && f.session.map_or(true, |s| s == self.session)
+            }) {
+                self.armed = Some(f.action);
             }
         }
         Ok(msg)
@@ -262,6 +289,28 @@ mod tests {
         let err = node.send_msg(b"abcdef".to_vec()).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
         assert_eq!(center.recv_msg().unwrap(), b"abc");
+    }
+
+    #[test]
+    fn session_scoped_faults_fire_in_their_session_only() {
+        let plan = FaultPlan::new().on_session(1, 0x01, 0, FaultAction::TruncateFrame(2));
+
+        // Session 0 (what wrap() models): the fault must not fire.
+        let (mut center, node) = mem_transport_pair();
+        let mut node = FaultyTransport::wrap(Box::new(node), &plan);
+        center.send_msg(vec![0x01]).unwrap();
+        node.recv_msg().unwrap();
+        node.send_msg(b"fine".to_vec()).unwrap();
+        assert_eq!(center.recv_msg().unwrap(), b"fine");
+
+        // The same plan observed from session 1: the fault fires.
+        let (mut center, node) = mem_transport_pair();
+        let mut node = FaultyTransport::wrap(Box::new(node), &plan);
+        node.session = 1;
+        center.send_msg(vec![0x01]).unwrap();
+        node.recv_msg().unwrap();
+        let err = node.send_msg(b"abcdef".to_vec()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
     }
 
     #[test]

@@ -9,14 +9,15 @@ use std::sync::{mpsc, OnceLock};
 use std::time::Duration;
 
 use privlogit::coordinator::fleet::Fleet;
-use privlogit::coordinator::{run_protocol, Backend, CenterLink};
+use privlogit::coordinator::{checkpoint, run_protocol, Backend, CenterLink};
 use privlogit::data::{synthesize, Dataset};
 use privlogit::gc::word::FixedFmt;
 use privlogit::linalg::r_squared;
 use privlogit::net::wire;
 use privlogit::net::{FleetOptions, NodeServer, RemoteFleet};
 use privlogit::obs;
-use privlogit::obs::timeline::parse_trace;
+use privlogit::obs::json;
+use privlogit::obs::timeline::{parse_trace, Timeline};
 use privlogit::optim::{fit, Method, OptimConfig};
 use privlogit::protocols::{Protocol, ProtocolConfig};
 use privlogit::testutil::faults::{FaultAction, FaultPlan};
@@ -65,6 +66,29 @@ fn spawn_fault_fleet(parts: Vec<Dataset>, plan_for: impl Fn(usize) -> FaultPlan)
             let mut server = plan_for(j).install(server);
             std::thread::spawn(move || {
                 let _ = server.serve_once();
+            });
+            addr
+        })
+        .collect()
+}
+
+/// Like [`spawn_fault_fleet`], but each server keeps accepting sessions
+/// (`serve_forever`) — what kill-and-restart scenarios need: the dead
+/// session ends, the server accepts the readmission probe's or the
+/// resumed center's fresh connection.
+fn spawn_persistent_fleet(
+    parts: Vec<Dataset>,
+    plan_for: impl Fn(usize) -> FaultPlan,
+) -> Vec<String> {
+    parts
+        .into_iter()
+        .enumerate()
+        .map(|(j, shard)| {
+            let server = NodeServer::bind("127.0.0.1:0", shard).unwrap();
+            let addr = server.local_addr().unwrap().to_string();
+            let mut server = plan_for(j).install(server);
+            std::thread::spawn(move || {
+                let _ = server.serve_forever();
             });
             addr
         })
@@ -361,5 +385,237 @@ fn scaling_sweep_64_nodes_8_killed_mid_round() {
     assert_eq!(
         per_node_16, per_node_64,
         "per-live-node stats reply bytes must not grow with fleet size"
+    );
+}
+
+/// A node that dies mid-frame ("killed") and whose server immediately
+/// restarts: the fleet excludes it on the round it missed, then the
+/// next round-boundary probe readmits it over a fresh connection —
+/// `n_total` restored, attribution round-accurate in the records and in
+/// the `fleet.readmit` trace span.
+#[test]
+fn killed_node_restarts_and_is_readmitted() {
+    let trace = trace_path();
+    let d = synthesize("faultsre", 240, 3, 97);
+    let parts = d.partition(4);
+    // Node 1's first served session dies mid-frame on its first stats
+    // reply; every later session (the readmission probe's fresh
+    // connection) is clean — a kill-and-restart, deterministically.
+    let addrs = spawn_persistent_fleet(parts, |j| {
+        if j == 1 {
+            FaultPlan::new().on_session(0, wire::TAG_STATS_REQ, 0, FaultAction::TruncateFrame(4))
+        } else {
+            FaultPlan::new()
+        }
+    });
+    let opts = FleetOptions {
+        round_timeout: Some(Duration::from_secs(2)),
+        quorum: 3,
+        ..FleetOptions::default()
+    };
+
+    let killed = addrs[1].clone();
+    let run_addrs = addrs.clone();
+    let (n_mid, n_after, excluded, readmitted, orgs_round1) =
+        watchdog(Duration::from_secs(60), move || {
+            let mut fleet = RemoteFleet::connect_with(&run_addrs, opts).unwrap();
+            assert_eq!(fleet.n_total(), 240);
+            // Stats round 0: node 1 dies mid-frame and is excluded.
+            let replies = fleet.stats(&[0.0, 0.0, 0.0], 1.0 / 240.0).unwrap();
+            assert_eq!(replies.len(), 3, "round 0 proceeds over the survivors");
+            let n_mid = fleet.n_total();
+            // Stats round 1: the boundary probe finds the restarted
+            // server, readmits it, and it participates in this round.
+            let replies = fleet.stats(&[0.0, 0.0, 0.0], 1.0 / 240.0).unwrap();
+            let orgs: Vec<usize> = replies.iter().map(|r| r.org).collect();
+            (
+                n_mid,
+                fleet.n_total(),
+                fleet.excluded().to_vec(),
+                fleet.readmitted().to_vec(),
+                orgs,
+            )
+        });
+
+    assert_eq!(n_mid, 180, "n_total shrank while the node was out");
+    assert_eq!(n_after, 240, "n_total restored on readmission");
+    assert!(excluded.is_empty(), "readmission clears the exclusion record: {excluded:?}");
+    assert_eq!(readmitted.len(), 1, "{readmitted:?}");
+    assert_eq!(readmitted[0].addr, killed, "{readmitted:?}");
+    assert_eq!(readmitted[0].org, 1, "{readmitted:?}");
+    assert_eq!(
+        (readmitted[0].tag, readmitted[0].round),
+        (wire::TAG_STATS_REQ, 1),
+        "readmitted at the round it first participates in: {readmitted:?}"
+    );
+    assert_eq!(orgs_round1, vec![0, 1, 2, 3], "the readmitted node replies in org order");
+
+    // The trace attributes the readmission: a fleet.readmit span for
+    // the killed node with outcome=ok at stats round 1.
+    obs::flush();
+    let file = parse_trace(&std::fs::read_to_string(trace).unwrap()).unwrap();
+    let ev = file
+        .events
+        .iter()
+        .find(|e| {
+            e.span == "fleet.readmit"
+                && e.node.as_deref() == Some(killed.as_str())
+                && e.outcome.as_deref() == Some("ok")
+        })
+        .unwrap_or_else(|| panic!("no successful fleet.readmit span for {killed}"));
+    assert_eq!(ev.tag, Some(wire::TAG_STATS_REQ), "{ev:?}");
+    assert_eq!(ev.round, Some(1), "{ev:?}");
+}
+
+/// The acceptance scenario: a real center process SIGKILLed mid-training
+/// resumes from its `--state-dir` checkpoints via `--resume`, converges
+/// to the plaintext optimum, and the two incarnations stitch into one
+/// logical session (same session id, global round numbering) in the
+/// merged trace timeline.
+#[test]
+fn center_killed_mid_training_resumes_and_converges() {
+    trace_path();
+    // Scratch (checkpoints + per-incarnation center traces) lands under
+    // PRIVLOGIT_TRACE_DIR when set, so CI can upload it as an artifact.
+    let scratch = match std::env::var("PRIVLOGIT_TRACE_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d).join("session-recovery"),
+        _ => std::env::temp_dir().join(format!("plgt-resume-{}", std::process::id())),
+    };
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).unwrap();
+    let state_dir = scratch.join("state");
+    let trace1 = scratch.join("center-incarnation-1.jsonl");
+    let trace2 = scratch.join("center-incarnation-2.jsonl");
+
+    let d = synthesize("faultskc", 400, 3, 98);
+    let parts = d.partition(4);
+    let cfg = ProtocolConfig::default();
+    let truth = fit(
+        &parts,
+        Method::Newton,
+        OptimConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters },
+    );
+    let addrs = spawn_persistent_fleet(parts, |_| FaultPlan::new());
+    let nodes = addrs.join(",");
+
+    let center_cmd = |extra: &[&str], trace: &Path| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_privlogit"));
+        cmd.args([
+            "center",
+            "--nodes",
+            &nodes,
+            "--protocol",
+            "privlogit-local",
+            "--backend",
+            "real",
+            "--modulus-bits",
+            "256",
+            "--seed",
+            "4242",
+            "--round-timeout",
+            "30",
+            "--json",
+        ])
+        .args(extra)
+        .env("PRIVLOGIT_TRACE", trace)
+        .env_remove("PRIVLOGIT_ROUND_TIMEOUT")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped());
+        cmd
+    };
+
+    // Incarnation 1: train with checkpointing until round 3 is durable,
+    // then SIGKILL it mid-training.
+    let state_flag = state_dir.to_str().unwrap().to_string();
+    let mut child =
+        center_cmd(&["--state-dir", &state_flag], &trace1).spawn().expect("spawn center");
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    let target = state_dir.join("checkpoint-000003.json");
+    loop {
+        if target.exists() {
+            break;
+        }
+        if let Some(status) = child.try_wait().unwrap() {
+            panic!("center exited ({status}) before checkpoint round 3 appeared");
+        }
+        assert!(std::time::Instant::now() < deadline, "no checkpoint round 3 within 120 s");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    child.kill().expect("kill center");
+    let _ = child.wait();
+
+    // The latest durable checkpoint is a valid round >= 3 document.
+    let cp = checkpoint::load_latest(&state_dir).unwrap().expect("a checkpoint survived the kill");
+    assert!(cp.round >= 3, "latest checkpoint round {} >= 3", cp.round);
+    assert_eq!(cp.protocol, "privlogit-local");
+    assert_eq!(cp.epoch, 0, "first incarnation ran at epoch 0");
+    let killed_at = cp.round;
+
+    // Incarnation 2: resume from the state dir and run to convergence.
+    let out = center_cmd(&["--resume", &state_flag], &trace2)
+        .output()
+        .expect("run resumed center");
+    assert!(
+        out.status.success(),
+        "resumed center failed: {}\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let report = json::parse(stdout.trim()).expect("report JSON parses");
+    assert_eq!(
+        report.get("converged").and_then(|v| v.as_bool()),
+        Some(true),
+        "resumed run converged: {stdout}"
+    );
+    let iterations = report.get("iterations").and_then(|v| v.as_u64()).unwrap();
+    assert!(
+        iterations > killed_at,
+        "iteration count is global across incarnations: {iterations} vs killed at {killed_at}"
+    );
+    let beta: Vec<f64> = report
+        .get("beta")
+        .and_then(|v| v.as_arr())
+        .expect("beta array")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let r2 = r_squared(&beta, &truth.beta);
+    assert!(r2 > 0.9999, "R² = {r2} vs the plaintext optimum after crash-resume");
+
+    // The final checkpoint reflects the resumed incarnation.
+    let last = checkpoint::load_latest(&state_dir).unwrap().unwrap();
+    assert_eq!(last.epoch, 1, "resumed incarnation checkpoints at epoch 1");
+    assert_eq!(last.round, iterations, "last checkpoint is the final round boundary");
+
+    // Both incarnations stitch into one logical session in the merged
+    // timeline: same (seed-derived) session id, and the resumed
+    // incarnation's iteration spans continue the global numbering.
+    // Incarnation 1 was SIGKILLed, so keep only its complete lines.
+    let text1 = std::fs::read_to_string(&trace1).unwrap();
+    let text1 = &text1[..text1.rfind('\n').map_or(0, |i| i + 1)];
+    let file1 = parse_trace(text1).expect("incarnation 1 trace parses");
+    let file2 = parse_trace(&std::fs::read_to_string(&trace2).unwrap()).unwrap();
+    let sessions = |f: &privlogit::obs::timeline::TraceFile| -> std::collections::BTreeSet<String> {
+        f.events.iter().map(|e| e.session.clone()).filter(|s| s != "-").collect()
+    };
+    let (s1, s2) = (sessions(&file1), sessions(&file2));
+    assert!(!s1.is_empty() && s1 == s2, "one session id across incarnations: {s1:?} vs {s2:?}");
+    let iter_rounds = |f: &privlogit::obs::timeline::TraceFile| -> Vec<u64> {
+        f.events.iter().filter(|e| e.span == "proto.iter").filter_map(|e| e.round).collect()
+    };
+    let (r1, r2s) = (iter_rounds(&file1), iter_rounds(&file2));
+    assert!(r1.contains(&0), "incarnation 1 starts at round 0: {r1:?}");
+    assert!(!r2s.is_empty(), "incarnation 2 traced its iterations");
+    let resumed_min = *r2s.iter().min().unwrap();
+    assert!(
+        resumed_min >= 3 && resumed_min <= killed_at,
+        "incarnation 2 continues the global round numbering (starts at {resumed_min}, \
+         killed at {killed_at})"
+    );
+    let timeline = Timeline::merge(vec![file1, file2]);
+    assert!(
+        timeline.events.iter().any(|e| e.span == "proto.iter" && e.round == Some(resumed_min)),
+        "merged timeline carries the resumed incarnation's rounds"
     );
 }
