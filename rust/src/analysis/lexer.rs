@@ -1,0 +1,467 @@
+//! A lightweight Rust source lexer for the audit rules.
+//!
+//! Not a parser: it classifies every character of a source file as code,
+//! comment, or literal, producing a *blanked* view (comments and string
+//! contents replaced by spaces, columns preserved) that the lexical
+//! rules in [`super::rules`] can scan without tripping on tokens inside
+//! strings or comments. On top of that it tracks three pieces of
+//! structure the rules need: `#[cfg(test)]` brace regions, the
+//! `// audit:allow(RULE): reason` suppression grammar, and
+//! `// audit:secret` type tags.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{Finding, RULES};
+
+/// One string literal: where it starts (1-based line, 0-based column of
+/// the opening delimiter in the blanked line) and its raw contents.
+#[derive(Clone, Debug)]
+pub struct StrLit {
+    /// 1-based source line of the opening quote.
+    pub line: usize,
+    /// 0-based character column of the opening quote.
+    pub col: usize,
+    /// Literal contents (escape sequences kept verbatim).
+    pub text: String,
+}
+
+/// One `audit:allow` suppression: the rule it silences and the
+/// inclusive line range it covers (a single line, or a whole `fn` block
+/// when attached to a function signature).
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// The silenced rule (one of [`RULES`]).
+    pub rule: &'static str,
+    /// First covered line (1-based).
+    pub start: usize,
+    /// Last covered line (inclusive).
+    pub end: usize,
+}
+
+/// The lexed view of one source file.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    /// Source lines with comments and literal contents blanked to
+    /// spaces (string delimiters kept), columns preserved.
+    pub blanked: Vec<String>,
+    /// Every string literal, in source order.
+    pub strings: Vec<StrLit>,
+    /// Comment text per line (concatenated when a line holds several).
+    pub comments: BTreeMap<usize, String>,
+    /// Lines inside `#[cfg(test)]` brace regions (or the whole file for
+    /// paths under `tests/`).
+    pub is_test: BTreeSet<usize>,
+    /// Parsed `audit:allow` suppressions.
+    pub allows: Vec<Allow>,
+    /// Type names tagged secret via `// audit:secret`.
+    pub secrets: BTreeSet<String>,
+}
+
+impl Lexed {
+    /// Whether `rule` is suppressed at `line` by an attached allow.
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|a| a.rule == rule && a.start <= line && line <= a.end)
+    }
+
+    /// The blanked text of `line` (1-based), or `""` past the end.
+    pub fn code(&self, line: usize) -> &str {
+        self.blanked.get(line.wrapping_sub(1)).map_or("", String::as_str)
+    }
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+/// Lex `src` into its blanked view plus literals and comments.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Lexed::default();
+    let mut blanked: Vec<char> = Vec::with_capacity(n);
+    let mut state = State::Code;
+    let mut line = 1usize;
+    let mut col = 0usize;
+    let mut cur_str: Option<(usize, usize, String)> = None;
+    let mut cur_comment = String::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let nxt = cs.get(i + 1).copied().unwrap_or('\0');
+        if c == '\n' {
+            if !cur_comment.is_empty() {
+                let entry = out.comments.entry(line).or_default();
+                entry.push_str(&cur_comment);
+                cur_comment.clear();
+            }
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            blanked.push('\n');
+            line += 1;
+            col = 0;
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && nxt == '/' {
+                    state = State::LineComment;
+                    blanked.push(' ');
+                    blanked.push(' ');
+                    i += 2;
+                    col += 2;
+                } else if c == '/' && nxt == '*' {
+                    state = State::BlockComment(1);
+                    blanked.push(' ');
+                    blanked.push(' ');
+                    i += 2;
+                    col += 2;
+                } else if c == '"' {
+                    cur_str = Some((line, col, String::new()));
+                    blanked.push('"');
+                    state = State::Str;
+                    i += 1;
+                    col += 1;
+                } else if c == 'r' && (nxt == '"' || nxt == '#') {
+                    // Raw string r"…" / r#"…"# (or a raw identifier,
+                    // which falls through to plain code).
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && cs[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        cur_str = Some((line, col, String::new()));
+                        let skip = j + 1 - i;
+                        for _ in 0..skip {
+                            blanked.push(' ');
+                        }
+                        i = j + 1;
+                        col += skip;
+                        state = State::RawStr(hashes);
+                    } else {
+                        blanked.push(c);
+                        i += 1;
+                        col += 1;
+                    }
+                } else if c == 'b' && nxt == '"' {
+                    cur_str = Some((line, col, String::new()));
+                    blanked.push(' ');
+                    blanked.push('"');
+                    state = State::Str;
+                    i += 2;
+                    col += 2;
+                } else if c == '\'' {
+                    // Lifetime vs char literal: after `'`, an identifier
+                    // char not followed by a closing `'` is a lifetime.
+                    let c2 = cs.get(i + 1).copied().unwrap_or('\0');
+                    let c3 = cs.get(i + 2).copied().unwrap_or('\0');
+                    if (c2.is_alphabetic() || c2 == '_') && c3 != '\'' {
+                        blanked.push('\'');
+                        i += 1;
+                        col += 1;
+                    } else {
+                        // Char literal: skip to the closing quote.
+                        let mut j = i + 1;
+                        if j < n && cs[j] == '\\' {
+                            j += 2;
+                            while j < n && cs[j] != '\'' {
+                                j += 1;
+                            }
+                        } else {
+                            j += 1;
+                        }
+                        let end = (j + 1).min(n);
+                        let skip = end - i;
+                        blanked.push('\'');
+                        for _ in 0..skip.saturating_sub(2) {
+                            blanked.push(' ');
+                        }
+                        if skip > 1 {
+                            blanked.push('\'');
+                        }
+                        i = end;
+                        col += skip;
+                    }
+                } else {
+                    blanked.push(c);
+                    i += 1;
+                    col += 1;
+                }
+            }
+            State::LineComment => {
+                cur_comment.push(c);
+                blanked.push(' ');
+                i += 1;
+                col += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && nxt == '/' {
+                    blanked.push(' ');
+                    blanked.push(' ');
+                    i += 2;
+                    col += 2;
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                } else if c == '/' && nxt == '*' {
+                    blanked.push(' ');
+                    blanked.push(' ');
+                    i += 2;
+                    col += 2;
+                    state = State::BlockComment(depth + 1);
+                } else {
+                    cur_comment.push(c);
+                    blanked.push(' ');
+                    i += 1;
+                    col += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    if let Some((_, _, text)) = cur_str.as_mut() {
+                        text.push(c);
+                    }
+                    blanked.push(' ');
+                    i += 1;
+                    col += 1;
+                    if nxt != '\n' && i < n {
+                        if let Some((_, _, text)) = cur_str.as_mut() {
+                            text.push(nxt);
+                        }
+                        blanked.push(' ');
+                        i += 1;
+                        col += 1;
+                    }
+                } else if c == '"' {
+                    if let Some((l0, c0, text)) = cur_str.take() {
+                        out.strings.push(StrLit { line: l0, col: c0, text });
+                    }
+                    blanked.push('"');
+                    state = State::Code;
+                    i += 1;
+                    col += 1;
+                } else {
+                    if let Some((_, _, text)) = cur_str.as_mut() {
+                        text.push(c);
+                    }
+                    blanked.push(' ');
+                    i += 1;
+                    col += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let mut closed = false;
+                if c == '"' {
+                    let mut h = 0usize;
+                    let mut j = i + 1;
+                    while h < hashes && j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        if let Some((l0, c0, text)) = cur_str.take() {
+                            out.strings.push(StrLit { line: l0, col: c0, text });
+                        }
+                        let skip = j - i;
+                        for _ in 0..skip {
+                            blanked.push(' ');
+                        }
+                        i = j;
+                        col += skip;
+                        state = State::Code;
+                        closed = true;
+                    }
+                }
+                if !closed {
+                    if let Some((_, _, text)) = cur_str.as_mut() {
+                        text.push(c);
+                    }
+                    blanked.push(' ');
+                    i += 1;
+                    col += 1;
+                }
+            }
+        }
+    }
+    if !cur_comment.is_empty() {
+        let entry = out.comments.entry(line).or_default();
+        entry.push_str(&cur_comment);
+    }
+    let text: String = blanked.into_iter().collect();
+    out.blanked = text.split('\n').map(str::to_string).collect();
+    out
+}
+
+/// Mark every line inside a `#[cfg(test)] { … }` region as test code.
+pub fn mark_cfg_test(lx: &mut Lexed) {
+    let mut depth = 0i64;
+    let mut pending = false;
+    let mut region_close: Option<i64> = None;
+    for ln in 1..=lx.blanked.len() {
+        let code = lx.blanked[ln - 1].clone();
+        if code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test") {
+            pending = true;
+        }
+        if region_close.is_some() {
+            lx.is_test.insert(ln);
+        }
+        for ch in code.chars() {
+            if ch == '{' {
+                depth += 1;
+                if pending {
+                    pending = false;
+                    region_close = Some(depth);
+                    lx.is_test.insert(ln);
+                }
+            } else if ch == '}' {
+                if region_close == Some(depth) {
+                    region_close = None;
+                }
+                depth -= 1;
+            }
+        }
+    }
+}
+
+/// Whether `code` contains an `fn` item declaration.
+pub fn has_fn_decl(code: &str) -> bool {
+    for pos in super::rules::word_positions(code, "fn") {
+        let rest = &code[pos + 2..];
+        let trimmed = rest.trim_start();
+        if trimmed.len() < rest.len() {
+            if let Some(c) = trimmed.chars().next() {
+                if c.is_ascii_alphabetic() || c == '_' {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Last line of the brace block opening at or after `start` (1-based).
+/// For a block-less item, the line holding the terminating `;`.
+pub fn brace_block_end(lx: &Lexed, start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for ln in start..=lx.blanked.len() {
+        let code = &lx.blanked[ln - 1];
+        for ch in code.chars() {
+            if ch == '{' {
+                depth += 1;
+                opened = true;
+            } else if ch == '}' {
+                depth -= 1;
+                if opened && depth == 0 {
+                    return ln;
+                }
+            }
+        }
+        if !opened && code.contains(';') {
+            return ln;
+        }
+    }
+    lx.blanked.len()
+}
+
+fn next_code_line(lx: &Lexed, from: usize) -> Option<usize> {
+    (from..=lx.blanked.len()).find(|&l| !lx.blanked[l - 1].trim().is_empty())
+}
+
+/// Parse `audit:allow(rule): reason` out of a comment, returning the
+/// rule (validated against [`RULES`]) or `None` when malformed.
+fn parse_allow(comment: &str) -> Option<&'static str> {
+    let pos = comment.find("audit:allow(")?;
+    let rest = &comment[pos + "audit:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = &rest[..close];
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':')?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    RULES.iter().find(|r| **r == rule).copied()
+}
+
+/// Parse the type name of a `struct`/`enum` declaration on `code`.
+fn type_decl_name(code: &str) -> Option<String> {
+    for kw in ["struct", "enum"] {
+        for pos in super::rules::word_positions(code, kw) {
+            let rest = code[pos + kw.len()..].trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// Attach `audit:allow` / `audit:secret` annotations to their target
+/// lines. A malformed or unknown-rule allow is itself a finding (rule
+/// `audit-allow`): a suppression that silently fails open would defeat
+/// the audit.
+pub fn attach_allows(lx: &mut Lexed, relpath: &str, findings: &mut Vec<Finding>) {
+    let comment_lines: Vec<usize> = lx.comments.keys().copied().collect();
+    for ln in comment_lines {
+        let txt = lx.comments[&ln].clone();
+        // Only plain `//` and `/* … */` comments carry annotations.
+        // Doc comments (`///`, `//!`, `/** … */`) may *describe* the
+        // grammar — as this file's module docs do — without arming it.
+        let body = txt.trim_start();
+        if body.starts_with('/') || body.starts_with('!') || body.starts_with('*') {
+            continue;
+        }
+        if txt.contains("audit:allow") {
+            match parse_allow(&txt) {
+                None => findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: ln,
+                    rule: "audit-allow",
+                    message: "malformed or unknown audit:allow annotation \
+                              (want `audit:allow(rule): reason`)"
+                        .to_string(),
+                }),
+                Some(rule) => {
+                    let target = if lx.code(ln).trim().is_empty() {
+                        next_code_line(lx, ln + 1)
+                    } else {
+                        Some(ln)
+                    };
+                    match target {
+                        None => findings.push(Finding {
+                            file: relpath.to_string(),
+                            line: ln,
+                            rule: "audit-allow",
+                            message: "audit:allow attaches to no code".to_string(),
+                        }),
+                        Some(t) => {
+                            let end =
+                                if has_fn_decl(lx.code(t)) { brace_block_end(lx, t) } else { t };
+                            lx.allows.push(Allow { rule, start: t, end });
+                        }
+                    }
+                }
+            }
+        }
+        if txt.contains("audit:secret") && !txt.contains("audit:allow") {
+            let from = if lx.code(ln).trim().is_empty() { ln + 1 } else { ln };
+            if let Some(tgt) = next_code_line(lx, from) {
+                for l in tgt..=(tgt + 2).min(lx.blanked.len()) {
+                    if let Some(name) = type_decl_name(lx.code(l)) {
+                        lx.secrets.insert(name);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}

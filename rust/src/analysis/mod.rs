@@ -1,0 +1,324 @@
+//! Machine-checked secrecy and protocol-invariant audit.
+//!
+//! `privlogit audit [--json] [SRC_DIR]` runs four lexical rules over
+//! the crate's Rust sources (no `syn`, no proc-macro — a hand-rolled
+//! lexer in [`lexer`] feeds the rule engine in [`rules`]):
+//!
+//! * `secret-flow` — secret types ([`rules::BASE_SECRETS`] plus any
+//!   type tagged `// audit:secret`) must not derive or hand-roll a
+//!   field-dumping `Debug`/`Display`, and must never be named on a
+//!   line that feeds a log, trace-span or wire-codec sink.
+//! * `panic-free` — no `unwrap`/`expect`/panicking macro/assert/
+//!   unchecked indexing in non-test code of the remote-input files
+//!   ([`rules::PANIC_SCOPE`]): a malformed frame must fail the
+//!   session, not the process.
+//! * `wire-tags` — every `TAG_*` constant has a `tag_name()` arm, an
+//!   arm in `fn tag()`, round-trip test coverage, and a documented
+//!   value in docs/ARCHITECTURE.md.
+//! * `span-schema` — every `span("…")` name is in the timeline's
+//!   `KNOWN_SPANS` vocabulary and the docs taxonomy; every
+//!   `privlogit-*/vN` schema string is version-consistent and
+//!   documented.
+//!
+//! A finding is suppressed by a plain comment `// audit:allow(RULE):
+//! reason` on (or directly above) the offending line; attached to an
+//! `fn` signature it covers the whole body. The reason is mandatory,
+//! and a malformed or unknown-rule allow is itself a finding (rule
+//! `audit-allow`) — a suppression that fails open would defeat the
+//! audit. `#[cfg(test)]` regions and files under `tests/` are exempt
+//! from `secret-flow`/`panic-free`, but their string literals still
+//! feed the schema census so tests cannot bake in undocumented
+//! schemas.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context as _;
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+/// Schema tag of the `--json` report document.
+pub const AUDIT_SCHEMA: &str = "privlogit-audit/v1";
+
+/// Every rule name, including the meta-rule that polices the allow
+/// grammar itself. `audit:allow(RULE)` must name one of these.
+pub const RULES: &[&str] =
+    &["audit-allow", "panic-free", "secret-flow", "span-schema", "wire-tags"];
+
+/// One audit finding. Field order gives the sort order: by file, then
+/// line, then rule, so reports are deterministic and diffable.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Path relative to the audit root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// The rule that fired (one of [`RULES`]).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+/// The result of auditing one source tree.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    /// Sorted findings (empty means the tree is clean).
+    pub findings: Vec<Finding>,
+    /// How many `.rs` files were scanned.
+    pub files_scanned: usize,
+    /// Whether a docs/ARCHITECTURE.md was found for the doc checks
+    /// (absent for fixture trees — those checks are skipped).
+    pub doc_found: bool,
+}
+
+impl AuditReport {
+    /// Compiler-style `file:line: rule: message` text plus a summary.
+    pub fn render_human(&self) -> String {
+        report::render_human(self)
+    }
+
+    /// The `privlogit-audit/v1` JSON document.
+    pub fn render_json(&self) -> String {
+        report::render_json(self)
+    }
+}
+
+/// Run every rule over in-memory sources (`(relpath, text)` pairs).
+/// Disk-free core of [`audit`], used directly by the unit tests.
+pub fn audit_sources(files: &[(String, String)], doc: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut lexed: Vec<(String, lexer::Lexed)> = Vec::new();
+    for (rel, src) in files {
+        let mut lx = lexer::lex(src);
+        lexer::mark_cfg_test(&mut lx);
+        if rel.starts_with("tests/") || rel.contains("/tests/") {
+            for ln in 1..=lx.blanked.len() {
+                lx.is_test.insert(ln);
+            }
+        }
+        lexer::attach_allows(&mut lx, rel, &mut findings);
+        lexed.push((rel.clone(), lx));
+    }
+    // Secrets are a tree-wide set: a type tagged in one file stays
+    // secret when another file names it on a sink line.
+    let mut secrets: BTreeSet<String> = BTreeSet::new();
+    for s in rules::BASE_SECRETS {
+        secrets.insert(s.to_string());
+    }
+    for (_, lx) in &lexed {
+        secrets.extend(lx.secrets.iter().cloned());
+    }
+    let mut acc = rules::SpanAcc::default();
+    for (rel, lx) in &lexed {
+        rules::secret_flow(rel, lx, &secrets, &mut findings);
+        rules::panic_free(rel, lx, &mut findings);
+        rules::wire_tags(rel, lx, doc, &mut findings);
+        rules::collect_spans_schemas(rel, lx, &mut acc);
+    }
+    rules::span_schema(&acc, doc, &mut findings);
+    findings.sort();
+    findings
+}
+
+fn collect_rs(dir: &Path, base: &Path, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let path = entry.path();
+        if path.is_dir() {
+            // Fixture trees are deliberately dirty; `target/` and dot
+            // dirs are build products.
+            if name.starts_with('.') || name == "target" || name == "audit_fixtures" {
+                continue;
+            }
+            collect_rs(&path, base, out)?;
+        } else if name.ends_with(".rs") {
+            let rel = path.strip_prefix(base).unwrap_or(&path).to_string_lossy().to_string();
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Locate docs/ARCHITECTURE.md: beside the audit root, or up to two
+/// directories above it (the crate lives one level below the repo
+/// root). Fixture roots find none, which skips the doc checks there.
+fn find_doc(root: &Path) -> Option<String> {
+    let mut dir = root.canonicalize().ok()?;
+    for _ in 0..3 {
+        let cand = dir.join("docs").join("ARCHITECTURE.md");
+        if cand.is_file() {
+            return fs::read_to_string(cand).ok();
+        }
+        dir = dir.parent()?.to_path_buf();
+    }
+    None
+}
+
+/// Audit the source tree at `root`. When `root/Cargo.toml` exists the
+/// scan covers `src/`, `benches/` and `tests/`; otherwise every `.rs`
+/// file under `root` recursively.
+pub fn audit(root: &Path) -> anyhow::Result<AuditReport> {
+    let mut paths: Vec<(String, PathBuf)> = Vec::new();
+    if root.join("Cargo.toml").is_file() {
+        for sub in ["src", "benches", "tests"] {
+            let dir = root.join(sub);
+            if dir.is_dir() {
+                collect_rs(&dir, root, &mut paths)
+                    .with_context(|| format!("scanning {}", dir.display()))?;
+            }
+        }
+    } else {
+        collect_rs(root, root, &mut paths)
+            .with_context(|| format!("scanning {}", root.display()))?;
+    }
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for (rel, path) in paths {
+        let src = fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        sources.push((rel, src));
+    }
+    let doc = find_doc(root);
+    let findings = audit_sources(&sources, doc.as_deref());
+    Ok(AuditReport { findings, files_scanned: sources.len(), doc_found: doc.is_some() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(relpath: &str, src: &str) -> Vec<Finding> {
+        audit_sources(&[(relpath.to_string(), src.to_string())], None)
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "fn f() -> String {\n    let s = \"call .unwrap() now\"; // .unwrap() too\n    s.to_string()\n}\n";
+        assert!(run_one("net/wire.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_free_catches_each_category() {
+        let src = "fn f(b: &[u8]) {\n    let v = b.first().unwrap();\n    let w = b.first().expect(\"w\");\n    panic!(\"no\");\n    assert!(b.is_empty());\n    let x = b[0];\n}\n";
+        let found = run_one("net/wire.rs", src);
+        assert_eq!(found.len(), 5, "{found:?}");
+        assert!(found.iter().all(|f| f.rule == "panic-free"));
+        assert_eq!(found.iter().map(|f| f.line).collect::<Vec<_>>(), vec![2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn panic_free_only_applies_in_scope() {
+        let src = "fn f(b: &[u8]) -> u8 {\n    b[0]\n}\n";
+        assert!(run_one("protocols/newton.rs", src).is_empty());
+        assert_eq!(run_one("net/tcp.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_region_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(b: &[u8]) -> u8 {\n        b[0]\n    }\n}\n";
+        assert!(run_one("net/wire.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_suppresses_line_and_fn_block() {
+        let line = "fn f(b: &[u8]) -> u8 {\n    // audit:allow(panic-free): caller checked\n    b[0]\n}\n";
+        assert!(run_one("net/wire.rs", line).is_empty());
+        let block = "// audit:allow(panic-free): whole fn is send-path\nfn f(b: &[u8]) -> u8 {\n    let x = b[0];\n    x\n}\n";
+        assert!(run_one("net/wire.rs", block).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let src = "fn f(b: &[u8]) -> u8 {\n    // audit:allow(panic-free)\n    b[0]\n}\n";
+        let found = run_one("net/wire.rs", src);
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert_eq!(found[0].rule, "audit-allow");
+        assert_eq!(found[1].rule, "panic-free");
+    }
+
+    #[test]
+    fn doc_comments_do_not_arm_the_allow_grammar() {
+        let src = "//! Mentions audit:allow(RULE): reason in docs.\nfn f() {}\n";
+        assert!(run_one("net/wire.rs", src).is_empty());
+    }
+
+    #[test]
+    fn secret_flow_catches_derive_and_sink() {
+        let src = "#[derive(Clone, Debug)]\npub struct PrivateKey {\n    pub lambda: u64,\n}\nfn log_it(k: &PrivateKey) { crate::obs::info(format_args!(\"{}\", k.lambda)); }\n";
+        let found = run_one("crypto/keys.rs", src);
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert!(found.iter().all(|f| f.rule == "secret-flow"));
+    }
+
+    #[test]
+    fn audit_secret_tag_extends_the_secret_set() {
+        let src = "// audit:secret\npub struct ShareHalf {\n    pub v: u64,\n}\nfn leak(s: &ShareHalf) { crate::obs::debug(format_args!(\"{}\", s.v)); }\n";
+        let found = run_one("mpc/shares.rs", src);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "secret-flow");
+        assert_eq!(found[0].line, 5);
+    }
+
+    #[test]
+    fn opaque_debug_impl_is_accepted() {
+        let src = "pub struct PrivateKey;\nimpl std::fmt::Debug for PrivateKey {\n    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {\n        f.write_str(\"PrivateKey(<redacted>)\")\n    }\n}\n";
+        assert!(run_one("crypto/keys.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wire_tags_missing_arm_is_found() {
+        let src = "pub const TAG_PING: u8 = 0x01;\npub const TAG_GONE: u8 = 0x02;\npub fn tag_name(t: u8) -> &'static str {\n    match t {\n        TAG_PING => \"Ping\",\n        _ => \"?\",\n    }\n}\n#[cfg(test)]\nmod tests {\n    fn roundtrip() {\n        let _ = Msg::Ping;\n    }\n}\n";
+        let found = run_one("net/wire.rs", src);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, "wire-tags");
+        assert_eq!(found[0].line, 2);
+    }
+
+    #[test]
+    fn span_schema_flags_unknown_span_and_version_conflict() {
+        let known = "pub const KNOWN_SPANS: &[&str] = &[\"proto.step\"];\n";
+        let schema_a = format!("pub const A: &str = \"privlogit-{}\";\n", "demo/v1");
+        let schema_b = format!("pub const B: &str = \"privlogit-{}\";\n", "demo/v2");
+        let caller = format!(
+            "{schema_a}{schema_b}fn go() {{\n    let _s = crate::obs::span(\"proto.mystery\");\n}}\n"
+        );
+        let files = vec![
+            ("obs/timeline.rs".to_string(), known.to_string()),
+            ("obs/caller.rs".to_string(), caller),
+        ];
+        let found = audit_sources(&files, None);
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert!(
+            found.iter().any(|f| f.rule == "span-schema" && f.message.contains("proto.mystery")),
+            "{found:?}"
+        );
+        assert!(found.iter().any(|f| f.message.contains("conflicting versions")));
+    }
+
+    #[test]
+    fn report_renders_both_shapes() {
+        let rep = AuditReport {
+            findings: vec![Finding {
+                file: "net/wire.rs".to_string(),
+                line: 7,
+                rule: "panic-free",
+                message: "unwrap() on a remote-input path".to_string(),
+            }],
+            files_scanned: 3,
+            doc_found: false,
+        };
+        let human = rep.render_human();
+        assert!(human.contains("net/wire.rs:7: panic-free:"));
+        assert!(human.contains("1 finding(s) across 3 files"));
+        let parsed = crate::obs::json::parse(&rep.render_json()).expect("valid json");
+        assert_eq!(parsed.get("schema").and_then(|v| v.as_str()), Some(AUDIT_SCHEMA));
+        let arr = parsed.get("findings").and_then(|v| v.as_arr()).expect("findings array");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("line").and_then(|v| v.as_u64()), Some(7));
+    }
+}

@@ -1,0 +1,47 @@
+//! Renderers for audit results: compiler-style human text and the
+//! `privlogit-audit/v1` JSON document CI archives as an artifact.
+
+use crate::obs::json::{JsonObj, JsonValue};
+
+use super::{AuditReport, Finding, AUDIT_SCHEMA};
+
+/// Render findings as `file:line: rule: message` lines plus a summary
+/// tail — the shape editors and CI log scrapers already understand.
+pub fn render_human(report: &AuditReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.rule, f.message));
+    }
+    if report.findings.is_empty() {
+        out.push_str(&format!("audit: clean — 0 findings across {} files\n", report.files_scanned));
+    } else {
+        out.push_str(&format!(
+            "audit: {} finding(s) across {} files\n",
+            report.findings.len(),
+            report.files_scanned
+        ));
+    }
+    out
+}
+
+fn finding_json(f: &Finding) -> JsonValue {
+    JsonObj::new()
+        .str("file", &f.file)
+        .u64("line", f.line as u64)
+        .str("rule", f.rule)
+        .str("message", &f.message)
+        .build()
+}
+
+/// Render the `privlogit-audit/v1` document (single line, key order
+/// fixed, findings pre-sorted) so reports diff cleanly across runs.
+pub fn render_json(report: &AuditReport) -> String {
+    let findings: Vec<JsonValue> = report.findings.iter().map(finding_json).collect();
+    JsonObj::new()
+        .str("schema", AUDIT_SCHEMA)
+        .u64("files_scanned", report.files_scanned as u64)
+        .bool("doc_found", report.doc_found)
+        .push("findings", JsonValue::Arr(findings))
+        .build()
+        .render()
+}

@@ -1,0 +1,562 @@
+//! The audit's rule engine: four lexical rules over [`Lexed`] files.
+//!
+//! Every rule is deliberately *lexical* — it scans blanked code lines
+//! and string literals, not an AST — so the whole subsystem stays
+//! dependency-free. The cost is approximation: the rules are tuned to
+//! be exhaustive on the idioms this codebase actually uses (see
+//! docs/ARCHITECTURE.md §Static analysis for the honest scope notes),
+//! and anything genuinely safe that still trips a rule carries an
+//! `audit:allow` with its justification.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{brace_block_end, Lexed, StrLit};
+use super::Finding;
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of `needle` in `hay` at identifier-word boundaries.
+pub(crate) fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (pos, _) in hay.match_indices(needle) {
+        let before = hay[..pos].chars().next_back();
+        let after = hay[pos + needle.len()..].chars().next();
+        if before.is_none_or(|c| !is_ident_char(c)) && after.is_none_or(|c| !is_ident_char(c)) {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+fn contains_word(hay: &str, needle: &str) -> bool {
+    !word_positions(hay, needle).is_empty()
+}
+
+// ======================================================================
+// Rule 1: secret-flow
+// ======================================================================
+
+/// Types that are secret by construction, before any `audit:secret`
+/// tags: the Paillier private key and the keypair that embeds it.
+pub const BASE_SECRETS: &[&str] = &["PrivateKey", "Keypair"];
+
+/// Sink tokens: a secret type named on the same line as one of these is
+/// flowing toward a log line, a trace-span string field, or the wire
+/// codec — none of which may ever carry secret material.
+const SINKS: &[&str] = &[
+    "obs::warn(",
+    "obs::info(",
+    "obs::debug(",
+    ".record_str(",
+    ".str(",
+    "put_biguint(",
+    "put_bytes(",
+    "put_str(",
+];
+
+/// Parse the type name declared on `code`, if any.
+fn type_decl_name(code: &str) -> Option<String> {
+    for kw in ["struct", "enum"] {
+        for pos in word_positions(code, kw) {
+            let rest = code[pos + kw.len()..].trim_start();
+            let name: String = rest.chars().take_while(|c| is_ident_char(*c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+fn type_decl_in_next_lines(lx: &Lexed, from: usize) -> Option<String> {
+    for l in from..=(from + 2).min(lx.blanked.len()) {
+        if let Some(name) = type_decl_name(lx.code(l)) {
+            return Some(name);
+        }
+    }
+    None
+}
+
+/// Parse `impl … (Debug|Display) for Type` on one line.
+fn impl_fmt_trait(code: &str) -> Option<(&'static str, String)> {
+    let impl_pos = *word_positions(code, "impl").first()?;
+    let for_pos = word_positions(code, "for").into_iter().find(|p| *p > impl_pos)?;
+    let between = &code[impl_pos..for_pos];
+    let trait_name = if contains_word(between, "Debug") {
+        "Debug"
+    } else if contains_word(between, "Display") {
+        "Display"
+    } else {
+        return None;
+    };
+    let after = code[for_pos + 3..].trim_start();
+    let path: String = after.chars().take_while(|c| is_ident_char(*c) || *c == ':').collect();
+    let ty = path.rsplit("::").next().unwrap_or("").to_string();
+    if ty.is_empty() {
+        return None;
+    }
+    Some((trait_name, ty))
+}
+
+/// Rule `secret-flow`: secret types must not derive or hand-roll a
+/// field-dumping `Debug`/`Display`, and must not be named on a line
+/// that feeds a log/span/codec sink.
+pub fn secret_flow(
+    relpath: &str,
+    lx: &Lexed,
+    secrets: &BTreeSet<String>,
+    findings: &mut Vec<Finding>,
+) {
+    for ln in 1..=lx.blanked.len() {
+        if lx.is_test.contains(&ln) || lx.allowed("secret-flow", ln) {
+            continue;
+        }
+        let code = lx.code(ln);
+        // (a) #[derive(.. Debug ..)] on a secret type declaration.
+        if code.contains("#[derive(") && contains_word(code, "Debug") {
+            if let Some(name) = type_decl_in_next_lines(lx, ln + 1) {
+                if secrets.contains(&name) {
+                    findings.push(Finding {
+                        file: relpath.to_string(),
+                        line: ln,
+                        rule: "secret-flow",
+                        message: format!("secret type {name} derives Debug"),
+                    });
+                }
+            }
+        }
+        // (b) impl Debug/Display for a secret type must be opaque.
+        if let Some((trait_name, ty)) = impl_fmt_trait(code) {
+            if secrets.contains(&ty) {
+                let end = brace_block_end(lx, ln);
+                let mut redacted = false;
+                for s in &lx.strings {
+                    if s.line >= ln && s.line <= end && s.text.contains("<redacted>") {
+                        redacted = true;
+                    }
+                }
+                let dumps_fields = (ln..=end).any(|l| lx.code(l).contains(".field("));
+                if !redacted || dumps_fields {
+                    findings.push(Finding {
+                        file: relpath.to_string(),
+                        line: ln,
+                        rule: "secret-flow",
+                        message: format!(
+                            "non-opaque {trait_name} impl for secret type {ty} \
+                             (want a \"<redacted>\" body with no .field() calls)"
+                        ),
+                    });
+                }
+            }
+        }
+        // (c) secret type named on a sink line.
+        if secrets.iter().any(|s| contains_word(code, s))
+            && SINKS.iter().any(|s| code.contains(s))
+        {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: ln,
+                rule: "secret-flow",
+                message: "secret type on a log/span/codec sink line".to_string(),
+            });
+        }
+    }
+}
+
+// ======================================================================
+// Rule 2: panic-free
+// ======================================================================
+
+/// The remote-input files: everything that decodes or dispatches bytes
+/// a peer process controls. A panic reachable from here lets a
+/// malformed frame take the process down instead of failing the
+/// session.
+pub const PANIC_SCOPE: &[&str] = &[
+    "net/wire.rs",
+    "net/server.rs",
+    "net/fleet.rs",
+    "net/tcp.rs",
+    "net/mod.rs",
+    "mpc/peer.rs",
+    "coordinator/checkpoint.rs",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const ASSERT_MACROS: &[&str] = &[
+    "assert",
+    "assert_eq",
+    "assert_ne",
+    "debug_assert",
+    "debug_assert_eq",
+    "debug_assert_ne",
+];
+
+fn has_unwrap_call(code: &str) -> bool {
+    for (pos, _) in code.match_indices(".unwrap") {
+        let rest = code[pos + ".unwrap".len()..].trim_start();
+        if let Some(after_paren) = rest.strip_prefix('(') {
+            if after_paren.trim_start().starts_with(')') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn has_expect_call(code: &str) -> bool {
+    for (pos, _) in code.match_indices(".expect") {
+        if code[pos + ".expect".len()..].trim_start().starts_with('(') {
+            return true;
+        }
+    }
+    false
+}
+
+fn has_macro_call(code: &str, names: &[&str], openers: &[char]) -> bool {
+    for name in names {
+        for pos in word_positions(code, name) {
+            let rest = &code[pos + name.len()..];
+            if let Some(after_bang) = rest.strip_prefix('!') {
+                let after_bang = after_bang.trim_start();
+                if after_bang.starts_with(openers) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn has_indexing(code: &str) -> bool {
+    let mut prev = ' ';
+    for c in code.chars() {
+        if c == '[' && (is_ident_char(prev) || prev == ')' || prev == ']' || prev == '?') {
+            return true;
+        }
+        prev = c;
+    }
+    false
+}
+
+/// Rule `panic-free`: no `unwrap`/`expect`/panicking macro/assert/
+/// unchecked indexing in non-test code of the remote-input files.
+pub fn panic_free(relpath: &str, lx: &Lexed, findings: &mut Vec<Finding>) {
+    if !PANIC_SCOPE.iter().any(|p| relpath.ends_with(p)) {
+        return;
+    }
+    for ln in 1..=lx.blanked.len() {
+        if lx.is_test.contains(&ln) || lx.allowed("panic-free", ln) {
+            continue;
+        }
+        let code = lx.code(ln);
+        let mut hits: Vec<&str> = Vec::new();
+        if has_unwrap_call(code) {
+            hits.push("unwrap() on a remote-input path");
+        }
+        if has_expect_call(code) {
+            hits.push("expect() on a remote-input path");
+        }
+        if has_macro_call(code, PANIC_MACROS, &['(', '[', '{']) {
+            hits.push("panicking macro on a remote-input path");
+        }
+        if has_macro_call(code, ASSERT_MACROS, &['(']) {
+            hits.push("assert on a remote-input path");
+        }
+        if has_indexing(code) {
+            hits.push("unchecked indexing on a remote-input path");
+        }
+        for msg in hits {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: ln,
+                rule: "panic-free",
+                message: msg.to_string(),
+            });
+        }
+    }
+}
+
+// ======================================================================
+// Rule 3: wire-tags
+// ======================================================================
+
+fn parse_tag_const(code: &str) -> Option<(String, String)> {
+    let rest = code.trim_start().strip_prefix("pub const TAG_")?;
+    let ident: String = rest.chars().take_while(|c| is_ident_char(*c)).collect();
+    let rest = rest[ident.len()..].trim_start().strip_prefix(':')?;
+    let rest = rest.trim_start().strip_prefix("u8")?;
+    let rest = rest.trim_start().strip_prefix('=')?;
+    let rest = rest.trim_start();
+    if !rest.starts_with("0x") {
+        return None;
+    }
+    let hex: String = rest.chars().take_while(|c| c.is_ascii_alphanumeric()).collect();
+    Some((format!("TAG_{ident}"), hex))
+}
+
+fn find_fn_block(lx: &Lexed, marker: &str) -> Option<(usize, usize)> {
+    for ln in 1..=lx.blanked.len() {
+        if lx.code(ln).contains(marker) {
+            return Some((ln, brace_block_end(lx, ln)));
+        }
+    }
+    None
+}
+
+/// Find the line in `a..=b` carrying a `NAME =>` match arm.
+fn find_arm(lx: &Lexed, a: usize, b: usize, name: &str) -> Option<usize> {
+    for l in a..=b {
+        let code = lx.code(l);
+        for pos in word_positions(code, name) {
+            if code[pos + name.len()..].trim_start().starts_with("=>") {
+                return Some(l);
+            }
+        }
+    }
+    None
+}
+
+/// Rule `wire-tags`: every `TAG_*` constant must have a `tag_name()`
+/// arm, an arm in `fn tag()`, round-trip coverage of its variant name
+/// in the file's test region, and (when docs are found) its hex value
+/// in the ARCHITECTURE.md wire table. Per-tag flow accounting is
+/// structural (the counters are keyed by the tag byte itself), so it
+/// needs no lexical check.
+pub fn wire_tags(relpath: &str, lx: &Lexed, doc: Option<&str>, findings: &mut Vec<Finding>) {
+    let mut consts: Vec<(usize, String, String)> = Vec::new();
+    for ln in 1..=lx.blanked.len() {
+        if lx.is_test.contains(&ln) {
+            continue;
+        }
+        if let Some((name, hex)) = parse_tag_const(lx.code(ln)) {
+            consts.push((ln, name, hex));
+        }
+    }
+    if consts.is_empty() {
+        return;
+    }
+    let name_blk = find_fn_block(lx, "fn tag_name");
+    let tag_blk = find_fn_block(lx, "fn tag(");
+    let mut test_code = String::new();
+    for &l in &lx.is_test {
+        test_code.push_str(lx.code(l));
+        test_code.push('\n');
+    }
+    for (ln, name, hex) in consts {
+        if lx.allowed("wire-tags", ln) {
+            continue;
+        }
+        let mut variant: Option<String> = None;
+        match name_blk {
+            None => findings.push(Finding {
+                file: relpath.to_string(),
+                line: ln,
+                rule: "wire-tags",
+                message: "no tag_name() fn found for the TAG_* constants".to_string(),
+            }),
+            Some((a, b)) => match find_arm(lx, a, b, &name) {
+                None => findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: ln,
+                    rule: "wire-tags",
+                    message: format!("{name} has no tag_name() arm"),
+                }),
+                Some(arm_ln) => {
+                    for s in &lx.strings {
+                        if s.line == arm_ln {
+                            variant = Some(s.text.clone());
+                            break;
+                        }
+                    }
+                }
+            },
+        }
+        if let Some((a, b)) = tag_blk {
+            let mut present = false;
+            for l in a..=b {
+                if contains_word(lx.code(l), &name) {
+                    present = true;
+                }
+            }
+            if !present {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: ln,
+                    rule: "wire-tags",
+                    message: format!("{name} missing from fn tag()"),
+                });
+            }
+        }
+        if let Some(v) = variant {
+            if !contains_word(&test_code, &v) {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: ln,
+                    rule: "wire-tags",
+                    message: format!(
+                        "variant {v} ({name}) has no round-trip test coverage in this file"
+                    ),
+                });
+            }
+        }
+        if let Some(doc_text) = doc {
+            if !doc_text.contains(&hex) {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: ln,
+                    rule: "wire-tags",
+                    message: format!("{name} value {hex} not documented in ARCHITECTURE.md"),
+                });
+            }
+        }
+    }
+}
+
+// ======================================================================
+// Rule 4: span-schema
+// ======================================================================
+
+/// Cross-file accumulator for rule 4: span call sites, the
+/// `KNOWN_SPANS` vocabulary, and every schema string literal.
+#[derive(Default)]
+pub struct SpanAcc {
+    /// `span("…")` call sites in non-test code: (file, line, name).
+    pub spans: Vec<(String, usize, String)>,
+    /// The `KNOWN_SPANS` const, when a scanned file declares one.
+    pub known: Option<(String, Vec<String>)>,
+    /// Every `privlogit-*/vN` string: (file, line, schema).
+    pub schemas: Vec<(String, usize, String)>,
+}
+
+/// Extract every `privlogit-<base>/vN` schema string in `text`.
+fn schemas_in(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(pos) = text[start..].find("privlogit-") {
+        let abs = start + pos;
+        let rest = &text[abs + "privlogit-".len()..];
+        let base_len = rest
+            .find(|c: char| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+            .unwrap_or(rest.len());
+        let mut next = abs + "privlogit-".len();
+        if base_len > 0 {
+            if let Some(ver) = rest[base_len..].strip_prefix("/v") {
+                let digits: String = ver.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if !digits.is_empty() {
+                    let end = abs + "privlogit-".len() + base_len + 2 + digits.len();
+                    out.push(text[abs..end].to_string());
+                    next = end;
+                }
+            }
+        }
+        start = next;
+    }
+    out
+}
+
+fn is_span_lit(lx: &Lexed, s: &StrLit) -> bool {
+    let prefix: String = lx.code(s.line).chars().take(s.col).collect();
+    prefix.trim_end().ends_with("span(")
+}
+
+/// Collect one file's span call sites, `KNOWN_SPANS` vocabulary, and
+/// schema strings into `acc`.
+pub fn collect_spans_schemas(relpath: &str, lx: &Lexed, acc: &mut SpanAcc) {
+    for s in &lx.strings {
+        if !lx.is_test.contains(&s.line) && is_span_lit(lx, s) {
+            acc.spans.push((relpath.to_string(), s.line, s.text.clone()));
+        }
+        for schema in schemas_in(&s.text) {
+            acc.schemas.push((relpath.to_string(), s.line, schema));
+        }
+    }
+    for ln in 1..=lx.blanked.len() {
+        let code = lx.code(ln);
+        if code.contains("KNOWN_SPANS") && code.contains("&[&str]") {
+            let mut end = lx.blanked.len();
+            for l in ln..=lx.blanked.len() {
+                if lx.code(l).contains("];") {
+                    end = l;
+                    break;
+                }
+            }
+            let mut names = Vec::new();
+            for s in &lx.strings {
+                if s.line >= ln && s.line <= end {
+                    names.push(s.text.clone());
+                }
+            }
+            acc.known = Some((relpath.to_string(), names));
+            break;
+        }
+    }
+}
+
+/// Rule `span-schema`: every non-test `span("…")` name must be in the
+/// timeline's `KNOWN_SPANS` vocabulary and the docs taxonomy; every
+/// `privlogit-*/vN` schema must be version-consistent across the tree
+/// and documented.
+pub fn span_schema(acc: &SpanAcc, doc: Option<&str>, findings: &mut Vec<Finding>) {
+    for (file, line, name) in &acc.spans {
+        if let Some((_, known)) = &acc.known {
+            if !known.contains(name) {
+                findings.push(Finding {
+                    file: file.clone(),
+                    line: *line,
+                    rule: "span-schema",
+                    message: format!("span \"{name}\" missing from timeline KNOWN_SPANS"),
+                });
+            }
+        }
+        if let Some(doc_text) = doc {
+            if !doc_text.contains(name.as_str()) {
+                findings.push(Finding {
+                    file: file.clone(),
+                    line: *line,
+                    rule: "span-schema",
+                    message: format!("span \"{name}\" missing from the ARCHITECTURE.md taxonomy"),
+                });
+            }
+        }
+    }
+    let mut by_base: BTreeMap<String, BTreeMap<String, (String, usize)>> = BTreeMap::new();
+    for (file, line, schema) in &acc.schemas {
+        if let Some((base, ver)) = schema.rsplit_once("/v") {
+            by_base
+                .entry(base.to_string())
+                .or_default()
+                .entry(ver.to_string())
+                .or_insert_with(|| (file.clone(), *line));
+        }
+    }
+    for (base, vers) in &by_base {
+        if vers.len() > 1 {
+            let mut sites = Vec::new();
+            for (v, (f, l)) in vers {
+                sites.push(format!("{base}/v{v} at {f}:{l}"));
+            }
+            let (first_file, first_line) = vers.values().next().cloned().unwrap_or_default();
+            findings.push(Finding {
+                file: first_file,
+                line: first_line,
+                rule: "span-schema",
+                message: format!("schema {base} has conflicting versions: {}", sites.join("; ")),
+            });
+        }
+        if let Some(doc_text) = doc {
+            for (v, (f, l)) in vers {
+                let full = format!("{base}/v{v}");
+                if !doc_text.contains(&full) {
+                    findings.push(Finding {
+                        file: f.clone(),
+                        line: *l,
+                        rule: "span-schema",
+                        message: format!("schema {full} not documented in ARCHITECTURE.md"),
+                    });
+                }
+            }
+        }
+    }
+}

@@ -109,6 +109,21 @@ pub struct Keypair {
     pub sk: PrivateKey,
 }
 
+// Secret material must never reach a Debug surface (log line, span
+// field, panic message). These impls are deliberately opaque — the
+// `audit` secret-flow rule rejects any derive or field-dumping impl.
+impl std::fmt::Debug for PrivateKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PrivateKey(<redacted>)")
+    }
+}
+
+impl std::fmt::Debug for Keypair {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Keypair(<redacted>)")
+    }
+}
+
 /// A Paillier ciphertext (an element of `Z*_{n²}`).
 #[derive(Clone, PartialEq, Eq, Debug)]
 pub struct Ciphertext(pub BigUint);

@@ -48,6 +48,7 @@
 //! | [`data`] | dataset synthesis, real-study stand-ins, partitioning |
 //! | [`config`] | experiment/config system + CLI parsing |
 //! | [`metrics`] | counters, timers, per-phase cost accounting |
+//! | [`analysis`] | the `privlogit audit` static checker: secrecy + protocol-invariant rules |
 //!
 //! The deployed topology (every box of the paper's Figure 1 as its own
 //! OS process — node servers, `center-a` garbler/driver, `center-b`
@@ -59,6 +60,7 @@
 // when the point is the delta from the defaults.
 #![allow(clippy::field_reassign_with_default)]
 
+pub mod analysis;
 pub mod bigint;
 pub mod config;
 pub mod coordinator;

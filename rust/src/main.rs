@@ -40,7 +40,7 @@ use privlogit::protocols::{DurableRun, Protocol, ProtocolConfig, RunReport};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: privlogit <run|compare|list|trace|ping|node|center|center-a|center-b> \
+        "usage: privlogit <run|compare|list|trace|ping|audit|node|center|center-a|center-b> \
          [--dataset NAME] [--protocol P] [--backend real|model|auto] [--orgs N] [--lambda L] \
          [--tol T] [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--json] \
          [--seed S] [--config FILE]\n\
@@ -57,7 +57,8 @@ fn usage() -> ! {
          observability (docs/ARCHITECTURE.md §Observability):\n\
          PRIVLOGIT_LOG=warn|info|debug   stderr log level (any subcommand)\n\
          PRIVLOGIT_TRACE=PATH            write a JSONL span trace per process\n\
-         privlogit trace [--validate] [--json] FILE...   merge per-process traces"
+         privlogit trace [--validate] [--json] FILE...   merge per-process traces\n\
+         privlogit audit [--json] [SRC_DIR]   secrecy/invariant static audit (exit 1 on findings)"
     );
     std::process::exit(2)
 }
@@ -113,6 +114,36 @@ fn trace_main(args: &[String]) -> anyhow::Result<()> {
         println!("{}", timeline.render_json());
     } else {
         print!("{}", timeline.render());
+    }
+    Ok(())
+}
+
+/// `privlogit audit [--json] [SRC_DIR]`: run the machine-checked
+/// secrecy and protocol-invariant audit over the crate sources
+/// (docs/ARCHITECTURE.md §Static analysis). Exits non-zero when any
+/// finding survives the allowlist, so CI gates on it.
+fn audit_main(args: &[String]) -> anyhow::Result<()> {
+    let mut json_out = false;
+    let mut roots: Vec<String> = Vec::new();
+    for arg in args {
+        match arg.as_str() {
+            "--json" => json_out = true,
+            flag if flag.starts_with("--") => {
+                anyhow::bail!("unknown audit flag {flag:?} (valid: --json)")
+            }
+            path => roots.push(path.to_string()),
+        }
+    }
+    anyhow::ensure!(roots.len() <= 1, "privlogit audit takes at most one SRC_DIR");
+    let root = roots.pop().unwrap_or_else(|| ".".to_string());
+    let report = privlogit::analysis::audit(std::path::Path::new(&root))?;
+    if json_out {
+        println!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if !report.findings.is_empty() {
+        std::process::exit(1);
     }
     Ok(())
 }
@@ -328,6 +359,7 @@ fn main() -> anyhow::Result<()> {
         }
         "trace" => trace_main(&args[1..]),
         "ping" => ping_main(&args[1..]),
+        "audit" => audit_main(&args[1..]),
         "compare" => {
             let mut cfg = Config::default();
             cfg.parse_args(&args[1..])?;

@@ -354,6 +354,7 @@ impl PeerGcClient {
     /// Receive a control frame, panicking on a vanished peer — the same
     /// loud-failure contract as every [`Channel`] user mid-protocol;
     /// the center CLIs convert the unwind into a clean error exit.
+    // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
     fn recv_ctrl_loud(&mut self, expect: &str) -> WireMsg {
         match self.recv_ctrl() {
             Ok(m) => m,
@@ -390,6 +391,7 @@ impl PeerGcClient {
         self.send_ctrl(&WireMsg::Aggregate { scale, parts: wire_parts });
         match self.recv_ctrl_loud("the aggregated ciphertexts") {
             WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
+            // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
             other => panic!("center-b answered Aggregate with {other:?}"),
         }
     }
@@ -402,6 +404,7 @@ impl PeerGcClient {
         self.send_ctrl(&WireMsg::Blind { handle, cts: wire_cts });
         match self.recv_ctrl_loud("the blinded ciphertexts") {
             WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
+            // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
             other => panic!("center-b answered Blind with {other:?}"),
         }
     }
@@ -413,6 +416,7 @@ impl PeerGcClient {
         self.send_ctrl(&WireMsg::ShareInput { handle, vals: vals.to_vec() });
         match self.recv_ctrl_loud("the share-input acknowledgement") {
             WireMsg::Ack => {}
+            // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
             other => panic!("center-b answered ShareInput with {other:?}"),
         }
     }
@@ -466,6 +470,7 @@ impl PeerGcClient {
         let ands = self.garble(spec, fmt, garbler_bits, handles, OUT_REVEAL, 0);
         let bits = match self.recv_ctrl_loud("the revealed output bits") {
             WireMsg::GcOut { bits } => bits,
+            // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
             other => panic!("center-b sent {other:?} where GcOut was expected"),
         };
         let stats = ExecStats {
@@ -491,6 +496,7 @@ impl PeerGcClient {
         let ands = self.garble(spec, fmt, garbler_bits, handles, OUT_SHARE, out_handle);
         match self.recv_ctrl_loud("the share-output acknowledgement") {
             WireMsg::Ack => {}
+            // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
             other => panic!("center-b sent {other:?} where Ack was expected"),
         }
         ExecStats {
@@ -520,6 +526,7 @@ impl PeerGcClient {
         });
         let cts = match self.recv_ctrl_loud("the corrected ciphertexts") {
             WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
+            // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
             other => panic!("center-b sent {other:?} where ciphertexts were expected"),
         };
         let stats = ExecStats {
@@ -737,6 +744,7 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
                 if parts.is_empty() {
                     return Err(invalid("Aggregate carries no parts".into()));
                 }
+                // audit:allow(panic-free): parts is checked non-empty just above
                 let len = parts[0].len();
                 if parts.iter().any(|p| p.len() != len) {
                     return Err(invalid("Aggregate parts have mismatched lengths".into()));
@@ -748,6 +756,7 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
                     .collect();
                 let pk = &c.pk;
                 let acc: Vec<BigUint> = pool::par_map_indexed(len, pool::threads(), |i| {
+                    // audit:allow(panic-free): every part's length was checked equal to len
                     let column: Vec<&Ciphertext> = cols.iter().map(|cts| &cts[i]).collect();
                     pk.add_many(&column).0
                 });
@@ -784,6 +793,7 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
                 let pk = &c.pk;
                 let blinded: Vec<BigUint> =
                     pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                        // audit:allow(panic-free): i < cts.len(); enc_blinds was built per ct
                         pk.add(&Ciphertext(cts[i].clone()), &enc_blinds[i]).0
                     });
                 store.insert(handle, bvals);
@@ -882,6 +892,7 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
                         let pk = &c.pk;
                         let out: Vec<BigUint> =
                             pool::par_map_indexed(enc_ys.len(), pool::threads(), |i| {
+                                // audit:allow(panic-free): corr.len() was checked == enc_ys.len()
                                 pk.sub(&enc_ys[i], &Ciphertext(corr[i].clone())).0
                             });
                         chan.send_blob(

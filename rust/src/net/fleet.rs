@@ -568,6 +568,7 @@ impl RemoteFleet {
         if ok.len() < quorum {
             let names: Vec<String> = failed
                 .iter()
+                // audit:allow(panic-free): i enumerates the per-conn results, so i < conns.len()
                 .map(|(i, e)| format!("{} ({e})", self.conns[*i].addr))
                 .collect();
             anyhow::bail!(
@@ -580,6 +581,7 @@ impl RemoteFleet {
         // Quorum met: exclude the failed nodes for the rest of the
         // session (highest index removed first so the others stay put).
         for &(i, ref e) in &failed {
+            // audit:allow(panic-free): i enumerates the per-conn results, so i < conns.len()
             let conn = &self.conns[i];
             obs::warn(format_args!(
                 "excluding node server {} after {} round {round}: {e}",

@@ -473,9 +473,14 @@ fn serve_session(
                     ));
                 }
                 let (grad, loglik) = engine.stats(data, &beta, scale);
-                let (hinv_scale, part) = {
-                    let (s, prepared) = c.hinv.as_ref().expect("checked above");
-                    (*s, prepared.apply(c.fmt, &grad, c.threads).0)
+                let (hinv_scale, part) = match c.hinv.as_ref() {
+                    Some((s, prepared)) => (*s, prepared.apply(c.fmt, &grad, c.threads).0),
+                    None => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "center sent StepReq before Enc(H̃⁻¹)",
+                        ))
+                    }
                 };
                 let loglik_cts = c.encrypt_vec(&[loglik]);
                 let secs = t0.elapsed().as_secs_f64();

@@ -144,6 +144,7 @@ impl From<WireError> for std::io::Error {
 // CRC-32 (IEEE 802.3, reflected)
 // ======================================================================
 
+// audit:allow(panic-free): indices are the loop counter 0..256 over a [u32; 256]
 fn crc32_table() -> &'static [u32; 256] {
     static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
     TABLE.get_or_init(|| {
@@ -164,6 +165,7 @@ fn crc32_table() -> &'static [u32; 256] {
 }
 
 /// CRC-32 (IEEE) of `data`.
+// audit:allow(panic-free): index is masked to 0xFF over the 256-entry table
 pub fn crc32(data: &[u8]) -> u32 {
     let t = crc32_table();
     let mut c = 0xFFFF_FFFFu32;
@@ -184,6 +186,7 @@ pub const HELLO_LEN: usize = 16;
 /// Build the 16-byte hello: magic, version, role, reserved zero byte,
 /// and the sender's session epoch (`u64` LE — 0 for a fresh session,
 /// strictly larger after each crash-resume re-key).
+// audit:allow(panic-free): send path building a fixed [u8; 16] from fixed-size pieces
 pub fn hello(role: u8, epoch: u64) -> [u8; HELLO_LEN] {
     let v = VERSION.to_le_bytes();
     let e = epoch.to_le_bytes();
@@ -195,6 +198,7 @@ pub fn hello(role: u8, epoch: u64) -> [u8; HELLO_LEN] {
 
 /// Validate a peer hello; returns the peer's role byte and session
 /// epoch.
+// audit:allow(panic-free): input is &[u8; HELLO_LEN]; every index is in range by type
 pub fn check_hello(buf: &[u8; HELLO_LEN]) -> Result<(u8, u64), WireError> {
     if buf[..4] != MAGIC {
         return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
@@ -214,6 +218,7 @@ pub fn check_hello(buf: &[u8; HELLO_LEN]) -> Result<(u8, u64), WireError> {
 // ======================================================================
 
 /// Write one frame (`len ‖ payload ‖ crc`) to `w` and flush it.
+// audit:allow(panic-free): send-path invariant — local callers frame at most MAX_FRAME
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
     assert!(payload.len() <= MAX_FRAME, "frame payload over MAX_FRAME");
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
@@ -294,6 +299,7 @@ impl WireWriter {
     }
 
     /// Append a length-prefixed byte string.
+    // audit:allow(panic-free): send-path invariant on locally produced data
     pub fn put_bytes(&mut self, v: &[u8]) {
         assert!(v.len() <= u32::MAX as usize, "byte field too long");
         self.put_u32(v.len() as u32);
@@ -344,6 +350,7 @@ impl<'a> WireReader<'a> {
         }
     }
 
+    // audit:allow(panic-free): the slice range is explicitly bounds-checked just above
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.remaining() < n {
             return Err(WireError::Truncated { needed: n, have: self.remaining() });
@@ -354,23 +361,27 @@ impl<'a> WireReader<'a> {
     }
 
     /// Read a `u8`.
+    // audit:allow(panic-free): take(1) returned exactly one byte
     pub fn get_u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
     /// Read a `u16` (LE).
+    // audit:allow(panic-free): take(2) returned exactly two bytes
     pub fn get_u16(&mut self) -> Result<u16, WireError> {
         let b = self.take(2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     /// Read a `u32` (LE).
+    // audit:allow(panic-free): take(4) returned exactly four bytes
     pub fn get_u32(&mut self) -> Result<u32, WireError> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     /// Read a `u64` (LE).
+    // audit:allow(panic-free): take(8) returned exactly eight bytes
     pub fn get_u64(&mut self) -> Result<u64, WireError> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
@@ -500,6 +511,7 @@ pub fn tag_name(tag: u8) -> &'static str {
 }
 
 /// Pack bools LSB-first into bytes (zero-padded tail).
+// audit:allow(panic-free): out is sized with div_ceil to hold every bit index
 fn pack_bools(bits: &[bool]) -> Vec<u8> {
     let mut out = vec![0u8; bits.len().div_ceil(8)];
     for (i, &b) in bits.iter().enumerate() {
@@ -510,6 +522,7 @@ fn pack_bools(bits: &[bool]) -> Vec<u8> {
     out
 }
 
+// audit:allow(panic-free): byte length is checked against count before indexing
 fn unpack_bools(bytes: &[u8], count: usize) -> Result<Vec<bool>, WireError> {
     if bytes.len() != count.div_ceil(8) {
         return Err(WireError::Truncated { needed: count.div_ceil(8), have: bytes.len() });

@@ -17,6 +17,27 @@ use crate::net::wire::tag_name;
 /// Schema identifier of the merged-timeline JSON document.
 pub const TIMELINE_SCHEMA: &str = "privlogit-timeline/v1";
 
+/// Every span name a production code path may emit — the timeline
+/// parser's closed vocabulary. `privlogit audit` (rule `span-schema`)
+/// checks each `span("…")` call site against this set and against the
+/// docs/ARCHITECTURE.md taxonomy, so a new span name must land in all
+/// three places in one commit.
+pub const KNOWN_SPANS: &[&str] = &[
+    "proto.setup",
+    "proto.iter",
+    "fleet.round",
+    "fleet.rpc",
+    "fleet.readmit",
+    "node.req",
+    "peer.req",
+    "fabric.setup",
+    "fabric.gc_exec",
+    "fabric.aggregate",
+    "fabric.to_shares",
+    "fabric.reveal",
+    "pool.par_map",
+];
+
 /// One finished span, as read back from a per-process trace file.
 #[derive(Clone, Debug)]
 pub struct TraceEvent {
@@ -426,5 +447,17 @@ mod tests {
         let human = t.render();
         assert!(human.contains("merged timeline"), "{human}");
         assert!(human.contains("StepReq"), "{human}");
+    }
+
+    #[test]
+    fn known_spans_are_distinct_and_dotted() {
+        let mut seen = std::collections::BTreeSet::new();
+        for name in KNOWN_SPANS {
+            assert!(seen.insert(name), "duplicate span name {name:?}");
+            assert!(
+                name.contains('.') && name.is_ascii(),
+                "span names are dotted ascii identifiers, got {name:?}"
+            );
+        }
     }
 }

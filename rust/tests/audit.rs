@@ -1,0 +1,108 @@
+//! End-to-end tests of `privlogit audit`: each seeded fixture tree
+//! produces exactly its expected findings, the live crate tree audits
+//! clean, and the CLI exit codes match what CI gates on.
+//!
+//! Deliberately no literal schema strings in this file — it is itself
+//! inside the audit's schema census, so the expected tag is read from
+//! `analysis::AUDIT_SCHEMA` instead.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use privlogit::analysis::{self, Finding};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("audit_fixtures").join(name)
+}
+
+fn audit_fixture(name: &str) -> Vec<Finding> {
+    let report = analysis::audit(&fixture(name)).expect("fixture audit runs");
+    assert!(!report.doc_found, "fixture trees must not see the repo docs");
+    report.findings
+}
+
+#[test]
+fn fixture_secret_flow() {
+    let found = audit_fixture("bad_secret_flow");
+    let lines: Vec<(usize, &str)> = found.iter().map(|f| (f.line, f.rule)).collect();
+    assert_eq!(
+        lines,
+        vec![(5, "secret-flow"), (15, "secret-flow"), (22, "secret-flow"), (40, "secret-flow")],
+        "{found:?}"
+    );
+    assert!(found.iter().all(|f| f.file == "keys.rs"), "{found:?}");
+    assert!(found.iter().any(|f| f.message.contains("derives Debug")), "{found:?}");
+    assert!(found.iter().any(|f| f.message.contains("non-opaque Display")), "{found:?}");
+    assert!(found.iter().any(|f| f.message.contains("sink")), "{found:?}");
+}
+
+#[test]
+fn fixture_panic_free() {
+    let found = audit_fixture("bad_panic");
+    assert_eq!(found.len(), 6, "{found:?}");
+    assert!(found.iter().all(|f| f.file == "net/server.rs"), "{found:?}");
+    let panic_lines: Vec<usize> =
+        found.iter().filter(|f| f.rule == "panic-free").map(|f| f.line).collect();
+    assert_eq!(panic_lines, vec![5, 6, 8, 10, 11], "{found:?}");
+    let allows: Vec<&Finding> = found.iter().filter(|f| f.rule == "audit-allow").collect();
+    assert_eq!(allows.len(), 1, "{found:?}");
+    assert_eq!(allows[0].line, 14);
+}
+
+#[test]
+fn fixture_wire_tags() {
+    let found = audit_fixture("bad_wire_tags");
+    assert_eq!(found.len(), 3, "{found:?}");
+    assert!(found.iter().all(|f| f.rule == "wire-tags" && f.file == "net/wire.rs"), "{found:?}");
+    assert!(found.iter().any(|f| f.line == 5 && f.message.contains("round-trip")), "{found:?}");
+    assert!(found.iter().any(|f| f.line == 6 && f.message.contains("tag_name")), "{found:?}");
+    assert!(found.iter().any(|f| f.line == 6 && f.message.contains("fn tag()")), "{found:?}");
+}
+
+#[test]
+fn fixture_span_schema() {
+    let found = audit_fixture("bad_spans");
+    assert_eq!(found.len(), 2, "{found:?}");
+    assert!(
+        found.iter().all(|f| f.rule == "span-schema" && f.file == "obs/caller.rs"),
+        "{found:?}"
+    );
+    assert!(
+        found.iter().any(|f| f.line == 3 && f.message.contains("conflicting versions")),
+        "{found:?}"
+    );
+    assert!(found.iter().any(|f| f.line == 8 && f.message.contains("proto.mystery")), "{found:?}");
+}
+
+#[test]
+fn live_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::audit(root).expect("self-audit runs");
+    assert!(report.doc_found, "docs/ARCHITECTURE.md should be visible from the crate root");
+    assert!(report.findings.is_empty(), "live tree has findings:\n{}", report.render_human());
+    assert!(report.files_scanned > 50, "suspiciously few files scanned: {}", report.files_scanned);
+}
+
+#[test]
+fn cli_exits_nonzero_on_fixture_and_zero_on_live_tree() {
+    let bin = env!("CARGO_BIN_EXE_privlogit");
+    let out =
+        Command::new(bin).arg("audit").arg(fixture("bad_panic")).output().expect("audit runs");
+    assert_eq!(out.status.code(), Some(1), "fixture audit should exit 1");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("net/server.rs:5: panic-free:"), "{text}");
+    assert!(text.contains("finding(s)"), "{text}");
+
+    let out = Command::new(bin)
+        .arg("audit")
+        .arg("--json")
+        .arg(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("audit runs");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "live-tree audit should exit 0:\n{text}");
+    let doc = privlogit::obs::json::parse(text.trim()).expect("valid report json");
+    assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some(analysis::AUDIT_SCHEMA));
+    assert_eq!(doc.get("findings").and_then(|v| v.as_arr()).map(|a| a.len()), Some(0));
+    assert_eq!(doc.get("doc_found").and_then(|v| v.as_bool()), Some(true));
+}

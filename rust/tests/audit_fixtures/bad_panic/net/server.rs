@@ -1,0 +1,36 @@
+//! Deliberately panicky fixture for the `panic-free` rule: every
+//! category fires once, and both allow shapes suppress.
+
+pub fn decode(buf: &[u8]) -> u8 {
+    let first = buf.first().unwrap();
+    let second = buf.get(1).expect("second byte");
+    if *first == 0 {
+        panic!("zero frame");
+    }
+    assert!(buf.len() > 2, "short frame");
+    *second + buf[2]
+}
+
+// audit:allow(bogus-rule): this rule name does not exist
+pub fn bad_allow(buf: &[u8]) -> u8 {
+    buf.len() as u8
+}
+
+// audit:allow(panic-free): fixture fn-level suppression
+pub fn covered(buf: &[u8]) -> u8 {
+    buf[0]
+}
+
+pub fn line_allow(buf: &[u8]) -> u8 {
+    // audit:allow(panic-free): fixture line suppression
+    buf[0]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v = vec![1u8];
+        let _ = v.first().unwrap();
+    }
+}

@@ -1,0 +1,49 @@
+//! Deliberately leaky fixture: every way a secret type can reach a
+//! Debug/Display/log surface, plus the accepted opaque idioms.
+
+// FINDING: a secret type deriving Debug dumps its fields.
+#[derive(Clone, Debug)]
+pub struct PrivateKey {
+    pub lambda: u64,
+}
+
+pub struct Keypair {
+    pub sk: PrivateKey,
+}
+
+// FINDING: a hand-rolled Display that prints key material.
+impl std::fmt::Display for Keypair {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Keypair({})", self.sk.lambda)
+    }
+}
+
+// audit:secret
+#[derive(Clone, Debug)]
+pub struct ShareHalf {
+    pub v: u64,
+}
+
+// audit:secret
+pub struct BlindFactor {
+    pub r: u64,
+}
+
+// An opaque impl is the accepted idiom: no finding.
+impl std::fmt::Debug for BlindFactor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("BlindFactor(<redacted>)")
+    }
+}
+
+// FINDING: secret named on a log sink line.
+pub fn leak(k: &PrivateKey) { crate::obs::info(format_args!("{}", k.lambda)); }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn debug_in_tests_is_fine() {
+        let k = super::PrivateKey { lambda: 1 };
+        let _ = format!("{k:?}");
+    }
+}

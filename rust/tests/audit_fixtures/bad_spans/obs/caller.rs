@@ -1,0 +1,9 @@
+//! Span/schema fixture: one unknown span and one schema version skew.
+
+pub const SCHEMA_A: &str = "privlogit-demo/v1";
+pub const SCHEMA_B: &str = "privlogit-demo/v2";
+
+pub fn go() {
+    let _guard = crate::obs::span("proto.step");
+    let _other = crate::obs::span("proto.mystery");
+}

@@ -1,0 +1,3 @@
+//! Span-vocabulary fixture: the closed span list for this mini-tree.
+
+pub const KNOWN_SPANS: &[&str] = &["proto.step"];

@@ -1,0 +1,37 @@
+//! Wire-tag exhaustiveness fixture: one orphaned tag constant and one
+//! variant without round-trip coverage.
+
+pub const TAG_PING: u8 = 0x01;
+pub const TAG_PONG: u8 = 0x02;
+pub const TAG_GONE: u8 = 0x03;
+
+pub enum Msg {
+    Ping,
+    Pong,
+}
+
+impl Msg {
+    pub fn tag(&self) -> u8 {
+        match self {
+            Msg::Ping => TAG_PING,
+            Msg::Pong => TAG_PONG,
+        }
+    }
+}
+
+pub fn tag_name(tag: u8) -> &'static str {
+    match tag {
+        TAG_PING => "Ping",
+        TAG_PONG => "Pong",
+        _ => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ping_round_trip() {
+        let msg = super::Msg::Ping;
+        assert_eq!(super::tag_name(msg.tag()), "Ping");
+    }
+}
