@@ -28,6 +28,7 @@ use std::time::Instant;
 use privlogit::bigint::{BigUint, RandomSource};
 use privlogit::crypto::paillier::{ChaChaSource, Ciphertext, Keypair};
 use privlogit::crypto::rng::ChaChaRng;
+use privlogit::crypto::PackedCodec;
 use privlogit::gc::word::{self, FixedFmt};
 use privlogit::gc::{GcBackend, GcProgram, GcSession};
 use privlogit::mpc::fabric::{apply_hinv_cts_reference, PreparedHinv};
@@ -210,6 +211,44 @@ fn main() {
         kp.pk.encrypt_batch(&batch_ms, &mut ChaChaSource(&mut rng), workers)
     });
 
+    // --- Ciphertext packing: k statistics per Paillier plaintext ---
+    // Each packed op is timed against its unpacked analogue and
+    // attributed per *logical value*, so the ratios below read directly
+    // as the fan-in speedup (ideal: k×, minus constant overheads).
+    let codec = PackedCodec::plan(kp.pk.n.bit_len() as u32, FMT, 8, APPLY_P as u64)
+        .expect("the calibration modulus hosts a packed layout at w = 40");
+    let pk_k = codec.k() as usize;
+    let pack_len = 4 * pk_k;
+    let note_k = format!("k={pk_k}");
+    let pack_vals: Vec<f64> = (0..pack_len).map(|i| (i as f64 - 7.5) * 0.125).collect();
+    let t_pack = log.time_scaled("pack_values", r(2000, 200), pack_len, &note_k, || {
+        codec.pack(&pack_vals, FMT.f).expect("bench values fit the slot budget")
+    });
+    let packed_ms = codec.pack(&pack_vals, FMT.f).expect("bench values fit the slot budget");
+    let t_unpack = log.time_scaled("unpack_values", r(2000, 200), pack_len, &note_k, || {
+        codec
+            .unpack_vec(&packed_ms, pack_len, 1, FMT.f)
+            .expect("freshly packed plaintexts unpack")
+    });
+    // The encode analogue on the unpacked path is one fixed-point
+    // encode per value — dwarfed by encryption either way; pack/unpack
+    // only need to stay off the critical path (≪ t_enc).
+    println!("pack+unpack/value   {:>12.3e} s (vs t_enc {t_enc:.3e})", t_pack + t_unpack);
+
+    // Fold: one homomorphic add carries k statistics in packed form.
+    let pc1 = kp.pk.encrypt(&packed_ms[0], &mut ChaChaSource(&mut rng));
+    let pc2 = kp.pk.encrypt(&packed_ms[1], &mut ChaChaSource(&mut rng));
+    let t_fold_packed =
+        log.time_scaled("fold_add_packed", r(2000, 200), pk_k, &note_k, || kp.pk.add(&pc1, &pc2));
+
+    // Apply: multiply-by-constant hits all k slots of a packed
+    // ciphertext at once (the hinv_apply headroom term is what makes
+    // this sound); per-term cost vs the unpacked scalar-multiply.
+    let t_apply_term_packed = log
+        .time_scaled("apply_term_packed", r(200, 20), pk_k, &note_k, || {
+            kp.pk.scalar_mul(&pc1, &small_k)
+        });
+
     // --- GC: amortized AND cost through a real session ---
     let mut session = GcSession::new(0xCA11);
     let prog = MulChain { rounds: r(64, 16) };
@@ -244,7 +283,8 @@ fn main() {
         "# measured by `cargo bench --bench micro_primitives` (modulus {modbits} bits)\n\
          t_and = {t_and:.3e}\nt_ot = {t_ot:.3e}\nt_enc = {t_enc:.3e}\nt_add = {t_add:.3e}\n\
          t_scalar_full = {t_scalar_full:.3e}\nt_scalar_small = {t_scalar_small:.3e}\n\
-         t_apply_term = {t_apply_term:.3e}\nt_decrypt = {t_decrypt:.3e}\n"
+         t_apply_term = {t_apply_term:.3e}\nt_apply_term_packed = {t_apply_term_packed:.3e}\n\
+         t_decrypt = {t_decrypt:.3e}\n"
     );
     std::fs::create_dir_all("artifacts").ok();
     std::fs::write("artifacts/calibration.txt", &cal).expect("write calibration");
@@ -255,6 +295,8 @@ fn main() {
     let speedup_sub = t_sub_ref / t_sub;
     let speedup_row = t_row_ref / t_row;
     let speedup_row_par = t_row_ref / t_row_par;
+    let speedup_fold_packed = t_add / t_fold_packed;
+    let speedup_apply_packed = t_scalar_small / t_apply_term_packed;
     let mut ops_json = String::new();
     for (i, (name, secs)) in log.0.iter().enumerate() {
         if i > 0 {
@@ -269,8 +311,12 @@ fn main() {
          \"encrypt_fixed_base\": {speedup_enc:.2},\n    \
          \"sub_inverse\": {speedup_sub:.2},\n    \
          \"apply_hinv_row_multiexp\": {speedup_row:.2},\n    \
-         \"apply_hinv_row_parallel\": {speedup_row_par:.2}\n  }}\n}}\n",
-        git_rev()
+         \"apply_hinv_row_parallel\": {speedup_row_par:.2},\n    \
+         \"fold_add_packed\": {speedup_fold_packed:.2},\n    \
+         \"apply_term_packed\": {speedup_apply_packed:.2}\n  }},\n  \
+         \"packing\": {{ \"k\": {pk_k}, \"slot_bits\": {} }}\n}}\n",
+        git_rev(),
+        codec.slot_bits()
     );
     // The artifact lives at the repo root (the bench runs with cwd =
     // rust/); fall back to the cwd when run from elsewhere.
@@ -284,7 +330,13 @@ fn main() {
 
     println!(
         "speedups: encrypt {speedup_enc:.2}x, sub {speedup_sub:.2}x, \
-         apply_hinv row {speedup_row:.2}x (parallel {speedup_row_par:.2}x)"
+         apply_hinv row {speedup_row:.2}x (parallel {speedup_row_par:.2}x), \
+         packed fold {speedup_fold_packed:.2}x, packed apply {speedup_apply_packed:.2}x"
+    );
+    assert!(
+        speedup_fold_packed > pk_k as f64 / 2.0,
+        "packing's premise: one homomorphic add must carry ≥ k/2 statistics' worth of work \
+         (measured {speedup_fold_packed:.2}x at k = {pk_k})"
     );
     assert!(
         t_scalar_small < t_scalar_full,

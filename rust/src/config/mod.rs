@@ -66,6 +66,10 @@ pub struct Config {
     /// directory instead of starting at round 0 (implies checkpointing
     /// into the same directory unless `--state-dir` overrides it).
     pub resume: String,
+    /// Disable ciphertext slot-packing of the statistic fan-in and run
+    /// the legacy one-value-per-ciphertext wire (the parity reference
+    /// path; see docs/ARCHITECTURE.md §Packing).
+    pub no_pack: bool,
 }
 
 impl Default for Config {
@@ -93,6 +97,7 @@ impl Default for Config {
             connect_timeout: 10.0,
             state_dir: String::new(),
             resume: String::new(),
+            no_pack: false,
         }
     }
 }
@@ -136,6 +141,7 @@ impl Config {
             "connect_timeout" => self.connect_timeout = parse_keyed(&key, value)?,
             "state_dir" => self.state_dir = value.to_string(),
             "resume" => self.resume = value.to_string(),
+            "no_pack" => self.no_pack = parse_keyed(&key, value)?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -159,7 +165,7 @@ impl Config {
 
     /// Boolean keys that may appear as bare `--flag` (no value) on the
     /// command line.
-    const BOOL_FLAGS: [&'static str; 4] = ["threaded", "center_tcp", "once", "json"];
+    const BOOL_FLAGS: [&'static str; 5] = ["threaded", "center_tcp", "once", "json", "no_pack"];
 
     /// Parse CLI arguments (`--key value` pairs, plus `--config FILE`;
     /// boolean flags may omit the value).
@@ -311,6 +317,17 @@ mod tests {
         c.parse_args(&args).unwrap();
         assert_eq!(c.state_dir, "/tmp/plgt-state");
         assert_eq!(c.resume, "/tmp/plgt-state");
+    }
+
+    #[test]
+    fn no_pack_flag() {
+        let mut c = Config::default();
+        assert!(!c.no_pack, "packing is on by default");
+        c.parse_args(&["--no-pack".to_string()]).unwrap();
+        assert!(c.no_pack);
+        let mut c = Config::default();
+        c.set("no_pack", "true").unwrap();
+        assert!(c.no_pack);
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub struct FleetKey {
     pub w: u32,
     /// Fixed-point fractional bits.
     pub f: u32,
+    /// Slot-packing layout for statistic replies (wire v6), when the
+    /// session packs; `None` keeps the legacy one-value-per-ciphertext
+    /// replies (`--no-pack`, or a modulus too small for two slots).
+    pub packing: Option<crate::crypto::packed::PackingParams>,
 }
 
 /// An encrypted statistic payload as raw ciphertext residues (elements
@@ -477,7 +481,7 @@ mod tests {
         // In-process fleets never encrypt node-side.
         assert!(!threaded.nodes_encrypt());
         assert!(threaded
-            .install_key(&FleetKey { n: BigUint::from_u64(77), w: 40, f: 24 })
+            .install_key(&FleetKey { n: BigUint::from_u64(77), w: 40, f: 24, packing: None })
             .is_ok_and(|enc| !enc));
         assert!(threaded.step(&beta, scale).is_err());
     }

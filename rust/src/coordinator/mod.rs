@@ -96,6 +96,9 @@ pub struct Experiment {
     /// Address of a remote `privlogit center-b` evaluator process
     /// (real backend only; overrides `center_tcp`).
     pub peer: Option<String>,
+    /// Disable ciphertext slot-packing of the statistic fan-in (the
+    /// legacy parity-reference wire; real backend only).
+    pub no_pack: bool,
     /// RNG seed for the real backend.
     pub seed: u64,
 }
@@ -129,6 +132,7 @@ impl Experiment {
             threaded_nodes: c.threaded,
             center_tcp: c.center_tcp,
             peer: (!c.peer.is_empty()).then(|| c.peer.clone()),
+            no_pack: c.no_pack,
             seed: c.seed,
         })
     }
@@ -160,7 +164,7 @@ impl Experiment {
     /// a dying node/center peer surfaced).
     pub fn run(&self) -> anyhow::Result<RunReport> {
         let mut fleet = self.make_fleet();
-        run_protocol(
+        run_protocol_durable(
             self.protocol,
             self.backend,
             self.modulus_bits,
@@ -169,6 +173,9 @@ impl Experiment {
             self.seed,
             &self.center_link(),
             fleet.as_mut(),
+            crate::mpc::peer::PEER_CONNECT_TIMEOUT,
+            &DurableRun::default(),
+            self.no_pack,
         )
     }
 }
@@ -221,6 +228,7 @@ pub fn run_protocol(
         fleet,
         crate::mpc::peer::PEER_CONNECT_TIMEOUT,
         &DurableRun::default(),
+        false,
     )
 }
 
@@ -248,6 +256,7 @@ pub fn run_protocol_durable(
     fleet: &mut dyn Fleet,
     connect_timeout: std::time::Duration,
     durable: &DurableRun,
+    no_pack: bool,
 ) -> anyhow::Result<RunReport> {
     if let Some(cp) = &durable.resume {
         anyhow::ensure!(
@@ -282,6 +291,22 @@ pub fn run_protocol_durable(
                     durable.epoch,
                 )?,
             };
+            if !no_pack {
+                // Negotiate the slot-packing layout before the key is
+                // installed: the fan-in bound covers one contribution
+                // per organization plus the center's regularizer
+                // `add_plain` and one spare fold; the apply headroom is
+                // validated for `Enc(H̃⁻¹)⊗g` rows of width p. A
+                // modulus too small to host two slots falls back to the
+                // unpacked wire rather than failing the run.
+                let packed =
+                    fab.enable_packing(fleet.orgs() as u64 + 2, fleet.p() as u64)?;
+                if !packed {
+                    crate::obs::info(format_args!(
+                        "modulus too small for ciphertext packing; running unpacked"
+                    ));
+                }
+            }
             fleet.install_key(&fab.fleet_key())?;
             protocol.run_durable(&mut fab, fleet, cfg, durable)
         }

@@ -8,11 +8,77 @@
 //! scalar multiplication by another fixed-point constant yields scale
 //! `2^{2f}`, tracked explicitly by the caller via `scale_bits`.
 
+use std::fmt;
+
 use crate::bigint::{BigInt, BigUint};
 
 /// Default fractional bits. 40 leaves ample headroom in ≥256-bit moduli
 /// for double-scale products plus aggregation across thousands of terms.
 pub const DEFAULT_FRAC_BITS: u32 = 40;
+
+/// Why a value could not be fixed-point encoded. Wire payloads and
+/// datasets are untrusted inputs at the encode boundary, so a bad value
+/// must be a session error naming the value and scale, never a panic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EncodeError {
+    /// NaN or ±∞ has no fixed-point representation.
+    NonFinite {
+        /// The offending value.
+        value: f64,
+        /// The scale it was being encoded at.
+        scale_bits: u32,
+    },
+    /// `|v·2^scale|` overflows the 126-bit integer conversion budget.
+    Overflow {
+        /// The offending value.
+        value: f64,
+        /// The scale it was being encoded at.
+        scale_bits: u32,
+    },
+    /// The encoded magnitude reaches `n/2`, where it would alias a
+    /// negative encoding.
+    ModulusRange {
+        /// The offending value.
+        value: f64,
+        /// The scale it was being encoded at.
+        scale_bits: u32,
+    },
+}
+
+impl fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EncodeError::NonFinite { value, scale_bits } => {
+                write!(f, "cannot encode non-finite value {value} at scale 2^{scale_bits}")
+            }
+            EncodeError::Overflow { value, scale_bits } => {
+                write!(f, "fixed-point overflow encoding {value} at scale 2^{scale_bits}")
+            }
+            EncodeError::ModulusRange { value, scale_bits } => write!(
+                f,
+                "encoding {value} at scale 2^{scale_bits} exceeds n/2 — \
+                 raise modulus or lower scale"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
+/// Convert a nonnegative magnitude to `f64` via the top 64 bits + an
+/// exponent, keeping precision for values wider than 2^53. Shared by
+/// [`FixedCodec::decode_scaled`] and the packed-slot decoder
+/// ([`super::packed::PackedCodec::unpack_vec`]) so the two decode paths
+/// are bit-identical by construction.
+pub fn magnitude_to_f64(mag: &BigUint) -> f64 {
+    let bits = mag.bit_len();
+    if bits <= 64 {
+        mag.low_u64() as f64
+    } else {
+        let top = mag.shr(bits - 64).low_u64() as f64;
+        top * ((bits - 64) as f64).exp2()
+    }
+}
 
 /// Fixed-point encoder/decoder bound to a plaintext modulus `n`.
 #[derive(Clone)]
@@ -32,28 +98,34 @@ impl FixedCodec {
     }
 
     /// Encode a real value at the default scale `2^frac_bits`.
+    /// Panicking convenience for center-produced values already known
+    /// finite and in range; untrusted inputs go through
+    /// [`FixedCodec::encode_scaled`] and surface the error.
     pub fn encode(&self, v: f64) -> BigUint {
-        self.encode_scaled(v, self.frac_bits)
+        self.encode_scaled(v, self.frac_bits).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Encode at an explicit scale `2^scale_bits`.
-    pub fn encode_scaled(&self, v: f64, scale_bits: u32) -> BigUint {
-        assert!(v.is_finite(), "cannot encode non-finite value {v}");
+    /// Encode at an explicit scale `2^scale_bits`. Errors (naming the
+    /// value and scale) instead of panicking: the encode boundary sees
+    /// wire- and dataset-derived values, and a hostile payload or a
+    /// NaN-bearing dataset must fail the session, not the process.
+    pub fn encode_scaled(&self, v: f64, scale_bits: u32) -> Result<BigUint, EncodeError> {
+        if !v.is_finite() {
+            return Err(EncodeError::NonFinite { value: v, scale_bits });
+        }
         let scaled = v * (scale_bits as f64).exp2();
-        assert!(
-            scaled.abs() < 2f64.powi(126),
-            "fixed-point overflow encoding {v} at 2^{scale_bits}"
-        );
+        if !(scaled.abs() < 2f64.powi(126)) {
+            return Err(EncodeError::Overflow { value: v, scale_bits });
+        }
         let mag = BigUint::from_u128(scaled.abs().round() as u128);
-        assert!(
-            mag < self.half_n,
-            "encoded magnitude exceeds n/2 — raise modulus or lower scale"
-        );
-        if scaled < 0.0 && !mag.is_zero() {
+        if !(mag < self.half_n) {
+            return Err(EncodeError::ModulusRange { value: v, scale_bits });
+        }
+        Ok(if scaled < 0.0 && !mag.is_zero() {
             self.n.sub(&mag)
         } else {
             mag
-        }
+        })
     }
 
     /// Decode a plaintext at the default scale.
@@ -65,17 +137,7 @@ impl FixedCodec {
     /// after a fixed-point × fixed-point homomorphic product).
     pub fn decode_scaled(&self, m: &BigUint, scale_bits: u32) -> f64 {
         let signed = self.to_signed(m);
-        let mag = signed.magnitude();
-        // Convert magnitude to f64 via the top 64 bits + exponent to keep
-        // precision for values wider than 2^53.
-        let bits = mag.bit_len();
-        let v = if bits <= 64 {
-            mag.low_u64() as f64
-        } else {
-            let top = mag.shr(bits - 64).low_u64() as f64;
-            top * ((bits - 64) as f64).exp2()
-        };
-        let v = v / (scale_bits as f64).exp2();
+        let v = magnitude_to_f64(signed.magnitude()) / (scale_bits as f64).exp2();
         if signed.is_negative() {
             -v
         } else {
@@ -164,9 +226,49 @@ mod tests {
         assert_eq!(c.to_signed(&c.encode_int(42)), BigInt::from_i64(42));
     }
 
+    /// Non-finite and out-of-range inputs are `Err`s naming the value
+    /// and scale — a hostile node payload or NaN-bearing dataset must
+    /// be a session error, not a center/node panic (the regression for
+    /// the former `assert!`-based encode path).
     #[test]
-    #[should_panic(expected = "non-finite")]
     fn nan_rejected() {
-        codec().encode(f64::NAN);
+        let c = codec();
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let e = c.encode_scaled(v, 24).expect_err("non-finite must not encode");
+            assert!(matches!(e, EncodeError::NonFinite { .. }), "{v}: {e}");
+            assert!(e.to_string().contains("non-finite"), "{e}");
+            assert!(e.to_string().contains("2^24"), "error must name the scale: {e}");
+        }
+    }
+
+    #[test]
+    fn overflow_rejected_with_value_and_scale() {
+        let c = codec();
+        // 2.5 · 2^200 blows the 126-bit conversion budget.
+        let e = c.encode_scaled(2.5, 200).expect_err("overflow must not encode");
+        assert_eq!(e, EncodeError::Overflow { value: 2.5, scale_bits: 200 });
+        assert!(e.to_string().contains("2.5"), "error must name the value: {e}");
+        assert!(e.to_string().contains("2^200"), "error must name the scale: {e}");
+        // A magnitude at n/2 aliases a negative encoding: ModulusRange.
+        let tiny = FixedCodec::new(BigUint::from_u64(1_000_001), 0);
+        let e = tiny.encode_scaled(600_000.0, 0).expect_err("n/2 must not encode");
+        assert!(matches!(e, EncodeError::ModulusRange { .. }), "{e}");
+        // In-range values still encode.
+        assert!(tiny.encode_scaled(400_000.0, 0).is_ok());
+    }
+
+    /// The shared magnitude→f64 helper is exactly the decode path's
+    /// conversion (packed and unpacked decodes stay bit-identical).
+    #[test]
+    fn magnitude_to_f64_matches_decode() {
+        let c = codec();
+        for v in [0.0, 1.0, 0.5, 1234.56789, 9.9e15, 1e37] {
+            let m = c.encode_scaled(v, 0).unwrap();
+            assert_eq!(
+                magnitude_to_f64(&m).to_bits(),
+                c.decode_scaled(&m, 0).to_bits(),
+                "{v}"
+            );
+        }
     }
 }

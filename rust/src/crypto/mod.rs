@@ -7,9 +7,11 @@
 //! ([`crate::gc`]).
 
 pub mod fixed;
+pub mod packed;
 pub mod paillier;
 pub mod rng;
 
-pub use fixed::{FixedCodec, DEFAULT_FRAC_BITS};
+pub use fixed::{EncodeError, FixedCodec, DEFAULT_FRAC_BITS};
+pub use packed::{PackError, PackedCodec, PackedMeta, PackingParams, BLIND_SIGMA};
 pub use paillier::{Ciphertext, Keypair, MontCiphertext, PrivateKey, PublicKey};
 pub use rng::ChaChaRng;

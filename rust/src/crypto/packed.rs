@@ -1,0 +1,609 @@
+//! Radix-`2^b` slot packing: `k` fixed-point statistics per Paillier
+//! plaintext.
+//!
+//! A 2048-bit Paillier plaintext carrying one ~64-bit fixed-point
+//! statistic wastes ~97% of its capacity — and the statistic fan-in
+//! (gradient and Hessian replies from every node, folded by the
+//! aggregator) pays that waste in encryptions, wire bytes and
+//! homomorphic folds alike. [`PackedCodec`] closes the gap by packing
+//! `k` values into one plaintext as radix-`2^b` slots:
+//!
+//! ```text
+//!   plaintext m = Σ_i slot_i · 2^(i·b)        (slot 0 in the low bits)
+//!   slot_i      = round(v_i · 2^scale) + B    with bias B = 2^(w−1)
+//! ```
+//!
+//! Slots are **biased**, not two's-complement: a negative value encoded
+//! as `n − |x|` would sit near the top of its slot and carry into its
+//! neighbor on the very first homomorphic addition. With the bias, a
+//! slot holds a value in `[0, 2^w)` per contribution, and the sum of
+//! `parts` contributions stays in `[0, parts·2^w)` — strictly inside
+//! the slot as long as the headroom terms below hold. Every packed
+//! vector therefore tracks `parts`, the number of biased contributions
+//! folded into it (see [`PackedMeta`]); unpacking subtracts `parts·B`
+//! per slot.
+//!
+//! **Headroom terms.** The slot width `b` is derived from the session's
+//! [`FixedFmt`] so that overflow is *impossible by construction*; a
+//! configuration that cannot guarantee this is rejected at session
+//! setup with an error naming the violated term, never wrapped
+//! silently:
+//!
+//! | term               | requirement on `b` (slot bits)                       |
+//! |--------------------|------------------------------------------------------|
+//! | `per_value`        | `b ≥ w` — one contribution fits                      |
+//! | `fanin_sum`        | `b ≥ w + ⌈log₂(max_parts+1)⌉` — the n-node sum fits  |
+//! | `blind_mask`       | `b ≥ w + ⌈log₂⌉ + σ + 1` — sum + statistical blind   |
+//! | `hinv_apply`       | `b ≥ 2w + ⌈log₂(max_parts·p)⌉ + 1` — `Enc(H̃⁻¹)⊗g`    |
+//! | `modulus_capacity` | `k·b ≤ modulus_bits − 2` and `k ≥ 2`                 |
+//!
+//! `σ` is [`BLIND_SIGMA`], the statistical-hiding parameter of the
+//! blinded share conversion — the per-slot blind in a packed
+//! [`to_shares`](crate::mpc::fabric::SecureFabric::to_shares) is drawn
+//! below `2^(w + ⌈log₂⌉ + σ)` so it hides the slot sum to `2^−σ` while
+//! provably not carrying into the next slot. The `modulus_capacity`
+//! margin of 2 bits keeps every packed plaintext below `n/2`, so packed
+//! sums never wrap mod `n` either.
+
+use std::fmt;
+
+use crate::bigint::BigUint;
+use crate::crypto::fixed::magnitude_to_f64;
+use crate::gc::word::FixedFmt;
+
+/// Statistical-hiding parameter σ (bits) of the blinded share
+/// conversion. Must equal `mpc::circuits::SIGMA` — the fabric asserts
+/// the two constants agree at compile time (`crypto` sits below `mpc`
+/// in the module DAG, so the shared value is defined here).
+pub const BLIND_SIGMA: u32 = 40;
+
+/// The wire-negotiated packing parameters ([`WireMsg::SetKey`] v6
+/// fields): what a node needs, besides the session [`FixedFmt`], to
+/// pack its statistic replies compatibly with the center.
+///
+/// [`WireMsg::SetKey`]: crate::net::wire::WireMsg::SetKey
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackingParams {
+    /// Slots per plaintext.
+    pub k: u32,
+    /// Slot width `b` in bits.
+    pub slot_bits: u32,
+    /// Fan-in bound: the largest number of biased contributions any
+    /// packed vector may accumulate.
+    pub max_parts: u64,
+}
+
+/// Per-vector packing metadata carried by a packed
+/// [`EncVec`](crate::mpc::fabric::EncVec): enough to unpack without
+/// session context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackedMeta {
+    /// Slots per plaintext.
+    pub k: u32,
+    /// Slot width `b` in bits.
+    pub slot_bits: u32,
+    /// Logical element count (the ciphertext count is
+    /// `len.div_ceil(k)`; the last plaintext's high slots are unused).
+    pub len: usize,
+    /// Biased contributions folded into each slot so far (1 after
+    /// packing; summed by aggregation; scaled by constant-multiplies).
+    /// Unpacking subtracts `parts · 2^(w−1)` per slot.
+    pub parts: u128,
+}
+
+/// Why a packing configuration (or a packed payload) was rejected.
+/// Every variant names the violated headroom term from the module-doc
+/// table.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackError {
+    /// The slot width cannot guarantee the named headroom term.
+    Headroom {
+        /// Violated term: `"per_value"`, `"fanin_sum"`, `"blind_mask"`
+        /// or `"hinv_apply"`.
+        term: &'static str,
+        /// Slot bits the term needs.
+        needed_bits: u32,
+        /// Slot bits configured.
+        slot_bits: u32,
+    },
+    /// The modulus cannot host the slot layout (`modulus_capacity`).
+    Capacity {
+        /// Always `"modulus_capacity"`.
+        term: &'static str,
+        /// Plaintext bits the layout needs (`k·b + 2`).
+        needed_bits: u64,
+        /// Modulus bits available.
+        modulus_bits: u32,
+    },
+    /// A value cannot be encoded into a slot (`per_value` at runtime:
+    /// non-finite, or magnitude at/over the `2^(w−1)` slot budget).
+    Value {
+        /// Always `"per_value"`.
+        term: &'static str,
+        /// The offending value.
+        value: f64,
+        /// The scale it was being encoded at.
+        scale_bits: u32,
+    },
+    /// A fold would exceed (or a payload claims to exceed) the
+    /// negotiated fan-in bound (`fanin_sum` at runtime).
+    Fanin {
+        /// Always `"fanin_sum"`.
+        term: &'static str,
+        /// Contributions the operation would reach.
+        parts: u128,
+        /// The negotiated bound.
+        max_parts: u64,
+    },
+    /// A packed payload has the wrong ciphertext count for its length.
+    Shape {
+        /// Ciphertexts the length requires.
+        wanted_cts: usize,
+        /// Ciphertexts present.
+        got_cts: usize,
+        /// Logical element count.
+        len: usize,
+    },
+    /// A decoded slot exceeds `parts · 2^w` — a corrupt or hostile
+    /// packed payload (an honest one cannot get here: the headroom
+    /// terms make overflow impossible).
+    Slot {
+        /// Flat element index of the bad slot.
+        index: usize,
+        /// Contributions the payload claimed.
+        parts: u128,
+    },
+}
+
+impl fmt::Display for PackError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PackError::Headroom { term, needed_bits, slot_bits } => write!(
+                f,
+                "packing headroom term `{term}` violated: needs {needed_bits} slot bits, \
+                 layout has {slot_bits}"
+            ),
+            PackError::Capacity { term, needed_bits, modulus_bits } => write!(
+                f,
+                "packing headroom term `{term}` violated: layout needs {needed_bits} \
+                 plaintext bits, modulus has {modulus_bits}"
+            ),
+            PackError::Value { term, value, scale_bits } => write!(
+                f,
+                "packing headroom term `{term}` violated: value {value} at scale \
+                 2^{scale_bits} does not fit a slot"
+            ),
+            PackError::Fanin { term, parts, max_parts } => write!(
+                f,
+                "packing headroom term `{term}` violated: {parts} contributions exceed \
+                 the negotiated fan-in bound {max_parts}"
+            ),
+            PackError::Shape { wanted_cts, got_cts, len } => write!(
+                f,
+                "packed payload of {len} values needs {wanted_cts} ciphertexts, got {got_cts}"
+            ),
+            PackError::Slot { index, parts } => write!(
+                f,
+                "packed slot {index} exceeds its {parts}-contribution bound \
+                 (corrupt or hostile payload)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Bit length of a positive count (`⌈log₂(x+1)⌉`).
+fn bitlen_u64(x: u64) -> u32 {
+    64 - x.leading_zeros()
+}
+
+fn bitlen_u128(x: u128) -> u32 {
+    128 - x.leading_zeros()
+}
+
+/// The slot-packing codec for one session: layout `(k, b)` plus the
+/// fixed-point format and fan-in bound the layout was proven against.
+/// Constructed by [`PackedCodec::plan`] (center side, derives the
+/// layout) or [`PackedCodec::from_wire`] (node side, re-validates the
+/// center's claimed layout — a hostile center must not be able to talk
+/// a node into an overflowing one).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PackedCodec {
+    k: u32,
+    slot_bits: u32,
+    fmt: FixedFmt,
+    max_parts: u64,
+    modulus_bits: u32,
+}
+
+impl PackedCodec {
+    /// Derive the packing layout for a session: the smallest slot width
+    /// satisfying every headroom term (including `hinv_apply` for up to
+    /// `apply_terms` constant-multiply terms per slot), then as many
+    /// slots as the modulus can host. Errors name the violated term;
+    /// `Capacity` means the modulus cannot host even `k = 2` — the
+    /// caller should fall back to the unpacked path.
+    pub fn plan(
+        modulus_bits: u32,
+        fmt: FixedFmt,
+        max_parts: u64,
+        apply_terms: u64,
+    ) -> Result<PackedCodec, PackError> {
+        if max_parts == 0 || max_parts > u32::MAX as u64 {
+            return Err(PackError::Fanin {
+                term: "fanin_sum",
+                parts: max_parts as u128,
+                max_parts: u32::MAX as u64,
+            });
+        }
+        let w = fmt.w as u32;
+        let blind = w + bitlen_u64(max_parts) + BLIND_SIGMA + 1;
+        let worst_terms = (max_parts as u128).saturating_mul(apply_terms.max(1) as u128);
+        let hinv = 2 * w + bitlen_u128(worst_terms) + 1;
+        let slot_bits = blind.max(hinv);
+        let k = (modulus_bits.saturating_sub(2)) / slot_bits;
+        if k < 2 {
+            return Err(PackError::Capacity {
+                term: "modulus_capacity",
+                needed_bits: 2 * slot_bits as u64 + 2,
+                modulus_bits,
+            });
+        }
+        let codec = PackedCodec::from_wire(modulus_bits, fmt, k, slot_bits, max_parts)?;
+        codec.apply_headroom(apply_terms)?;
+        Ok(codec)
+    }
+
+    /// Validate a wire-claimed layout against the headroom terms, in
+    /// ascending order of strength, returning the first violated term.
+    /// This is the node-side trust boundary: the center claims `(k, b,
+    /// max_parts)` in `SetKey`, and a layout that could overflow is a
+    /// session error here — before a single statistic is packed.
+    ///
+    /// `hinv_apply` is *not* checked here (the node does not know the
+    /// center's `apply_terms` at key-install time); the center checks
+    /// it via [`PackedCodec::apply_headroom`] when planning, and the
+    /// packed constant-multiply path re-checks before use.
+    pub fn from_wire(
+        modulus_bits: u32,
+        fmt: FixedFmt,
+        k: u32,
+        slot_bits: u32,
+        max_parts: u64,
+    ) -> Result<PackedCodec, PackError> {
+        if max_parts == 0 || max_parts > u32::MAX as u64 {
+            return Err(PackError::Fanin {
+                term: "fanin_sum",
+                parts: max_parts as u128,
+                max_parts: u32::MAX as u64,
+            });
+        }
+        let w = fmt.w as u32;
+        if slot_bits < w {
+            return Err(PackError::Headroom {
+                term: "per_value",
+                needed_bits: w,
+                slot_bits,
+            });
+        }
+        let fanin = w + bitlen_u64(max_parts);
+        if slot_bits < fanin {
+            return Err(PackError::Headroom {
+                term: "fanin_sum",
+                needed_bits: fanin,
+                slot_bits,
+            });
+        }
+        let blind = fanin + BLIND_SIGMA + 1;
+        if slot_bits < blind {
+            return Err(PackError::Headroom {
+                term: "blind_mask",
+                needed_bits: blind,
+                slot_bits,
+            });
+        }
+        let need = (k as u64) * (slot_bits as u64) + 2;
+        if k < 2 || need > modulus_bits as u64 {
+            return Err(PackError::Capacity {
+                term: "modulus_capacity",
+                needed_bits: (k.max(2) as u64) * (slot_bits as u64) + 2,
+                modulus_bits,
+            });
+        }
+        Ok(PackedCodec { k, slot_bits, fmt, max_parts, modulus_bits })
+    }
+
+    /// Check the `hinv_apply` term: after an `Enc(H̃⁻¹)⊗g` row of up to
+    /// `apply_terms` constant-multiply-and-add terms, each slot holds at
+    /// most `max_parts·apply_terms·2^(2w−1)` — still strictly inside the
+    /// slot, or this errors naming the term.
+    pub fn apply_headroom(&self, apply_terms: u64) -> Result<(), PackError> {
+        let w = self.fmt.w as u32;
+        let worst = (self.max_parts as u128).saturating_mul(apply_terms.max(1) as u128);
+        let need = 2 * w + bitlen_u128(worst) + 1;
+        if self.slot_bits < need {
+            return Err(PackError::Headroom {
+                term: "hinv_apply",
+                needed_bits: need,
+                slot_bits: self.slot_bits,
+            });
+        }
+        Ok(())
+    }
+
+    /// Slots per plaintext.
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// Slot width `b` in bits.
+    pub fn slot_bits(&self) -> u32 {
+        self.slot_bits
+    }
+
+    /// The fixed-point format the layout was derived from.
+    pub fn fmt(&self) -> FixedFmt {
+        self.fmt
+    }
+
+    /// The fan-in bound the layout was proven against.
+    pub fn max_parts(&self) -> u64 {
+        self.max_parts
+    }
+
+    /// The wire form of this layout.
+    pub fn params(&self) -> PackingParams {
+        PackingParams { k: self.k, slot_bits: self.slot_bits, max_parts: self.max_parts }
+    }
+
+    /// Ciphertexts needed to carry `len` packed values.
+    pub fn cts_needed(&self, len: usize) -> usize {
+        len.div_ceil(self.k as usize)
+    }
+
+    /// Occupied slots in ciphertext `ct_idx` of a `len`-value vector.
+    pub fn slots_in_ct(&self, len: usize, ct_idx: usize) -> usize {
+        let k = self.k as usize;
+        len.saturating_sub(ct_idx * k).min(k)
+    }
+
+    /// The per-contribution slot bias `B = 2^(w−1)`.
+    pub fn bias(&self) -> BigUint {
+        BigUint::one().shl(self.fmt.w - 1)
+    }
+
+    /// Fresh metadata for a just-packed `len`-value vector (1
+    /// contribution per slot).
+    pub fn meta(&self, len: usize) -> PackedMeta {
+        PackedMeta { k: self.k, slot_bits: self.slot_bits, len, parts: 1 }
+    }
+
+    /// Pack `vals` at scale `2^scale_bits` into plaintexts, slot 0 in
+    /// the low bits, one biased contribution per slot. Rounds exactly
+    /// like [`FixedCodec::encode_scaled`] (`round(v·2^scale)`, half
+    /// away from zero), so a packed and an unpacked encoding of the
+    /// same value decode bit-identically.
+    ///
+    /// [`FixedCodec::encode_scaled`]: crate::crypto::fixed::FixedCodec::encode_scaled
+    pub fn pack(&self, vals: &[f64], scale_bits: u32) -> Result<Vec<BigUint>, PackError> {
+        let w = self.fmt.w as u32;
+        let bias: u128 = 1u128 << (w - 1);
+        let b = self.slot_bits as usize;
+        let k = self.k as usize;
+        let mut out = Vec::with_capacity(self.cts_needed(vals.len()));
+        for chunk in vals.chunks(k) {
+            let mut m = BigUint::zero();
+            for &v in chunk.iter().rev() {
+                if !v.is_finite() {
+                    return Err(PackError::Value { term: "per_value", value: v, scale_bits });
+                }
+                let scaled = v * (scale_bits as f64).exp2();
+                let mag_f = scaled.abs().round();
+                // Strictly below the 2^(w−1) per-value budget, same
+                // bound FixedFmt::encode enforces on the GC path.
+                if !(mag_f < (((w - 1) as f64).exp2())) {
+                    return Err(PackError::Value { term: "per_value", value: v, scale_bits });
+                }
+                let mag = mag_f as u128;
+                let slot = if scaled < 0.0 { bias - mag } else { bias + mag };
+                m = m.shl(b).add(&BigUint::from_u128(slot));
+            }
+            out.push(m);
+        }
+        Ok(out)
+    }
+
+    /// Extract slot `idx` of packed plaintext `m` as a raw (biased,
+    /// unnormalized) integer.
+    pub fn slot(&self, m: &BigUint, idx: usize) -> BigUint {
+        let b = self.slot_bits as usize;
+        m.shr(idx * b).rem(&BigUint::one().shl(b))
+    }
+
+    /// Unpack `len` values from decrypted plaintexts `ms` holding
+    /// `parts` biased contributions per slot, decoding each slot at
+    /// scale `2^scale_bits`. The magnitude→`f64` conversion is the one
+    /// [`FixedCodec::decode_scaled`] uses, so packed and unpacked
+    /// decodes of the same sum are bit-identical.
+    ///
+    /// [`FixedCodec::decode_scaled`]: crate::crypto::fixed::FixedCodec::decode_scaled
+    pub fn unpack_vec(
+        &self,
+        ms: &[BigUint],
+        len: usize,
+        parts: u128,
+        scale_bits: u32,
+    ) -> Result<Vec<f64>, PackError> {
+        if parts == 0 || parts > self.max_parts as u128 {
+            return Err(PackError::Fanin {
+                term: "fanin_sum",
+                parts,
+                max_parts: self.max_parts,
+            });
+        }
+        let wanted = self.cts_needed(len);
+        if ms.len() != wanted {
+            return Err(PackError::Shape { wanted_cts: wanted, got_cts: ms.len(), len });
+        }
+        let k = self.k as usize;
+        // Total bias per slot after `parts` contributions, and the
+        // fan-in bound parts·2^w no honest slot can reach.
+        let bias_total = BigUint::from_u128(parts).shl(self.fmt.w - 1);
+        let slot_bound = BigUint::from_u128(parts).shl(self.fmt.w);
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len {
+            // audit:allow(panic-free): i/k < wanted == ms.len() by the Shape check above
+            let raw = self.slot(&ms[i / k], i % k);
+            if raw.cmp(&slot_bound) != std::cmp::Ordering::Less {
+                return Err(PackError::Slot { index: i, parts });
+            }
+            let (neg, mag) = if raw.cmp(&bias_total) == std::cmp::Ordering::Less {
+                (true, bias_total.sub(&raw))
+            } else {
+                (false, raw.sub(&bias_total))
+            };
+            let v = magnitude_to_f64(&mag) / (scale_bits as f64).exp2();
+            out.push(if neg { -v } else { v });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FMT: FixedFmt = FixedFmt { w: 40, f: 24 };
+
+    fn codec() -> PackedCodec {
+        // 256-bit modulus, 5-part fan-in, 5 apply terms → b=86, k=2.
+        PackedCodec::plan(256, FMT, 5, 5).expect("layout must fit")
+    }
+
+    #[test]
+    fn plan_derives_documented_layout() {
+        let c = codec();
+        // blind_mask: 40 + ⌈log₂6⌉(=3) + 40 + 1 = 84;
+        // hinv_apply: 80 + ⌈log₂26⌉(=5) + 1 = 86 → b = 86, k = ⌊254/86⌋.
+        assert_eq!(c.slot_bits(), 86);
+        assert_eq!(c.k(), 2);
+        assert_eq!(c.cts_needed(5), 3);
+        assert_eq!(c.slots_in_ct(5, 2), 1);
+        assert_eq!(c.cts_needed(0), 0);
+        // Production scale: 2048-bit modulus packs ~23 slots.
+        let big = PackedCodec::plan(2048, FMT, 5, 12).unwrap();
+        assert_eq!(big.slot_bits(), 87);
+        assert_eq!(big.k(), 2046 / 87);
+        assert!(big.k() >= 20, "2048-bit modulus must pack ≥20 slots");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_with_negatives() {
+        let c = codec();
+        let vals = [1.5, -2.25, 0.0, -0.000001, 1234.5];
+        let ms = c.pack(&vals, FMT.f).unwrap();
+        assert_eq!(ms.len(), c.cts_needed(vals.len()));
+        let back = c.unpack_vec(&ms, vals.len(), 1, FMT.f).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn plaintext_sum_of_packed_equals_sum() {
+        // The homomorphic fold is plaintext addition; model it directly.
+        let c = codec();
+        let a = [3.25, -7.75, 0.5];
+        let b = [-1.25, 2.5, -0.125];
+        let ma = c.pack(&a, FMT.f).unwrap();
+        let mb = c.pack(&b, FMT.f).unwrap();
+        let sums: Vec<BigUint> = ma.iter().zip(&mb).map(|(x, y)| x.add(y)).collect();
+        let got = c.unpack_vec(&sums, 3, 2, FMT.f).unwrap();
+        for (i, g) in got.iter().enumerate() {
+            assert!((g - (a[i] + b[i])).abs() < 1e-6, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn headroom_terms_rejected_in_order() {
+        // per_value: slot thinner than w.
+        let e = PackedCodec::from_wire(256, FMT, 2, 39, 5).unwrap_err();
+        assert!(matches!(e, PackError::Headroom { term: "per_value", .. }), "{e}");
+        // fanin_sum: fits one value, not the 5-part sum.
+        let e = PackedCodec::from_wire(256, FMT, 2, 42, 5).unwrap_err();
+        assert!(matches!(e, PackError::Headroom { term: "fanin_sum", .. }), "{e}");
+        // blind_mask: fits the sum, not sum + blind (boundary − 1).
+        let e = PackedCodec::from_wire(256, FMT, 2, 83, 5).unwrap_err();
+        assert!(matches!(e, PackError::Headroom { term: "blind_mask", .. }), "{e}");
+        // Exactly at the blind_mask boundary: accepted.
+        assert!(PackedCodec::from_wire(256, FMT, 2, 84, 5).is_ok());
+        // modulus_capacity: k·b + 2 over the modulus (boundary + 1).
+        let e = PackedCodec::from_wire(171, FMT, 2, 85, 5).unwrap_err();
+        assert!(matches!(e, PackError::Capacity { term: "modulus_capacity", .. }), "{e}");
+        assert!(PackedCodec::from_wire(172, FMT, 2, 85, 5).is_ok());
+        // k = 1 is not packing.
+        let e = PackedCodec::from_wire(256, FMT, 1, 85, 5).unwrap_err();
+        assert!(matches!(e, PackError::Capacity { .. }), "{e}");
+        // hinv_apply is the center-side check.
+        let c = PackedCodec::from_wire(256, FMT, 2, 84, 5).unwrap();
+        let e = c.apply_headroom(5).unwrap_err();
+        assert!(matches!(e, PackError::Headroom { term: "hinv_apply", .. }), "{e}");
+        assert!(codec().apply_headroom(5).is_ok());
+        // Errors render the violated term by name.
+        assert!(e.to_string().contains("hinv_apply"), "{e}");
+    }
+
+    #[test]
+    fn slot_max_values_pack_and_reject_past_budget() {
+        let c = codec();
+        // Largest encodable magnitude at scale f: 2^(w−1) − 1 scaled.
+        let max = ((1u64 << (FMT.w - 1)) - 1) as f64 / (FMT.f as f64).exp2();
+        for v in [max, -max] {
+            let ms = c.pack(&[v], FMT.f).unwrap();
+            let back = c.unpack_vec(&ms, 1, 1, FMT.f).unwrap();
+            assert!((back[0] - v).abs() < 1e-6, "{v} vs {}", back[0]);
+        }
+        // One past the budget is a per_value rejection, not a wrap.
+        let over = (1u64 << (FMT.w - 1)) as f64 / (FMT.f as f64).exp2();
+        for v in [over, -over, f64::NAN, f64::INFINITY] {
+            let e = c.pack(&[v], FMT.f).unwrap_err();
+            assert!(matches!(e, PackError::Value { term: "per_value", .. }), "{v}: {e}");
+        }
+    }
+
+    #[test]
+    fn unpack_guards_parts_shape_and_slots() {
+        let c = codec();
+        let ms = c.pack(&[1.0, 2.0, 3.0], FMT.f).unwrap();
+        // parts over the negotiated bound.
+        let e = c.unpack_vec(&ms, 3, 6, FMT.f).unwrap_err();
+        assert!(matches!(e, PackError::Fanin { term: "fanin_sum", .. }), "{e}");
+        // parts = 0 is meaningless.
+        assert!(c.unpack_vec(&ms, 3, 0, FMT.f).is_err());
+        // Wrong ciphertext count for the claimed length.
+        let e = c.unpack_vec(&ms, 5, 1, FMT.f).unwrap_err();
+        assert!(matches!(e, PackError::Shape { wanted_cts: 3, got_cts: 2, .. }), "{e}");
+        // A slot holding ≥ parts·2^w is flagged, not mis-decoded.
+        let hot = vec![BigUint::one().shl(FMT.w).shl(1)];
+        let e = c.unpack_vec(&hot, 1, 1, FMT.f).unwrap_err();
+        assert!(matches!(e, PackError::Slot { index: 0, .. }), "{e}");
+    }
+
+    #[test]
+    fn max_parts_bounds_enforced() {
+        assert!(matches!(
+            PackedCodec::plan(2048, FMT, 0, 1).unwrap_err(),
+            PackError::Fanin { .. }
+        ));
+        assert!(matches!(
+            PackedCodec::plan(2048, FMT, u64::MAX, 1).unwrap_err(),
+            PackError::Fanin { .. }
+        ));
+        // A modulus too small for two slots falls out as Capacity.
+        assert!(matches!(
+            PackedCodec::plan(128, FMT, 5, 5).unwrap_err(),
+            PackError::Capacity { term: "modulus_capacity", .. }
+        ));
+    }
+}

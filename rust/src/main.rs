@@ -43,7 +43,7 @@ fn usage() -> ! {
         "usage: privlogit <run|compare|list|trace|ping|audit|node|center|center-a|center-b> \
          [--dataset NAME] [--protocol P] [--backend real|model|auto] [--orgs N] [--lambda L] \
          [--tol T] [--max-iters M] [--modulus-bits B] [--threaded] [--center-tcp] [--json] \
-         [--seed S] [--config FILE]\n\
+         [--seed S] [--no-pack] [--config FILE]\n\
          \n\
          distributed mode (docs/DEPLOY.md):\n\
          privlogit node     --listen ADDR --dataset NAME --orgs N --org J\n\
@@ -307,6 +307,7 @@ fn run_over_nodes(cfg: &Config, link: CenterLink) -> anyhow::Result<RunReport> {
             &mut fleet,
             connect_timeout,
             &durable,
+            cfg.no_pack,
         )
     }));
     match run {

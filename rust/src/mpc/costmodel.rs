@@ -39,6 +39,13 @@ pub struct CostModel {
     /// `t_scalar_small`, which times a standalone scalar multiply with
     /// its own full squaring chain.
     pub t_apply_term: f64,
+    /// One term of an `Enc(H̃⁻¹)⊗g` row against *slot-packed* row
+    /// ciphertexts: the same Straus-amortized multi-exp, but each
+    /// ciphertext carries k packed entries, so the squaring chain and
+    /// additions amortize over k terms at once. Expected ≈
+    /// `t_apply_term / k` plus the shared chain overhead; measured by
+    /// the `apply_row_packed` micro-bench.
+    pub t_apply_term_packed: f64,
     /// Blinded decryption round (mask + decrypt + unmask).
     pub t_decrypt: f64,
     /// One-way message latency (models the paper's ethernet; applied per
@@ -60,6 +67,7 @@ impl Default for CostModel {
             t_scalar_full: 450e-6,
             t_scalar_small: 40e-6,
             t_apply_term: 12e-6,
+            t_apply_term_packed: 7e-6,
             t_decrypt: 900e-6,
             latency: 200e-6,
             bandwidth: 117e6, // ~1 Gb ethernet, the paper's testbed link
@@ -90,6 +98,7 @@ impl CostModel {
                 "t_scalar_full" => m.t_scalar_full = v,
                 "t_scalar_small" => m.t_scalar_small = v,
                 "t_apply_term" => m.t_apply_term = v,
+                "t_apply_term_packed" => m.t_apply_term_packed = v,
                 "t_decrypt" => m.t_decrypt = v,
                 "latency" => m.latency = v,
                 "bandwidth" => m.bandwidth = v,
@@ -202,6 +211,10 @@ mod tests {
         assert!(
             m.t_apply_term < m.t_scalar_small,
             "a Straus-amortized row term must be cheaper than a standalone scalar mul"
+        );
+        assert!(
+            m.t_apply_term_packed < m.t_apply_term,
+            "a packed row term amortizes the chain over k slots and must be cheaper"
         );
     }
 

@@ -28,6 +28,7 @@ use super::peer::{execute_local, PeerGcClient, ProgSpec};
 use crate::bigint::{BigInt, BigUint, Montgomery, RandomSource, StrausTable};
 use crate::coordinator::fleet::FleetKey;
 use crate::crypto::fixed::FixedCodec;
+use crate::crypto::packed::{PackError, PackedCodec, PackedMeta, BLIND_SIGMA};
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, Keypair, PublicKey};
 use crate::crypto::rng::ChaChaRng;
 use crate::gc::backend::CountBackend;
@@ -37,6 +38,12 @@ use crate::linalg::Matrix;
 use crate::net::wire;
 use crate::obs;
 use crate::runtime::pool;
+
+// The packed share conversion draws its per-slot blinds below
+// `2^(w + ⌈log₂(parts+1)⌉ + σ)` with the *same* statistical-hiding σ as
+// the unpacked conversion's `2^(w+σ)` bound; the two constants live in
+// different layers of the module DAG, so pin them together here.
+const _: () = assert!(BLIND_SIGMA as usize == SIGMA);
 
 /// Both additive halves of one value mod 2^w in a single hand. This is a
 /// **test/driver helper type only** (see [`share_vec`]): the fabric's own
@@ -120,6 +127,10 @@ impl SecVec {
 pub struct EncVec {
     /// Fixed-point scale (bits) of the plaintexts.
     pub scale: u32,
+    /// Slot-packing metadata when each plaintext carries multiple values
+    /// in radix-`2^b` slots ([`crate::crypto::packed`]); `None` for the
+    /// one-value-per-plaintext legacy layout.
+    pub packed: Option<PackedMeta>,
     /// Payload.
     pub data: EncData,
 }
@@ -134,11 +145,21 @@ pub enum EncData {
 }
 
 impl EncVec {
-    /// Number of ciphertexts.
+    /// Number of ciphertexts (a packed vector carries
+    /// `⌈logical_len / k⌉` of them).
     pub fn len(&self) -> usize {
         match &self.data {
             EncData::Real(v) => v.len(),
             EncData::Model(v) => v.len(),
+        }
+    }
+
+    /// Logical number of encoded values: the packed length when
+    /// slot-packed, otherwise the ciphertext count.
+    pub fn logical_len(&self) -> usize {
+        match self.packed {
+            Some(m) => m.len,
+            None => self.len(),
         }
     }
 }
@@ -168,6 +189,13 @@ pub trait SecureFabric {
     /// Fixed-point format used throughout.
     fn fmt(&self) -> FixedFmt;
 
+    /// The session's slot-packing layout, when the statistic fan-in is
+    /// packed ([`crate::crypto::packed`]). Backends without packing
+    /// return `None` and every packed-path branch is skipped.
+    fn packing(&self) -> Option<PackedCodec> {
+        None
+    }
+
     // ---- node-side (Type-1, Paillier) ----
 
     /// Node `node` encrypts a statistics vector (scale f).
@@ -186,8 +214,12 @@ pub trait SecureFabric {
     /// decryption and S2 performs the fold itself.
     fn aggregate(&mut self, parts: Vec<EncVec>) -> anyhow::Result<EncVec>;
     /// Homomorphically add a public plaintext vector (regularization
-    /// terms; pass negated values for `⊖`).
-    fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> EncVec;
+    /// terms; pass negated values for `⊖`). Fixed-point encoding of the
+    /// plaintexts is fallible (non-finite / out-of-range values are
+    /// session errors), and a packed input packs the plaintexts into
+    /// the same slot layout — one more biased contribution per slot,
+    /// rejected if it would exceed the negotiated fan-in bound.
+    fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> anyhow::Result<EncVec>;
     /// Center-side `Enc(H̃⁻¹) ⊗ v` for the public regularization vector.
     fn center_apply_hinv(&mut self, hinv: &EncMat, v: &[f64]) -> EncVec;
 
@@ -335,6 +367,9 @@ pub struct RealFabric {
     /// from — PrivLogit-Local applies the same broadcast triangle every
     /// iteration, so the window tables are built once, not per round.
     prepared_hinv: Option<(Vec<Ciphertext>, PreparedHinv)>,
+    /// Slot-packing layout for the statistic fan-in, when enabled
+    /// ([`RealFabric::enable_packing`]); `None` = unpacked legacy path.
+    packing: Option<PackedCodec>,
 }
 
 impl RealFabric {
@@ -445,13 +480,65 @@ impl RealFabric {
             session,
             span_rounds: std::collections::BTreeMap::new(),
             prepared_hinv: None,
+            packing: None,
+        })
+    }
+
+    /// Enable slot-packing for the statistic fan-in: derive the layout
+    /// from the session format, the fan-in bound `max_parts` (node
+    /// count plus the center-side plain additions) and the worst-case
+    /// constant-multiply width `apply_terms` (the model dimension `p`).
+    /// Returns `true` when packing is on. A modulus too small to host
+    /// two slots (`modulus_capacity`) falls back to the unpacked path
+    /// with `Ok(false)`; any other violated headroom term is a real
+    /// configuration error and surfaces as `Err` naming the term.
+    pub fn enable_packing(&mut self, max_parts: u64, apply_terms: u64) -> Result<bool, PackError> {
+        let modulus_bits = self.kp.pk.n.bit_len() as u32;
+        match PackedCodec::plan(modulus_bits, self.fmt, max_parts, apply_terms) {
+            Ok(codec) => {
+                self.packing = Some(codec);
+                Ok(true)
+            }
+            Err(PackError::Capacity { .. }) => {
+                self.packing = None;
+                Ok(false)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Pack and encrypt a statistics vector under the session layout —
+    /// the node-side packed encode path (the TCP node servers run the
+    /// same codec over the wire-negotiated parameters; this inherent
+    /// method serves the in-process fleets, tests and benches). Errors
+    /// if packing is not enabled or a value exceeds the per-slot budget.
+    pub fn encrypt_packed(&mut self, vals: &[f64]) -> anyhow::Result<EncVec> {
+        let codec = self
+            .packing
+            .ok_or_else(|| anyhow::anyhow!("encrypt_packed without an enabled packing layout"))?;
+        let ms = codec.pack(vals, self.fmt.f)?;
+        let cts =
+            self.kp.pk.encrypt_batch(&ms, &mut ChaChaSource(&mut self.rng), pool::threads());
+        self.ledger.paillier_encs += cts.len() as u64;
+        let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
+        self.ledger.bytes += sent;
+        self.ledger.bytes_recv += sent; // the Center receives what nodes send
+        Ok(EncVec {
+            scale: self.fmt.f,
+            packed: Some(codec.meta(vals.len())),
+            data: EncData::Real(cts),
         })
     }
 
     /// The Paillier + fixed-point material node servers need to encrypt
     /// their statistic replies themselves (`Fleet::install_key`).
     pub fn fleet_key(&self) -> FleetKey {
-        FleetKey { n: self.kp.pk.n.clone(), w: self.fmt.w as u32, f: self.fmt.f }
+        FleetKey {
+            n: self.kp.pk.n.clone(),
+            w: self.fmt.w as u32,
+            f: self.fmt.f,
+            packing: self.packing.map(|c| c.params()),
+        }
     }
 
     fn bits_of_share(&self, v: u128) -> Vec<bool> {
@@ -626,6 +713,10 @@ impl SecureFabric for RealFabric {
         self.fmt
     }
 
+    fn packing(&self) -> Option<PackedCodec> {
+        self.packing
+    }
+
     fn node_encrypt_vec(&mut self, node: usize, vals: &[f64]) -> EncVec {
         let t0 = Instant::now();
         let ms: Vec<BigUint> = vals.iter().map(|&v| self.codec.encode(v)).collect();
@@ -636,7 +727,7 @@ impl SecureFabric for RealFabric {
         self.ledger.bytes += sent;
         self.ledger.bytes_recv += sent; // the Center receives what nodes send
         self.ledger.add_node(node, t0.elapsed().as_secs_f64());
-        EncVec { scale: self.fmt.f, data: EncData::Real(cts) }
+        EncVec { scale: self.fmt.f, packed: None, data: EncData::Real(cts) }
     }
 
     fn node_apply_hinv(&mut self, node: usize, hinv: &EncMat, gj: &[f64]) -> EncVec {
@@ -661,15 +752,38 @@ impl SecureFabric for RealFabric {
         let t0 = Instant::now();
         let scale = parts[0].scale;
         let len = parts[0].len();
+        let packed0 = parts[0].packed;
         // Node-reply shape is wire-controlled: validate as session
         // errors so one malformed node cannot panic the center.
         let mut cols: Vec<&[Ciphertext]> = Vec::with_capacity(parts.len());
+        let mut total_parts: u128 = 0;
         for (j, part) in parts.iter().enumerate() {
             anyhow::ensure!(
                 part.scale == scale,
                 "aggregation scale mismatch: part {j} carries scale {}, part 0 carries {scale}",
                 part.scale
             );
+            match (packed0, part.packed) {
+                (None, None) => {}
+                (Some(m0), Some(m)) => {
+                    anyhow::ensure!(
+                        m.k == m0.k && m.slot_bits == m0.slot_bits && m.len == m0.len,
+                        "aggregation packing mismatch: part {j} carries layout \
+                         (k={}, b={}, len={}), part 0 carries (k={}, b={}, len={})",
+                        m.k,
+                        m.slot_bits,
+                        m.len,
+                        m0.k,
+                        m0.slot_bits,
+                        m0.len
+                    );
+                    total_parts = total_parts.saturating_add(m.parts);
+                }
+                _ => anyhow::bail!(
+                    "aggregation packing mismatch: part {j} and part 0 disagree on \
+                     whether the payload is slot-packed"
+                ),
+            }
             let cts = self.real_cts(part)?;
             anyhow::ensure!(
                 cts.len() == len,
@@ -678,6 +792,36 @@ impl SecureFabric for RealFabric {
             );
             cols.push(cts);
         }
+        // A packed fold accumulates every part's biased contributions;
+        // the sum must stay under the fan-in bound the slot width was
+        // proven against, or slots could silently carry into neighbors.
+        let packed = match packed0 {
+            None => None,
+            Some(m0) => {
+                let codec = self.packing.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "packed node replies reached a center without a negotiated \
+                         packing layout"
+                    )
+                })?;
+                anyhow::ensure!(
+                    m0.k == codec.k() && m0.slot_bits == codec.slot_bits(),
+                    "packed node replies carry layout (k={}, b={}), session negotiated \
+                     (k={}, b={})",
+                    m0.k,
+                    m0.slot_bits,
+                    codec.k(),
+                    codec.slot_bits()
+                );
+                anyhow::ensure!(
+                    total_parts <= codec.max_parts() as u128,
+                    "packing headroom term `fanin_sum` violated: folding {total_parts} \
+                     contributions exceeds the negotiated bound {}",
+                    codec.max_parts()
+                );
+                Some(PackedMeta { parts: total_parts, ..m0 })
+            }
+        };
         let bytes0 = self.link.bytes_transferred();
         let recv0 = self.link.bytes_received();
         let acc: Vec<Ciphertext> = match &mut self.link {
@@ -714,24 +858,71 @@ impl SecureFabric for RealFabric {
             sp.record_u64("len", len as u64);
             sp.record_u64("bytes", self.link.bytes_transferred() - bytes0);
         }
-        Ok(EncVec { scale, data: EncData::Real(acc) })
+        Ok(EncVec { scale, packed, data: EncData::Real(acc) })
     }
 
-    fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> EncVec {
+    fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> anyhow::Result<EncVec> {
         let t0 = Instant::now();
-        let cts = self.expect_real(v);
-        assert_eq!(cts.len(), plain.len());
-        let out: Vec<Ciphertext> = cts
-            .iter()
-            .zip(plain)
-            .map(|(c, &pv)| {
-                let m = self.codec.encode_scaled(pv, v.scale);
-                self.kp.pk.add(c, &self.kp.pk.encrypt_trivial(&m))
-            })
-            .collect();
-        self.ledger.paillier_adds += plain.len() as u64;
+        let cts = self.real_cts(v)?;
+        let out: Vec<Ciphertext> = match v.packed {
+            None => {
+                anyhow::ensure!(
+                    cts.len() == plain.len(),
+                    "add_plain length mismatch: {} ciphertexts vs {} plaintexts",
+                    cts.len(),
+                    plain.len()
+                );
+                let mut out = Vec::with_capacity(cts.len());
+                for (c, &pv) in cts.iter().zip(plain) {
+                    let m = self.codec.encode_scaled(pv, v.scale)?;
+                    out.push(self.kp.pk.add(c, &self.kp.pk.encrypt_trivial(&m)));
+                }
+                out
+            }
+            // Packed input: pack the plaintexts into the same slot
+            // layout and fold them in as one more biased contribution.
+            Some(meta) => {
+                let codec = self.packing.ok_or_else(|| {
+                    anyhow::anyhow!("packed add_plain without a negotiated packing layout")
+                })?;
+                anyhow::ensure!(
+                    meta.k == codec.k() && meta.slot_bits == codec.slot_bits(),
+                    "packed add_plain layout mismatch: vector carries (k={}, b={}), \
+                     session negotiated (k={}, b={})",
+                    meta.k,
+                    meta.slot_bits,
+                    codec.k(),
+                    codec.slot_bits()
+                );
+                anyhow::ensure!(
+                    plain.len() == meta.len,
+                    "packed add_plain length mismatch: vector holds {} values, got {} \
+                     plaintexts",
+                    meta.len,
+                    plain.len()
+                );
+                anyhow::ensure!(
+                    meta.parts < codec.max_parts() as u128,
+                    "packing headroom term `fanin_sum` violated: one more plain \
+                     contribution on top of {} folded parts exceeds the negotiated \
+                     bound {}",
+                    meta.parts,
+                    codec.max_parts()
+                );
+                let ms = codec.pack(plain, v.scale)?;
+                cts.iter()
+                    .zip(&ms)
+                    .map(|(c, m)| self.kp.pk.add(c, &self.kp.pk.encrypt_trivial(m)))
+                    .collect()
+            }
+        };
+        self.ledger.paillier_adds += out.len() as u64;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
-        EncVec { scale: v.scale, data: EncData::Real(out) }
+        Ok(EncVec {
+            scale: v.scale,
+            packed: v.packed.map(|m| PackedMeta { parts: m.parts + 1, ..m }),
+            data: EncData::Real(out),
+        })
     }
 
     fn to_shares(&mut self, v: &EncVec) -> anyhow::Result<SecVec> {
@@ -747,10 +938,47 @@ impl SecureFabric for RealFabric {
         let w = self.fmt.w;
         let mask_w = (1u128 << w) - 1;
         let cts = self.real_cts(v)?.to_vec();
+        // Packed inputs: re-validate the metadata against the session
+        // layout before any blind is drawn — the metadata traces back to
+        // wire-controlled node replies.
+        let packed = match v.packed {
+            None => None,
+            Some(meta) => {
+                let codec = self.packing.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "packed to_shares without a negotiated packing layout"
+                    )
+                })?;
+                anyhow::ensure!(
+                    meta.k == codec.k() && meta.slot_bits == codec.slot_bits(),
+                    "packed to_shares layout mismatch: vector carries (k={}, b={}), \
+                     session negotiated (k={}, b={})",
+                    meta.k,
+                    meta.slot_bits,
+                    codec.k(),
+                    codec.slot_bits()
+                );
+                anyhow::ensure!(
+                    meta.parts >= 1 && meta.parts <= codec.max_parts() as u128,
+                    "packing headroom term `fanin_sum` violated: payload claims \
+                     {} contributions, negotiated bound is {}",
+                    meta.parts,
+                    codec.max_parts()
+                );
+                anyhow::ensure!(
+                    cts.len() == codec.cts_needed(meta.len),
+                    "packed payload of {} values needs {} ciphertexts, got {}",
+                    meta.len,
+                    codec.cts_needed(meta.len),
+                    cts.len()
+                );
+                Some((codec, meta))
+            }
+        };
         let handle = self.next_handle;
         let link_bytes0 = self.link.bytes_transferred();
-        let shares = match &mut self.link {
-            ShareLink::Local(_) => {
+        let shares = match (&mut self.link, packed) {
+            (ShareLink::Local(_), None) => {
                 let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
                 let mask_bound = BigUint::one().shl(w + SIGMA);
                 // S2's blinds are drawn serially (fixed RNG stream); the
@@ -781,12 +1009,52 @@ impl SecureFabric for RealFabric {
                 }
                 ShareVec { a, b: S2Custody::Local(b) }
             }
-            ShareLink::Peer(client) => {
+            // Packed in-process conversion: one blind ρ per *slot*, laid
+            // out in the same radix-2^b positions as the values, so one
+            // homomorphic add masks a whole ciphertext. No lift term —
+            // the biased slots already carry `parts·B`, which plays the
+            // unpacked conversion's `C = 2^{w-1}` role.
+            (ShareLink::Local(_), Some((codec, meta))) => {
+                let (rhos, b) = packed_blinds(&mut self.rng, w, meta.parts, meta.len);
+                let slot_b = codec.slot_bits() as usize;
+                let k = codec.k() as usize;
+                let pk = &self.kp.pk;
+                let sk = &self.kp.sk;
+                let rhos_ref = &rhos;
+                let decoded: Vec<(Vec<u128>, u64)> =
+                    pool::par_map_indexed(cts.len(), pool::threads(), |ci| {
+                        let lo = ci * k;
+                        let hi = lo + codec.slots_in_ct(meta.len, ci);
+                        let mut mask = BigUint::zero();
+                        for i in (lo..hi).rev() {
+                            mask = mask.shl(slot_b).add(&rhos_ref[i]);
+                        }
+                        let blinded = pk.add(&cts[ci], &pk.encrypt_trivial(&mask));
+                        // S1: decrypt, then read each slot's y_i =
+                        // x_i + parts·B + ρ_i (headroom: no slot carry).
+                        let y = sk.decrypt(&blinded);
+                        let a: Vec<u128> = (lo..hi)
+                            .map(|i| u128_of(&codec.slot(&y, i - lo)) & mask_w)
+                            .collect();
+                        (a, blinded.byte_len() as u64)
+                    });
+                let mut a = Vec::with_capacity(meta.len);
+                for (ai, ct_bytes) in decoded {
+                    self.ledger.bytes += ct_bytes;
+                    self.ledger.bytes_recv += ct_bytes; // S1 receives the blinded ct
+                    a.extend(ai);
+                }
+                ShareVec { a, b: S2Custody::Local(b) }
+            }
+            (ShareLink::Peer(client), packed) => {
                 self.next_handle += 1;
                 let bytes0 = client.bytes_sent() + client.bytes_received();
                 // S2 draws the blinds ρ itself, keeps its halves under
                 // `handle`, and only the blinded ciphertexts come back.
-                let blinded = client.blind(handle, &cts);
+                // For packed inputs the Blind frame is self-describing:
+                // center-b re-validates the layout and draws one blind
+                // per slot.
+                let blinded = client.blind(handle, &cts, v.packed);
                 anyhow::ensure!(
                     blinded.len() == cts.len(),
                     "center-b answered Blind with {} ciphertexts, expected {}",
@@ -794,9 +1062,21 @@ impl SecureFabric for RealFabric {
                     cts.len()
                 );
                 let sk = &self.kp.sk;
-                let a: Vec<u128> = pool::par_map_indexed(blinded.len(), pool::threads(), |i| {
-                    u128_of(&sk.decrypt(&blinded[i])) & mask_w
-                });
+                let a: Vec<u128> = match packed {
+                    None => pool::par_map_indexed(blinded.len(), pool::threads(), |i| {
+                        u128_of(&sk.decrypt(&blinded[i])) & mask_w
+                    }),
+                    Some((codec, meta)) => {
+                        let per_ct: Vec<Vec<u128>> =
+                            pool::par_map_indexed(blinded.len(), pool::threads(), |ci| {
+                                let y = sk.decrypt(&blinded[ci]);
+                                (0..codec.slots_in_ct(meta.len, ci))
+                                    .map(|s| u128_of(&codec.slot(&y, s)) & mask_w)
+                                    .collect()
+                            });
+                        per_ct.into_iter().flatten().collect()
+                    }
+                };
                 let delta = client.bytes_sent() + client.bytes_received() - bytes0;
                 self.ledger.bytes += delta;
                 self.ledger.bytes_recv += delta;
@@ -825,9 +1105,25 @@ impl SecureFabric for RealFabric {
         let cts = self.expect_real(v);
         let sk = &self.kp.sk;
         let codec = &self.codec;
-        let out: Vec<f64> = pool::par_map_indexed(cts.len(), pool::threads(), |i| {
-            codec.decode_scaled(&sk.decrypt(&cts[i]), v.scale)
-        });
+        let out: Vec<f64> = match v.packed {
+            None => pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                codec.decode_scaled(&sk.decrypt(&cts[i]), v.scale)
+            }),
+            // Packed reveal: decrypt, then unpack every slot. The
+            // metadata was validated when the vector was aggregated, so
+            // a failure here means a fabric-internal invariant broke —
+            // same contract as the expect_real shape panics above.
+            Some(meta) => {
+                let packing = self
+                    .packing
+                    .expect("packed vector revealed on a fabric without a packing layout");
+                let ms: Vec<BigUint> =
+                    pool::par_map_indexed(cts.len(), pool::threads(), |i| sk.decrypt(&cts[i]));
+                packing
+                    .unpack_vec(&ms, meta.len, meta.parts, v.scale)
+                    .unwrap_or_else(|e| panic!("packed reveal: {e}"))
+            }
+        };
         self.ledger.paillier_decrypts += cts.len() as u64;
         let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
         self.ledger.bytes += sent;
@@ -1012,7 +1308,7 @@ impl SecureFabric for RealFabric {
         self.ledger.bytes_recv += sent; // nodes receive the broadcast Enc(H̃⁻¹)
         self.ledger.rounds += 2;
         self.ledger.center_secs += t0.elapsed().as_secs_f64();
-        EncMat { p, tri: EncVec { scale: self.fmt.f, data: EncData::Real(cts) } }
+        EncMat { p, tri: EncVec { scale: self.fmt.f, packed: None, data: EncData::Real(cts) } }
     }
 
     fn converged(&mut self, l_new: &SecVec, l_old: &SecVec, tol: f64) -> bool {
@@ -1217,7 +1513,7 @@ fn apply_hinv_real(fab: &mut RealFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
     let sent: u64 = cts.iter().map(|c| c.byte_len() as u64).sum();
     fab.ledger.bytes += sent;
     fab.ledger.bytes_recv += sent; // the aggregating Center receives the partials
-    EncVec { scale: 2 * fmt.f, data: EncData::Real(cts) }
+    EncVec { scale: 2 * fmt.f, packed: None, data: EncData::Real(cts) }
 }
 
 /// `ct^k` for a *signed* small constant `k`: negative constants go through
@@ -1254,6 +1550,33 @@ pub(crate) fn words_of_bits(bits: &[bool], chunk: usize) -> Vec<u128> {
             v
         })
         .collect()
+}
+
+/// Serially-drawn packed-conversion blinds: one ρ per slot below
+/// `2^(w + ⌈log₂(parts+1)⌉ + σ)`, plus S2's share half for the slot's
+/// total blind `parts·B + ρ` — the biased slots already carry
+/// `parts·B = parts·2^{w−1}`, which plays the unpacked conversion's
+/// lift role, so no extra lift is added. The `blind_mask` headroom term
+/// guarantees slot + blind stays under `2^b` (no slot carry). The
+/// fabric's in-process arm and the center-b peer server must draw and
+/// derive these identically — one implementation, shared.
+pub(crate) fn packed_blinds(
+    rng: &mut ChaChaRng,
+    w: usize,
+    parts: u128,
+    count: usize,
+) -> (Vec<BigUint>, Vec<u128>) {
+    let parts_bits = (128 - parts.leading_zeros()) as usize;
+    let bound = BigUint::one().shl(w + parts_bits + BLIND_SIGMA as usize);
+    let bias_total = BigUint::from_u128(parts).shl(w - 1);
+    let mut rhos = Vec::with_capacity(count);
+    let mut halves = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rho = rng.below(&bound);
+        halves.push(blind_b_half(&bias_total.add(&rho), w));
+        rhos.push(rho);
+    }
+    (rhos, halves)
 }
 
 /// S2's share half for a blind `C + ρ`: `b = 2^w − ((C + ρ) mod 2^w)`.
@@ -1411,7 +1734,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.bytes += vals.len() as u64 * self.ct_bytes;
         self.ledger.bytes_recv += vals.len() as u64 * self.ct_bytes;
         self.ledger.add_node(node, vals.len() as f64 * self.cost.t_enc);
-        EncVec { scale: self.fmt.f, data: EncData::Model(vq) }
+        EncVec { scale: self.fmt.f, packed: None, data: EncData::Model(vq) }
     }
 
     fn node_apply_hinv(&mut self, node: usize, hinv: &EncMat, gj: &[f64]) -> EncVec {
@@ -1461,15 +1784,15 @@ impl SecureFabric for ModelFabric {
         self.ledger.paillier_adds += ((parts.len() - 1) * len) as u64;
         self.ledger.center_secs += ((parts.len() - 1) * len) as f64 * self.cost.t_add;
         self.ledger.rounds += 1;
-        Ok(EncVec { scale, data: EncData::Model(acc) })
+        Ok(EncVec { scale, packed: None, data: EncData::Model(acc) })
     }
 
-    fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> EncVec {
+    fn add_plain(&mut self, v: &EncVec, plain: &[f64]) -> anyhow::Result<EncVec> {
         let vals = self.expect_model(v);
         let out: Vec<f64> = vals.iter().zip(plain).map(|(a, b)| a + b).collect();
         self.ledger.paillier_adds += plain.len() as u64;
         self.ledger.center_secs += plain.len() as f64 * self.cost.t_add;
-        EncVec { scale: v.scale, data: EncData::Model(out) }
+        Ok(EncVec { scale: v.scale, packed: None, data: EncData::Model(out) })
     }
 
     fn to_shares(&mut self, v: &EncVec) -> anyhow::Result<SecVec> {
@@ -1550,7 +1873,7 @@ impl SecureFabric for ModelFabric {
         self.ledger.bytes += tri_len(p) as u64 * self.ct_bytes;
         self.ledger.bytes_recv += tri_len(p) as u64 * self.ct_bytes;
         self.ledger.rounds += 2;
-        EncMat { p, tri: EncVec { scale: self.fmt.f, data: EncData::Model(tri) } }
+        EncMat { p, tri: EncVec { scale: self.fmt.f, packed: None, data: EncData::Model(tri) } }
     }
 
     fn converged(&mut self, l_new: &SecVec, l_old: &SecVec, tol: f64) -> bool {
@@ -1592,7 +1915,7 @@ fn apply_hinv_model(fab: &ModelFabric, hinv: &EncMat, v: &[f64]) -> EncVec {
             out[i] += tri[idx] * fab.quant(v[j]);
         }
     }
-    EncVec { scale: 2 * fab.fmt.f, data: EncData::Model(out) }
+    EncVec { scale: 2 * fab.fmt.f, packed: None, data: EncData::Model(out) }
 }
 
 fn unpack_tri(tri: &[f64], p: usize) -> Matrix {
@@ -1952,5 +2275,126 @@ mod tests {
             let sum = (s.a.wrapping_add(s.b)) & ((1u128 << FMT.w) - 1);
             assert_eq!(FMT.decode(sum as i128), FMT.decode(FMT.encode(v)));
         }
+    }
+
+    /// Packed fan-in (pack → homomorphic fold → plain add → reveal)
+    /// decodes bit-identically to the unpacked legacy path over the
+    /// same values — the central parity claim of the packing layer.
+    #[test]
+    fn packed_fan_in_matches_unpacked_bit_exact() {
+        let mut fab = RealFabric::new(256, FMT, 50);
+        assert!(fab.enable_packing(4, 3).unwrap(), "256-bit modulus must host 2 slots");
+        let a = [1.5, -2.25, 0.125, 7.75, -0.0625];
+        let b = [-0.5, 4.5, -3.125, 0.25, 9.0];
+        let reg = [0.01, -0.02, 0.03, -0.04, 0.05];
+        // Packed: 5 values in ⌈5/2⌉ = 3 ciphertexts per contribution.
+        let pa = fab.encrypt_packed(&a).unwrap();
+        let pb = fab.encrypt_packed(&b).unwrap();
+        assert_eq!(pa.len(), 3, "5 values must pack into 3 ciphertexts at k=2");
+        assert_eq!(pa.logical_len(), 5);
+        let agg = fab.aggregate(vec![pa, pb]).unwrap();
+        assert_eq!(agg.packed.unwrap().parts, 2, "aggregation sums contributions");
+        let agg = fab.add_plain(&agg, &reg).unwrap();
+        assert_eq!(agg.packed.unwrap().parts, 3, "plain add is one more contribution");
+        let got = fab.decrypt_reveal(&agg);
+        // Unpacked reference on the same fabric — the legacy path stays
+        // callable alongside packing.
+        let ua = fab.node_encrypt_vec(0, &a);
+        let ub = fab.node_encrypt_vec(1, &b);
+        let uagg = fab.aggregate(vec![ua, ub]).unwrap();
+        let uagg = fab.add_plain(&uagg, &reg).unwrap();
+        let want = fab.decrypt_reveal(&uagg);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "element {i}: packed vs unpacked decode");
+        }
+    }
+
+    /// Packed ciphertexts cross the share boundary correctly: the
+    /// per-slot blinds recombine into the same additive shares the
+    /// unpacked conversion would produce, proven by running the GC
+    /// Newton step on shares from a packed fan-in.
+    #[test]
+    fn packed_to_shares_feeds_newton_step() {
+        let mut fab = RealFabric::new(256, FMT, 51);
+        assert!(fab.enable_packing(4, 3).unwrap());
+        let mut rng = TestRng::new(14);
+        let p = 3;
+        let (a, tri) = random_spd_tri(&mut rng, p);
+        let g: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+        let expect = a.solve_spd(&g).unwrap();
+        let tri_half: Vec<f64> = tri.iter().map(|v| v / 2.0).collect();
+        let g_half: Vec<f64> = g.iter().map(|v| v / 2.0).collect();
+        let e1 = fab.encrypt_packed(&tri_half).unwrap();
+        let e2 = fab.encrypt_packed(&tri_half).unwrap();
+        let eh = fab.aggregate(vec![e1, e2]).unwrap();
+        let g1 = fab.encrypt_packed(&g_half).unwrap();
+        let g2 = fab.encrypt_packed(&g_half).unwrap();
+        let eg = fab.aggregate(vec![g1, g2]).unwrap();
+        let hs = fab.to_shares(&eh).unwrap();
+        let gs = fab.to_shares(&eg).unwrap();
+        assert_eq!(hs.len(), tri_len(p), "shares are per logical element, not per ciphertext");
+        assert_eq!(gs.len(), p);
+        let delta = fab.newton_step(&hs, &gs, p);
+        assert_all_close(&delta, &expect, 1e-3, "packed fan-in newton step");
+    }
+
+    /// Folding past the negotiated fan-in bound — by aggregation, by a
+    /// plain add at the bound, or by mixing packed and unpacked parts —
+    /// is a session error naming `fanin_sum`, never a silent slot carry.
+    #[test]
+    fn packed_fan_in_overflow_rejected() {
+        let mut fab = RealFabric::new(256, FMT, 52);
+        assert!(fab.enable_packing(2, 3).unwrap());
+        let parts: Vec<EncVec> =
+            (0..3).map(|_| fab.encrypt_packed(&[1.0, 2.0]).unwrap()).collect();
+        let err = fab.aggregate(parts).unwrap_err().to_string();
+        assert!(err.contains("fanin_sum"), "{err}");
+        // At the bound: a 2-part aggregate is fine, one more plain add is not.
+        let parts: Vec<EncVec> =
+            (0..2).map(|_| fab.encrypt_packed(&[1.0, 2.0]).unwrap()).collect();
+        let agg = fab.aggregate(parts).unwrap();
+        let err = fab.add_plain(&agg, &[0.1, 0.2]).unwrap_err().to_string();
+        assert!(err.contains("fanin_sum"), "{err}");
+        // Mixing packed and unpacked parts is a session error too.
+        let packed = fab.encrypt_packed(&[1.0, 2.0]).unwrap();
+        let unpacked = fab.node_encrypt_vec(0, &[1.0, 2.0]);
+        let err = fab.aggregate(vec![packed, unpacked]).unwrap_err().to_string();
+        assert!(err.contains("packing mismatch"), "{err}");
+        // The fabric still works after the rejections.
+        let ok = fab.encrypt_packed(&[0.25, -0.25]).unwrap();
+        assert_eq!(fab.decrypt_reveal(&ok), vec![0.25, -0.25]);
+    }
+
+    /// Packed split custody: center-b folds packed ciphertexts without
+    /// layout knowledge, re-validates the self-describing packed Blind
+    /// frame, draws one blind per slot, and the shares recombine in the
+    /// GC exactly as in-process.
+    #[test]
+    fn packed_peer_custody_end_to_end() {
+        use crate::mpc::peer::PeerGcServer;
+
+        let mut server = PeerGcServer::bind("127.0.0.1:0", 0x52).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve_once().unwrap());
+
+        let mut fab = RealFabric::connect_peer(256, FMT, 53, &addr).unwrap();
+        assert!(fab.enable_packing(4, 3).unwrap());
+        let mut rng = TestRng::new(15);
+        let p = 3;
+        let (a, tri) = random_spd_tri(&mut rng, p);
+        let g: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+        let expect = a.solve_spd(&g).unwrap();
+        let tri_half: Vec<f64> = tri.iter().map(|v| v / 2.0).collect();
+        let e1 = fab.encrypt_packed(&tri_half).unwrap();
+        let e2 = fab.encrypt_packed(&tri_half).unwrap();
+        let eh = fab.aggregate(vec![e1, e2]).unwrap();
+        let eg = fab.encrypt_packed(&g).unwrap();
+        let hs = fab.to_shares(&eh).unwrap();
+        let gs = fab.to_shares(&eg).unwrap();
+        assert_eq!(hs.len(), tri_len(p));
+        let delta = fab.newton_step(&hs, &gs, p);
+        assert_all_close(&delta, &expect, 1e-3, "packed peer newton step");
+        drop(fab); // sends Shutdown; center-b exits its session
+        server_thread.join().unwrap();
     }
 }

@@ -51,8 +51,9 @@ use std::time::{Duration, Instant};
 use super::circuits::{
     CholeskyShareProg, ConvergedProg, InverseMaskedProg, NewtonStepProg, SolveProg, SIGMA,
 };
-use super::fabric::{blind_b_half, words_of_bits};
+use super::fabric::{blind_b_half, packed_blinds, words_of_bits};
 use crate::bigint::{BigUint, RandomSource};
+use crate::crypto::packed::{PackedCodec, PackedMeta};
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
 use crate::crypto::rng::ChaChaRng;
 use crate::gc::channel::Channel;
@@ -366,11 +367,17 @@ impl PeerGcClient {
     /// S2 needs the modulus to aggregate, blind and re-encrypt, and the
     /// fixed-point format to size its share words.
     pub fn install_key(&mut self, n: &BigUint, fmt: FixedFmt) -> io::Result<()> {
+        // The packing fields stay zero on the peer link: S2 is keyed at
+        // fabric build time, before the center derives its packing
+        // layout, and the packed Blind frame is self-describing.
         self.send_ctrl(&WireMsg::SetKey {
             n: n.clone(),
             w: fmt.w as u32,
             f: fmt.f,
             epoch: self.epoch,
+            pack_k: 0,
+            pack_slot_bits: 0,
+            pack_max_parts: 0,
         });
         match self.recv_ctrl()? {
             WireMsg::Ack => Ok(()),
@@ -398,10 +405,28 @@ impl PeerGcClient {
 
     /// Blind-convert `cts` to additive shares: S2 draws its blinds,
     /// stores its own halves under `handle`, and returns the blinded
-    /// ciphertexts for S1 to decrypt into its halves.
-    pub fn blind(&mut self, handle: u64, cts: &[Ciphertext]) -> Vec<Ciphertext> {
+    /// ciphertexts for S1 to decrypt into its halves. A `Some(packed)`
+    /// metadata describes a slot-packed payload (wire v6): S2
+    /// re-validates the layout and draws one blind per slot.
+    pub fn blind(
+        &mut self,
+        handle: u64,
+        cts: &[Ciphertext],
+        packed: Option<PackedMeta>,
+    ) -> Vec<Ciphertext> {
         let wire_cts: Vec<BigUint> = cts.iter().map(|c| c.0.clone()).collect();
-        self.send_ctrl(&WireMsg::Blind { handle, cts: wire_cts });
+        let (packed_k, packed_slot_bits, packed_len, packed_parts) = match packed {
+            Some(m) => (m.k, m.slot_bits, m.len as u64, m.parts as u64),
+            None => (0, 0, 0, 0),
+        };
+        self.send_ctrl(&WireMsg::Blind {
+            handle,
+            cts: wire_cts,
+            packed_k,
+            packed_slot_bits,
+            packed_len,
+            packed_parts,
+        });
         match self.recv_ctrl_loud("the blinded ciphertexts") {
             WireMsg::Ciphertexts { cts, .. } => cts.into_iter().map(Ciphertext).collect(),
             // audit:allow(panic-free): S1-side loud-failure contract; the CLI catches the unwind
@@ -709,7 +734,10 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
         });
         match msg {
             WireMsg::Shutdown => return Ok(()),
-            WireMsg::SetKey { n, w, f, epoch } => {
+            WireMsg::SetKey { n, w, f, epoch, .. } => {
+                // The pack_* fields are ignored on the peer link: S2 is
+                // keyed before the center derives its packing layout,
+                // and every packed Blind frame re-describes its layout.
                 // Mirror the node-side re-key rule: a second SetKey on
                 // one session would splice key material mid-protocol,
                 // unless it is a resume re-key under a strictly
@@ -769,12 +797,17 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
                     .encode(),
                 );
             }
-            WireMsg::Blind { handle, cts } => {
+            WireMsg::Blind {
+                handle,
+                cts,
+                packed_k,
+                packed_slot_bits,
+                packed_len,
+                packed_parts,
+            } => {
                 let c =
                     crypto.as_ref().ok_or_else(|| invalid("Blind before SetKey".into()))?;
                 let w = c.fmt.w;
-                let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
-                let bound = BigUint::one().shl(w + SIGMA);
                 let t0 = Instant::now();
                 // Blinds ρ come serially from OUR stream and the b
                 // halves below never leave this process. The blind must
@@ -784,18 +817,80 @@ fn serve_session(mut chan: Channel, seed: u64, handshake_epoch: u64) -> io::Resu
                 // same leak class as the inverse corrections going the
                 // other way. `encrypt_batch` draws randomness serially
                 // and fans the modpows out, like the Aggregate arm.
-                let blinds: Vec<BigUint> =
-                    cts.iter().map(|_| lift.add(&rng.below(&bound))).collect();
-                let enc_blinds =
-                    c.pk.encrypt_batch(&blinds, &mut ChaChaSource(&mut rng), pool::threads());
-                let bvals: Vec<u128> =
-                    blinds.iter().map(|blind| blind_b_half(blind, w)).collect();
-                let pk = &c.pk;
-                let blinded: Vec<BigUint> =
-                    pool::par_map_indexed(cts.len(), pool::threads(), |i| {
-                        // audit:allow(panic-free): i < cts.len(); enc_blinds was built per ct
-                        pk.add(&Ciphertext(cts[i].clone()), &enc_blinds[i]).0
-                    });
+                let (blinded, bvals) = if packed_parts == 0 {
+                    let lift = BigUint::one().shl(w - 1); // C = 2^{w-1}
+                    let bound = BigUint::one().shl(w + SIGMA);
+                    let blinds: Vec<BigUint> =
+                        cts.iter().map(|_| lift.add(&rng.below(&bound))).collect();
+                    let enc_blinds = c.pk.encrypt_batch(
+                        &blinds,
+                        &mut ChaChaSource(&mut rng),
+                        pool::threads(),
+                    );
+                    let bvals: Vec<u128> =
+                        blinds.iter().map(|blind| blind_b_half(blind, w)).collect();
+                    let pk = &c.pk;
+                    let blinded: Vec<BigUint> =
+                        pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                            // audit:allow(panic-free): i < cts.len(); enc_blinds was built per ct
+                            pk.add(&Ciphertext(cts[i].clone()), &enc_blinds[i]).0
+                        });
+                    (blinded, bvals)
+                } else {
+                    // Packed conversion (wire v6). The frame describes
+                    // its own layout; re-derive it through the same
+                    // headroom validation S1 ran, with the claimed
+                    // fan-in as the bound, so a bad or hostile layout
+                    // is rejected here rather than silently wrapping
+                    // our blinds into a neighbouring slot.
+                    let codec = PackedCodec::from_wire(
+                        c.pk.n.bit_len() as u32,
+                        c.fmt,
+                        packed_k,
+                        packed_slot_bits,
+                        packed_parts,
+                    )
+                    .map_err(|e| invalid(format!("Blind claims a bad packed layout: {e}")))?;
+                    let len = packed_len as usize;
+                    if len == 0 || cts.len() != codec.cts_needed(len) {
+                        return Err(invalid(format!(
+                            "packed Blind of {len} values needs {} ciphertexts, got {}",
+                            codec.cts_needed(len),
+                            cts.len()
+                        )));
+                    }
+                    // One blind per logical slot; the b halves must be
+                    // per value, since GcExec later reads one w-bit
+                    // share word per logical value from our custody.
+                    let (rhos, bvals) =
+                        packed_blinds(&mut rng, w, packed_parts as u128, len);
+                    let slot_b = packed_slot_bits as usize;
+                    let k = packed_k as usize;
+                    let masks: Vec<BigUint> = (0..cts.len())
+                        .map(|ci| {
+                            let lo = ci * k;
+                            let hi = lo + codec.slots_in_ct(len, ci);
+                            let mut m = BigUint::zero();
+                            for i in (lo..hi).rev() {
+                                // audit:allow(panic-free): hi <= len and rhos has len entries
+                                m = m.shl(slot_b).add(&rhos[i]);
+                            }
+                            m
+                        })
+                        .collect();
+                    let enc_masks = c.pk.encrypt_batch(
+                        &masks,
+                        &mut ChaChaSource(&mut rng),
+                        pool::threads(),
+                    );
+                    let pk = &c.pk;
+                    let blinded: Vec<BigUint> =
+                        pool::par_map_indexed(cts.len(), pool::threads(), |i| {
+                            // audit:allow(panic-free): i < cts.len(); enc_masks was built per ct
+                            pk.add(&Ciphertext(cts[i].clone()), &enc_masks[i]).0
+                        });
+                    (blinded, bvals)
+                };
                 store.insert(handle, bvals);
                 chan.send_blob(
                     &WireMsg::Ciphertexts {
@@ -1034,7 +1129,7 @@ mod tests {
         // so it can feed the 1-element Converged inputs below): S1's
         // half comes from the blinded decryption, S2's half stays at the
         // server under handle 5.
-        let blinded = client.blind(5, &agg[..1]);
+        let blinded = client.blind(5, &agg[..1], None);
         let mask_w = (1u128 << FMT.w) - 1;
         let a_half = u128_of(&kp.sk.decrypt(&blinded[0])) & mask_w;
         assert_ne!(blinded[0], agg[0], "blinding must change the ciphertext");

@@ -800,11 +800,15 @@ fn readmit_node(
     // state re-install (rebuilding Straus tables is real work).
     conn.transport.set_deadline(opts.round_timeout)?;
     if let Some(key) = key {
+        let (pack_k, pack_slot_bits, pack_max_parts) = pack_fields(key);
         conn.expect_ack(&WireMsg::SetKey {
             n: key.n.clone(),
             w: key.w,
             f: key.f,
             epoch: opts.epoch,
+            pack_k,
+            pack_slot_bits,
+            pack_max_parts,
         })?;
         conn.require_enc = true;
     }
@@ -812,6 +816,16 @@ fn readmit_node(
         conn.expect_ack(&WireMsg::SetHinv { scale: hinv.scale, cts: hinv.cts.clone() })?;
     }
     Ok(conn)
+}
+
+/// The wire v6 `SetKey` packing fields for a fleet key: the negotiated
+/// slot layout, or all zeros for the legacy one-value-per-ciphertext
+/// sessions (`--no-pack`, or a modulus too small to host two slots).
+fn pack_fields(key: &FleetKey) -> (u32, u32, u64) {
+    match key.packing {
+        Some(p) => (p.k, p.slot_bits, p.max_parts),
+        None => (0, 0, 0),
+    }
 }
 
 impl Fleet for RemoteFleet {
@@ -868,8 +882,16 @@ impl Fleet for RemoteFleet {
         // before the round so the SetKey span already carries it (node
         // servers derive the same id when they process the install).
         self.session = obs::session_id(&key.n.to_bytes_le());
-        let req =
-            WireMsg::SetKey { n: key.n.clone(), w: key.w, f: key.f, epoch: self.opts.epoch };
+        let (pack_k, pack_slot_bits, pack_max_parts) = pack_fields(key);
+        let req = WireMsg::SetKey {
+            n: key.n.clone(),
+            w: key.w,
+            f: key.f,
+            epoch: self.opts.epoch,
+            pack_k,
+            pack_slot_bits,
+            pack_max_parts,
+        };
         self.traced_round(wire::TAG_SET_KEY, |c| {
             c.expect_ack(&req)?;
             c.require_enc = true;

@@ -28,6 +28,7 @@ use super::tcp::TcpTransport;
 use super::wire::{self, WireMsg};
 use super::Transport;
 use crate::crypto::fixed::FixedCodec;
+use crate::crypto::packed::PackedCodec;
 use crate::obs;
 use crate::crypto::paillier::{ChaChaSource, Ciphertext, PublicKey};
 use crate::crypto::rng::ChaChaRng;
@@ -266,6 +267,10 @@ struct SessionCrypto {
     /// Broadcast `Enc(H̃⁻¹)` (scale, triangle prepared for repeated
     /// Straus application), once installed.
     hinv: Option<(u32, PreparedHinv)>,
+    /// Slot-packing layout negotiated by [`WireMsg::SetKey`] (wire v6),
+    /// re-validated at this trust boundary. `None` = one value per
+    /// ciphertext (legacy / `--no-pack`).
+    packing: Option<PackedCodec>,
     /// Worker threads for encryption/apply batches.
     threads: usize,
 }
@@ -273,12 +278,45 @@ struct SessionCrypto {
 impl SessionCrypto {
     /// Encrypt a statistics vector at the session scale `f` (randomness
     /// drawn serially, modpows fanned across the session workers — the
-    /// reply bytes are identical for any thread count).
-    fn encrypt_vec(&mut self, vals: &[f64]) -> Vec<crate::bigint::BigUint> {
-        let ms: Vec<crate::bigint::BigUint> =
-            vals.iter().map(|&v| self.codec.encode(v)).collect();
+    /// reply bytes are identical for any thread count). A non-encodable
+    /// value (non-finite or out of the format's range) is a session
+    /// error, not a node panic.
+    fn encrypt_vec(&mut self, vals: &[f64]) -> io::Result<Vec<crate::bigint::BigUint>> {
+        let f = self.codec.frac_bits;
+        let ms: Vec<crate::bigint::BigUint> = vals
+            .iter()
+            .map(|&v| {
+                self.codec.encode_scaled(v, f).map_err(|e| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("statistic does not encode: {e}"),
+                    )
+                })
+            })
+            .collect::<io::Result<_>>()?;
+        Ok(self.encrypt_plaintexts(&ms))
+    }
+
+    /// Pack a statistics vector into radix-2^b slots (wire v6 layout
+    /// from SetKey) and encrypt the packed plaintexts. Callers gate on
+    /// `self.packing` being present.
+    fn encrypt_packed_vec(
+        &mut self,
+        codec: &PackedCodec,
+        vals: &[f64],
+    ) -> io::Result<Vec<crate::bigint::BigUint>> {
+        let ms = codec.pack(vals, self.fmt.f).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("statistic does not pack: {e}"),
+            )
+        })?;
+        Ok(self.encrypt_plaintexts(&ms))
+    }
+
+    fn encrypt_plaintexts(&mut self, ms: &[crate::bigint::BigUint]) -> Vec<crate::bigint::BigUint> {
         self.pk
-            .encrypt_batch(&ms, &mut ChaChaSource(&mut self.rng), self.threads)
+            .encrypt_batch(ms, &mut ChaChaSource(&mut self.rng), self.threads)
             .into_iter()
             .map(|ct| ct.0)
             .collect()
@@ -344,7 +382,7 @@ fn serve_session(
                 })?,
                 name: data.name.split('#').next().unwrap_or("?").to_string(),
             },
-            WireMsg::SetKey { n, w, f, epoch } => {
+            WireMsg::SetKey { n, w, f, epoch, pack_k, pack_slot_bits, pack_max_parts } => {
                 // A second SetKey on one session would rebuild
                 // SessionCrypto with the same per-session seed and
                 // replay the identical DJN exponent stream — with
@@ -368,6 +406,31 @@ fn serve_session(
                 // trust boundary so a bad value is a session error, not
                 // an overflow inside the share arithmetic.
                 let fmt = validate_set_key(&n, w, f)?;
+                // Packing layout (wire v6) is wire-controlled: re-derive
+                // it through the full headroom validation rather than
+                // trusting the center's arithmetic, so a hostile or
+                // buggy layout is a session error here, never a silent
+                // slot wrap in our statistic replies. `pack_k = 0`
+                // keeps the legacy one-value-per-ciphertext path.
+                let packing = if pack_k > 0 {
+                    Some(
+                        PackedCodec::from_wire(
+                            n.bit_len() as u32,
+                            fmt,
+                            pack_k,
+                            pack_slot_bits,
+                            pack_max_parts,
+                        )
+                        .map_err(|e| {
+                            io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                format!("SetKey claims a bad packed layout: {e}"),
+                            )
+                        })?,
+                    )
+                } else {
+                    None
+                };
                 session_id = obs::session_id(&n.to_bytes_le());
                 sp.record_session(session_id);
                 sp.record_u64("epoch", epoch);
@@ -379,6 +442,7 @@ fn serve_session(
                     fmt,
                     rng: ChaChaRng::from_u64_seed(epoch_seed(seed, epoch)),
                     hinv: None,
+                    packing,
                     threads,
                 });
                 WireMsg::Ack
@@ -430,9 +494,16 @@ fn serve_session(
                 let (grad, loglik) = engine.stats(data, &beta, scale);
                 match crypto.as_mut() {
                     Some(c) => {
-                        // Gradient ciphertexts, encrypted loglik share last.
-                        let mut cts = c.encrypt_vec(&grad);
-                        cts.extend(c.encrypt_vec(&[loglik]));
+                        // Gradient ciphertexts (slot-packed when the
+                        // session negotiated a layout), encrypted loglik
+                        // share last — always its own unpacked
+                        // ciphertext, since the center folds logliks on
+                        // a different fan-in path than the gradient.
+                        let mut cts = match c.packing {
+                            Some(codec) => c.encrypt_packed_vec(&codec, &grad)?,
+                            None => c.encrypt_vec(&grad)?,
+                        };
+                        cts.extend(c.encrypt_vec(&[loglik])?);
                         WireMsg::Ciphertexts {
                             scale: c.fmt.f,
                             secs: t0.elapsed().as_secs_f64(),
@@ -449,12 +520,12 @@ fn serve_session(
             WireMsg::GramReq { scale } => {
                 let t0 = Instant::now();
                 let h = engine.gram_quarter(data, scale);
-                matrix_reply(pack_tri(&h), t0, crypto.as_mut())
+                matrix_reply(pack_tri(&h), t0, crypto.as_mut())?
             }
             WireMsg::HessReq { beta, scale } => {
                 let t0 = Instant::now();
                 let h = engine.hessian(data, &beta, scale);
-                matrix_reply(pack_tri(&h), t0, crypto.as_mut())
+                matrix_reply(pack_tri(&h), t0, crypto.as_mut())?
             }
             WireMsg::StepReq { beta, scale } => {
                 let t0 = Instant::now();
@@ -482,7 +553,7 @@ fn serve_session(
                         ))
                     }
                 };
-                let loglik_cts = c.encrypt_vec(&[loglik]);
+                let loglik_cts = c.encrypt_vec(&[loglik])?;
                 let secs = t0.elapsed().as_secs_f64();
                 // Two frames: the partial step (the broadcast's scale
                 // plus f from the multiply-by-constant), then the
@@ -516,16 +587,24 @@ fn serve_session(
     }
 }
 
-/// Package a packed-triangle statistic as the session's reply form.
-fn matrix_reply(tri: Vec<f64>, t0: Instant, crypto: Option<&mut SessionCrypto>) -> WireMsg {
-    match crypto {
-        Some(c) => WireMsg::Ciphertexts {
-            scale: c.fmt.f,
-            secs: t0.elapsed().as_secs_f64(),
-            cts: c.encrypt_vec(&tri),
-        },
+/// Package a packed-triangle statistic as the session's reply form
+/// (slot-packed into ⌈tri_len/k⌉ ciphertexts when the session
+/// negotiated a packing layout).
+fn matrix_reply(
+    tri: Vec<f64>,
+    t0: Instant,
+    crypto: Option<&mut SessionCrypto>,
+) -> io::Result<WireMsg> {
+    Ok(match crypto {
+        Some(c) => {
+            let cts = match c.packing {
+                Some(codec) => c.encrypt_packed_vec(&codec, &tri)?,
+                None => c.encrypt_vec(&tri)?,
+            };
+            WireMsg::Ciphertexts { scale: c.fmt.f, secs: t0.elapsed().as_secs_f64(), cts }
+        }
         None => WireMsg::NodeReply { values: tri, loglik: 0.0, secs: t0.elapsed().as_secs_f64() },
-    }
+    })
 }
 
 #[cfg(test)]
@@ -613,7 +692,7 @@ mod tests {
         let addr = server.local_addr().unwrap().to_string();
         let handle = std::thread::spawn(move || server.serve_once());
         let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
-        let key = FleetKey { n: kp.pk.n.clone(), w: 40, f: 24 };
+        let key = FleetKey { n: kp.pk.n.clone(), w: 40, f: 24, packing: None };
         fleet.install_key(&key).unwrap();
         let second = fleet.install_key(&key);
         assert!(second.is_err(), "second SetKey must fail the round");
@@ -643,6 +722,9 @@ mod tests {
             w: 40,
             f: 24,
             epoch,
+            pack_k: 0,
+            pack_slot_bits: 0,
+            pack_max_parts: 0,
         };
         let exchange = |t: &mut TcpTransport, msg: &WireMsg| -> io::Result<WireMsg> {
             t.send_msg(msg.encode())?;
@@ -688,9 +770,9 @@ mod tests {
         let mut rng = crate::crypto::rng::ChaChaRng::from_u64_seed(22);
         let kp = crate::crypto::paillier::Keypair::generate(256, &mut rng);
         for (key, what) in [
-            (FleetKey { n: kp.pk.n.clone(), w: 128, f: 24 }, "width 128"),
-            (FleetKey { n: kp.pk.n.clone(), w: 40, f: 40 }, "f = w"),
-            (FleetKey { n: BigUint::from_u64(77), w: 40, f: 24 }, "tiny modulus"),
+            (FleetKey { n: kp.pk.n.clone(), w: 128, f: 24, packing: None }, "width 128"),
+            (FleetKey { n: kp.pk.n.clone(), w: 40, f: 40, packing: None }, "f = w"),
+            (FleetKey { n: BigUint::from_u64(77), w: 40, f: 24, packing: None }, "tiny modulus"),
         ] {
             let d = synthesize("badkey", 60, 3, 3);
             let mut server = NodeServer::bind("127.0.0.1:0", d).unwrap().with_seed(6);

@@ -52,7 +52,14 @@ pub const MAGIC: [u8; 4] = *b"PLGT";
 /// node-side replay guard distinguishes a legitimate resume re-key
 /// (new epoch ⇒ new DJN exponent stream) from a randomness-replaying
 /// repeat of the same `SetKey`.
-pub const VERSION: u16 = 5;
+///
+/// v6: ciphertext packing — [`WireMsg::SetKey`] negotiates the slot
+/// layout (`pack_k`/`pack_slot_bits`/`pack_max_parts`; `pack_k = 0`
+/// keeps the session unpacked, so packed centers and `--no-pack` nodes
+/// interoperate), and [`WireMsg::Blind`] describes its own payload's
+/// packing (`packed_parts = 0` = unpacked) so the S2 share conversion
+/// needs no session-level packing state.
+pub const VERSION: u16 = 6;
 
 /// Hard cap on a single frame's payload (1 GiB): a corrupt or hostile
 /// length prefix must not drive allocation.
@@ -572,6 +579,18 @@ pub enum WireMsg {
         /// node derives a fresh encryption-randomness stream per epoch,
         /// so an equal-or-lower epoch is rejected as a replay.
         epoch: u64,
+        /// Slot count of the negotiated packing layout (wire v6); `0`
+        /// keeps the session unpacked (the legacy one-value-per-
+        /// ciphertext wire form).
+        pack_k: u32,
+        /// Slot width in bits of the negotiated packing layout (`0`
+        /// when unpacked).
+        pack_slot_bits: u32,
+        /// Fan-in bound the packing layout was proven against (`0` when
+        /// unpacked). The node re-validates the whole layout against
+        /// its own headroom terms — a hostile center cannot negotiate
+        /// an overflowing one.
+        pack_max_parts: u64,
     },
     /// Center → node: the encrypted inverse Hessian bound `Enc(H̃⁻¹)`
     /// (packed lower triangle), broadcast once after PrivLogit-Local
@@ -694,6 +713,20 @@ pub enum WireMsg {
         handle: u64,
         /// Scale-f ciphertexts to convert.
         cts: Vec<BigUint>,
+        /// Slot count when the ciphertexts are packed (wire v6); `0`
+        /// with `packed_parts = 0` means one value per ciphertext. The
+        /// message is self-describing so S2 needs no session-level
+        /// packing state (the peer key install happens before the
+        /// center plans its layout).
+        packed_k: u32,
+        /// Slot width in bits (packed payloads only).
+        packed_slot_bits: u32,
+        /// Logical value count across the packed ciphertexts.
+        packed_len: u64,
+        /// Biased contributions per slot (`0` = unpacked payload). S2
+        /// validates the claimed layout's headroom before drawing
+        /// per-slot blinds.
+        packed_parts: u64,
     },
     /// Install explicit S2 share values under a handle. This frame DOES
     /// carry share material across the wire — it exists for test drivers
@@ -756,12 +789,15 @@ impl WireMsg {
             }
             WireMsg::MetaReq => w.put_u8(TAG_META_REQ),
             WireMsg::Shutdown => w.put_u8(TAG_SHUTDOWN),
-            WireMsg::SetKey { n, w: width, f, epoch } => {
+            WireMsg::SetKey { n, w: width, f, epoch, pack_k, pack_slot_bits, pack_max_parts } => {
                 w.put_u8(TAG_SET_KEY);
                 w.put_biguint(n);
                 w.put_u32(*width);
                 w.put_u32(*f);
                 w.put_u64(*epoch);
+                w.put_u32(*pack_k);
+                w.put_u32(*pack_slot_bits);
+                w.put_u64(*pack_max_parts);
             }
             WireMsg::SetHinv { scale, cts } => {
                 w.put_u8(TAG_SET_HINV);
@@ -852,13 +888,24 @@ impl WireMsg {
                     }
                 }
             }
-            WireMsg::Blind { handle, cts } => {
+            WireMsg::Blind {
+                handle,
+                cts,
+                packed_k,
+                packed_slot_bits,
+                packed_len,
+                packed_parts,
+            } => {
                 w.put_u8(TAG_BLIND);
                 w.put_u64(*handle);
                 w.put_u32(cts.len() as u32);
                 for c in cts {
                     w.put_biguint(c);
                 }
+                w.put_u32(*packed_k);
+                w.put_u32(*packed_slot_bits);
+                w.put_u64(*packed_len);
+                w.put_u64(*packed_parts);
             }
             WireMsg::ShareInput { handle, vals } => {
                 w.put_u8(TAG_SHARE_INPUT);
@@ -896,7 +943,10 @@ impl WireMsg {
                 let w = r.get_u32()?;
                 let f = r.get_u32()?;
                 let epoch = r.get_u64()?;
-                WireMsg::SetKey { n, w, f, epoch }
+                let pack_k = r.get_u32()?;
+                let pack_slot_bits = r.get_u32()?;
+                let pack_max_parts = r.get_u64()?;
+                WireMsg::SetKey { n, w, f, epoch, pack_k, pack_slot_bits, pack_max_parts }
             }
             TAG_SET_HINV => {
                 let scale = r.get_u32()?;
@@ -1000,7 +1050,11 @@ impl WireMsg {
                 for _ in 0..count {
                     cts.push(r.get_biguint()?);
                 }
-                WireMsg::Blind { handle, cts }
+                let packed_k = r.get_u32()?;
+                let packed_slot_bits = r.get_u32()?;
+                let packed_len = r.get_u64()?;
+                let packed_parts = r.get_u64()?;
+                WireMsg::Blind { handle, cts, packed_k, packed_slot_bits, packed_len, packed_parts }
             }
             TAG_SHARE_INPUT => {
                 let handle = r.get_u64()?;
@@ -1066,8 +1120,24 @@ mod tests {
             WireMsg::Ciphertexts { scale: 0, secs: 0.0, cts: vec![] },
             WireMsg::GarbledTables((0..200u8).collect()),
             WireMsg::OtMsg(vec![]),
-            WireMsg::SetKey { n: rand_big(rng), w: 40, f: 24, epoch: 0 },
-            WireMsg::SetKey { n: rand_big(rng), w: 40, f: 24, epoch: rng.next_u64() },
+            WireMsg::SetKey {
+                n: rand_big(rng),
+                w: 40,
+                f: 24,
+                epoch: 0,
+                pack_k: 0,
+                pack_slot_bits: 0,
+                pack_max_parts: 0,
+            },
+            WireMsg::SetKey {
+                n: rand_big(rng),
+                w: 40,
+                f: 24,
+                epoch: rng.next_u64(),
+                pack_k: 23,
+                pack_slot_bits: 87,
+                pack_max_parts: 6,
+            },
             WireMsg::SetHinv {
                 scale: 24,
                 cts: (0..6).map(|_| rand_big(rng)).collect(),
@@ -1117,6 +1187,18 @@ mod tests {
             WireMsg::Blind {
                 handle: rng.next_u64(),
                 cts: (0..5).map(|_| rand_big(rng)).collect(),
+                packed_k: 0,
+                packed_slot_bits: 0,
+                packed_len: 0,
+                packed_parts: 0,
+            },
+            WireMsg::Blind {
+                handle: rng.next_u64(),
+                cts: (0..3).map(|_| rand_big(rng)).collect(),
+                packed_k: 2,
+                packed_slot_bits: 86,
+                packed_len: 6,
+                packed_parts: 4,
             },
             WireMsg::ShareInput {
                 handle: rng.next_u64(),

@@ -120,7 +120,21 @@ pub fn reg_diag_tri(p: usize, lambda_scaled: f64) -> Vec<f64> {
 /// Wrap node-encrypted ciphertext residues as the fabric's
 /// ciphertext-vector form (consuming — no per-ciphertext copies).
 pub fn enc_vec_from(scale: u32, cts: Vec<BigUint>) -> EncVec {
-    EncVec { scale, data: EncData::Real(cts.into_iter().map(Ciphertext).collect()) }
+    EncVec { scale, packed: None, data: EncData::Real(cts.into_iter().map(Ciphertext).collect()) }
+}
+
+/// Wrap node-encrypted *slot-packed* ciphertexts: `len` logical values
+/// in `⌈len/k⌉` ciphertexts, one biased contribution per slot.
+pub fn enc_vec_from_packed(
+    scale: u32,
+    cts: Vec<BigUint>,
+    meta: crate::crypto::packed::PackedMeta,
+) -> EncVec {
+    EncVec {
+        scale,
+        packed: Some(meta),
+        data: EncData::Real(cts.into_iter().map(Ciphertext).collect()),
+    }
 }
 
 /// Extract the raw ciphertexts of a real [`EncVec`] for the fleet wire
@@ -171,11 +185,19 @@ pub fn node_stats_round<F: SecureFabric>(
             }
             NodePayload::Enc(stat) => {
                 // The node encrypted grad ‖ loglik itself; split them.
+                // Under a negotiated packing layout the gradient rides
+                // in ⌈p/k⌉ slot-packed ciphertexts; the loglik share is
+                // always its own trailing unpacked ciphertext (it folds
+                // on a different fan-in path).
+                let grad_cts = match fab.packing() {
+                    Some(codec) => codec.cts_needed(p),
+                    None => p,
+                };
                 anyhow::ensure!(
-                    stat.cts.len() == p + 1,
-                    "node {j} stats reply has {} ciphertexts, expected p+1 = {}",
+                    stat.cts.len() == grad_cts + 1,
+                    "node {j} stats reply has {} ciphertexts, expected {} + loglik",
                     stat.cts.len(),
-                    p + 1
+                    grad_cts
                 );
                 anyhow::ensure!(
                     stat.scale == f,
@@ -185,7 +207,10 @@ pub fn node_stats_round<F: SecureFabric>(
                 fab.ledger_mut().paillier_encs += stat.cts.len() as u64;
                 let EncStat { scale, mut cts } = stat;
                 let ll = cts.pop().expect("length checked above");
-                enc_g.push(enc_vec_from(scale, cts));
+                enc_g.push(match fab.packing() {
+                    Some(codec) => enc_vec_from_packed(scale, cts, codec.meta(p)),
+                    None => enc_vec_from(scale, cts),
+                });
                 enc_l.push(enc_vec_from(scale, vec![ll]));
             }
         }
@@ -213,9 +238,13 @@ pub fn node_matrix_round<F: SecureFabric>(
         match r.payload {
             NodePayload::Plain { values, .. } => enc.push(fab.node_encrypt_vec(j, &values)),
             NodePayload::Enc(stat) => {
+                let want = match fab.packing() {
+                    Some(codec) => codec.cts_needed(expect_len),
+                    None => expect_len,
+                };
                 anyhow::ensure!(
-                    stat.cts.len() == expect_len,
-                    "node {j} matrix reply has {} ciphertexts, expected {expect_len}",
+                    stat.cts.len() == want,
+                    "node {j} matrix reply has {} ciphertexts, expected {want}",
                     stat.cts.len()
                 );
                 anyhow::ensure!(
@@ -224,7 +253,10 @@ pub fn node_matrix_round<F: SecureFabric>(
                     stat.scale
                 );
                 fab.ledger_mut().paillier_encs += stat.cts.len() as u64;
-                enc.push(enc_vec_from(stat.scale, stat.cts));
+                enc.push(match fab.packing() {
+                    Some(codec) => enc_vec_from_packed(stat.scale, stat.cts, codec.meta(expect_len)),
+                    None => enc_vec_from(stat.scale, stat.cts),
+                });
             }
         }
     }
@@ -243,7 +275,7 @@ pub fn aggregate_loglik<F: SecureFabric>(
 ) -> anyhow::Result<EncVec> {
     let l = fab.aggregate(enc_l)?;
     let b2: f64 = beta.iter().map(|b| b * b).sum();
-    Ok(fab.add_plain(&l, &[-0.5 * lambda * b2 * scale]))
+    fab.add_plain(&l, &[-0.5 * lambda * b2 * scale])
 }
 
 /// Aggregate per-node gradients and apply the public `−λβ·scale` term
@@ -257,7 +289,7 @@ pub fn aggregate_gradient<F: SecureFabric>(
 ) -> anyhow::Result<EncVec> {
     let g = fab.aggregate(enc_g)?;
     let reg: Vec<f64> = beta.iter().map(|b| -lambda * b * scale).collect();
-    Ok(fab.add_plain(&g, &reg))
+    fab.add_plain(&g, &reg)
 }
 
 /// Total time (compute + modeled network) from a fabric's ledger.

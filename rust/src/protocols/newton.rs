@@ -47,7 +47,7 @@ pub fn run_newton<F: SecureFabric>(
         let l = aggregate_loglik(fab, enc_l, &beta, cfg.lambda, scale)?;
         let h = {
             let agg = fab.aggregate(enc_h)?;
-            fab.add_plain(&agg, &reg_diag_tri(p, cfg.lambda * scale))
+            fab.add_plain(&agg, &reg_diag_tri(p, cfg.lambda * scale))?
         };
 
         // --- secure convergence check ---

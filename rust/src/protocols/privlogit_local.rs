@@ -65,7 +65,7 @@ pub fn setup_inverse<F: SecureFabric>(
     let replies = fleet.gram(scale)?;
     let enc_h = node_matrix_round(fab, replies, crate::mpc::tri_len(p))?;
     let agg = fab.aggregate(enc_h)?;
-    let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale));
+    let h = fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale))?;
     let h_shares = fab.to_shares(&h)?;
     // One garbled program: Cholesky + triangular inverse + TᵀT + masked
     // wide reveal, re-encrypted so nodes receive Enc(H̃⁻¹) (scale f).

@@ -77,7 +77,7 @@ pub fn run_ridge<F: SecureFabric>(
 
     let a = {
         let agg = fab.aggregate(enc_gram)?;
-        fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale))
+        fab.add_plain(&agg, &reg_diag_tri(p, lambda * scale))?
     };
     let b = fab.aggregate(enc_xty)?;
 

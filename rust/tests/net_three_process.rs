@@ -17,7 +17,7 @@ use privlogit::coordinator::{run_protocol, Backend, CenterLink};
 use privlogit::data::{synthesize, Dataset};
 use privlogit::gc::word::FixedFmt;
 use privlogit::linalg::r_squared;
-use privlogit::mpc::{PeerGcServer, RealFabric};
+use privlogit::mpc::{PeerGcServer, RealFabric, SecureFabric};
 use privlogit::net::wire::{self, WireMsg};
 use privlogit::net::{NodeServer, RemoteFleet, TcpTransport};
 use privlogit::obs::json::{self as pjson, JsonValue};
@@ -162,6 +162,165 @@ fn three_center_split_ciphertext_only_fleet_wire() {
     drop(fleet); // Shutdown to the nodes
     drop(fab); // PeerGcClient drop sends Shutdown to center-b
     peer_thread.join().unwrap();
+}
+
+/// One full three-node topology (3 node servers + center-b + center-a)
+/// running PrivLogit-Local over real TCP, packed or unpacked. Returns
+/// the run report and the negotiated slot count `k` (0 when unpacked).
+fn run_packed_topology(
+    parts: Vec<Dataset>,
+    cfg: &ProtocolConfig,
+    packed: bool,
+    seed: u64,
+) -> (privlogit::protocols::RunReport, u32) {
+    let node_addrs = spawn_node_servers(parts);
+    let mut peer = PeerGcServer::bind("127.0.0.1:0", seed ^ 0xB0B).unwrap();
+    let peer_addr = peer.local_addr().unwrap().to_string();
+    let peer_thread = std::thread::spawn(move || peer.serve_once().unwrap());
+    let mut fleet = RemoteFleet::connect(&node_addrs).unwrap();
+    let mut fab = RealFabric::connect_peer(256, FMT, seed, &peer_addr).unwrap();
+    let mut k = 0;
+    if packed {
+        // The coordinator's fan-in bound: one contribution per org plus
+        // the regularizer `add_plain` and one spare (coordinator/mod.rs).
+        let enabled = fab
+            .enable_packing(fleet.orgs() as u64 + 2, fleet.p() as u64)
+            .expect("a 256-bit modulus must host a packed layout at w = 40");
+        assert!(enabled, "packing must engage at these parameters");
+        k = fab.packing().expect("layout just enabled").k();
+    }
+    fleet.install_key(&fab.fleet_key()).unwrap();
+    let report = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, cfg).unwrap();
+    drop(fleet);
+    drop(fab);
+    peer_thread.join().unwrap();
+    (report, k)
+}
+
+/// The tentpole's acceptance bar: the packed topology converges to the
+/// plaintext optimum over real TCP while the statistic fan-in — the
+/// Gram round; step replies are deliberately unpacked (honest scope,
+/// docs/ARCHITECTURE.md §Packing) — costs at least (k/2)× fewer reply
+/// bytes than the identical unpacked topology, and the per-tag byte
+/// partition of the wire ledger still balances exactly in packed mode.
+#[test]
+fn packed_statistic_fanin_shrinks_wire_bytes() {
+    let d = synthesize("packed-wire", 900, 4, 91);
+    let cfg = ProtocolConfig::default();
+    let truth = fit(
+        &d.partition(3),
+        Method::Newton,
+        OptimConfig { lambda: cfg.lambda, tol: cfg.tol, max_iters: cfg.max_iters },
+    );
+
+    let (packed, k) = run_packed_topology(d.partition(3), &cfg, true, 0xA11CE);
+    let (plain, _) = run_packed_topology(d.partition(3), &cfg, false, 0xFACE);
+    assert!(k >= 2, "packing engaged with k = {k}");
+    for (label, r) in [("packed", &packed), ("unpacked", &plain)] {
+        assert!(r.converged, "{label} run must converge");
+        let r2 = r_squared(&r.beta, &truth.beta);
+        assert!(r2 > 0.9999, "{label} R² = {r2} vs plaintext optimum");
+    }
+
+    // Statistic-fan-in bytes: packed Gram replies carry ⌈tri/k⌉
+    // ciphertexts instead of tri, so reply bytes shrink ≥ k/2 (framing
+    // overhead eats part of the ideal k×):  2·unpacked ≥ k·packed.
+    let gram_recv = |r: &privlogit::protocols::RunReport| -> u64 {
+        r.ledger.fleet_tag_flows[&wire::TAG_GRAM_REQ].recv_bytes
+    };
+    assert!(
+        2 * gram_recv(&plain) >= u64::from(k) * gram_recv(&packed),
+        "Gram reply bytes must shrink ≥ (k/2)× = {k}/2: packed {} vs unpacked {}",
+        gram_recv(&packed),
+        gram_recv(&plain)
+    );
+    assert!(gram_recv(&packed) < gram_recv(&plain), "packed mode must strictly shrink");
+
+    // The per-tag ledger partition holds for the packed wire too: every
+    // frame is tagged, so the per-tag sums reproduce the aggregate
+    // counters exactly — packing changed frame *sizes*, not accounting.
+    let l = &packed.ledger;
+    assert_eq!(
+        l.fleet_bytes_sent,
+        l.fleet_tag_flows.values().map(|f| f.sent_bytes).sum::<u64>(),
+        "packed fleet tag flows must partition sent bytes: {:?}",
+        l.fleet_tag_flows
+    );
+    assert_eq!(
+        l.fleet_bytes_recv,
+        l.fleet_tag_flows.values().map(|f| f.recv_bytes).sum::<u64>(),
+        "packed fleet tag flows must partition received bytes: {:?}",
+        l.fleet_tag_flows
+    );
+}
+
+/// Packing is negotiated per session (wire v6 `SetKey`): the very same
+/// node-server endpoints serve a packed center and then a `--no-pack`
+/// center back-to-back, both topologies converge, and they agree on the
+/// optimum — the fixed-point arithmetic is identical in both modes, so
+/// the iterates match to rounding.
+#[test]
+fn packed_and_unpacked_topologies_interop() {
+    let d = synthesize("interop", 900, 4, 92);
+    let cfg = ProtocolConfig::default();
+
+    // Node servers and center-b each serve two sequential sessions.
+    let node_addrs: Vec<String> = d
+        .partition(3)
+        .into_iter()
+        .enumerate()
+        .map(|(j, shard)| {
+            let mut server = NodeServer::bind("127.0.0.1:0", shard)
+                .unwrap()
+                .with_seed(0x1A7E ^ j as u64);
+            let addr = server.local_addr().unwrap().to_string();
+            std::thread::spawn(move || {
+                for _ in 0..2 {
+                    server.serve_once().unwrap();
+                }
+            });
+            addr
+        })
+        .collect();
+    let mut peer = PeerGcServer::bind("127.0.0.1:0", 0x5EED).unwrap();
+    let peer_addr = peer.local_addr().unwrap().to_string();
+    let peer_thread = std::thread::spawn(move || {
+        for _ in 0..2 {
+            peer.serve_once().unwrap();
+        }
+    });
+
+    let run = |packed: bool, seed: u64| -> privlogit::protocols::RunReport {
+        let mut fleet = RemoteFleet::connect(&node_addrs).unwrap();
+        let mut fab = RealFabric::connect_peer(256, FMT, seed, &peer_addr).unwrap();
+        if packed {
+            assert!(fab.enable_packing(fleet.orgs() as u64 + 2, fleet.p() as u64).unwrap());
+        }
+        fleet.install_key(&fab.fleet_key()).unwrap();
+        let report = Protocol::PrivLogitLocal.run(&mut fab, &mut fleet, &cfg).unwrap();
+        drop(fleet);
+        drop(fab);
+        report
+    };
+
+    let packed = run(true, 0xC0FFEE);
+    let plain = run(false, 0xDECAF);
+    peer_thread.join().unwrap();
+
+    assert!(packed.converged && plain.converged, "both sessions must converge");
+    assert_eq!(packed.iterations, plain.iterations, "identical fixed-point trajectories");
+    for (i, (a, b)) in packed.beta.iter().zip(&plain.beta).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-12,
+            "β[{i}] diverges between packed ({a}) and unpacked ({b}) sessions"
+        );
+    }
+    // The negotiation really flipped modes: the packed session's Gram
+    // fan-in crossed in strictly fewer reply bytes.
+    let gram = |r: &privlogit::protocols::RunReport| -> u64 {
+        r.ledger.fleet_tag_flows[&wire::TAG_GRAM_REQ].recv_bytes
+    };
+    assert!(gram(&packed) < gram(&plain), "packed {} vs unpacked {}", gram(&packed), gram(&plain));
 }
 
 /// A node that acks the key install but then replies with the wrong

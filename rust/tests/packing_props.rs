@@ -1,0 +1,280 @@
+//! Property tests for the ciphertext slot-packing codec (ISSUE 10
+//! satellite 1): a seeded-random sweep over (modulus bits, fixed-point
+//! format, slot count k, node count n, magnitudes including the exact
+//! slot maximum and negative totals) proving that
+//! pack → homomorphic-sum → unpack equals the plaintext fixed-point
+//! sums *bit-exactly*, and that every overflow-capable configuration is
+//! rejected at session setup with an error naming the violated headroom
+//! term (adversarial boundary: the layout one bit past each budget).
+
+use privlogit::bigint::BigUint;
+use privlogit::crypto::paillier::ChaChaSource;
+use privlogit::crypto::{ChaChaRng, Keypair, PackError, PackedCodec, BLIND_SIGMA};
+use privlogit::gc::word::FixedFmt;
+
+/// Deterministic xorshift over the test's own seed stream so the sweep
+/// is reproducible from the seed alone.
+struct Sweep(ChaChaRng);
+
+impl Sweep {
+    fn below(&mut self, bound: u64) -> u64 {
+        self.0.next_u64() % bound
+    }
+}
+
+/// The plaintext reference: per-value fixed-point encodings
+/// (`round(v·2^f)`, half away from zero — exactly what both
+/// `FixedCodec::encode_scaled` and `PackedCodec::pack` compute), summed
+/// as integers, decoded as `sum / 2^f`. Both halves are exact f64
+/// operations at these magnitudes, so equality below is bit-equality.
+fn plaintext_sums(vecs: &[Vec<f64>], f: u32) -> Vec<f64> {
+    let len = vecs[0].len();
+    let scale = (f as f64).exp2();
+    (0..len)
+        .map(|i| {
+            let total: i128 = vecs
+                .iter()
+                .map(|v| {
+                    let scaled = v[i] * scale;
+                    scaled.abs().round() as i128 * if scaled < 0.0 { -1 } else { 1 }
+                })
+                .sum();
+            total as f64 / scale
+        })
+        .collect()
+}
+
+/// Draw one per-node value vector: random magnitudes inside the
+/// per-value budget, seasoned with the budget maximum in both signs so
+/// slot boundaries are exercised, and enough negatives that some sums
+/// wrap below zero. The budget is additionally capped at 2^48 so every
+/// reference sum below stays exactly representable in f64 — the
+/// dedicated slot-max test exercises the true `2^(w−1)−1` boundary.
+fn draw_vec(sweep: &mut Sweep, len: usize, fmt: FixedFmt) -> Vec<f64> {
+    let budget: u64 = (1u64 << (fmt.w - 1).min(48)) - 1;
+    let scale = (fmt.f as f64).exp2();
+    (0..len)
+        .map(|i| {
+            let mag = match sweep.below(8) {
+                0 => budget, // exact slot max
+                1 => 0,
+                _ => sweep.below(budget),
+            };
+            let sign = if (i + sweep.below(2) as usize) % 2 == 0 { 1.0 } else { -1.0 };
+            sign * mag as f64 / scale
+        })
+        .collect()
+}
+
+/// The tentpole property, over *real Paillier*: n nodes each pack and
+/// encrypt a vector; the ciphertexts are folded homomorphically; the
+/// decrypted plaintexts unpack to the bit-exact plaintext sums. Sweeps
+/// formats, lengths (including non-multiples of k) and node counts.
+#[test]
+fn packed_homomorphic_sums_are_bit_exact() {
+    let mut rng = ChaChaRng::from_u64_seed(0x5107_5107);
+    let mut sweep = Sweep(ChaChaRng::from_u64_seed(0xFA71_1A5));
+    for (modulus_bits, fmt) in [
+        (384usize, FixedFmt { w: 40, f: 24 }),
+        (384, FixedFmt { w: 32, f: 16 }),
+        (512, FixedFmt { w: 48, f: 20 }),
+        (512, FixedFmt { w: 24, f: 12 }),
+    ] {
+        let kp = Keypair::generate(modulus_bits, &mut rng);
+        let real_bits = kp.pk.n.bit_len() as u32;
+        for nodes in [2usize, 4, 7] {
+            let max_parts = nodes as u64 + 2;
+            let codec = match PackedCodec::plan(real_bits, fmt, max_parts, 8) {
+                Ok(c) => c,
+                Err(PackError::Capacity { .. }) => continue, // modulus too small: valid fallback
+                Err(e) => panic!("plan must only fail with Capacity here: {e}"),
+            };
+            assert!(codec.k() >= 2, "a planned layout packs at least two slots");
+            for len in [1usize, codec.k() as usize, codec.k() as usize * 2 + 1] {
+                let vecs: Vec<Vec<f64>> =
+                    (0..nodes).map(|_| draw_vec(&mut sweep, len, fmt)).collect();
+                // Pack + encrypt per node, fold homomorphically.
+                let mut acc: Option<Vec<privlogit::crypto::Ciphertext>> = None;
+                for v in &vecs {
+                    let ms = codec.pack(v, fmt.f).expect("in-budget values pack");
+                    assert_eq!(ms.len(), codec.cts_needed(len));
+                    let cts: Vec<_> =
+                        ms.iter().map(|m| kp.pk.encrypt(m, &mut ChaChaSource(&mut rng))).collect();
+                    acc = Some(match acc {
+                        None => cts,
+                        Some(a) => {
+                            a.iter().zip(&cts).map(|(x, y)| kp.pk.add(x, y)).collect()
+                        }
+                    });
+                }
+                let ms: Vec<BigUint> =
+                    acc.unwrap().iter().map(|ct| kp.sk.decrypt(ct)).collect();
+                let got = codec
+                    .unpack_vec(&ms, len, nodes as u128, fmt.f)
+                    .expect("honest packed sum unpacks");
+                let want = plaintext_sums(&vecs, fmt.f);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "slot {i} of len={len} nodes={nodes} fmt={fmt:?}: {g} != {w}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The same property on raw plaintexts (no encryption) over a much
+/// larger seeded sweep — hundreds of random configurations, since each
+/// trial is microseconds without Paillier. The homomorphic fold *is*
+/// plaintext addition of packed integers, so this covers the codec's
+/// arithmetic at volume while the test above pins the crypto round-trip.
+#[test]
+fn packed_plaintext_sum_sweep() {
+    let mut sweep = Sweep(ChaChaRng::from_u64_seed(0xD15C_0DEC));
+    let mut trials = 0;
+    for _ in 0..400 {
+        let w = 16 + sweep.below(48) as usize; // 16..64
+        let f = sweep.below(w as u64 - 1) as u32; // f < w
+        let fmt = FixedFmt { w, f };
+        let nodes = 2 + sweep.below(9) as usize; // 2..=10
+        let max_parts = nodes as u64 + sweep.below(3);
+        let modulus_bits = 256 + sweep.below(4) as u32 * 256; // 256..1024
+        let codec = match PackedCodec::plan(modulus_bits, fmt, max_parts, 1 + sweep.below(16)) {
+            Ok(c) => c,
+            Err(PackError::Capacity { .. }) => continue,
+            Err(e) => panic!("plan must only fail with Capacity here: {e}"),
+        };
+        trials += 1;
+        let len = 1 + sweep.below(codec.k() as u64 * 3) as usize;
+        let vecs: Vec<Vec<f64>> = (0..nodes).map(|_| draw_vec(&mut sweep, len, fmt)).collect();
+        let mut acc: Option<Vec<BigUint>> = None;
+        for v in &vecs {
+            let ms = codec.pack(v, fmt.f).expect("in-budget values pack");
+            acc = Some(match acc {
+                None => ms,
+                Some(a) => a.iter().zip(&ms).map(|(x, y)| x.add(y)).collect(),
+            });
+        }
+        let got = codec
+            .unpack_vec(&acc.unwrap(), len, nodes as u128, fmt.f)
+            .expect("honest packed sum unpacks");
+        let want = plaintext_sums(&vecs, fmt.f);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "fmt={fmt:?} nodes={nodes} len={len}");
+        }
+    }
+    assert!(trials >= 100, "sweep must exercise at least 100 viable configs, got {trials}");
+}
+
+/// Adversarial setup boundaries: for each headroom term, the layout
+/// exactly at the budget validates and the layout one bit past it is
+/// rejected with an error *naming that term* — the codec never accepts
+/// a configuration it cannot prove overflow-free.
+#[test]
+fn overflow_configs_rejected_at_setup_boundary() {
+    let fmt = FixedFmt { w: 40, f: 24 };
+    let w = fmt.w as u32;
+    let max_parts = 6u64; // bitlen = 3
+    let bitlen = 64 - max_parts.leading_zeros();
+    let blind_need = w + bitlen + BLIND_SIGMA + 1; // the binding slot budget
+    let roomy = 4096; // modulus comfortably larger than any layout here
+
+    // Exactly at the blind_mask budget: accepted.
+    let ok = PackedCodec::from_wire(roomy, fmt, 2, blind_need, max_parts)
+        .expect("layout at the blind_mask budget is provably safe");
+    assert_eq!(ok.slot_bits(), blind_need);
+
+    // One bit short of each term, checked strongest-first so the error
+    // names the *first violated* term in ascending order of strength.
+    for (slot_bits, term) in [
+        (w - 1, "per_value"),
+        (w + bitlen - 1, "fanin_sum"),
+        (blind_need - 1, "blind_mask"),
+    ] {
+        let err = PackedCodec::from_wire(roomy, fmt, 2, slot_bits, max_parts)
+            .expect_err("under-budget slot must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains(term), "b={slot_bits}: error must name `{term}`, got: {msg}");
+    }
+
+    // modulus_capacity: k slots fit exactly at k·b + 2 = modulus bits;
+    // one more slot (or one fewer modulus bit) is rejected by name.
+    let k_fit = (roomy - 2) / blind_need;
+    assert!(PackedCodec::from_wire(roomy, fmt, k_fit, blind_need, max_parts).is_ok());
+    let err = PackedCodec::from_wire(roomy, fmt, k_fit + 1, blind_need, max_parts)
+        .expect_err("k past the modulus capacity must be rejected");
+    assert!(err.to_string().contains("modulus_capacity"), "got: {err}");
+    let err = PackedCodec::from_wire(k_fit * blind_need + 1, fmt, k_fit, blind_need, max_parts)
+        .expect_err("modulus one bit short must be rejected");
+    assert!(err.to_string().contains("modulus_capacity"), "got: {err}");
+
+    // k = 1 is not packing; the codec refuses to dress the legacy wire
+    // up as a packed one.
+    let err = PackedCodec::from_wire(roomy, fmt, 1, blind_need, max_parts)
+        .expect_err("k = 1 must be rejected");
+    assert!(err.to_string().contains("modulus_capacity"), "got: {err}");
+
+    // hinv_apply: the center-side budget for Enc(H̃⁻¹)⊗g. At
+    // 2w + ⌈log₂(max_parts·terms)⌉ + 1 it passes; one bit short names
+    // the term.
+    let terms = 12u64;
+    let worst = (max_parts * terms) as u128;
+    let hinv_need = 2 * w + (128 - worst.leading_zeros()) + 1;
+    let at = PackedCodec::from_wire(roomy, fmt, 2, hinv_need.max(blind_need), max_parts).unwrap();
+    at.apply_headroom(terms).expect("layout at the hinv_apply budget is safe");
+    if hinv_need > blind_need {
+        let under = PackedCodec::from_wire(roomy, fmt, 2, hinv_need - 1, max_parts).unwrap();
+        let err = under.apply_headroom(terms).expect_err("one bit short must fail");
+        assert!(err.to_string().contains("hinv_apply"), "got: {err}");
+    }
+
+    // plan() falls back with Capacity — and only Capacity — when the
+    // modulus cannot host two slots (the coordinator's unpacked
+    // fallback path), never by shrinking a headroom term.
+    let err = PackedCodec::plan(2 * blind_need + 1, fmt, max_parts, 1)
+        .expect_err("modulus one bit below two slots must be Capacity");
+    assert!(matches!(err, PackError::Capacity { .. }), "got: {err}");
+    assert!(PackedCodec::plan(2 * blind_need + 2, fmt, max_parts, 1).is_ok());
+}
+
+/// Runtime value boundary: the exact slot maximum `(2^(w−1)−1)/2^f`
+/// packs in both signs; the first value that rounds to `2^(w−1)` is
+/// rejected naming `per_value`, as are non-finite values.
+#[test]
+fn slot_max_packs_and_one_past_is_rejected() {
+    let fmt = FixedFmt { w: 40, f: 24 };
+    let codec = PackedCodec::plan(1024, fmt, 6, 8).unwrap();
+    let scale = (fmt.f as f64).exp2();
+    let max = ((1u64 << (fmt.w - 1)) - 1) as f64 / scale;
+    codec.pack(&[max, -max], fmt.f).expect("exact slot max packs");
+    for bad in [max + 1.0 / scale, -(max + 1.0 / scale), f64::NAN, f64::INFINITY] {
+        let err = codec.pack(&[bad], fmt.f).expect_err("past-budget value must be rejected");
+        assert!(err.to_string().contains("per_value"), "{bad}: got {err}");
+    }
+}
+
+/// Fan-in boundary at runtime: a payload claiming exactly `max_parts`
+/// contributions unpacks; `max_parts + 1` is rejected naming
+/// `fanin_sum` — the unpack side enforces the same bound the aggregate
+/// side does.
+#[test]
+fn unpack_fanin_boundary() {
+    let fmt = FixedFmt { w: 40, f: 24 };
+    let codec = PackedCodec::plan(1024, fmt, 3, 1).unwrap();
+    let vecs: Vec<Vec<f64>> = (0..3).map(|i| vec![i as f64, -(i as f64)]).collect();
+    let mut acc: Option<Vec<BigUint>> = None;
+    for v in &vecs {
+        let ms = codec.pack(v, fmt.f).unwrap();
+        acc = Some(match acc {
+            None => ms,
+            Some(a) => a.iter().zip(&ms).map(|(x, y)| x.add(y)).collect(),
+        });
+    }
+    let ms = acc.unwrap();
+    let got = codec.unpack_vec(&ms, 2, 3, fmt.f).expect("at the fan-in bound unpacks");
+    assert_eq!(got, plaintext_sums(&vecs, fmt.f));
+    let err = codec.unpack_vec(&ms, 2, 4, fmt.f).expect_err("past the bound is rejected");
+    assert!(err.to_string().contains("fanin_sum"), "got: {err}");
+}

@@ -110,7 +110,7 @@ fn malformed_hinv_broadcast_is_session_error() {
     let addr = server.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || server.serve_once());
     let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
-    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f };
+    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f, packing: None };
     fleet.install_key(&key).unwrap();
     let mut cts: Vec<BigUint> = (0..tri_len(p)).map(|_| BigUint::one()).collect();
     cts[1] = BigUint::zero(); // gcd(0, n²) = n² — not a unit
@@ -133,7 +133,7 @@ fn node_server_parallel_replies_byte_identical() {
     let (kp, mut rng) = keypair(44);
     let p = 4;
     let data = synthesize("parity", 150, p, 77);
-    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f };
+    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f, packing: None };
     // A broadcastable Enc(H̃⁻¹) triangle (any valid ciphertexts work).
     let hinv_cts: Vec<BigUint> = (0..tri_len(p))
         .map(|i| {
@@ -182,6 +182,128 @@ fn node_server_parallel_replies_byte_identical() {
     assert_eq!(loglik_1, loglik_n, "loglik ciphertexts must be byte-identical");
 }
 
+/// Packed parity across the full NodeServer session (ISSUE 10
+/// satellite 2): with a wire-negotiated packing layout, a node packs
+/// its gradient into ⌈p/k⌉ ciphertexts and its Gram triangle into
+/// ⌈tri_len/k⌉ — and the *decoded* statistics are bit-identical to the
+/// legacy unpacked session on the same data, while the packed replies
+/// themselves stay byte-identical across worker-thread counts
+/// (`PRIVLOGIT_THREADS` 1 vs 4).
+#[test]
+fn packed_node_replies_decode_identical_to_unpacked() {
+    use privlogit::crypto::fixed::FixedCodec;
+    use privlogit::crypto::PackedCodec;
+
+    let (kp, _) = keypair(47);
+    let p = 5;
+    let data = synthesize("packed-parity", 150, p, 79);
+    let codec = PackedCodec::plan(kp.pk.n.bit_len() as u32, FMT, 3, p as u64)
+        .expect("a 256-bit modulus hosts k = 2 at w = 40");
+    assert!(codec.k() >= 2);
+    let fixed = FixedCodec::new(kp.pk.n.clone(), FMT.f);
+    let beta = vec![0.05, -0.1, 0.2, 0.0, 0.15];
+    let scale = 1.0 / 150.0;
+
+    // One session: install `key`, run a stats and a gram round, return
+    // the raw reply ciphertexts.
+    let run = |key: &FleetKey, threads: usize| -> (Vec<BigUint>, Vec<BigUint>) {
+        let mut server = NodeServer::bind("127.0.0.1:0", data.clone())
+            .unwrap()
+            .with_seed(123)
+            .with_threads(threads);
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve_once().unwrap());
+        let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+        fleet.install_key(key).unwrap();
+        let take = |r: privlogit::coordinator::fleet::NodeReply| match r.payload {
+            NodePayload::Enc(e) => e.cts,
+            NodePayload::Plain { .. } => panic!("expected ciphertexts"),
+        };
+        let stats = take(fleet.stats(&beta, scale).unwrap().remove(0));
+        let gram = take(fleet.gram(scale).unwrap().remove(0));
+        drop(fleet);
+        handle.join().unwrap();
+        (stats, gram)
+    };
+
+    let packed_key = FleetKey {
+        n: kp.pk.n.clone(),
+        w: FMT.w as u32,
+        f: FMT.f,
+        packing: Some(codec.params()),
+    };
+    let plain_key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f, packing: None };
+
+    let (packed_stats, packed_gram) = run(&packed_key, 1);
+    let (packed_stats_n, packed_gram_n) = run(&packed_key, 4);
+    assert_eq!(packed_stats, packed_stats_n, "packed stats byte-identical across threads");
+    assert_eq!(packed_gram, packed_gram_n, "packed gram byte-identical across threads");
+    let (plain_stats, plain_gram) = run(&plain_key, 1);
+
+    // Shapes: the packed wire carries ⌈len/k⌉ ciphertexts (+ the
+    // always-unpacked trailing loglik on the stats round).
+    assert_eq!(packed_stats.len(), codec.cts_needed(p) + 1);
+    assert_eq!(plain_stats.len(), p + 1);
+    assert_eq!(packed_gram.len(), codec.cts_needed(tri_len(p)));
+    assert_eq!(plain_gram.len(), tri_len(p));
+
+    let decrypt = |cts: &[BigUint]| -> Vec<BigUint> {
+        cts.iter().map(|c| kp.sk.decrypt(&Ciphertext(c.clone()))).collect()
+    };
+    let decode_plain =
+        |cts: &[BigUint]| -> Vec<f64> { decrypt(cts).iter().map(|m| fixed.decode(m)).collect() };
+
+    // Gradient: unpack the packed plaintexts, decode the unpacked ones
+    // — bit-identical f64s.
+    let packed_grad = codec
+        .unpack_vec(&decrypt(&packed_stats[..codec.cts_needed(p)]), p, 1, FMT.f)
+        .expect("fresh packed reply unpacks at parts = 1");
+    let plain_grad = decode_plain(&plain_stats[..p]);
+    for (i, (a, b)) in packed_grad.iter().zip(&plain_grad).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "gradient slot {i}: {a} != {b}");
+    }
+    // Loglik: its own unpacked ciphertext in both sessions.
+    let ll_packed = decode_plain(&packed_stats[codec.cts_needed(p)..]);
+    let ll_plain = decode_plain(&plain_stats[p..]);
+    assert_eq!(ll_packed[0].to_bits(), ll_plain[0].to_bits(), "loglik share");
+    // Gram triangle.
+    let packed_tri = codec
+        .unpack_vec(&decrypt(&packed_gram), tri_len(p), 1, FMT.f)
+        .expect("fresh packed gram unpacks at parts = 1");
+    let plain_tri = decode_plain(&plain_gram);
+    for (i, (a, b)) in packed_tri.iter().zip(&plain_tri).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "gram slot {i}: {a} != {b}");
+    }
+}
+
+/// A hostile packing layout in `SetKey` — one whose slots could
+/// overflow — is rejected by the node at the trust boundary, naming the
+/// violated headroom term; the session ends with an error instead of a
+/// silently wrapping statistic.
+#[test]
+fn node_rejects_overflowing_packed_layout() {
+    use privlogit::crypto::PackingParams;
+    let (kp, _) = keypair(48);
+    let data = synthesize("hostile", 60, 3, 9);
+    let mut server = NodeServer::bind("127.0.0.1:0", data).unwrap().with_seed(11);
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_once());
+    let mut fleet = RemoteFleet::connect(&[addr]).unwrap();
+    // slot_bits = w: fits one value but not a fan-in of 6, and far too
+    // small for the blind — the first violated term is fanin_sum.
+    let key = FleetKey {
+        n: kp.pk.n.clone(),
+        w: FMT.w as u32,
+        f: FMT.f,
+        packing: Some(PackingParams { k: 2, slot_bits: FMT.w as u32, max_parts: 6 }),
+    };
+    assert!(fleet.install_key(&key).is_err(), "overflowing layout must fail the install");
+    drop(fleet);
+    let session = handle.join().expect("node thread must not panic");
+    let err = session.expect_err("session must surface the layout rejection");
+    assert!(err.to_string().contains("packed layout"), "got: {err}");
+}
+
 /// Tracing is observational only: with the JSONL span exporter
 /// force-enabled, a parallel node session still produces replies
 /// byte-identical to the single-threaded session (tracing never draws
@@ -199,7 +321,7 @@ fn tracing_preserves_byte_identical_parallelism() {
     let (kp, mut rng) = keypair(46);
     let p = 4;
     let data = synthesize("traced", 150, p, 78);
-    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f };
+    let key = FleetKey { n: kp.pk.n.clone(), w: FMT.w as u32, f: FMT.f, packing: None };
     let hinv_cts: Vec<BigUint> = (0..tri_len(p))
         .map(|i| {
             kp.pk

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_primitives.json against the committed baseline.
+
+Usage: bench_compare.py <baseline.json> <fresh.json>
+
+Fails (exit 1) when any speedup in the baseline's ``speedups`` table
+regresses by more than 25% in the fresh run, or disappears from it.
+Extra speedups in the fresh run are reported but never fail the build —
+new primitives get a floor only once the baseline is updated.
+
+The committed baseline may be ``"provisional": true`` — analytic floors
+rather than measurements — in which case the 25% margin sits on top of
+already-conservative numbers, so a failure means a real algorithmic
+regression, not machine noise.
+"""
+
+import json
+import sys
+
+REGRESSION_MARGIN = 0.75  # fresh must reach >= 75% of baseline
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    base_speedups = baseline.get("speedups", {})
+    fresh_speedups = fresh.get("speedups", {})
+    provisional = baseline.get("provisional", False)
+
+    failures = []
+    for name, floor in sorted(base_speedups.items()):
+        got = fresh_speedups.get(name)
+        if got is None:
+            failures.append(f"{name}: present in baseline but missing from the fresh run")
+        elif got < REGRESSION_MARGIN * floor:
+            failures.append(
+                f"{name}: {got:.2f}x is a >25% regression vs baseline {floor:.2f}x"
+            )
+        else:
+            print(f"ok  {name}: {got:.2f}x (baseline {floor:.2f}x)")
+    for name in sorted(set(fresh_speedups) - set(base_speedups)):
+        print(f"new {name}: {fresh_speedups[name]:.2f}x (no baseline floor yet)")
+
+    if failures:
+        kind = "provisional floors" if provisional else "measured baseline"
+        print(f"\nPERF REGRESSION vs {kind} ({sys.argv[1]}):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("all speedups within 25% of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
